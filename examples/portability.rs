@@ -1,0 +1,15 @@
+//! Portability across devices (paper §6.3.5, Tables 6-7): build a latency
+//! model per platform, re-run the rule-based mapping, and check that the
+//! method transfers (same accuracy, faster phones get faster latency).
+//!
+//! ```sh
+//! cargo run --release --example portability
+//! ```
+
+use prunemap::experiments::{table6, table7};
+
+fn main() {
+    table6().print();
+    table7().print();
+    println!("\nExpected shape (paper Table 7): compression and accuracy stable across devices; latency improves S10 -> S20 -> S21.");
+}

@@ -1,0 +1,40 @@
+//! Quickstart: map the best-suited pruning scheme onto ResNet-50/ImageNet
+//! with the training-free rule-based method and report the win.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use prunemap::experiments::describe_mapping;
+use prunemap::latmodel::LatencyModel;
+use prunemap::mapping::{self, map_rule_based, RuleConfig};
+use prunemap::models::{zoo, Dataset};
+use prunemap::simulator::DeviceProfile;
+
+fn main() {
+    // 1. pick the target device and build (or load) its offline latency
+    //    model — once per device, reusable for every DNN
+    let dev = DeviceProfile::s10();
+    let lat = LatencyModel::build(&dev);
+    println!("latency model: {} settings for {}", lat.len(), lat.device);
+
+    // 2. pick any DNN from the zoo (or define your own via the DSL)
+    let model = zoo::resnet50(Dataset::ImageNet);
+
+    // 3. map — training-free, milliseconds
+    let assigns = map_rule_based(&model, &lat, &RuleConfig::default());
+    describe_mapping(&model, &assigns).print();
+
+    // 4. evaluate end to end on the device cost model
+    let e = mapping::evaluate(&model, &assigns, &dev);
+    let dense = mapping::dense_latency_ms(&model, &dev);
+    println!(
+        "\n{}: {:.2}x compression, {:+.2}% acc drop, {:.2}ms vs {:.2}ms dense ({:.2}x speedup)",
+        model.name,
+        e.compression,
+        e.acc_drop * 100.0,
+        e.latency_ms,
+        dense,
+        dense / e.latency_ms
+    );
+}

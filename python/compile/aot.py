@@ -1,0 +1,185 @@
+"""AOT exporter: lower the L2 graphs once to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT `.serialize()` — jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits into --outdir:
+    forward.hlo.txt      masked inference forward pass (Pallas kernels)
+    train_step.hlo.txt   SGD + reweighted group-Lasso step (kernel fwd,
+                         analytic custom-VJP bwd)
+    group_norms.hlo.txt  elementwise w^2 per prunable tensor
+    block_matmul.hlo.txt standalone block-sparse matmul (runtime microbench)
+    manifest.json        input/output names, shapes, dtypes per artifact
+
+Run via `make artifacts` (no-op if inputs are unchanged, courtesy of make).
+Python never runs again after this: the Rust binary consumes the artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BENCH_M, BENCH_K, BENCH_N = 256, 512, 512
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _abstract(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def build_manifest() -> dict:
+    params = [
+        {"name": n, "kind": k, **_spec(s)} for n, k, s in model.PARAM_SPECS
+    ]
+    weights = [
+        {"name": n, **_spec(dict((pn, s) for pn, _, s in model.PARAM_SPECS)[n])}
+        for n in model.WEIGHT_NAMES
+    ]
+    return {
+        "batch": model.BATCH,
+        "img": model.IMG,
+        "in_ch": model.IN_CH,
+        "num_classes": model.NUM_CLASSES,
+        "params": params,
+        "weight_idx": model.WEIGHT_IDX,
+        "weight_names": model.WEIGHT_NAMES,
+        "artifacts": {
+            "forward": {
+                "file": "forward.hlo.txt",
+                "inputs": (
+                    [p["name"] for p in params]
+                    + [f"mask:{n}" for n in model.WEIGHT_NAMES]
+                    + ["x"]
+                ),
+                "outputs": ["logits"],
+            },
+            "train_step": {
+                "file": "train_step.hlo.txt",
+                "inputs": (
+                    [p["name"] for p in params]
+                    + [f"mask:{n}" for n in model.WEIGHT_NAMES]
+                    + [f"alpha:{n}" for n in model.WEIGHT_NAMES]
+                    + ["x", "y", "lr", "lam"]
+                ),
+                "outputs": [f"new:{p['name']}" for p in params] + ["ce", "acc"],
+            },
+            "group_norms": {
+                "file": "group_norms.hlo.txt",
+                # jax.jit(keep_unused=False) drops unused args from the HLO
+                # signature, so this artifact takes only the prunable
+                # weight tensors (not biases).
+                "inputs": list(model.WEIGHT_NAMES),
+                "outputs": [f"sq:{n}" for n in model.WEIGHT_NAMES],
+            },
+            "block_matmul": {
+                "file": "block_matmul.hlo.txt",
+                "inputs": ["x", "w", "mask"],
+                "outputs": ["y"],
+                "m": BENCH_M,
+                "k": BENCH_K,
+                "n": BENCH_N,
+            },
+        },
+        "weights": weights,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    b = model.BATCH
+    param_abs = [_abstract(s) for _, _, s in model.PARAM_SPECS]
+    mask_abs = [
+        _abstract(dict((n, s) for n, _, s in model.PARAM_SPECS)[w])
+        for w in model.WEIGHT_NAMES
+    ]
+    alpha_abs = list(mask_abs)
+    x_abs = _abstract((b, model.IN_CH, model.IMG, model.IMG))
+    y_abs = _abstract((b,), jnp.int32)
+    scalar = _abstract((), jnp.float32)
+
+    def fwd_flat(*args):
+        params = list(args[:10])
+        masks = list(args[10:15])
+        x = args[15]
+        return (model.forward(params, masks, x, use_kernels=True),)
+
+    def step_flat(*args):
+        params = list(args[:10])
+        masks = list(args[10:15])
+        alphas = list(args[15:20])
+        x, y, lr, lam = args[20], args[21], args[22], args[23]
+        new_params, ce, acc = model.train_step(
+            params, masks, alphas, x, y, lr, lam, use_kernels=True
+        )
+        return tuple(new_params) + (ce, acc)
+
+    def norms_flat(*weights):
+        return tuple(w * w for w in weights)
+
+    def bmm(x, w, m):
+        from .kernels import block_sparse_matmul
+
+        # Perf-tuned tiles (EXPERIMENTS.md §Perf item 5): 128^3 tiles cut
+        # the grid from 256 to 32 steps; VMEM footprint 3*128*128*4B ≈
+        # 196KB (well under a real TPU's 16MB), lanes stay 8x128-aligned.
+        return (block_sparse_matmul(x, w, m, bm=128, bn=128, bk=128),)
+
+    jobs = [
+        ("forward.hlo.txt", fwd_flat, param_abs + mask_abs + [x_abs]),
+        (
+            "train_step.hlo.txt",
+            step_flat,
+            param_abs + mask_abs + alpha_abs + [x_abs, y_abs, scalar, scalar],
+        ),
+        ("group_norms.hlo.txt", norms_flat, mask_abs),
+        (
+            "block_matmul.hlo.txt",
+            bmm,
+            [
+                _abstract((BENCH_M, BENCH_K)),
+                _abstract((BENCH_K, BENCH_N)),
+                _abstract((BENCH_K, BENCH_N)),
+            ],
+        ),
+    ]
+    for fname, fn, abstracts in jobs:
+        lowered = jax.jit(fn).lower(*abstracts)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {fname}: {len(text)} chars")
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(build_manifest(), f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into HLO by aot.py)."""
+
+from .block_sparse_matmul import (
+    block_sparse_matmul,
+    block_sparse_matmul_ad,
+    masked_matmul_unblocked,
+)
+from .block_punched_conv import block_punched_conv, conv_mask_to_gemm, im2col
+
+__all__ = [
+    "block_sparse_matmul",
+    "block_sparse_matmul_ad",
+    "masked_matmul_unblocked",
+    "block_punched_conv",
+    "conv_mask_to_gemm",
+    "im2col",
+]

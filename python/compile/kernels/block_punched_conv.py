@@ -1,0 +1,84 @@
+"""Layer-1 Pallas kernel: block-punched convolution.
+
+Block-punched pruning (paper §4.1.2) partitions a CONV weight tensor
+(F, C, KH, KW) into blocks along the (filter, input-channel) dims and prunes
+the *same* intra-kernel positions for every kernel in a block.  In GEMM view
+(im2col) that is exactly a structured mask on the (C*KH*KW, F) weight
+matrix, so the conv lowers to patches-extraction + the block-sparse matmul
+kernel — the punched mask keeps whole (c, kh, kw) rows alive per filter
+block, which is why the VMEM tiles stay dense-multiplicable on the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .block_sparse_matmul import block_sparse_matmul, block_sparse_matmul_ad
+
+__all__ = ["block_punched_conv", "im2col", "conv_mask_to_gemm"]
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str) -> jax.Array:
+    """Extract conv patches: (N, C, H, W) -> (N*OH*OW, C*KH*KW).
+
+    Feature ordering of the output columns is (C, KH, KW) flattened with C
+    slowest — matching ``w.reshape(F, C*KH*KW)`` for weights in (F, C, KH,
+    KW) layout.
+    """
+    n = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+    )  # (N, C*KH*KW, OH, OW)
+    ckk = patches.shape[1]
+    oh, ow = patches.shape[2], patches.shape[3]
+    return patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, ckk), (oh, ow)
+
+
+def conv_mask_to_gemm(mask4: jax.Array) -> jax.Array:
+    """(F, C, KH, KW) mask -> (C*KH*KW, F) GEMM mask."""
+    f = mask4.shape[0]
+    return mask4.reshape(f, -1).T
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "bm", "bn", "bk", "ad")
+)
+def block_punched_conv(
+    x: jax.Array,
+    w: jax.Array,
+    mask: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    bm: int = 32,
+    bn: int = 32,
+    bk: int = 32,
+    ad: bool = False,
+) -> jax.Array:
+    """2-D convolution with a block-punched pruning mask.
+
+    Args:
+      x:    (N, C, H, W) input.
+      w:    (F, C, KH, KW) weights.
+      mask: (F, C, KH, KW) {0,1} punched mask (same intra-kernel positions
+            zeroed for all kernels within each (filter, channel) block).
+
+    Returns:
+      (N, F, OH, OW) output in f32.
+    """
+    n = x.shape[0]
+    f, _, kh, kw = w.shape
+    cols, (oh, ow) = im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(f, -1).T  # (C*KH*KW, F)
+    mmat = conv_mask_to_gemm(mask)
+    if ad:
+        out = block_sparse_matmul_ad(cols, wmat, mmat, bm, bn, bk)
+    else:
+        out = block_sparse_matmul(cols, wmat, mmat, bm=bm, bn=bn, bk=bk)
+    return out.reshape(n, oh, ow, f).transpose(0, 3, 1, 2)

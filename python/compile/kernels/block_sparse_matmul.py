@@ -1,0 +1,172 @@
+"""Layer-1 Pallas kernel: block-sparse (masked) matmul.
+
+This is the compute hot-spot of the paper's block-based / block-punched
+pruning scheme (Gong & Yuan et al., TODAES'21).  The paper tiles the sparse
+weight matrix into threadblock-sized tiles on a mobile GPU; here the same
+insight is re-thought for the TPU shape of the problem (see DESIGN.md
+section "Hardware-Adaptation"):
+
+  * the pruning *block* becomes a VMEM tile expressed through ``BlockSpec``;
+  * the punched/row/column mask is applied to the VMEM-resident weight tile
+    so the MXU always multiplies dense tiles (no branch divergence — the
+    mobile-GPU analogue of the paper's pattern-branch overhead simply does
+    not exist in this formulation);
+  * the (HBM -> VMEM) schedule that the paper expressed with threadblocks is
+    the grid + index_map below.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops.  Correctness is
+pinned against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "block_sparse_matmul",
+    "masked_matmul_unblocked",
+    "block_sparse_matmul_ad",
+]
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``m``."""
+    size = x.shape[axis]
+    rem = (-size) % m
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _bsmm_kernel(x_ref, w_ref, m_ref, o_ref):
+    """One (bm, bn) output tile; K-loop is the innermost grid axis.
+
+    The mask tile is multiplied into the weight tile *in VMEM*, keeping the
+    MXU contraction dense.  Accumulation is in f32 regardless of the input
+    dtype (the usual TPU matmul idiom).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_tile = x_ref[...].astype(jnp.float32)
+    w_tile = (w_ref[...] * m_ref[...]).astype(jnp.float32)
+    o_ref[...] += jnp.dot(x_tile, w_tile, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def block_sparse_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    mask: jax.Array,
+    *,
+    bm: int = 32,
+    bn: int = 32,
+    bk: int = 32,
+) -> jax.Array:
+    """``x @ (w * mask)`` with a blocked Pallas schedule.
+
+    Args:
+      x:    (M, K) activations.
+      w:    (K, N) weight matrix.
+      mask: (K, N) {0,1} pruning mask — block-based (row/col-in-block) or
+            block-punched masks both take this form once the 4-D CONV tensor
+            is viewed as its 2-D GEMM matrix (paper Fig. 1).
+      bm/bn/bk: VMEM tile sizes.  ``bn`` should be a multiple of the lane
+            width (128 on real TPU); ``bm``/``bk`` multiples of 8.  In
+            interpret mode any positive size runs, which lets the hypothesis
+            tests sweep odd shapes.
+
+    Returns:
+      (M, N) result in f32.
+    """
+    if x.ndim != 2 or w.ndim != 2 or mask.ndim != 2:
+        raise ValueError("block_sparse_matmul expects 2-D operands")
+    if x.shape[1] != w.shape[0] or w.shape != mask.shape:
+        raise ValueError(
+            f"shape mismatch: x={x.shape} w={w.shape} mask={mask.shape}"
+        )
+    m_dim, k_dim = x.shape
+    _, n_dim = w.shape
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    mp = _pad_to(_pad_to(mask, bk, 0), bn, 1)
+    mp_, kp = xp.shape
+    _, np_ = wp.shape
+
+    grid = (mp_ // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _bsmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp_, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, mp)
+    return out[:m_dim, :n_dim]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def block_sparse_matmul_ad(
+    x: jax.Array, w: jax.Array, mask: jax.Array, bm: int = 32, bn: int = 32, bk: int = 32
+) -> jax.Array:
+    """Differentiable wrapper: Pallas forward + analytic pure-jnp backward.
+
+    ``pallas_call`` carries no automatic VJP rule, so the L2 train-step
+    attaches the closed-form masked-matmul gradients here; the forward pass
+    (the hot path) still lowers through the Pallas kernel, and pytest pins
+    the backward against ``jax.grad`` of the ref oracle.
+    """
+    return block_sparse_matmul(x, w, mask, bm=bm, bn=bn, bk=bk)
+
+
+def _bsmm_fwd(x, w, mask, bm, bn, bk):
+    return block_sparse_matmul(x, w, mask, bm=bm, bn=bn, bk=bk), (x, w, mask)
+
+
+def _bsmm_bwd(bm, bn, bk, res, g):
+    x, w, mask = res
+    wm = (w * mask).astype(jnp.float32)
+    gx = jnp.dot(g, wm.T).astype(x.dtype)
+    gw = (jnp.dot(x.astype(jnp.float32).T, g) * mask).astype(w.dtype)
+    # mask is a constant {0,1} structure — no gradient flows to it.
+    return gx, gw, jnp.zeros_like(mask)
+
+
+block_sparse_matmul_ad.defvjp(_bsmm_fwd, _bsmm_bwd)
+
+
+def masked_matmul_unblocked(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """Single-tile Pallas variant (whole operands in one VMEM block).
+
+    Used for small FC layers where tiling overhead dominates; also a second
+    implementation to cross-check the blocked schedule.
+    """
+
+    def kernel(x_ref, w_ref, m_ref, o_ref):
+        o_ref[...] = jnp.dot(
+            x_ref[...].astype(jnp.float32),
+            (w_ref[...] * m_ref[...]).astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    m_dim, _ = x.shape
+    _, n_dim = w.shape
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        interpret=True,
+    )(x, w, mask)

@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+No Pallas, no tiling — the simplest possible statement of each computation.
+Every kernel test asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "masked_matmul_ref",
+    "conv2d_ref",
+    "block_punched_conv_ref",
+    "group_norms_blocked_ref",
+]
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """x @ (w * mask) in f32."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        (w * mask).astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """Plain NCHW conv via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def block_punched_conv_ref(
+    x: jax.Array,
+    w: jax.Array,
+    mask: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """Masked conv = dense conv with pre-masked weights."""
+    return conv2d_ref(x, w * mask, stride=stride, padding=padding)
+
+
+def group_norms_blocked_ref(w: jax.Array, bp: int, bq: int) -> jax.Array:
+    """Per-block squared Frobenius norms of a (P, Q) matrix.
+
+    Blocks are (bp, bq) tiles; P % bp == 0 and Q % bq == 0 is required.
+    Returns (P//bp, Q//bq) of sum-of-squares — the group statistic used by
+    the reweighted algorithm's alpha update (paper Eq. 2-4 denominators).
+    """
+    p, q = w.shape
+    assert p % bp == 0 and q % bq == 0
+    blocks = w.reshape(p // bp, bp, q // bq, bq)
+    return jnp.sum(blocks.astype(jnp.float32) ** 2, axis=(1, 3))

@@ -1,0 +1,194 @@
+"""Layer-2 JAX model: the paper's pruning pipeline at proxy scale.
+
+A small CIFAR-shaped CNN (3 conv + 2 FC, ~0.17M weights) whose forward pass
+calls the Layer-1 Pallas kernels (block-punched conv, block-sparse matmul)
+and whose train step implements SGD on cross-entropy plus the paper's
+reweighted group-Lasso penalty (Eq. 1-4):
+
+    minimize  f(W, b; D) + lambda * sum_i R(alpha_i, W_i)
+
+with R expressed element-wise: the Rust coordinator broadcasts the per-group
+alpha (1 / (||group||_F^2 + eps)) to weight shape, so the penalty inside the
+graph is simply sum(alpha * (w * mask)^2).  This keeps the HLO interface a
+flat list of arrays and leaves the *group structure* — which is exactly the
+per-layer pruning-scheme decision this paper is about — on the Rust side.
+
+Everything here is build-time: aot.py lowers `forward`, `train_step`, and
+the standalone kernel once to HLO text, and the Rust runtime executes the
+artifacts over PJRT.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_punched_conv, block_sparse_matmul_ad
+from .kernels.ref import conv2d_ref
+
+# ---------------------------------------------------------------------------
+# Architecture spec (kept in sync with rust/src/train/proxy.rs via the
+# manifest emitted by aot.py).
+# ---------------------------------------------------------------------------
+
+IMG = 32          # input spatial size
+IN_CH = 3         # input channels
+NUM_CLASSES = 10
+BATCH = 8
+
+# (name, kind, shape) — weights then bias, in execution order.
+PARAM_SPECS: List[Tuple[str, str, Tuple[int, ...]]] = [
+    ("conv1_w", "conv", (16, IN_CH, 3, 3)),
+    ("conv1_b", "bias", (16,)),
+    ("conv2_w", "conv", (32, 16, 3, 3)),
+    ("conv2_b", "bias", (32,)),
+    ("conv3_w", "conv", (64, 32, 3, 3)),
+    ("conv3_b", "bias", (64,)),
+    ("fc1_w", "fc", (64 * 4 * 4, 128)),
+    ("fc1_b", "bias", (128,)),
+    ("fc2_w", "fc", (128, NUM_CLASSES)),
+    ("fc2_b", "bias", (NUM_CLASSES,)),
+]
+
+# Indices (into the params list) of the prunable weight tensors, in order.
+WEIGHT_IDX = [0, 2, 4, 6, 8]
+WEIGHT_NAMES = ["conv1_w", "conv2_w", "conv3_w", "fc1_w", "fc2_w"]
+
+
+def init_params(key: jax.Array) -> List[jax.Array]:
+    """He-style init matching the Rust-side initializer (for tests only —
+    the runtime passes params in from Rust)."""
+    params = []
+    for name, kind, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if kind == "bias":
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(jnp.prod(jnp.array(shape[1:]))) if kind == "conv" else shape[0]
+            std = (2.0 / fan_in) ** 0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def _avg_pool2(x: jax.Array) -> jax.Array:
+    """2x2 average pool, NCHW, spatial dims divisible by 2."""
+    n, c, h, w = x.shape
+    return x.reshape(n, c, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: Sequence[jax.Array],
+    masks: Sequence[jax.Array],
+    x: jax.Array,
+    *,
+    use_kernels: bool = True,
+    ad: bool = False,
+) -> jax.Array:
+    """Masked forward pass; returns (B, NUM_CLASSES) logits.
+
+    use_kernels=True routes convs/FCs through the Pallas kernels (the
+    artifact path); False uses the pure-jnp reference ops (used by pytest to
+    pin the two paths together and by grad-checks).
+    """
+    c1w, c1b, c2w, c2b, c3w, c3b, f1w, f1b, f2w, f2b = params
+    c1m, c2m, c3m, f1m, f2m = masks
+
+    def conv(x_, w_, m_, b_):
+        if use_kernels:
+            y = block_punched_conv(x_, w_, m_, stride=1, padding="SAME", ad=ad)
+        else:
+            y = conv2d_ref(x_, w_ * m_, stride=1, padding="SAME")
+        return jax.nn.relu(y + b_[None, :, None, None])
+
+    def fc(x_, w_, m_, b_):
+        if use_kernels:
+            y = block_sparse_matmul_ad(x_, w_, m_) if ad else _bsmm(x_, w_, m_)
+        else:
+            y = jnp.dot(x_, w_ * m_)
+        return y + b_[None, :]
+
+    h = _avg_pool2(conv(x, c1w, c1m, c1b))          # (B, 16, 16, 16)
+    h = _avg_pool2(conv(h, c2w, c2m, c2b))          # (B, 32, 8, 8)
+    h = _avg_pool2(conv(h, c3w, c3m, c3b))          # (B, 64, 4, 4)
+    h = h.reshape(h.shape[0], -1)                   # (B, 1024)
+    h = jax.nn.relu(fc(h, f1w, f1m, f1b))           # (B, 128)
+    return fc(h, f2w, f2m, f2b)                     # (B, 10)
+
+
+def _bsmm(x, w, m):
+    from .kernels import block_sparse_matmul
+
+    return block_sparse_matmul(x, w, m)
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(
+    params: Sequence[jax.Array],
+    masks: Sequence[jax.Array],
+    alphas: Sequence[jax.Array],
+    x: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    *,
+    use_kernels: bool = True,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Cross-entropy + reweighted group-Lasso penalty.
+
+    alphas are weight-shaped (per-group values broadcast by the caller), so
+    the Eq. 2-4 regularizer collapses to sum(alpha * (w*mask)^2).
+    """
+    logits = forward(params, masks, x, use_kernels=use_kernels, ad=use_kernels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    penalty = jnp.asarray(0.0, jnp.float32)
+    for wi, (mi, ai) in zip(WEIGHT_IDX, zip(masks, alphas)):
+        wm = params[wi] * mi
+        penalty = penalty + jnp.sum(ai * wm * wm)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return ce + lam * penalty, (ce, acc)
+
+
+def train_step(
+    params: Sequence[jax.Array],
+    masks: Sequence[jax.Array],
+    alphas: Sequence[jax.Array],
+    x: jax.Array,
+    y: jax.Array,
+    lr: jax.Array,
+    lam: jax.Array,
+    *,
+    use_kernels: bool = True,
+) -> Tuple[List[jax.Array], jax.Array, jax.Array]:
+    """One SGD step; masked weights are re-zeroed after the update so pruned
+    structure survives retraining (the paper's masked-retrain phase)."""
+    grad_fn = jax.grad(
+        lambda p: loss_fn(p, masks, alphas, x, y, lam, use_kernels=use_kernels),
+        has_aux=True,
+    )
+    grads, (ce, acc) = grad_fn(list(params))
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    for wi, mi in zip(WEIGHT_IDX, masks):
+        new_params[wi] = new_params[wi] * mi
+    return new_params, ce, acc
+
+
+def group_norms(params: Sequence[jax.Array]) -> List[jax.Array]:
+    """Element-wise squared weights for every prunable tensor.
+
+    The Rust side reduces these over its chosen group structure (blocks,
+    rows, columns, punched positions) to drive the alpha update — emitting
+    w^2 rather than per-group sums keeps the artifact agnostic to the
+    pruning-scheme mapping, which is the whole point of the paper.
+    """
+    return [params[i] * params[i] for i in WEIGHT_IDX]

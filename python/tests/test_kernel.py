@@ -1,0 +1,239 @@
+"""Kernel-vs-ref correctness: the CORE numeric signal for Layer 1.
+
+Every Pallas kernel is pinned against the pure-jnp oracle in ref.py, with
+hypothesis sweeping shapes, tile sizes, and mask densities.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    block_punched_conv,
+    block_sparse_matmul,
+    conv_mask_to_gemm,
+    im2col,
+    masked_matmul_unblocked,
+)
+from compile.kernels.block_sparse_matmul import block_sparse_matmul_ad
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _mask(key, shape, density):
+    return (jax.random.uniform(key, shape) < density).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# block_sparse_matmul
+# ---------------------------------------------------------------------------
+
+
+class TestBlockSparseMatmul:
+    def test_dense_mask_equals_matmul(self):
+        k = jax.random.PRNGKey(0)
+        x = _rand(k, (64, 96))
+        w = _rand(jax.random.fold_in(k, 1), (96, 32))
+        m = jnp.ones_like(w)
+        out = block_sparse_matmul(x, w, m)
+        np.testing.assert_allclose(out, x @ w, rtol=1e-5, atol=1e-5)
+
+    def test_zero_mask_is_zero(self):
+        k = jax.random.PRNGKey(1)
+        x = _rand(k, (32, 32))
+        w = _rand(jax.random.fold_in(k, 1), (32, 32))
+        out = block_sparse_matmul(x, w, jnp.zeros_like(w))
+        np.testing.assert_allclose(out, jnp.zeros((32, 32)), atol=0)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (32, 32, 32), (64, 16, 32)])
+    def test_tile_sizes(self, bm, bn, bk):
+        k = jax.random.PRNGKey(2)
+        x = _rand(k, (48, 80))
+        w = _rand(jax.random.fold_in(k, 1), (80, 56))
+        m = _mask(jax.random.fold_in(k, 2), (80, 56), 0.5)
+        out = block_sparse_matmul(x, w, m, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(out, ref.masked_matmul_ref(x, w, m), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 70),
+        density=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, m, k, n, density, seed):
+        key = jax.random.PRNGKey(seed)
+        x = _rand(key, (m, k))
+        w = _rand(jax.random.fold_in(key, 1), (k, n))
+        msk = _mask(jax.random.fold_in(key, 2), (k, n), density)
+        out = block_sparse_matmul(x, w, msk, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(
+            out, ref.masked_matmul_ref(x, w, msk), rtol=1e-4, atol=1e-4
+        )
+
+    def test_unblocked_matches_blocked(self):
+        k = jax.random.PRNGKey(3)
+        x = _rand(k, (24, 40))
+        w = _rand(jax.random.fold_in(k, 1), (40, 24))
+        m = _mask(jax.random.fold_in(k, 2), (40, 24), 0.3)
+        a = block_sparse_matmul(x, w, m, bm=8, bn=8, bk=8)
+        b = masked_matmul_unblocked(x, w, m)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_shape_errors(self):
+        x = jnp.ones((4, 5))
+        w = jnp.ones((6, 4))
+        with pytest.raises(ValueError):
+            block_sparse_matmul(x, w, jnp.ones_like(w))
+        with pytest.raises(ValueError):
+            block_sparse_matmul(x, jnp.ones((5, 4)), jnp.ones((4, 5)))
+
+
+class TestBlockSparseMatmulAD:
+    def test_forward_matches(self):
+        k = jax.random.PRNGKey(4)
+        x = _rand(k, (16, 32))
+        w = _rand(jax.random.fold_in(k, 1), (32, 8))
+        m = _mask(jax.random.fold_in(k, 2), (32, 8), 0.5)
+        np.testing.assert_allclose(
+            block_sparse_matmul_ad(x, w, m),
+            ref.masked_matmul_ref(x, w, m),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_grads_match_ref(self):
+        k = jax.random.PRNGKey(5)
+        x = _rand(k, (8, 16))
+        w = _rand(jax.random.fold_in(k, 1), (16, 4))
+        m = _mask(jax.random.fold_in(k, 2), (16, 4), 0.6)
+
+        def loss_kernel(x_, w_):
+            return jnp.sum(block_sparse_matmul_ad(x_, w_, m) ** 2)
+
+        def loss_ref(x_, w_):
+            return jnp.sum(ref.masked_matmul_ref(x_, w_, m) ** 2)
+
+        gx_k, gw_k = jax.grad(loss_kernel, argnums=(0, 1))(x, w)
+        gx_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx_k, gx_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gw_k, gw_r, rtol=1e-4, atol=1e-4)
+
+    def test_masked_weight_grad_is_zero(self):
+        k = jax.random.PRNGKey(6)
+        x = _rand(k, (8, 12))
+        w = _rand(jax.random.fold_in(k, 1), (12, 6))
+        m = _mask(jax.random.fold_in(k, 2), (12, 6), 0.4)
+        gw = jax.grad(lambda w_: jnp.sum(block_sparse_matmul_ad(x, w_, m)))(w)
+        np.testing.assert_allclose(gw * (1 - m), jnp.zeros_like(w), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# im2col / block_punched_conv
+# ---------------------------------------------------------------------------
+
+
+class TestIm2col:
+    @pytest.mark.parametrize("stride", [1, 2])
+    @pytest.mark.parametrize("pad", ["SAME", "VALID"])
+    def test_im2col_matmul_equals_conv(self, stride, pad):
+        k = jax.random.PRNGKey(7)
+        x = _rand(k, (2, 3, 8, 8))
+        w = _rand(jax.random.fold_in(k, 1), (5, 3, 3, 3))
+        cols, (oh, ow) = im2col(x, 3, 3, stride, pad)
+        y = (cols @ w.reshape(5, -1).T).reshape(2, oh, ow, 5).transpose(0, 3, 1, 2)
+        np.testing.assert_allclose(
+            y, ref.conv2d_ref(x, w, stride=stride, padding=pad), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestBlockPunchedConv:
+    @pytest.mark.parametrize("kh", [1, 3, 5])
+    def test_kernel_sizes(self, kh):
+        k = jax.random.PRNGKey(8)
+        x = _rand(k, (2, 4, 10, 10))
+        w = _rand(jax.random.fold_in(k, 1), (6, 4, kh, kh))
+        m = _mask(jax.random.fold_in(k, 2), w.shape, 0.5)
+        out = block_punched_conv(x, w, m, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(
+            out, ref.block_punched_conv_ref(x, w, m), rtol=1e-4, atol=1e-4
+        )
+
+    def test_punched_mask_structure(self):
+        """A true block-punched mask (same intra-kernel positions across a
+        block of kernels) runs through the same path."""
+        k = jax.random.PRNGKey(9)
+        f, c, kh, kw = 8, 4, 3, 3
+        x = _rand(k, (1, c, 6, 6))
+        w = _rand(jax.random.fold_in(k, 1), (f, c, kh, kw))
+        # punch positions (0,0) and (1,2) for the whole (f, c) block
+        m = jnp.ones((f, c, kh, kw))
+        m = m.at[:, :, 0, 0].set(0.0).at[:, :, 1, 2].set(0.0)
+        out = block_punched_conv(x, w, m)
+        np.testing.assert_allclose(
+            out, ref.block_punched_conv_ref(x, w, m), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(1, 3),
+        c=st.integers(1, 8),
+        f=st.integers(1, 8),
+        hw=st.integers(4, 12),
+        stride=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_conv(self, n, c, f, hw, stride, seed):
+        key = jax.random.PRNGKey(seed)
+        x = _rand(key, (n, c, hw, hw))
+        w = _rand(jax.random.fold_in(key, 1), (f, c, 3, 3))
+        m = _mask(jax.random.fold_in(key, 2), w.shape, 0.5)
+        out = block_punched_conv(x, w, m, stride=stride, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(
+            out,
+            ref.block_punched_conv_ref(x, w, m, stride=stride),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_gemm_mask_roundtrip(self):
+        m4 = (jax.random.uniform(jax.random.PRNGKey(10), (6, 4, 3, 3)) < 0.5).astype(
+            jnp.float32
+        )
+        g = conv_mask_to_gemm(m4)
+        assert g.shape == (4 * 9, 6)
+        np.testing.assert_allclose(g.T.reshape(6, 4, 3, 3), m4, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# group norms oracle
+# ---------------------------------------------------------------------------
+
+
+class TestGroupNorms:
+    def test_blocked_norms(self):
+        w = jnp.arange(16.0).reshape(4, 4)
+        n = ref.group_norms_blocked_ref(w, 2, 2)
+        assert n.shape == (2, 2)
+        expect = np.array(
+            [
+                [0 + 1 + 16 + 25, 4 + 9 + 36 + 49],
+                [64 + 81 + 144 + 169, 100 + 121 + 196 + 225],
+            ],
+            dtype=np.float32,
+        )
+        np.testing.assert_allclose(n, expect)
+
+    def test_total_is_frobenius(self):
+        k = jax.random.PRNGKey(11)
+        w = _rand(k, (8, 12))
+        n = ref.group_norms_blocked_ref(w, 4, 4)
+        np.testing.assert_allclose(jnp.sum(n), jnp.sum(w * w), rtol=1e-5)

@@ -1,0 +1,124 @@
+//! Hot-path micro-benchmarks: the inner loops the §Perf pass optimizes.
+//! BCS conversion + SpMV, row reorder, mask generation, latency-model
+//! build, GA tuning, one RL search iteration, and (when artifacts exist)
+//! the PJRT block-matmul execution itself.
+
+use std::time::Duration;
+
+use prunemap::latmodel::LatencyModel;
+use prunemap::mapping::{map_search_based, SearchConfig};
+use prunemap::models::{zoo, Dataset, LayerSpec};
+use prunemap::pruning::{prune, PatternLibrary, Scheme};
+use prunemap::rng::Rng;
+use prunemap::runtime::{HostValue, Runtime};
+use prunemap::simulator::DeviceProfile;
+use prunemap::sparse::{permute_rows, reorder_rows, Bcs, Csr};
+use prunemap::tensor::Tensor;
+use prunemap::util::bench::{bench, black_box, header};
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let dev = DeviceProfile::s10();
+    let lib = PatternLibrary::default8();
+    println!("## hot paths\n");
+    header();
+
+    // --- mask generation ------------------------------------------------
+    let mut rng = Rng::new(1);
+    let w4 = Tensor::he_normal(&[128, 128, 3, 3], 128 * 9, &mut rng);
+    bench("prune_block_punched_128x128x3x3", budget, || {
+        black_box(prune(&w4, &Scheme::BlockPunched { bf: 8, bc: 16 }, 8.0, &lib));
+    });
+    bench("prune_pattern_128x128x3x3", budget, || {
+        black_box(prune(&w4, &Scheme::Pattern, 8.0, &lib));
+    });
+    let w2 = Tensor::he_normal(&[1024, 1024], 1024, &mut rng);
+    bench("prune_block_fc_1024x1024", budget, || {
+        black_box(prune(&w2, &Scheme::Block { bp: 16, bq: 32 }, 8.0, &lib));
+    });
+    bench("prune_unstructured_1024x1024", budget, || {
+        black_box(prune(&w2, &Scheme::Unstructured, 8.0, &lib));
+    });
+
+    // --- sparse formats ---------------------------------------------------
+    let pruned = {
+        let r = prune(&w4, &Scheme::BlockPunched { bf: 8, bc: 16 }, 8.0, &lib);
+        w4.hadamard(&r.mask).conv_to_gemm()
+    };
+    bench("bcs_from_dense_1152x128", budget, || {
+        black_box(Bcs::from_dense(&pruned));
+    });
+    bench("csr_from_dense_1152x128", budget, || {
+        black_box(Csr::from_dense(&pruned));
+    });
+    bench("reorder_rows_1152x128", budget, || {
+        black_box(reorder_rows(&pruned));
+    });
+    let order = reorder_rows(&pruned);
+    let reordered = permute_rows(&pruned, &order);
+    let bcs = Bcs::from_dense(&reordered);
+    let csr = Csr::from_dense(&reordered);
+    let x: Vec<f32> = (0..pruned.shape()[1]).map(|i| (i as f32).sin()).collect();
+    bench("bcs_spmv", budget, || {
+        black_box(bcs.spmv(&x));
+    });
+    bench("csr_spmv", budget, || {
+        black_box(csr.spmv(&x));
+    });
+    println!(
+        "    storage: dense={}B csr={}B bcs={}B (bcs/csr={:.2})",
+        reordered.len() * 4,
+        csr.storage_bytes(),
+        bcs.storage_bytes(),
+        bcs.storage_bytes() as f64 / csr.storage_bytes() as f64
+    );
+
+    // --- mapping machinery -------------------------------------------------
+    bench("latmodel_build_s10", Duration::from_secs(2), || {
+        black_box(LatencyModel::build(&dev));
+    });
+    let layer = LayerSpec::conv("c", 3, 128, 128, 28, 1);
+    let base = prunemap::simulator::ExecConfig::new(
+        Scheme::BlockPunched { bf: 8, bc: 16 },
+        8.0,
+        &dev,
+    );
+    bench("ga_tune_layer", budget, || {
+        let mut r = Rng::new(3);
+        black_box(prunemap::compiler::tune_layer(
+            &layer,
+            &base,
+            &dev,
+            &prunemap::compiler::GaConfig::default(),
+            &mut r,
+        ));
+    });
+    let m = zoo::resnet18(Dataset::Cifar10);
+    bench("rl_search_10_iters_resnet18", Duration::from_secs(2), || {
+        black_box(map_search_based(
+            &m,
+            &dev,
+            &SearchConfig { iterations: 10, samples: 4, ..Default::default() },
+        ));
+    });
+
+    // --- PJRT execution (needs `make artifacts`) ---------------------------
+    match Runtime::open(Runtime::default_dir()) {
+        Ok(rt) => {
+            let exe = rt.load("block_matmul").expect("compile block_matmul");
+            let sig = exe.signature().clone();
+            let (mm, kk, nn) = (sig.m.unwrap(), sig.k.unwrap(), sig.n.unwrap());
+            let mut rng = Rng::new(9);
+            let x = HostValue::f32(&[mm, kk], (0..mm * kk).map(|_| rng.normal()).collect());
+            let w = HostValue::f32(&[kk, nn], (0..kk * nn).map(|_| rng.normal()).collect());
+            let mask = HostValue::f32(
+                &[kk, nn],
+                (0..kk * nn).map(|_| rng.bernoulli(0.25) as u8 as f32).collect(),
+            );
+            bench("pjrt_block_matmul_256x512x512", Duration::from_secs(2), || {
+                black_box(exe.run(&[x.clone(), w.clone(), mask.clone()]).unwrap());
+            });
+        }
+        Err(_) => println!("(skipping PJRT bench: run `make artifacts` first)"),
+    }
+}

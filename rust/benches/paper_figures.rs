@@ -1,0 +1,44 @@
+//! Bench harness regenerating every FIGURE of the paper's evaluation
+//! (Figs. 3, 5, 7, 9, 10a, 10b) and timing the regeneration.
+
+use prunemap::experiments as exp;
+use prunemap::simulator::DeviceProfile;
+use prunemap::util::bench::{bench, black_box, header};
+
+fn main() {
+    let dev = DeviceProfile::s10();
+    println!("## paper figures (regeneration + timing)\n");
+
+    exp::fig3().print();
+    exp::fig5(&dev).print();
+    for f in exp::fig7() {
+        f.print();
+    }
+    for f in exp::fig9(&dev) {
+        f.print();
+    }
+    exp::fig10a(&dev).print();
+    exp::fig10b(&dev).print();
+
+    println!("\n## timings\n");
+    header();
+    let budget = std::time::Duration::from_millis(300);
+    bench("fig3_layer_stats", budget, || {
+        black_box(exp::fig3());
+    });
+    bench("fig5_blocksize_tradeoff", budget, || {
+        black_box(exp::fig5(&dev));
+    });
+    bench("fig7_pattern_vs_block_acc", budget, || {
+        black_box(exp::fig7());
+    });
+    bench("fig9_conv_latency_sweep", budget, || {
+        black_box(exp::fig9(&dev));
+    });
+    bench("fig10a_fc_latency", budget, || {
+        black_box(exp::fig10a(&dev));
+    });
+    bench("fig10b_pattern_latency", budget, || {
+        black_box(exp::fig10b(&dev));
+    });
+}

@@ -1,0 +1,46 @@
+//! Bench harness regenerating every TABLE of the paper's evaluation and
+//! timing the regeneration (criterion is unavailable offline; see
+//! util::bench).  Run with `cargo bench` — output doubles as the
+//! reproduction record consumed by EXPERIMENTS.md.
+
+use std::time::Duration;
+
+use prunemap::experiments as exp;
+use prunemap::simulator::DeviceProfile;
+use prunemap::util::bench::{bench_n, black_box, header};
+
+fn main() {
+    let dev = DeviceProfile::s10();
+    println!("## paper tables (regeneration + timing)\n");
+
+    // print each table once (the reproduction record)...
+    exp::table1().print();
+    exp::table2(&dev).print();
+    exp::table3().print();
+    let t4 = exp::table4(&dev, true);
+    t4.print();
+    exp::table5(&dev).print();
+    exp::table6().print();
+    exp::table7().print();
+    exp::ablation(&dev).print();
+
+    // ...then time the generators
+    println!("\n## timings\n");
+    header();
+    bench_n("table2_yolo", 5, || {
+        black_box(exp::table2(&dev));
+    });
+    bench_n("table3_dw_ablation", 10, || {
+        black_box(exp::table3());
+    });
+    bench_n("table4_main_quick", 2, || {
+        black_box(exp::table4(&dev, true));
+    });
+    bench_n("table5_macs_levels", 3, || {
+        black_box(exp::table5(&dev));
+    });
+    bench_n("table7_portability", 2, || {
+        black_box(exp::table7());
+    });
+    let _ = Duration::ZERO;
+}

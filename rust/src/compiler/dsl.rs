@@ -1,0 +1,295 @@
+//! High-level DSL for model definition (App. A.3).
+//!
+//! A line-oriented language equivalent to the computation graph — "DSL is
+//! another type of high-level function used to simulate the data flow of
+//! the DNN model, and they can be easily converted to each other":
+//!
+//! ```text
+//! input x 1 3 32 32
+//! conv c1 x k=3 in=3 out=16 hw=32 stride=1
+//! bn b1 c1
+//! relu r1 b1
+//! dwconv d1 r1 k=3 ch=16 hw=32 stride=1
+//! fc f1 r1 in=1024 out=10
+//! add a1 r1 r2
+//! pool p1 r1
+//! output r1
+//! ```
+//!
+//! `parse` builds a [`Graph`]; `print` emits DSL from a graph; the pair
+//! round-trips (tested).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::ir::{Graph, Node, Op};
+use crate::models::{LayerKind, LayerSpec};
+
+fn kv_args(tokens: &[&str]) -> Result<HashMap<String, usize>> {
+    let mut out = HashMap::new();
+    for t in tokens {
+        let (k, v) = t
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected key=value, got '{t}'"))?;
+        out.insert(k.to_string(), v.parse::<usize>().map_err(|_| anyhow!("bad int '{v}'"))?);
+    }
+    Ok(out)
+}
+
+fn req(map: &HashMap<String, usize>, key: &str, line: &str) -> Result<usize> {
+    map.get(key)
+        .copied()
+        .ok_or_else(|| anyhow!("missing '{key}=' in line: {line}"))
+}
+
+/// Parse DSL text into a graph.
+pub fn parse(text: &str) -> Result<Graph> {
+    let mut g = Graph::default();
+    let mut names: HashMap<String, usize> = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let op_kind = toks[0];
+        let err = |m: &str| anyhow!("line {}: {m}: {line}", lineno + 1);
+        let resolve = |names: &HashMap<String, usize>, n: &str| -> Result<usize> {
+            names
+                .get(n)
+                .copied()
+                .ok_or_else(|| anyhow!("line {}: unknown tensor '{n}'", lineno + 1))
+        };
+        match op_kind {
+            "input" => {
+                if toks.len() < 3 {
+                    return Err(err("input needs a name and dims"));
+                }
+                let shape: Vec<usize> = toks[2..]
+                    .iter()
+                    .map(|t| t.parse().map_err(|_| anyhow!("bad dim '{t}'")))
+                    .collect::<Result<_>>()?;
+                let id = g.add(toks[1], Op::Input { shape }, vec![]);
+                names.insert(toks[1].to_string(), id);
+            }
+            "conv" | "dwconv" => {
+                if toks.len() < 3 {
+                    return Err(err("conv needs name and input"));
+                }
+                let input = resolve(&names, toks[2])?;
+                let args = kv_args(&toks[3..])?;
+                let k = req(&args, "k", line)?;
+                let hw = req(&args, "hw", line)?;
+                let stride = args.get("stride").copied().unwrap_or(1);
+                let layer = if op_kind == "dwconv" {
+                    LayerSpec::dwconv(toks[1], k, req(&args, "ch", line)?, hw, stride)
+                } else {
+                    LayerSpec::conv(
+                        toks[1],
+                        k,
+                        req(&args, "in", line)?,
+                        req(&args, "out", line)?,
+                        hw,
+                        stride,
+                    )
+                };
+                let id = g.add(toks[1], Op::Layer { layer }, vec![input]);
+                names.insert(toks[1].to_string(), id);
+            }
+            "fc" => {
+                if toks.len() < 3 {
+                    return Err(err("fc needs name and input"));
+                }
+                let input = resolve(&names, toks[2])?;
+                let args = kv_args(&toks[3..])?;
+                let layer =
+                    LayerSpec::fc(toks[1], req(&args, "in", line)?, req(&args, "out", line)?);
+                let id = g.add(toks[1], Op::Layer { layer }, vec![input]);
+                names.insert(toks[1].to_string(), id);
+            }
+            "bn" | "relu" | "pool" => {
+                if toks.len() != 3 {
+                    return Err(err("unary op needs name and input"));
+                }
+                let input = resolve(&names, toks[2])?;
+                let op = match op_kind {
+                    "bn" => Op::BatchNorm,
+                    "relu" => Op::Relu,
+                    _ => Op::Pool,
+                };
+                let id = g.add(toks[1], op, vec![input]);
+                names.insert(toks[1].to_string(), id);
+            }
+            "add" => {
+                if toks.len() != 4 {
+                    return Err(err("add needs name and two inputs"));
+                }
+                let a = resolve(&names, toks[2])?;
+                let b = resolve(&names, toks[3])?;
+                let id = g.add(toks[1], Op::Add, vec![a, b]);
+                names.insert(toks[1].to_string(), id);
+            }
+            "output" => {
+                if toks.len() != 2 {
+                    return Err(err("output needs one input"));
+                }
+                let input = resolve(&names, toks[1])?;
+                g.add("output", Op::Output, vec![input]);
+            }
+            other => bail!("line {}: unknown op '{other}'", lineno + 1),
+        }
+    }
+    g.topo_check()?;
+    Ok(g)
+}
+
+/// Emit DSL text from a graph (inverse of [`parse`]).
+pub fn print(g: &Graph) -> String {
+    let mut out = String::new();
+    let name_of = |id: usize| g.nodes[id].name.clone();
+    for node in &g.nodes {
+        match &node.op {
+            Op::Input { shape } => {
+                out.push_str(&format!(
+                    "input {} {}\n",
+                    node.name,
+                    shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(" ")
+                ));
+            }
+            Op::Layer { layer } => match layer.kind {
+                LayerKind::Fc => out.push_str(&format!(
+                    "fc {} {} in={} out={}\n",
+                    node.name,
+                    name_of(node.inputs[0]),
+                    layer.in_ch,
+                    layer.out_ch
+                )),
+                LayerKind::DepthwiseConv => out.push_str(&format!(
+                    "dwconv {} {} k={} ch={} hw={} stride={}\n",
+                    node.name,
+                    name_of(node.inputs[0]),
+                    layer.kh,
+                    layer.in_ch,
+                    layer.in_hw,
+                    layer.stride
+                )),
+                LayerKind::Conv => out.push_str(&format!(
+                    "conv {} {} k={} in={} out={} hw={} stride={}\n",
+                    node.name,
+                    name_of(node.inputs[0]),
+                    layer.kh,
+                    layer.in_ch,
+                    layer.out_ch,
+                    layer.in_hw,
+                    layer.stride
+                )),
+            },
+            Op::BatchNorm => out.push_str(&format!(
+                "bn {} {}\n",
+                node.name,
+                name_of(node.inputs[0])
+            )),
+            Op::Relu => out.push_str(&format!(
+                "relu {} {}\n",
+                node.name,
+                name_of(node.inputs[0])
+            )),
+            Op::Pool => out.push_str(&format!(
+                "pool {} {}\n",
+                node.name,
+                name_of(node.inputs[0])
+            )),
+            Op::Add => out.push_str(&format!(
+                "add {} {} {}\n",
+                node.name,
+                name_of(node.inputs[0]),
+                name_of(node.inputs[1])
+            )),
+            Op::Output => {
+                out.push_str(&format!("output {}\n", name_of(node.inputs[0])));
+            }
+        }
+    }
+    out
+}
+
+/// Node-level structural equality (op + wiring), for round-trip tests.
+pub fn graphs_equal(a: &Graph, b: &Graph) -> bool {
+    if a.nodes.len() != b.nodes.len() {
+        return false;
+    }
+    a.nodes.iter().zip(&b.nodes).all(|(x, y): (&Node, &Node)| {
+        x.inputs == y.inputs
+            && match (&x.op, &y.op) {
+                (Op::Input { shape: s1 }, Op::Input { shape: s2 }) => s1 == s2,
+                (Op::Layer { layer: l1 }, Op::Layer { layer: l2 }) => {
+                    l1.kind == l2.kind
+                        && l1.kh == l2.kh
+                        && l1.in_ch == l2.in_ch
+                        && l1.out_ch == l2.out_ch
+                        && l1.in_hw == l2.in_hw
+                        && l1.stride == l2.stride
+                }
+                (o1, o2) => o1 == o2,
+            }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    const SAMPLE: &str = r#"
+# tiny residual net
+input x 1 3 32 32
+conv c1 x k=3 in=3 out=16 hw=32 stride=1
+bn b1 c1
+relu r1 b1
+conv c2 r1 k=3 in=16 out=16 hw=32 stride=1
+add a1 c2 r1
+relu r2 a1
+fc f1 r2 in=16384 out=10
+output f1
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let g = parse(SAMPLE).unwrap();
+        assert_eq!(g.layer_nodes().len(), 3);
+        g.topo_check().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_sample() {
+        let g = parse(SAMPLE).unwrap();
+        let text = print(&g);
+        let g2 = parse(&text).unwrap();
+        assert!(graphs_equal(&g, &g2), "\n{text}");
+    }
+
+    #[test]
+    fn roundtrip_model_graphs() {
+        for m in [zoo::proxy_cnn(), zoo::mobilenet_v2(crate::models::Dataset::Cifar10)] {
+            let g = Graph::from_model(&m);
+            let text = print(&g);
+            let g2 = parse(&text).unwrap();
+            assert!(graphs_equal(&g, &g2), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(parse("conv c1 missing k=3").is_err());
+        assert!(parse("input x 1 3 32 32\nconv c1 x k=3").is_err()); // missing in/out/hw
+        assert!(parse("bogus y z").is_err());
+        assert!(parse("input x 1\noutput nope").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let g = parse("# hi\n\ninput x 1 3 8 8\noutput x\n").unwrap();
+        assert_eq!(g.nodes.len(), 2);
+    }
+}

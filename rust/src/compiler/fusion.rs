@@ -1,0 +1,141 @@
+//! Layer-fusion pass (App. A.1).
+//!
+//! Fuses elementwise epilogues (BN, ReLU, residual Add) into their producer
+//! compute kernel, eliminating intermediate-tensor round-trips and kernel
+//! launches.  Candidates are identified conservatively: an elementwise node
+//! fuses into its producer iff the producer has exactly one consumer (the
+//! paper's "only explore the opportunities specifically provided" + memory
+//! cost metric — fusing a multi-consumer producer would recompute).
+
+use std::collections::HashMap;
+
+use super::ir::{Graph, Op};
+
+/// A fused kernel: one anchor compute node + fused epilogue node ids.
+#[derive(Debug, Clone)]
+pub struct FusedKernel {
+    /// The compute node (Layer) or standalone elementwise anchor.
+    pub anchor: usize,
+    /// Elementwise nodes folded into the anchor's kernel.
+    pub epilogue: Vec<usize>,
+}
+
+/// Result of the pass.
+#[derive(Debug, Clone)]
+pub struct FusionPlan {
+    pub kernels: Vec<FusedKernel>,
+}
+
+impl FusionPlan {
+    pub fn kernel_count(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Was the given node fused into some anchor (i.e. not its own kernel)?
+    pub fn is_fused_away(&self, node: usize) -> bool {
+        self.kernels.iter().any(|k| k.epilogue.contains(&node))
+    }
+
+    /// The kernel anchored at a given layer node, if any.
+    pub fn kernel_for_anchor(&self, anchor: usize) -> Option<&FusedKernel> {
+        self.kernels.iter().find(|k| k.anchor == anchor)
+    }
+}
+
+/// Run the fusion pass over a graph.
+pub fn fuse(graph: &Graph) -> FusionPlan {
+    let fanout = graph.fanout();
+    // map: node -> anchor it fused into
+    let mut fused_into: HashMap<usize, usize> = HashMap::new();
+    let mut epilogues: HashMap<usize, Vec<usize>> = HashMap::new();
+
+    for node in &graph.nodes {
+        if !node.op.is_elementwise() {
+            continue;
+        }
+        // single-input elementwise chains fuse upward; Add fuses into its
+        // first producer when that producer is single-consumer
+        let producer = match node.op {
+            Op::Add => node.inputs.first().copied(),
+            _ => node.inputs.first().copied(),
+        };
+        let Some(p) = producer else { continue };
+        // resolve through already-fused producers to the anchor
+        let anchor = *fused_into.get(&p).unwrap_or(&p);
+        let anchor_node = &graph.nodes[anchor];
+        let anchor_is_compute = matches!(anchor_node.op, Op::Layer { .. });
+        let producer_single_consumer = fanout.get(&p).copied().unwrap_or(0) == 1;
+        if anchor_is_compute && producer_single_consumer {
+            fused_into.insert(node.id, anchor);
+            epilogues.entry(anchor).or_default().push(node.id);
+        }
+    }
+
+    let mut kernels = Vec::new();
+    for node in &graph.nodes {
+        if matches!(node.op, Op::Input { .. } | Op::Output) {
+            continue;
+        }
+        if fused_into.contains_key(&node.id) {
+            continue; // folded into an anchor
+        }
+        kernels.push(FusedKernel {
+            anchor: node.id,
+            epilogue: epilogues.remove(&node.id).unwrap_or_default(),
+        });
+    }
+    FusionPlan { kernels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Dataset};
+    use crate::compiler::ir::Graph;
+
+    #[test]
+    fn conv_bn_relu_fuses_to_one_kernel() {
+        let g = Graph::from_model(&zoo::proxy_cnn());
+        let plan = fuse(&g);
+        // proxy: 3 conv (+bn+relu fused) + fc1 (+relu) + fc2 = 5 kernels
+        assert_eq!(plan.kernel_count(), 5, "{:?}", plan.kernels);
+        // each conv kernel carries 2 epilogue ops
+        let conv_kernels: Vec<_> = plan
+            .kernels
+            .iter()
+            .filter(|k| k.epilogue.len() == 2)
+            .collect();
+        assert_eq!(conv_kernels.len(), 3);
+    }
+
+    #[test]
+    fn fusion_reduces_kernel_count_on_vgg() {
+        let g = Graph::from_model(&zoo::vgg16(Dataset::Cifar10));
+        let plan = fuse(&g);
+        assert!(plan.kernel_count() < g.naive_kernel_count() / 2);
+        // exactly one kernel per prunable layer
+        assert_eq!(plan.kernel_count(), g.layer_nodes().len());
+    }
+
+    #[test]
+    fn multi_consumer_producer_not_fused() {
+        // build: input -> layer -> (relu, relu2) — layer has two consumers
+        use crate::compiler::ir::Op;
+        use crate::models::LayerSpec;
+        let mut g = Graph::default();
+        let input = g.add("in", Op::Input { shape: vec![1, 3, 8, 8] }, vec![]);
+        let conv = g.add(
+            "conv",
+            Op::Layer { layer: LayerSpec::conv("conv", 3, 3, 8, 8, 1) },
+            vec![input],
+        );
+        let r1 = g.add("relu1", Op::Relu, vec![conv]);
+        let r2 = g.add("relu2", Op::Relu, vec![conv]);
+        g.add("out", Op::Output, vec![r1.max(r2)]);
+        let plan = fuse(&g);
+        // conv cannot absorb either relu: 3 kernels
+        assert_eq!(plan.kernel_count(), 3);
+        assert!(!plan.is_fused_away(r1));
+        assert!(!plan.is_fused_away(r2));
+    }
+}

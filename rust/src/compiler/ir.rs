@@ -1,0 +1,181 @@
+//! Computation-graph IR (App. A.3: "a computational graph of a DNN model
+//! can be represented by a directed acyclic graph; each node corresponds to
+//! an operator").
+//!
+//! The IR is what the DSL parses into, what the fusion pass rewrites, and
+//! what codegen lowers to a [`Schedule`] of kernel launches for the
+//! simulator.  Each compute node carries a layer-wise annotation with the
+//! BCS pruning information (scheme + compression), mirroring the paper's
+//! "layerwise IR which contains BCS pruning information".
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::models::{LayerSpec, ModelSpec};
+use crate::pruning::Scheme;
+
+/// Operator kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input with NCHW-ish shape metadata.
+    Input { shape: Vec<usize> },
+    /// Convolution / FC referencing a prunable layer.
+    Layer { layer: LayerSpec },
+    /// Batch normalization (elementwise at inference).
+    BatchNorm,
+    /// ReLU (elementwise).
+    Relu,
+    /// Elementwise residual add (two inputs).
+    Add,
+    /// 2x2 pooling.
+    Pool,
+    /// Graph output.
+    Output,
+}
+
+impl Op {
+    /// Elementwise ops are fusion *epilogue* candidates.
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self, Op::BatchNorm | Op::Relu | Op::Add)
+    }
+}
+
+/// A node in the DAG.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<usize>,
+    /// Pruning annotation (None until the mapping method assigns one).
+    pub scheme: Option<(Scheme, f32)>,
+}
+
+/// The computation graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn add(&mut self, name: &str, op: Op, inputs: Vec<usize>) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.to_string(), op, inputs, scheme: None });
+        id
+    }
+
+    /// Build the canonical inference graph for a model spec: each conv is
+    /// followed by BN + ReLU; FCs by ReLU (except the last).
+    pub fn from_model(model: &ModelSpec) -> Graph {
+        let mut g = Graph::default();
+        let input_shape = vec![
+            1,
+            model.layers.first().map(|l| l.in_ch).unwrap_or(3),
+            model.layers.first().map(|l| l.in_hw).unwrap_or(32),
+            model.layers.first().map(|l| l.in_hw).unwrap_or(32),
+        ];
+        let mut prev = g.add("input", Op::Input { shape: input_shape }, vec![]);
+        let n = model.layers.len();
+        for (i, layer) in model.layers.iter().enumerate() {
+            let lid = g.add(&layer.name, Op::Layer { layer: layer.clone() }, vec![prev]);
+            let is_conv = layer.kind != crate::models::LayerKind::Fc;
+            prev = lid;
+            if is_conv {
+                let bn = g.add(&format!("{}_bn", layer.name), Op::BatchNorm, vec![prev]);
+                let relu = g.add(&format!("{}_relu", layer.name), Op::Relu, vec![bn]);
+                prev = relu;
+            } else if i + 1 < n {
+                let relu = g.add(&format!("{}_relu", layer.name), Op::Relu, vec![prev]);
+                prev = relu;
+            }
+        }
+        g.add("output", Op::Output, vec![prev]);
+        g
+    }
+
+    /// Number of compute-kernel launches if executed naively (one kernel
+    /// per non-input/output node).
+    pub fn naive_kernel_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !matches!(n.op, Op::Input { .. } | Op::Output))
+            .count()
+    }
+
+    /// Topological order (the graph is built in topo order; verify).
+    pub fn topo_check(&self) -> Result<()> {
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if i >= n.id {
+                    bail!("node {} ('{}') depends on later node {}", n.id, n.name, i);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Consumers count per node.
+    pub fn fanout(&self) -> HashMap<usize, usize> {
+        let mut out: HashMap<usize, usize> = HashMap::new();
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                *out.entry(i).or_default() += 1;
+            }
+        }
+        out
+    }
+
+    /// Assign a pruning annotation to the layer node with the given name.
+    pub fn annotate(&mut self, layer_name: &str, scheme: Scheme, compression: f32) -> Result<()> {
+        let node = self
+            .nodes
+            .iter_mut()
+            .find(|n| n.name == layer_name && matches!(n.op, Op::Layer { .. }))
+            .ok_or_else(|| anyhow!("no layer node named '{layer_name}'"))?;
+        node.scheme = Some((scheme, compression));
+        Ok(())
+    }
+
+    /// All layer nodes in order.
+    pub fn layer_nodes(&self) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Layer { .. }))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Dataset};
+
+    #[test]
+    fn from_model_structure() {
+        let m = zoo::proxy_cnn();
+        let g = Graph::from_model(&m);
+        g.topo_check().unwrap();
+        assert_eq!(g.layer_nodes().len(), m.layers.len());
+        // conv layers get bn+relu, fc1 gets relu, fc2 (last) bare
+        // nodes: input + 3*(conv+bn+relu) + (fc+relu) + fc + output
+        assert_eq!(g.nodes.len(), 1 + 9 + 2 + 1 + 1);
+    }
+
+    #[test]
+    fn annotate_layers() {
+        let m = zoo::proxy_cnn();
+        let mut g = Graph::from_model(&m);
+        g.annotate("conv1", Scheme::BlockPunched { bf: 4, bc: 4 }, 4.0).unwrap();
+        assert!(g.annotate("missing", Scheme::Unstructured, 2.0).is_err());
+        let node = g.layer_nodes()[0];
+        assert!(node.scheme.is_some());
+    }
+
+    #[test]
+    fn kernel_count_counts_compute_nodes() {
+        let g = Graph::from_model(&zoo::vgg16(Dataset::Cifar10));
+        assert!(g.naive_kernel_count() > 13 * 3);
+        g.topo_check().unwrap();
+    }
+}

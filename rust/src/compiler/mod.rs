@@ -1,0 +1,132 @@
+//! Compiler stack (paper §4.3 + Appendix A): computation-graph IR, DSL
+//! front-end, layer-fusion pass, GA auto-tuner, and schedule codegen.
+//!
+//! The pipeline mirrors the paper's: DSL ⇄ graph IR (with layer-wise BCS
+//! pruning annotations) → fusion → tuning → a [`Schedule`] of kernel
+//! launches that the mobile-SoC simulator "executes".  On the real system
+//! codegen would emit OpenCL/C++; here the schedule *is* the executable —
+//! the simulator prices exactly what generated code would do (dispatches,
+//! tiles, sparse-format index work).
+
+pub mod dsl;
+pub mod fusion;
+pub mod ir;
+pub mod tuning;
+
+pub use fusion::{fuse, FusionPlan};
+pub use ir::{Graph, Node, Op};
+pub use tuning::{tune_layer, tune_model, GaConfig};
+
+use crate::models::LayerSpec;
+use crate::pruning::Scheme;
+use crate::simulator::{layer_latency_ms, DeviceProfile, ExecConfig, TileParams};
+
+/// One kernel launch in the compiled schedule.
+#[derive(Debug, Clone)]
+pub struct KernelLaunch {
+    pub layer: LayerSpec,
+    pub cfg: ExecConfig,
+}
+
+/// The compiled model: an ordered list of kernel launches.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub kernels: Vec<KernelLaunch>,
+    pub device: String,
+}
+
+impl Schedule {
+    /// Total latency on the device it was compiled for.
+    pub fn latency_ms(&self, dev: &DeviceProfile) -> f64 {
+        self.kernels
+            .iter()
+            .map(|k| layer_latency_ms(&k.layer, &k.cfg, dev))
+            .sum()
+    }
+}
+
+/// Compile a graph: fuse, annotate pruning configs, tune tiles, emit the
+/// schedule.  `schemes` maps layer-node order to (scheme, compression);
+/// layers without an entry run dense.
+pub fn compile(
+    graph: &Graph,
+    schemes: &[(Scheme, f32)],
+    dev: &DeviceProfile,
+    tune: Option<&GaConfig>,
+    seed: u64,
+) -> Schedule {
+    let plan = fuse(graph);
+    let layer_nodes = graph.layer_nodes();
+    let mut kernels = Vec::new();
+    let mut rng = crate::rng::Rng::new(seed);
+    for (i, node) in layer_nodes.iter().enumerate() {
+        let Op::Layer { layer } = &node.op else { unreachable!() };
+        let (scheme, compression) = schemes
+            .get(i)
+            .copied()
+            .or(node.scheme.map(|(s, c)| (s, c)))
+            .unwrap_or((Scheme::None, 1.0));
+        let fused = plan
+            .kernel_for_anchor(node.id)
+            .map(|k| !k.epilogue.is_empty())
+            .unwrap_or(false);
+        let mut cfg = ExecConfig::new(scheme, compression, dev);
+        cfg.fused = fused;
+        if let Some(ga) = tune {
+            let (tile, _) = tune_layer(layer, &cfg, dev, ga, &mut rng);
+            cfg.tile = tile;
+        } else {
+            cfg.tile = TileParams::default_for(dev);
+        }
+        kernels.push(KernelLaunch { layer: layer.clone(), cfg });
+    }
+    Schedule { kernels, device: dev.name.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Dataset};
+
+    #[test]
+    fn compile_dense_and_pruned() {
+        let dev = DeviceProfile::s10();
+        let m = zoo::proxy_cnn();
+        let g = Graph::from_model(&m);
+        let dense = compile(&g, &[], &dev, None, 0);
+        assert_eq!(dense.kernels.len(), m.layers.len());
+        let schemes: Vec<(Scheme, f32)> = m
+            .layers
+            .iter()
+            .map(|_| (Scheme::BlockPunched { bf: 8, bc: 16 }, 8.0))
+            .collect();
+        let pruned = compile(&g, &schemes, &dev, None, 0);
+        assert!(pruned.latency_ms(&dev) < dense.latency_ms(&dev));
+    }
+
+    #[test]
+    fn tuning_improves_or_matches_schedule() {
+        let dev = DeviceProfile::s10();
+        let m = zoo::vgg16(Dataset::Cifar10);
+        let g = Graph::from_model(&m);
+        let schemes: Vec<(Scheme, f32)> = m
+            .layers
+            .iter()
+            .map(|_| (Scheme::BlockPunched { bf: 16, bc: 32 }, 8.0))
+            .collect();
+        let untuned = compile(&g, &schemes, &dev, None, 1);
+        let tuned = compile(&g, &schemes, &dev, Some(&GaConfig::default()), 1);
+        assert!(tuned.latency_ms(&dev) <= untuned.latency_ms(&dev) + 1e-9);
+    }
+
+    #[test]
+    fn fusion_flag_propagates() {
+        let dev = DeviceProfile::s10();
+        let m = zoo::proxy_cnn();
+        let g = Graph::from_model(&m);
+        let s = compile(&g, &[], &dev, None, 0);
+        // conv kernels fused (bn+relu), fc1 fused (relu), fc2 not
+        let fused_count = s.kernels.iter().filter(|k| k.cfg.fused).count();
+        assert_eq!(fused_count, 4);
+    }
+}

@@ -1,0 +1,176 @@
+//! Genetic-algorithm auto-tuner (App. A.2).
+//!
+//! Per layer, searches tile/unroll parameters against the device cost
+//! model, "starting parameter search after an initialization with an
+//! arbitrary number of chromosomes".  Elitist GA: tournament selection,
+//! single-point crossover over the (tile_m, tile_n, unroll) genome,
+//! per-gene mutation.
+
+use crate::models::LayerSpec;
+use crate::rng::Rng;
+use crate::simulator::{layer_latency_ms, DeviceProfile, ExecConfig, TileParams};
+
+/// GA hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub mutation_rate: f32,
+    pub elite: usize,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig { population: 24, generations: 12, mutation_rate: 0.25, elite: 2 }
+    }
+}
+
+const TILE_M: [usize; 4] = [4, 8, 16, 32];
+const TILE_N: [usize; 5] = [16, 32, 64, 128, 256];
+const UNROLL: [usize; 4] = [1, 2, 4, 8];
+
+fn random_genome(rng: &mut Rng) -> TileParams {
+    TileParams {
+        tile_m: TILE_M[rng.below(TILE_M.len())],
+        tile_n: TILE_N[rng.below(TILE_N.len())],
+        unroll: UNROLL[rng.below(UNROLL.len())],
+    }
+}
+
+fn mutate(t: &mut TileParams, rate: f32, rng: &mut Rng) {
+    if rng.bernoulli(rate) {
+        t.tile_m = TILE_M[rng.below(TILE_M.len())];
+    }
+    if rng.bernoulli(rate) {
+        t.tile_n = TILE_N[rng.below(TILE_N.len())];
+    }
+    if rng.bernoulli(rate) {
+        t.unroll = UNROLL[rng.below(UNROLL.len())];
+    }
+}
+
+fn crossover(a: &TileParams, b: &TileParams, rng: &mut Rng) -> TileParams {
+    match rng.below(3) {
+        0 => TileParams { tile_m: a.tile_m, tile_n: b.tile_n, unroll: b.unroll },
+        1 => TileParams { tile_m: a.tile_m, tile_n: a.tile_n, unroll: b.unroll },
+        _ => TileParams { tile_m: b.tile_m, tile_n: a.tile_n, unroll: a.unroll },
+    }
+}
+
+/// Tune one layer's tile parameters; returns (best tile, best latency ms).
+pub fn tune_layer(
+    layer: &LayerSpec,
+    base: &ExecConfig,
+    dev: &DeviceProfile,
+    cfg: &GaConfig,
+    rng: &mut Rng,
+) -> (TileParams, f64) {
+    let fitness = |t: &TileParams| -> f64 {
+        let mut c = base.clone();
+        c.tile = *t;
+        layer_latency_ms(layer, &c, dev)
+    };
+    let mut pop: Vec<(TileParams, f64)> = (0..cfg.population)
+        .map(|_| {
+            let g = random_genome(rng);
+            let f = fitness(&g);
+            (g, f)
+        })
+        .collect();
+    pop.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+    for _gen in 0..cfg.generations {
+        let mut next: Vec<(TileParams, f64)> = pop.iter().take(cfg.elite).cloned().collect();
+        while next.len() < cfg.population {
+            // tournament of 3
+            let pick = |rng: &mut Rng, pop: &[(TileParams, f64)]| -> TileParams {
+                let mut best = pop[rng.below(pop.len())];
+                for _ in 0..2 {
+                    let c = pop[rng.below(pop.len())];
+                    if c.1 < best.1 {
+                        best = c;
+                    }
+                }
+                best.0
+            };
+            let a = pick(rng, &pop);
+            let b = pick(rng, &pop);
+            let mut child = crossover(&a, &b, rng);
+            mutate(&mut child, cfg.mutation_rate, rng);
+            let f = fitness(&child);
+            next.push((child, f));
+        }
+        next.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        pop = next;
+    }
+    pop[0]
+}
+
+/// Tune every layer of a model; returns per-layer tiles + total latency.
+pub fn tune_model(
+    layers: &[LayerSpec],
+    bases: &[ExecConfig],
+    dev: &DeviceProfile,
+    cfg: &GaConfig,
+    seed: u64,
+) -> (Vec<TileParams>, f64) {
+    assert_eq!(layers.len(), bases.len());
+    let mut rng = Rng::new(seed);
+    let mut tiles = Vec::with_capacity(layers.len());
+    let mut total = 0.0;
+    for (layer, base) in layers.iter().zip(bases) {
+        let (t, lat) = tune_layer(layer, base, dev, cfg, &mut rng);
+        tiles.push(t);
+        total += lat;
+    }
+    (tiles, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::Scheme;
+
+    #[test]
+    fn tuned_no_worse_than_default() {
+        let dev = DeviceProfile::s10();
+        let layer = LayerSpec::conv("c", 3, 128, 128, 28, 1);
+        let base = ExecConfig::new(Scheme::BlockPunched { bf: 8, bc: 16 }, 8.0, &dev);
+        let default_lat = layer_latency_ms(&layer, &base, &dev);
+        let mut rng = Rng::new(1);
+        let (tile, tuned_lat) = tune_layer(&layer, &base, &dev, &GaConfig::default(), &mut rng);
+        assert!(tuned_lat <= default_lat + 1e-9, "{tuned_lat} > {default_lat}");
+        // the tuned tile should at least be lane-aligned
+        assert_eq!(tile.tile_n % dev.simd_lanes, 0);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let dev = DeviceProfile::s10();
+        let layer = LayerSpec::conv("c", 1, 256, 256, 14, 1);
+        let base = ExecConfig::new(Scheme::BlockPunched { bf: 16, bc: 32 }, 4.0, &dev);
+        let ga = GaConfig::default();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = tune_layer(&layer, &base, &dev, &ga, &mut r1);
+        let b = tune_layer(&layer, &base, &dev, &ga, &mut r2);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn tune_model_sums_layers() {
+        let dev = DeviceProfile::s10();
+        let layers = vec![
+            LayerSpec::conv("a", 3, 64, 64, 56, 1),
+            LayerSpec::fc("b", 1024, 256),
+        ];
+        let bases: Vec<ExecConfig> = layers
+            .iter()
+            .map(|_| ExecConfig::dense(&dev))
+            .collect();
+        let (tiles, total) = tune_model(&layers, &bases, &dev, &GaConfig::default(), 3);
+        assert_eq!(tiles.len(), 2);
+        assert!(total > 0.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Coordinator: the end-to-end pipeline orchestration (paper Fig. 2).
+//!
+//! Ties every subsystem together:
+//!
+//! * [`run_pipeline`] — the live path on the proxy CNN: dense pretrain →
+//!   reweighted-regularized training (host-side alpha updates between
+//!   epochs) → prune (one-shot magnitude or reweighted auto-prune) →
+//!   masked retrain → report, all through the AOT PJRT artifacts.
+//! * [`evaluate_overlapped`] — the paper's §5.1 trick: compiler latency
+//!   measurement runs concurrently with accuracy evaluation (they share no
+//!   state — latency depends on structure only, "does not depend on
+//!   absolute weight values"), implemented with scoped threads.
+
+use anyhow::Result;
+
+use crate::accuracy::Assignment;
+use crate::latmodel::LatencyModel;
+use crate::mapping::{self, MappingEval};
+use crate::models::ModelSpec;
+use crate::pruning::PatternLibrary;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::simulator::DeviceProfile;
+use crate::train::{SynthDataset, TrainDriver};
+
+/// Pipeline hyperparameters (laptop-scale defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    pub pretrain_steps: usize,
+    pub reg_epochs: usize,
+    pub steps_per_epoch: usize,
+    pub retrain_steps: usize,
+    pub lr: f32,
+    /// Reweighted-penalty weight (lambda in Eq. 1).
+    pub lambda: f32,
+    /// Auto-prune threshold (fraction of mean group stat).
+    pub tau: f32,
+    pub seed: u64,
+    /// Use reweighted auto-prune (true) or one-shot magnitude (false).
+    pub auto_prune: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            pretrain_steps: 150,
+            reg_epochs: 4,
+            steps_per_epoch: 40,
+            retrain_steps: 300,
+            lr: 0.05,
+            lambda: 2e-4,
+            tau: 0.12,
+            seed: 0xDADA,
+            auto_prune: false,
+        }
+    }
+}
+
+/// Everything the end-to-end run produces.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Cross-entropy per step across all phases.
+    pub loss_curve: Vec<f32>,
+    pub acc_pretrained: f32,
+    pub acc_after_prune: f32,
+    pub acc_after_retrain: f32,
+    /// Achieved per-layer compression rates.
+    pub layer_compressions: Vec<f32>,
+    pub overall_compression: f32,
+    pub dense_latency_ms: f64,
+    pub pruned_latency_ms: f64,
+}
+
+impl PipelineReport {
+    pub fn speedup(&self) -> f64 {
+        self.dense_latency_ms / self.pruned_latency_ms.max(1e-9)
+    }
+}
+
+/// Run the full live pipeline on the proxy CNN.
+pub fn run_pipeline(
+    rt: &Runtime,
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    dev: &DeviceProfile,
+    cfg: &PipelineConfig,
+) -> Result<PipelineReport> {
+    assert_eq!(model.layers.len(), assigns.len());
+    let mut driver = TrainDriver::new(rt, cfg.seed)?;
+    let ds = SynthDataset::cifar_like(cfg.seed ^ 0x0D5);
+    let mut rng = Rng::new(cfg.seed ^ 0xBA7C4);
+    let lib = PatternLibrary::default8();
+    let mut loss_curve = Vec::new();
+
+    // --- phase 1: dense pretrain --------------------------------------
+    for _ in 0..cfg.pretrain_steps {
+        let (x, y) = ds.batch(driver.batch_size(), &mut rng);
+        let s = driver.step(&x, &y, cfg.lr, 0.0)?;
+        loss_curve.push(s.ce);
+    }
+    let acc_pretrained = driver.eval_acc(&ds, 8, cfg.seed ^ 0xE7A1)?;
+
+    // --- phase 2: reweighted-regularized training ----------------------
+    for _epoch in 0..cfg.reg_epochs {
+        driver.update_alphas(assigns);
+        for _ in 0..cfg.steps_per_epoch {
+            let (x, y) = ds.batch(driver.batch_size(), &mut rng);
+            let s = driver.step(&x, &y, cfg.lr, cfg.lambda)?;
+            loss_curve.push(s.ce);
+        }
+    }
+
+    // --- phase 3: prune -------------------------------------------------
+    let layer_compressions = if cfg.auto_prune {
+        driver.auto_prune_with(assigns, cfg.tau)?
+    } else {
+        driver.prune_with(assigns, &lib)?
+    };
+    let acc_after_prune = driver.eval_acc(&ds, 8, cfg.seed ^ 0xE7A2)?;
+
+    // --- phase 4: masked retrain ----------------------------------------
+    for _ in 0..cfg.retrain_steps {
+        let (x, y) = ds.batch(driver.batch_size(), &mut rng);
+        let s = driver.step(&x, &y, cfg.lr, 0.0)?;
+        loss_curve.push(s.ce);
+    }
+    let acc_after_retrain = driver.eval_acc(&ds, 8, cfg.seed ^ 0xE7A3)?;
+
+    // --- latency ---------------------------------------------------------
+    let dense_latency_ms = mapping::dense_latency_ms(model, dev);
+    let achieved: Vec<Assignment> = assigns
+        .iter()
+        .zip(&layer_compressions)
+        .map(|(a, &c)| Assignment { scheme: a.scheme, compression: c.max(1.0) })
+        .collect();
+    let eval = mapping::evaluate(model, &achieved, dev);
+
+    let total: f64 = model.layers.iter().map(|l| l.params() as f64).sum();
+    let kept: f64 = model
+        .layers
+        .iter()
+        .zip(&layer_compressions)
+        .map(|(l, &c)| l.params() as f64 / c.max(1.0) as f64)
+        .sum();
+
+    Ok(PipelineReport {
+        loss_curve,
+        acc_pretrained,
+        acc_after_prune,
+        acc_after_retrain,
+        layer_compressions,
+        overall_compression: (total / kept.max(1.0)) as f32,
+        dense_latency_ms,
+        pruned_latency_ms: eval.latency_ms,
+    })
+}
+
+/// §5.1: "we overlap the compiler code generation and latency measurement
+/// with the accuracy evaluation".  The latency leg (latency-model queries /
+/// simulator) runs on its own thread while the accuracy leg computes.
+pub fn evaluate_overlapped(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    dev: &DeviceProfile,
+    lat: &LatencyModel,
+) -> MappingEval {
+    let mut latency_ms = 0.0;
+    let mut acc_drop = 0.0;
+    std::thread::scope(|scope| {
+        let lat_handle = scope.spawn(|| {
+            model
+                .layers
+                .iter()
+                .zip(assigns)
+                .map(|(l, a)| mapping::assignment_latency(l, a, lat, dev))
+                .sum::<f64>()
+        });
+        acc_drop = crate::accuracy::acc_drop(model, assigns);
+        latency_ms = lat_handle.join().expect("latency thread panicked");
+    });
+    MappingEval {
+        acc_drop,
+        latency_ms,
+        compression: crate::accuracy::overall_compression(model, assigns, false),
+        macs: crate::accuracy::remaining_macs(model, assigns),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::pruning::Scheme;
+
+    #[test]
+    fn overlapped_matches_sequential() {
+        let dev = DeviceProfile::s10();
+        let lat = LatencyModel::build(&dev);
+        let m = zoo::resnet18(crate::models::Dataset::Cifar10);
+        let assigns: Vec<Assignment> = m
+            .layers
+            .iter()
+            .map(|l| {
+                if l.is_3x3_conv() {
+                    Assignment {
+                        scheme: Scheme::BlockPunched { bf: 8, bc: 16 },
+                        compression: 8.0,
+                    }
+                } else {
+                    Assignment::dense()
+                }
+            })
+            .collect();
+        let o = evaluate_overlapped(&m, &assigns, &dev, &lat);
+        let seq: f64 = m
+            .layers
+            .iter()
+            .zip(&assigns)
+            .map(|(l, a)| mapping::assignment_latency(l, a, &lat, &dev))
+            .sum();
+        assert!((o.latency_ms - seq).abs() < 1e-9);
+        assert_eq!(o.acc_drop, crate::accuracy::acc_drop(&m, &assigns));
+    }
+}

@@ -1,0 +1,784 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §4 maps each to its modules).  Shared by the CLI
+//! (`prunemap table4` etc.) and the benchmark harness.
+//!
+//! Absolute numbers come from our simulator/accuracy substitutions; the
+//! *shape* — who wins, by what factor, where crossovers fall — is the
+//! reproduction target (see EXPERIMENTS.md for paper-vs-measured).
+
+use crate::accuracy::{
+    acc_drop, accuracy, overall_compression, remaining_macs, Assignment,
+};
+use crate::latmodel::LatencyModel;
+use crate::mapping::{self, map_rule_based, map_search_based, RuleConfig, SearchConfig};
+use crate::models::{zoo, Dataset, LayerKind, ModelSpec};
+use crate::pruning::Scheme;
+use crate::report::{Figure, Table};
+use crate::simulator::{layer_latency_ms, DeviceProfile, ExecConfig};
+
+/// Assign one scheme to every layer it applies to (3x3-DW stays dense).
+pub fn uniform_assign(model: &ModelSpec, scheme: Scheme, c: f32) -> Vec<Assignment> {
+    model
+        .layers
+        .iter()
+        .map(|l| {
+            if scheme.applicable(l) && !l.is_3x3_dw() {
+                Assignment { scheme, compression: c }
+            } else {
+                Assignment::dense()
+            }
+        })
+        .collect()
+}
+
+/// Assign a scheme to 3x3 CONV layers only (the PatDNN restriction).
+pub fn only_3x3_assign(model: &ModelSpec, scheme: Scheme, c: f32) -> Vec<Assignment> {
+    model
+        .layers
+        .iter()
+        .map(|l| {
+            if l.is_3x3_conv() {
+                Assignment { scheme, compression: c }
+            } else {
+                Assignment::dense()
+            }
+        })
+        .collect()
+}
+
+/// PatDNN baseline: pattern-based pruning on 3x3 layers with a *manually
+/// set* per-layer rate (ADMM), chosen to land the paper's overall
+/// compression.  For MobileNetV2 the only 3x3s are depthwise, which is
+/// exactly why PatDNN gets 1.01x there.
+pub fn patdnn_assignments(model: &ModelSpec) -> Vec<Assignment> {
+    // Table 4 reports compression over CONV-layer parameters, so the 3x3
+    // share is computed over CONV params only (VGG-16's giant FCs would
+    // otherwise hide its conv structure).
+    let conv_params: usize = model
+        .layers
+        .iter()
+        .filter(|l| l.kind != LayerKind::Fc)
+        .map(|l| l.params())
+        .sum();
+    let three_params: usize = model
+        .layers
+        .iter()
+        .filter(|l| l.is_3x3_conv())
+        .map(|l| l.params())
+        .sum();
+    let f = three_params as f32 / conv_params.max(1) as f32;
+    // per-layer pattern rate: 8x where 3x3 dominates (VGG/ResNet-18);
+    // solve conv-overall 1.56x where it doesn't (ResNet-50); MobileNetV2
+    // has no regular 3x3s at all — PatDNN can only nibble the DW layers.
+    let c_layer = if f > 0.9 {
+        8.0
+    } else if f > 0.3 {
+        let kept = 1.0 / 1.56;
+        (f / (kept - (1.0 - f)).max(1e-3)).clamp(1.0, 16.0)
+    } else {
+        1.0
+    };
+    model
+        .layers
+        .iter()
+        .map(|l| {
+            if l.is_3x3_conv() && c_layer > 1.0 {
+                Assignment { scheme: Scheme::Pattern, compression: c_layer }
+            } else if l.is_3x3_dw() && f < 0.05 {
+                Assignment { scheme: Scheme::Pattern, compression: 1.5 }
+            } else {
+                Assignment::dense()
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Figures
+// ---------------------------------------------------------------------
+
+/// Fig. 3: parameter / MAC share of 3x3 CONV layers.
+pub fn fig3() -> Figure {
+    let models = [
+        zoo::vgg16(Dataset::ImageNet),
+        zoo::resnet18(Dataset::ImageNet),
+        zoo::resnet50(Dataset::ImageNet),
+        zoo::mobilenet_v2(Dataset::ImageNet),
+    ];
+    let mut f = Figure::new(
+        "Fig. 3: share of 3x3 CONV layers (ImageNet models)",
+        "network",
+    );
+    f.set_x(&models.iter().map(|m| m.name.clone()).collect::<Vec<_>>());
+    f.add_series(
+        "params_3x3_frac",
+        models.iter().map(|m| m.frac_params_3x3() as f64).collect(),
+    );
+    f.add_series(
+        "macs_3x3_frac",
+        models.iter().map(|m| m.frac_macs_3x3() as f64).collect(),
+    );
+    f
+}
+
+/// Fig. 5: accuracy & latency vs block size (ResNet-50 / ImageNet).
+pub fn fig5(dev: &DeviceProfile) -> Figure {
+    let m = zoo::resnet50(Dataset::ImageNet);
+    let sizes: Vec<(String, Option<(usize, usize)>)> = vec![
+        ("1x1 (unstr.)".into(), Some((1, 1))),
+        ("4x4".into(), Some((4, 4))),
+        ("4x16".into(), Some((4, 16))),
+        ("8x16".into(), Some((8, 16))),
+        ("16x32".into(), Some((16, 32))),
+        ("64x128".into(), Some((64, 128))),
+        ("whole (struct.)".into(), None),
+    ];
+    let mut acc = Vec::new();
+    let mut lat = Vec::new();
+    for (_, b) in &sizes {
+        let assigns = match b {
+            Some((a, c)) => uniform_assign(&m, Scheme::BlockPunched { bf: *a, bc: *c }, 6.0),
+            None => uniform_assign(&m, Scheme::StructuredRow, 6.0),
+        };
+        let e = mapping::evaluate(&m, &assigns, dev);
+        acc.push((accuracy(&m, &assigns) * 100.0) as f64);
+        lat.push(e.latency_ms);
+    }
+    let mut f = Figure::new(
+        "Fig. 5: accuracy & latency vs block size (ResNet-50/ImageNet, 6x)",
+        "block",
+    );
+    f.set_x(&sizes.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>());
+    f.add_series("top1_acc_%", acc);
+    f.add_series("latency_ms", lat);
+    f
+}
+
+/// Fig. 7: pattern vs block-punched accuracy across compression rates.
+pub fn fig7() -> Vec<Figure> {
+    let comps = [2.0f32, 4.0, 6.0, 8.0, 12.0, 16.0];
+    let mut out = Vec::new();
+    for (net, ds, tag) in [
+        ("resnet18", Dataset::Cifar10, "(a) ResNet-18 / CIFAR-10"),
+        ("vgg16", Dataset::Cifar10, "(b) VGG-16 / CIFAR-10"),
+        ("resnet18", Dataset::ImageNet, "(c) ResNet-18 / ImageNet"),
+        ("vgg16", Dataset::ImageNet, "(d) VGG-16 / ImageNet"),
+    ] {
+        let m = if net == "resnet18" { zoo::resnet18(ds) } else { zoo::vgg16(ds) };
+        let mut pat = Vec::new();
+        let mut blk = Vec::new();
+        for &c in &comps {
+            pat.push(
+                (accuracy(&m, &only_3x3_assign(&m, Scheme::Pattern, c)) * 100.0) as f64,
+            );
+            blk.push(
+                (accuracy(
+                    &m,
+                    &only_3x3_assign(&m, Scheme::BlockPunched { bf: 4, bc: 16 }, c),
+                ) * 100.0) as f64,
+            );
+        }
+        let mut f = Figure::new(&format!("Fig. 7{tag}: top-1 vs compression (3x3 only)"), "comp");
+        f.set_x(&comps.iter().map(|c| format!("{c}x")).collect::<Vec<_>>());
+        f.add_series("pattern", pat);
+        f.add_series("block 4x16", blk);
+        out.push(f);
+    }
+    out
+}
+
+/// Fig. 9: CONV latency vs block size for iso-MAC (feature, channel)
+/// configurations; one figure per kernel size (1x1, 3x3).
+pub fn fig9(dev: &DeviceProfile) -> Vec<Figure> {
+    let configs = [(56usize, 64usize), (28, 128), (14, 256), (7, 512)];
+    let blocks = [(4usize, 4usize), (4, 16), (8, 16), (16, 32), (32, 64), (64, 128)];
+    let mut out = Vec::new();
+    for k in [1usize, 3] {
+        let mut f = Figure::new(
+            &format!("Fig. 9: {k}x{k} CONV latency vs block size (8x compression)"),
+            "block",
+        );
+        f.set_x(&blocks.iter().map(|(a, b)| format!("{a}x{b}")).collect::<Vec<_>>());
+        for &(feat, ch) in &configs {
+            let layer = crate::models::LayerSpec::conv("t", k, ch, ch, feat, 1);
+            let ys: Vec<f64> = blocks
+                .iter()
+                .map(|&(a, b)| {
+                    layer_latency_ms(
+                        &layer,
+                        &ExecConfig::new(Scheme::BlockPunched { bf: a, bc: b }, 8.0, dev),
+                        dev,
+                    )
+                })
+                .collect();
+            f.add_series(&format!("{feat}x{feat}x{ch}"), ys);
+        }
+        out.push(f);
+    }
+    out
+}
+
+/// Fig. 10a: FC-layer latency vs block size (normalized to 1x1 blocks).
+pub fn fig10a(dev: &DeviceProfile) -> Figure {
+    let layers = zoo::fig10a_fc_layers();
+    let blocks = [(1usize, 1usize), (4, 4), (8, 16), (16, 32), (64, 128), (128, 256)];
+    let mut f = Figure::new(
+        "Fig. 10a: FC latency vs block size, normalized to 1x1 (8x)",
+        "block",
+    );
+    f.set_x(&blocks.iter().map(|(a, b)| format!("{a}x{b}")).collect::<Vec<_>>());
+    for layer in &layers {
+        let base = layer_latency_ms(
+            layer,
+            &ExecConfig::new(Scheme::Block { bp: 1, bq: 1 }, 8.0, dev),
+            dev,
+        );
+        let ys: Vec<f64> = blocks
+            .iter()
+            .map(|&(a, b)| {
+                layer_latency_ms(
+                    layer,
+                    &ExecConfig::new(Scheme::Block { bp: a, bq: b }, 8.0, dev),
+                    dev,
+                ) / base
+            })
+            .collect();
+        f.add_series(&layer.name, ys);
+    }
+    f
+}
+
+/// Fig. 10b: pattern vs block-punched latency across compression
+/// (3x3 CONV, 28x28 feature map, 128 channels).
+pub fn fig10b(dev: &DeviceProfile) -> Figure {
+    let layer = crate::models::LayerSpec::conv("t", 3, 128, 128, 28, 1);
+    let comps = [4.0f32, 8.0, 12.0, 16.0];
+    let mut f = Figure::new(
+        "Fig. 10b: 3x3 CONV 28x28x128 latency: pattern vs block",
+        "comp",
+    );
+    f.set_x(&comps.iter().map(|c| format!("{c}x")).collect::<Vec<_>>());
+    let series: Vec<(&str, Scheme)> = vec![
+        ("pattern", Scheme::Pattern),
+        ("block 8x16", Scheme::BlockPunched { bf: 8, bc: 16 }),
+        ("block 16x32", Scheme::BlockPunched { bf: 16, bc: 32 }),
+    ];
+    for (name, scheme) in series {
+        let ys: Vec<f64> = comps
+            .iter()
+            .map(|&c| layer_latency_ms(&layer, &ExecConfig::new(scheme, c, dev), dev))
+            .collect();
+        f.add_series(name, ys);
+    }
+    f
+}
+
+// ---------------------------------------------------------------------
+// Tables
+// ---------------------------------------------------------------------
+
+/// Table 1: pruning-algorithm characteristics (qualitative).
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1: pruning algorithm comparison",
+        &["Algorithm", "Accuracy", "Compression rate"],
+    );
+    t.row(vec!["GroupLasso".into(), "Low".into(), "Auto".into()]);
+    t.row(vec!["ADMM".into(), "High".into(), "Manual".into()]);
+    t.row(vec!["Reweighted (ours)".into(), "High".into(), "Auto".into()]);
+    t
+}
+
+/// Table 2: YOLOv4 / COCO pruning-scheme comparison.
+pub fn table2(dev: &DeviceProfile) -> Table {
+    let m = zoo::yolov4();
+    let dense_ms = mapping::dense_latency_ms(&m, dev);
+    let mut t = Table::new(
+        "Table 2: YOLOv4 on COCO",
+        &["Scheme", "#Weights(M)", "Compr.", "mAP", "FPS"],
+    );
+    let fps = |ms: f64| 1000.0 / ms;
+    t.row(vec![
+        "Not Prune".into(),
+        format!("{:.2}", m.total_params() as f64 / 1e6),
+        "1.0x".into(),
+        format!("{:.1}", m.baseline_acc() * 100.0),
+        format!("{:.1}", fps(dense_ms)),
+    ]);
+    let mut add = |label: &str, assigns: Vec<Assignment>| {
+        let e = mapping::evaluate(&m, &assigns, dev);
+        let kept_m = m.total_params() as f64 / e.compression as f64 / 1e6;
+        t.row(vec![
+            label.into(),
+            format!("{kept_m:.2}"),
+            format!("{:.1}x", e.compression),
+            format!("{:.1}", (m.baseline_acc() - e.acc_drop) * 100.0),
+            format!("{:.1}", fps(e.latency_ms)),
+        ]);
+    };
+    add("Structured", uniform_assign(&m, Scheme::StructuredRow, 7.3));
+    add("Unstructured", uniform_assign(&m, Scheme::Unstructured, 11.2));
+    add("Pattern (3x3 only)", only_3x3_assign(&m, Scheme::Pattern, 9.0 / 4.0));
+    add(
+        "Block (3x3 only)",
+        only_3x3_assign(&m, Scheme::BlockPunched { bf: 4, bc: 16 }, 9.0 / 4.0),
+    );
+    add("Block (all)", uniform_assign(&m, Scheme::BlockPunched { bf: 8, bc: 16 }, 8.1));
+    // hybrid: pattern on 3x3, block on everything else
+    let hybrid: Vec<Assignment> = m
+        .layers
+        .iter()
+        .map(|l| {
+            if l.is_3x3_conv() {
+                Assignment { scheme: Scheme::Pattern, compression: 8.5 }
+            } else if l.kind != LayerKind::Fc {
+                Assignment { scheme: Scheme::BlockPunched { bf: 8, bc: 16 }, compression: 8.5 }
+            } else {
+                Assignment::dense()
+            }
+        })
+        .collect();
+    add("Hybrid (ours)", hybrid);
+    t
+}
+
+/// Table 3: pruning 3x3-DW layers of MobileNetV2 (CIFAR-10/100).
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "Table 3: extra 2.22x pruning of 3x3-DW layers (MobileNetV2)",
+        &["Dataset", "Base compr.", "With-DW compr.", "Extra acc drop: pattern", "block"],
+    );
+    for (ds, base_c) in [(Dataset::Cifar10, 7.19f32), (Dataset::Cifar100, 2.78)] {
+        let m = zoo::mobilenet_v2(ds);
+        let base: Vec<Assignment> = m
+            .layers
+            .iter()
+            .map(|l| {
+                if l.kind == LayerKind::Conv && l.kh == 1 {
+                    Assignment {
+                        scheme: Scheme::BlockPunched { bf: 4, bc: 16 },
+                        compression: base_c,
+                    }
+                } else {
+                    Assignment::dense()
+                }
+            })
+            .collect();
+        let with_dw = |scheme: Scheme| -> Vec<Assignment> {
+            m.layers
+                .iter()
+                .zip(&base)
+                .map(|(l, a)| {
+                    if l.is_3x3_dw() {
+                        Assignment { scheme, compression: 2.22 }
+                    } else {
+                        *a
+                    }
+                })
+                .collect()
+        };
+        let d0 = acc_drop(&m, &base);
+        let dp = acc_drop(&m, &with_dw(Scheme::Pattern)) - d0;
+        let db = acc_drop(&m, &with_dw(Scheme::BlockPunched { bf: 4, bc: 16 })) - d0;
+        let c0 = overall_compression(&m, &base, false);
+        let c1 = overall_compression(&m, &with_dw(Scheme::Pattern), false);
+        t.row(vec![
+            format!("{ds:?}"),
+            format!("{c0:.2}x"),
+            format!("{c1:.2}x"),
+            format!("-{:.2}%", dp * 100.0),
+            format!("-{:.2}%", db * 100.0),
+        ]);
+    }
+    t
+}
+
+/// One Table-4 block: a network on a dataset under the three methods.
+pub fn table4_rows(
+    t: &mut Table,
+    model: &ModelSpec,
+    lat: &LatencyModel,
+    dev: &DeviceProfile,
+    search_cfg: &SearchConfig,
+) {
+    let baseline = model.baseline_acc() * 100.0;
+    let mut add = |method: &str, assigns: &[Assignment]| {
+        let e = mapping::evaluate(model, assigns, dev);
+        let schemes: std::collections::BTreeSet<String> = assigns
+            .iter()
+            .filter(|a| !matches!(a.scheme, Scheme::None))
+            .map(|a| match a.scheme {
+                Scheme::Pattern => "Pattern".to_string(),
+                Scheme::Block { .. } | Scheme::BlockPunched { .. } => "Block".to_string(),
+                Scheme::Unstructured => "Unstr".to_string(),
+                _ => "Struct".to_string(),
+            })
+            .collect();
+        let label = if schemes.len() > 1 {
+            "Hybrid".to_string()
+        } else {
+            schemes.into_iter().next().unwrap_or_else(|| "None".into())
+        };
+        // Table 4 convention: compression over CONV-layer parameters
+        let conv_c = overall_compression(model, assigns, true);
+        t.row(vec![
+            model.name.clone(),
+            format!("{:?}", model.dataset),
+            method.into(),
+            label,
+            format!("{baseline:.1}"),
+            format!("{conv_c:.2}x"),
+            format!("{:+.2}", e.acc_drop * 100.0),
+            format!("{:.2}", e.latency_ms),
+            format!("{:.2}G", e.macs / 1e9),
+        ]);
+    };
+    add("PatDNN", &patdnn_assignments(model));
+    add("Rule-based", &map_rule_based(model, lat, &RuleConfig::default()));
+    let (search_assigns, _, _) = map_search_based(model, dev, search_cfg);
+    add("Search-based", &search_assigns);
+}
+
+/// Table 4: the main comparison (3 nets x 2 datasets x 3 methods).
+pub fn table4(dev: &DeviceProfile, quick: bool) -> Table {
+    let lat = LatencyModel::build(dev);
+    let search_cfg = if quick {
+        SearchConfig { iterations: 25, samples: 4, ..Default::default() }
+    } else {
+        SearchConfig::default()
+    };
+    let mut t = Table::new(
+        "Table 4: comparison with PatDNN",
+        &[
+            "Network", "Dataset", "Method", "Scheme", "Orig acc%", "Compr.", "Acc drop%",
+            "Latency(ms)", "MACs",
+        ],
+    );
+    for ds in [Dataset::Cifar10, Dataset::ImageNet] {
+        for model in [zoo::resnet50(ds), zoo::vgg16(ds), zoo::mobilenet_v2(ds)] {
+            table4_rows(&mut t, &model, &lat, dev, &search_cfg);
+        }
+    }
+    t
+}
+
+/// Table 5: ImageNet MACs-level comparison against other compression work.
+pub fn table5(dev: &DeviceProfile) -> Table {
+    let lat = LatencyModel::build(dev);
+    let mut t = Table::new(
+        "Table 5: ImageNet MACs-level comparison",
+        &["Group", "Model", "MACs(M)", "Top-1 acc%"],
+    );
+    // literature anchors (from the paper's table)
+    for (g, name, macs, acc) in [
+        ("300M", "MobileNetV2 1.0x", 300.0, 71.0),
+        ("300M", "NetAdapt-MobileNetV1", 284.3, 69.1),
+        ("300M", "ChamNet-B", 323.0, 73.8),
+        ("200M", "MobileNetV2 0.75x", 209.0, 69.8),
+        ("200M", "AMC-MobileNetV2", 211.0, 70.8),
+        ("200M", "AutoSlim-MobileNetV2", 207.0, 73.0),
+        ("200M", "MetaPruning-MobileNetV2", 217.0, 71.2),
+        ("150M", "MobileNetV1 0.5x", 150.0, 63.3),
+        ("150M", "AutoSlim-MobileNetV1", 150.0, 67.9),
+    ] {
+        t.row(vec![g.into(), name.into(), format!("{macs:.1}"), format!("{acc:.1}")]);
+    }
+    // ours: rule-based MobileNetV2, compression scaled to the MACs targets
+    let m = zoo::mobilenet_v2(Dataset::ImageNet);
+    let base = map_rule_based(&m, &lat, &RuleConfig::default());
+    for (group, target_m) in [("200M", 203.0f64), ("150M", 177.0), ("150M", 151.0)] {
+        let assigns = scale_to_macs(&m, &base, target_m * 1e6);
+        let macs = remaining_macs(&m, &assigns) / 1e6;
+        let acc = accuracy(&m, &assigns) * 100.0;
+        t.row(vec![
+            group.into(),
+            "Ours (Rule-based)".into(),
+            format!("{macs:.1}"),
+            format!("{acc:.1}"),
+        ]);
+    }
+    t
+}
+
+/// Scale a mapping's per-layer compression uniformly to hit a MACs target.
+pub fn scale_to_macs(
+    model: &ModelSpec,
+    base: &[Assignment],
+    target_macs: f64,
+) -> Vec<Assignment> {
+    let mut lo = 0.05f32;
+    let mut hi = 4.0f32;
+    let eval = |scale: f32| -> (Vec<Assignment>, f64) {
+        let assigns: Vec<Assignment> = base
+            .iter()
+            .map(|a| {
+                if matches!(a.scheme, Scheme::None) {
+                    *a
+                } else {
+                    Assignment {
+                        scheme: a.scheme,
+                        compression: (a.compression * scale).max(1.0),
+                    }
+                }
+            })
+            .collect();
+        let macs = remaining_macs(model, &assigns);
+        (assigns, macs)
+    };
+    for _ in 0..40 {
+        let mid = (lo + hi) / 2.0;
+        let (_, macs) = eval(mid);
+        if macs > target_macs {
+            lo = mid; // need more compression
+        } else {
+            hi = mid;
+        }
+    }
+    eval((lo + hi) / 2.0).0
+}
+
+/// Table 6: hardware specs of the portability platforms.
+pub fn table6() -> Table {
+    let mut t = Table::new(
+        "Table 6: portability platforms",
+        &["Model", "Peak GMAC/s", "Mem BW GB/s", "Dispatch ms"],
+    );
+    for d in DeviceProfile::all() {
+        t.row(vec![
+            d.name.into(),
+            format!("{:.0}", d.peak_macs / 1e9),
+            format!("{:.0}", d.mem_bw / 1e9),
+            format!("{:.3}", d.dispatch_ms),
+        ]);
+    }
+    t
+}
+
+/// Table 7: portability of the rule-based method across S10/S20/S21.
+pub fn table7() -> Table {
+    let mut t = Table::new(
+        "Table 7: rule-based portability (VGG-16)",
+        &["Dataset", "Platform", "Compr.", "MACs", "Top-1%", "Latency(ms)"],
+    );
+    for ds in [Dataset::Cifar10, Dataset::ImageNet] {
+        let m = zoo::vgg16(ds);
+        for dev in DeviceProfile::all() {
+            let lat = LatencyModel::build(&dev);
+            let assigns = map_rule_based(&m, &lat, &RuleConfig::default());
+            let e = mapping::evaluate(&m, &assigns, &dev);
+            t.row(vec![
+                format!("{ds:?}"),
+                dev.name.into(),
+                format!("{:.2}x", e.compression),
+                format!("{:.2}G", e.macs / 1e9),
+                format!("{:.1}", (m.baseline_acc() - e.acc_drop) * 100.0),
+                format!("{:.2}", e.latency_ms),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ablation over the compiler optimizations (DESIGN.md §6): rule-mapped
+/// ResNet-50/ImageNet with each optimization toggled off in turn.
+pub fn ablation(dev: &DeviceProfile) -> Table {
+    let lat = LatencyModel::build(dev);
+    let m = zoo::resnet50(Dataset::ImageNet);
+    let assigns = map_rule_based(&m, &lat, &RuleConfig::default());
+    let mut t = Table::new(
+        "Ablation: compiler optimizations (ResNet-50/ImageNet, rule-mapped)",
+        &["Config", "Latency(ms)", "vs full"],
+    );
+    let latency_with = |fused: bool, reordered: bool, tuned: bool| -> f64 {
+        let g = crate::compiler::Graph::from_model(&m);
+        let schemes: Vec<(Scheme, f32)> =
+            assigns.iter().map(|a| (a.scheme, a.compression)).collect();
+        let ga = crate::compiler::GaConfig { population: 12, generations: 6, ..Default::default() };
+        let mut sched =
+            crate::compiler::compile(&g, &schemes, dev, tuned.then_some(&ga), 7);
+        for k in &mut sched.kernels {
+            if !fused {
+                k.cfg.fused = false;
+            }
+            if !reordered {
+                k.cfg.reordered = false;
+            }
+        }
+        sched.latency_ms(dev)
+    };
+    let full = latency_with(true, true, true);
+    for (name, f, r, tu) in [
+        ("full (fusion+reorder+tuning)", true, true, true),
+        ("no layer fusion", false, true, true),
+        ("no row reordering", true, false, true),
+        ("no GA auto-tuning", true, true, false),
+        ("none", false, false, false),
+    ] {
+        let l = latency_with(f, r, tu);
+        t.row(vec![name.into(), format!("{l:.2}"), format!("{:+.1}%", (l / full - 1.0) * 100.0)]);
+    }
+    t
+}
+
+/// Auto-compression preview for a model (what the reweighted stand-in
+/// assigns per layer) — used by the quickstart example.
+pub fn describe_mapping(model: &ModelSpec, assigns: &[Assignment]) -> Table {
+    let mut t = Table::new(
+        &format!("Mapping for {} ({:?})", model.name, model.dataset),
+        &["Layer", "Type", "Scheme", "Compr."],
+    );
+    for (l, a) in model.layers.iter().zip(assigns) {
+        let kind = match l.kind {
+            LayerKind::Conv => format!("{}x{} conv", l.kh, l.kw),
+            LayerKind::DepthwiseConv => format!("{}x{} dw", l.kh, l.kw),
+            LayerKind::Fc => "fc".to_string(),
+        };
+        t.row(vec![
+            l.name.clone(),
+            kind,
+            a.scheme.label(),
+            format!("{:.1}x", a.compression),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shapes() {
+        let f = fig3();
+        assert_eq!(f.x.len(), 4);
+        // ResNet-18 is 3x3-heavy; MobileNetV2 is not
+        let params = &f.series[0].1;
+        assert!(params[1] > 0.9, "ResNet-18 {}", params[1]);
+        assert!(params[3] < 0.1, "MobileNetV2 {}", params[3]);
+    }
+
+    #[test]
+    fn fig5_tradeoff_shape() {
+        let f = fig5(&DeviceProfile::s10());
+        let acc = &f.series[0].1;
+        let lat = &f.series[1].1;
+        // accuracy monotonically falls, latency monotonically falls
+        assert!(acc.first().unwrap() > acc.last().unwrap());
+        assert!(lat.first().unwrap() > lat.last().unwrap());
+    }
+
+    #[test]
+    fn fig7_remark1_shape() {
+        let figs = fig7();
+        assert_eq!(figs.len(), 4);
+        // CIFAR subplots: block >= pattern at high compression
+        for f in &figs[..2] {
+            let pat = &f.series[0].1;
+            let blk = &f.series[1].1;
+            assert!(blk.last().unwrap() >= pat.last().unwrap(), "{}", f.title);
+        }
+        // ImageNet subplots: pattern > block
+        for f in &figs[2..] {
+            let pat = &f.series[0].1;
+            let blk = &f.series[1].1;
+            assert!(pat.last().unwrap() > blk.last().unwrap(), "{}", f.title);
+        }
+    }
+
+    #[test]
+    fn fig9_monotone_saturating() {
+        let figs = fig9(&DeviceProfile::s10());
+        for f in &figs {
+            for (name, ys) in &f.series {
+                for w in ys.windows(2) {
+                    assert!(w[1] <= w[0] * 1.001, "{}/{name}: {ys:?}", f.title);
+                }
+            }
+            // iso-MACs: small feature map slower than large at every block
+            let first = &f.series[0].1;
+            let last = &f.series.last().unwrap().1;
+            assert!(last[0] > first[0], "{}", f.title);
+        }
+    }
+
+    #[test]
+    fn fig10a_normalized_start_at_one() {
+        let f = fig10a(&DeviceProfile::s10());
+        for (_, ys) in &f.series {
+            assert!((ys[0] - 1.0).abs() < 1e-9);
+            assert!(*ys.last().unwrap() < 1.0);
+        }
+    }
+
+    #[test]
+    fn fig10b_pattern_between_blocks() {
+        let f = fig10b(&DeviceProfile::s10());
+        let pat = &f.series[0].1;
+        let b8 = &f.series[1].1;
+        let b16 = &f.series[2].1;
+        for i in 0..pat.len() {
+            assert!(b16[i] <= b8[i], "16x32 must be fastest");
+            let ratio = pat[i] / b8[i];
+            assert!((0.5..2.0).contains(&ratio), "pattern/8x16 ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn table2_shape() {
+        let t = table2(&DeviceProfile::s10());
+        assert_eq!(t.rows.len(), 7);
+        // structured mAP (row 1) far below unstructured (row 2)
+        let map_of = |r: usize| t.rows[r][3].parse::<f64>().unwrap();
+        let fps_of = |r: usize| t.rows[r][4].parse::<f64>().unwrap();
+        assert!(map_of(1) + 5.0 < map_of(2), "structured {} vs unstructured {}", map_of(1), map_of(2));
+        // hybrid (last row) is the fastest pruned variant and keeps mAP
+        let hybrid_fps = fps_of(6);
+        assert!(hybrid_fps > fps_of(2), "hybrid should beat unstructured FPS");
+        assert!(map_of(6) > map_of(1) + 5.0);
+        // dense is slowest
+        assert!(fps_of(0) < hybrid_fps);
+    }
+
+    #[test]
+    fn table3_shape() {
+        let t = table3();
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn table5_ours_competitive() {
+        let t = table5(&DeviceProfile::s10());
+        // our 150M row should beat MobileNetV1-0.5x's 63.3% clearly
+        let ours: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[1].contains("Ours")).collect();
+        assert_eq!(ours.len(), 3);
+        for r in ours {
+            let acc: f64 = r[3].parse().unwrap();
+            assert!(acc > 65.0, "ours acc {acc}");
+        }
+    }
+
+    #[test]
+    fn ablation_full_is_fastest() {
+        let t = ablation(&DeviceProfile::s10());
+        let full: f64 = t.rows[0][1].parse().unwrap();
+        for r in &t.rows[1..] {
+            let l: f64 = r[1].parse().unwrap();
+            assert!(l >= full - 1e-9, "{} faster than full: {l} < {full}", r[0]);
+        }
+        // disabling everything must cost meaningfully
+        let none: f64 = t.rows.last().unwrap()[1].parse().unwrap();
+        assert!(none > full * 1.05, "none {none} vs full {full}");
+    }
+
+    #[test]
+    fn scale_to_macs_hits_target() {
+        let dev = DeviceProfile::s10();
+        let lat = LatencyModel::build(&dev);
+        let m = zoo::mobilenet_v2(Dataset::ImageNet);
+        let base = map_rule_based(&m, &lat, &RuleConfig::default());
+        let scaled = scale_to_macs(&m, &base, 200e6);
+        let macs = remaining_macs(&m, &scaled);
+        assert!((macs - 200e6).abs() / 200e6 < 0.1, "macs {macs}");
+    }
+}

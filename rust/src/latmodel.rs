@@ -1,0 +1,415 @@
+//! Offline latency model (paper §5.2.1).
+//!
+//! The rule-based mapping method never trains and never measures the target
+//! DNN; it consults a table of layer-latency results built **once per
+//! device** by timing test layers over a grid of settings — layer type,
+//! feature size, channel count, pruning scheme, block size, compression.
+//! The paper builds ~512 settings in ~30 minutes on a phone; we build ours
+//! from the simulator in milliseconds, but the interface (build once, query
+//! forever, JSON on disk) is the paper's.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::models::{LayerKind, LayerSpec};
+use crate::pruning::Scheme;
+use crate::simulator::{layer_latency_ms, DeviceProfile, ExecConfig};
+use crate::util::json::Value;
+
+/// Discretized layer template in the sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    Conv1x1,
+    Conv3x3,
+    Conv5x5,
+    Conv7x7,
+    Dw3x3,
+    Fc,
+}
+
+impl LayerClass {
+    pub fn of(layer: &LayerSpec) -> LayerClass {
+        match layer.kind {
+            LayerKind::Fc => LayerClass::Fc,
+            LayerKind::DepthwiseConv => LayerClass::Dw3x3,
+            LayerKind::Conv => match layer.kh {
+                1 => LayerClass::Conv1x1,
+                3 => LayerClass::Conv3x3,
+                5 => LayerClass::Conv5x5,
+                _ => LayerClass::Conv7x7,
+            },
+        }
+    }
+
+    fn tag(&self) -> &'static str {
+        match self {
+            LayerClass::Conv1x1 => "conv1x1",
+            LayerClass::Conv3x3 => "conv3x3",
+            LayerClass::Conv5x5 => "conv5x5",
+            LayerClass::Conv7x7 => "conv7x7",
+            LayerClass::Dw3x3 => "dw3x3",
+            LayerClass::Fc => "fc",
+        }
+    }
+
+    fn from_tag(s: &str) -> Option<LayerClass> {
+        Some(match s {
+            "conv1x1" => LayerClass::Conv1x1,
+            "conv3x3" => LayerClass::Conv3x3,
+            "conv5x5" => LayerClass::Conv5x5,
+            "conv7x7" => LayerClass::Conv7x7,
+            "dw3x3" => LayerClass::Dw3x3,
+            "fc" => LayerClass::Fc,
+            _ => return None,
+        })
+    }
+
+    /// A representative test layer for the sweep.
+    fn template(&self, feat: usize, ch: usize) -> LayerSpec {
+        match self {
+            LayerClass::Conv1x1 => LayerSpec::conv("t", 1, ch, ch, feat, 1),
+            LayerClass::Conv3x3 => LayerSpec::conv("t", 3, ch, ch, feat, 1),
+            LayerClass::Conv5x5 => LayerSpec::conv("t", 5, ch, ch, feat, 1),
+            LayerClass::Conv7x7 => LayerSpec::conv("t", 7, ch, ch, feat, 1),
+            LayerClass::Dw3x3 => LayerSpec::dwconv("t", 3, ch, feat, 1),
+            LayerClass::Fc => LayerSpec::fc("t", feat * ch, ch),
+        }
+    }
+}
+
+/// Scheme discretization for table keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchemeTag {
+    Dense,
+    Unstructured,
+    Structured,
+    Pattern,
+    Block(usize, usize),
+}
+
+impl SchemeTag {
+    pub fn of(scheme: &Scheme) -> SchemeTag {
+        match scheme {
+            Scheme::None => SchemeTag::Dense,
+            Scheme::Unstructured => SchemeTag::Unstructured,
+            Scheme::StructuredRow | Scheme::StructuredColumn => SchemeTag::Structured,
+            Scheme::Pattern => SchemeTag::Pattern,
+            Scheme::Block { bp, bq } => SchemeTag::Block(*bp, *bq),
+            Scheme::BlockPunched { bf, bc } => SchemeTag::Block(*bf, *bc),
+        }
+    }
+
+    fn to_scheme(self, class: LayerClass) -> Scheme {
+        match self {
+            SchemeTag::Dense => Scheme::None,
+            SchemeTag::Unstructured => Scheme::Unstructured,
+            SchemeTag::Structured => Scheme::StructuredRow,
+            SchemeTag::Pattern => Scheme::Pattern,
+            SchemeTag::Block(a, b) => {
+                if class == LayerClass::Fc {
+                    Scheme::Block { bp: a, bq: b }
+                } else {
+                    Scheme::BlockPunched { bf: a, bc: b }
+                }
+            }
+        }
+    }
+
+    fn encode(&self) -> String {
+        match self {
+            SchemeTag::Dense => "dense".into(),
+            SchemeTag::Unstructured => "unstructured".into(),
+            SchemeTag::Structured => "structured".into(),
+            SchemeTag::Pattern => "pattern".into(),
+            SchemeTag::Block(a, b) => format!("block{a}x{b}"),
+        }
+    }
+
+    fn decode(s: &str) -> Option<SchemeTag> {
+        Some(match s {
+            "dense" => SchemeTag::Dense,
+            "unstructured" => SchemeTag::Unstructured,
+            "structured" => SchemeTag::Structured,
+            "pattern" => SchemeTag::Pattern,
+            _ => {
+                let rest = s.strip_prefix("block")?;
+                let (a, b) = rest.split_once('x')?;
+                SchemeTag::Block(a.parse().ok()?, b.parse().ok()?)
+            }
+        })
+    }
+}
+
+/// One table key: (class, feature size, channels, scheme, compression*10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SettingKey {
+    pub class: LayerClass,
+    pub feat: usize,
+    pub ch: usize,
+    pub scheme: SchemeTag,
+    pub comp_x10: u32,
+}
+
+impl SettingKey {
+    fn encode(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}",
+            self.class.tag(),
+            self.feat,
+            self.ch,
+            self.scheme.encode(),
+            self.comp_x10
+        )
+    }
+
+    fn decode(s: &str) -> Option<SettingKey> {
+        let parts: Vec<&str> = s.split('|').collect();
+        if parts.len() != 5 {
+            return None;
+        }
+        Some(SettingKey {
+            class: LayerClass::from_tag(parts[0])?,
+            feat: parts[1].parse().ok()?,
+            ch: parts[2].parse().ok()?,
+            scheme: SchemeTag::decode(parts[3])?,
+            comp_x10: parts[4].parse().ok()?,
+        })
+    }
+}
+
+/// The sweep grids (the paper's "512 different layer settings" ballpark).
+pub const FEAT_GRID: [usize; 4] = [7, 14, 28, 56];
+pub const CH_GRID: [usize; 4] = [64, 128, 256, 512];
+pub const COMP_GRID: [f32; 4] = [2.0, 4.0, 8.0, 16.0];
+
+/// The offline latency table for one device.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    pub device: String,
+    entries: HashMap<SettingKey, f64>,
+}
+
+impl LatencyModel {
+    /// Build by sweeping the setting grid on the simulator ("measuring the
+    /// test models on the target device").
+    pub fn build(dev: &DeviceProfile) -> LatencyModel {
+        let mut entries = HashMap::new();
+        let classes = [
+            LayerClass::Conv1x1,
+            LayerClass::Conv3x3,
+            LayerClass::Conv5x5,
+            LayerClass::Dw3x3,
+            LayerClass::Fc,
+        ];
+        let mut schemes: Vec<SchemeTag> = vec![
+            SchemeTag::Dense,
+            SchemeTag::Unstructured,
+            SchemeTag::Structured,
+            SchemeTag::Pattern,
+        ];
+        for &(a, b) in Scheme::block_size_candidates() {
+            schemes.push(SchemeTag::Block(a, b));
+        }
+        for class in classes {
+            for &feat in &FEAT_GRID {
+                for &ch in &CH_GRID {
+                    let layer = class.template(feat, ch);
+                    for &scheme in &schemes {
+                        if scheme == SchemeTag::Pattern && class != LayerClass::Conv3x3 {
+                            continue; // patterns are 3x3-only
+                        }
+                        for &comp in &COMP_GRID {
+                            let s = scheme.to_scheme(class);
+                            let comp_eff = if scheme == SchemeTag::Dense { 1.0 } else { comp };
+                            let cfg = ExecConfig::new(s, comp_eff, dev);
+                            let lat = layer_latency_ms(&layer, &cfg, dev);
+                            entries.insert(
+                                SettingKey {
+                                    class,
+                                    feat,
+                                    ch,
+                                    scheme,
+                                    comp_x10: (comp * 10.0) as u32,
+                                },
+                                lat,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        LatencyModel { device: dev.name.to_string(), entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn snap(grid: &[usize], v: usize) -> usize {
+        *grid
+            .iter()
+            .min_by_key(|&&g| (g as i64 - v as i64).unsigned_abs())
+            .unwrap()
+    }
+
+    fn snap_comp(c: f32) -> u32 {
+        let best = COMP_GRID
+            .iter()
+            .min_by(|a, b| (**a - c).abs().partial_cmp(&(**b - c).abs()).unwrap())
+            .unwrap();
+        (*best * 10.0) as u32
+    }
+
+    /// Query latency for an arbitrary layer/scheme/compression: snaps to
+    /// the nearest grid setting and rescales by the MAC ratio between the
+    /// actual layer and the grid template (the paper normalizes latency by
+    /// MACs for exactly this purpose).
+    pub fn query(&self, layer: &LayerSpec, scheme: &Scheme, compression: f32) -> Option<f64> {
+        let class = LayerClass::of(layer);
+        let feat = Self::snap(&FEAT_GRID, layer.in_hw.max(1));
+        let ch = Self::snap(&CH_GRID, layer.out_ch);
+        let tag = SchemeTag::of(scheme);
+        let key = SettingKey {
+            class,
+            feat,
+            ch,
+            scheme: tag,
+            comp_x10: if tag == SchemeTag::Dense { 20 } else { Self::snap_comp(compression) },
+        };
+        let base = *self.entries.get(&key)?;
+        let template = class.template(feat, ch);
+        let scale = layer.macs() as f64 / template.macs().max(1) as f64;
+        Some(base * scale)
+    }
+
+    /// MAC-normalized latency (ms per GMAC) — the §5.2.2 block-size
+    /// selection metric.
+    pub fn latency_per_gmac(
+        &self,
+        layer: &LayerSpec,
+        scheme: &Scheme,
+        compression: f32,
+    ) -> Option<f64> {
+        let lat = self.query(layer, scheme, compression)?;
+        Some(lat / (layer.macs() as f64 / 1e9))
+    }
+
+    // --- persistence ------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let mut obj = std::collections::BTreeMap::new();
+        for (k, v) in &self.entries {
+            obj.insert(k.encode(), Value::num(*v));
+        }
+        Value::obj(vec![
+            ("device", Value::str(self.device.clone())),
+            ("entries", Value::Obj(obj)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<LatencyModel> {
+        let device = v.get("device")?.as_str()?.to_string();
+        let mut entries = HashMap::new();
+        for (k, val) in v.get("entries")?.as_obj()? {
+            let key = SettingKey::decode(k).ok_or_else(|| anyhow!("bad key '{k}'"))?;
+            entries.insert(key, val.as_f64()?);
+        }
+        Ok(LatencyModel { device, entries })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().pretty())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<LatencyModel> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_has_paper_scale_settings() {
+        let m = LatencyModel::build(&DeviceProfile::s10());
+        // paper mentions ~512 settings; our grid is denser
+        assert!(m.len() >= 512, "only {} settings", m.len());
+    }
+
+    #[test]
+    fn query_snaps_and_scales() {
+        let m = LatencyModel::build(&DeviceProfile::s10());
+        let layer = LayerSpec::conv("c", 3, 100, 120, 30, 1); // off-grid
+        let lat = m
+            .query(&layer, &Scheme::BlockPunched { bf: 8, bc: 16 }, 6.0)
+            .unwrap();
+        assert!(lat > 0.0 && lat.is_finite());
+    }
+
+    #[test]
+    fn pattern_only_for_3x3() {
+        let m = LatencyModel::build(&DeviceProfile::s10());
+        let c1 = LayerSpec::conv("c", 1, 128, 128, 28, 1);
+        assert!(m.query(&c1, &Scheme::Pattern, 4.0).is_none());
+        let c3 = LayerSpec::conv("c", 3, 128, 128, 28, 1);
+        assert!(m.query(&c3, &Scheme::Pattern, 4.0).is_some());
+    }
+
+    #[test]
+    fn block_ordering_survives_tabulation() {
+        let m = LatencyModel::build(&DeviceProfile::s10());
+        let layer = LayerSpec::conv("c", 3, 128, 128, 28, 1);
+        let small = m
+            .query(&layer, &Scheme::BlockPunched { bf: 4, bc: 4 }, 8.0)
+            .unwrap();
+        let big = m
+            .query(&layer, &Scheme::BlockPunched { bf: 16, bc: 32 }, 8.0)
+            .unwrap();
+        let structured = m.query(&layer, &Scheme::StructuredRow, 8.0).unwrap();
+        assert!(structured < big && big < small);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = LatencyModel::build(&DeviceProfile::s20());
+        let v = m.to_json();
+        let back = LatencyModel::from_json(&v).unwrap();
+        assert_eq!(back.len(), m.len());
+        assert_eq!(back.device, m.device);
+        // spot-check an entry survives
+        let layer = LayerSpec::conv("c", 3, 128, 128, 28, 1);
+        let a = m.query(&layer, &Scheme::Unstructured, 4.0).unwrap();
+        let b = back.query(&layer, &Scheme::Unstructured, 4.0).unwrap();
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let m = LatencyModel::build(&DeviceProfile::s10());
+        let path = std::env::temp_dir().join("prunemap_latmodel_test.json");
+        m.save(&path).unwrap();
+        let back = LatencyModel::load(&path).unwrap();
+        assert_eq!(back.len(), m.len());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn per_gmac_normalization() {
+        let m = LatencyModel::build(&DeviceProfile::s10());
+        let layer = LayerSpec::conv("c", 3, 256, 256, 28, 1);
+        let per = m
+            .latency_per_gmac(&layer, &Scheme::StructuredRow, 8.0)
+            .unwrap();
+        assert!(per > 0.0);
+    }
+}

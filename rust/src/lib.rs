@@ -1,0 +1,39 @@
+//! # prunemap
+//!
+//! A full-system reproduction of *"Automatic Mapping of the Best-Suited DNN
+//! Pruning Schemes for Real-Time Mobile Acceleration"* (Gong, Yuan, et al.,
+//! ACM TODAES 2021) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate) is the paper's system contribution: the five pruning
+//! regularities, the reweighted dynamic-regularization pruning algorithm,
+//! the BCS sparse format + compiler optimizations (fusion, auto-tuning,
+//! DSL codegen), the mobile-SoC latency simulator that substitutes for the
+//! paper's Samsung Galaxy test devices, the offline latency model, and the
+//! two automatic pruning-scheme mapping methods (rule-based and RL
+//! search-based).  Layers 1/2 (Pallas kernels + JAX model) are AOT-lowered
+//! to HLO text at build time and executed from [`runtime`] over PJRT —
+//! Python is never on the request path.
+//!
+//! Start at [`mapping`] for the paper's headline contribution, or run
+//! `cargo run --release -- table4` to regenerate the paper's main table.
+
+pub mod accuracy;
+pub mod compiler;
+pub mod coordinator;
+pub mod experiments;
+pub mod latmodel;
+pub mod mapping;
+pub mod models;
+pub mod pruning;
+pub mod report;
+pub mod reweighted;
+pub mod rng;
+pub mod runtime;
+pub mod simulator;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+
+pub mod util;
+
+pub use anyhow::Result;

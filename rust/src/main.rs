@@ -1,0 +1,187 @@
+//! `prunemap` launcher: regenerate any paper table/figure, build latency
+//! models, map pruning schemes onto zoo models, and run the live PJRT
+//! pipeline.
+//!
+//! ```text
+//! prunemap <command> [--device s10|s20|s21] [options] [--flags]
+//!
+//! Commands:
+//!   fig3 | fig5 | fig7 | fig9 | fig10a | fig10b
+//!   table1 | table2 | table3 | table4 | table5 | table6 | table7
+//!   all                    every table and figure in order
+//!   latmodel --out F       build + save the device latency model
+//!   map --model M --dataset D --method rule|search
+//!   e2e [--steps N]        live pipeline on the proxy CNN (needs artifacts)
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use prunemap::accuracy::Assignment;
+use prunemap::coordinator::{run_pipeline, PipelineConfig};
+use prunemap::experiments as exp;
+use prunemap::latmodel::LatencyModel;
+use prunemap::mapping::{self, map_rule_based, map_search_based, RuleConfig, SearchConfig};
+use prunemap::models::{zoo, Dataset, ModelSpec};
+use prunemap::runtime::Runtime;
+use prunemap::simulator::DeviceProfile;
+use prunemap::util::cli::Args;
+
+fn model_by_name(name: &str, ds: Dataset) -> Result<ModelSpec> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "vgg16" => zoo::vgg16(ds),
+        "resnet18" => zoo::resnet18(ds),
+        "resnet50" => zoo::resnet50(ds),
+        "mobilenetv1" => zoo::mobilenet_v1(ds),
+        "mobilenetv2" => zoo::mobilenet_v2(ds),
+        "yolov4" => zoo::yolov4(),
+        "proxy" => zoo::proxy_cnn(),
+        other => return Err(anyhow!("unknown model '{other}'")),
+    })
+}
+
+fn dataset_by_name(name: &str) -> Result<Dataset> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "cifar10" => Dataset::Cifar10,
+        "cifar100" => Dataset::Cifar100,
+        "imagenet" => Dataset::ImageNet,
+        "coco" => Dataset::Coco,
+        "synthetic" => Dataset::Synthetic,
+        other => return Err(anyhow!("unknown dataset '{other}'")),
+    })
+}
+
+fn device(args: &Args) -> Result<DeviceProfile> {
+    let name = args.get_or("device", "s10");
+    DeviceProfile::by_name(name).ok_or_else(|| anyhow!("unknown device '{name}'"))
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let dev = device(args)?;
+    let ds = dataset_by_name(args.get_or("dataset", "imagenet"))?;
+    let model = model_by_name(args.get_or("model", "resnet50"), ds)?;
+    let method = args.get_or("method", "rule");
+    let assigns: Vec<Assignment> = match method {
+        "rule" => {
+            let lat = LatencyModel::build(&dev);
+            map_rule_based(&model, &lat, &RuleConfig::default())
+        }
+        "search" => {
+            let cfg = SearchConfig {
+                iterations: args.get_usize("iterations", 60)?,
+                seed: args.get_u64("seed", 0xC0FFEE)?,
+                ..Default::default()
+            };
+            map_search_based(&model, &dev, &cfg).0
+        }
+        other => return Err(anyhow!("unknown method '{other}' (rule|search)")),
+    };
+    exp::describe_mapping(&model, &assigns).print();
+    let e = mapping::evaluate(&model, &assigns, &dev);
+    let dense = mapping::dense_latency_ms(&model, &dev);
+    println!(
+        "\ncompression {:.2}x | acc drop {:+.2}% | latency {:.2}ms (dense {:.2}ms, {:.2}x speedup) | MACs {:.2}G",
+        e.compression,
+        e.acc_drop * 100.0,
+        e.latency_ms,
+        dense,
+        dense / e.latency_ms,
+        e.macs / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let rt = Runtime::open(Runtime::default_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+    let dev = device(args)?;
+    let model = zoo::proxy_cnn();
+    let lat = LatencyModel::build(&dev);
+    let assigns = map_rule_based(&model, &lat, &RuleConfig::default());
+    exp::describe_mapping(&model, &assigns).print();
+    let cfg = PipelineConfig {
+        pretrain_steps: args.get_usize("steps", 150)?,
+        ..Default::default()
+    };
+    let rep = run_pipeline(&rt, &model, &assigns, &dev, &cfg)?;
+    println!(
+        "\nacc: pretrained {:.3} -> pruned {:.3} -> retrained {:.3}",
+        rep.acc_pretrained, rep.acc_after_prune, rep.acc_after_retrain
+    );
+    println!(
+        "compression {:.2}x | latency {:.3}ms -> {:.3}ms ({:.2}x)",
+        rep.overall_compression,
+        rep.dense_latency_ms,
+        rep.pruned_latency_ms,
+        rep.speedup()
+    );
+    println!(
+        "loss curve: {}",
+        prunemap::report::sparkline(
+            &rep.loss_curve.iter().map(|&x| x as f64).collect::<Vec<_>>()
+        )
+    );
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    let dev = device(&args)?;
+    match cmd {
+        "fig3" => exp::fig3().print(),
+        "fig5" => exp::fig5(&dev).print(),
+        "fig7" => exp::fig7().iter().for_each(|f| f.print()),
+        "fig9" => exp::fig9(&dev).iter().for_each(|f| f.print()),
+        "fig10a" => exp::fig10a(&dev).print(),
+        "fig10b" => exp::fig10b(&dev).print(),
+        "table1" => exp::table1().print(),
+        "table2" => exp::table2(&dev).print(),
+        "table3" => exp::table3().print(),
+        "table4" => exp::table4(&dev, args.flag("quick")).print(),
+        "table5" => exp::table5(&dev).print(),
+        "table6" => exp::table6().print(),
+        "table7" => exp::table7().print(),
+        "ablation" => exp::ablation(&dev).print(),
+        "all" => {
+            exp::fig3().print();
+            exp::fig5(&dev).print();
+            exp::fig7().iter().for_each(|f| f.print());
+            exp::fig9(&dev).iter().for_each(|f| f.print());
+            exp::fig10a(&dev).print();
+            exp::fig10b(&dev).print();
+            exp::table1().print();
+            exp::table2(&dev).print();
+            exp::table3().print();
+            exp::table4(&dev, true).print();
+            exp::table5(&dev).print();
+            exp::table6().print();
+            exp::table7().print();
+            exp::ablation(&dev).print();
+        }
+        "latmodel" => {
+            let out = args.get_or("out", "latmodel.json");
+            let m = LatencyModel::build(&dev);
+            m.save(out)?;
+            println!("saved {} settings for {} to {out}", m.len(), m.device);
+        }
+        "map" => cmd_map(&args)?,
+        "e2e" => cmd_e2e(&args)?,
+        _ => {
+            println!(
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|e2e> [--device s10|s20|s21]"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,71 @@
+//! Automatic pruning-scheme mapping (paper §5) — the headline contribution.
+//!
+//! Two methods produce per-layer [`crate::accuracy::Assignment`]s:
+//!
+//! * [`rule`]  — training-free (Fig. 8): latency-model-driven block-size
+//!   selection with the β threshold, dataset-difficulty dispatch for 3x3
+//!   CONV layers, never prunes 3x3-DW.
+//! * [`search`] — REINFORCE policy-gradient search over {regularity,
+//!   block size} per layer, rewarding accuracy minus latency (§5.1).
+//!
+//! Compression rates are *not* part of either search space: the reweighted
+//! dynamic regularization discovers them (crate::reweighted for the live
+//! path; accuracy::auto_compression for the spec-level path).
+
+pub mod rule;
+pub mod search;
+
+pub use rule::{map_rule_based, RuleConfig};
+pub use search::{map_search_based, SearchConfig};
+
+use crate::accuracy::Assignment;
+use crate::latmodel::LatencyModel;
+use crate::models::ModelSpec;
+use crate::simulator::{model_latency_ms, DeviceProfile, ExecConfig};
+
+/// Summary of a mapping's quality.
+#[derive(Debug, Clone, Copy)]
+pub struct MappingEval {
+    pub acc_drop: f32,
+    pub latency_ms: f64,
+    pub compression: f32,
+    pub macs: f64,
+}
+
+/// Evaluate a full mapping: (accuracy drop, latency ms, compression).
+pub fn evaluate(model: &ModelSpec, assigns: &[Assignment], dev: &DeviceProfile) -> MappingEval {
+    let cfgs: Vec<ExecConfig> = assigns
+        .iter()
+        .map(|a| ExecConfig::new(a.scheme, a.compression, dev))
+        .collect();
+    MappingEval {
+        acc_drop: crate::accuracy::acc_drop(model, assigns),
+        latency_ms: model_latency_ms(&model.layers, &cfgs, dev),
+        compression: crate::accuracy::overall_compression(model, assigns, false),
+        macs: crate::accuracy::remaining_macs(model, assigns),
+    }
+}
+
+/// Latency of the dense model (baseline for speedup claims).
+pub fn dense_latency_ms(model: &ModelSpec, dev: &DeviceProfile) -> f64 {
+    let cfgs: Vec<ExecConfig> =
+        model.layers.iter().map(|_| ExecConfig::dense(dev)).collect();
+    model_latency_ms(&model.layers, &cfgs, dev)
+}
+
+/// Shared helper: query latency-model latency for an assignment, falling
+/// back to the simulator when the table has no entry.
+pub fn assignment_latency(
+    layer: &crate::models::LayerSpec,
+    a: &Assignment,
+    lat: &LatencyModel,
+    dev: &DeviceProfile,
+) -> f64 {
+    lat.query(layer, &a.scheme, a.compression).unwrap_or_else(|| {
+        crate::simulator::layer_latency_ms(
+            layer,
+            &ExecConfig::new(a.scheme, a.compression, dev),
+            dev,
+        )
+    })
+}

@@ -1,0 +1,220 @@
+//! Training-free rule-based mapping (paper §5.2, Fig. 8).
+//!
+//! Per layer:
+//! 1. 3x3 depthwise CONV → no pruning (§5.2.4);
+//! 2. 3x3 CONV → pattern-based on hard datasets, block-punched on easy
+//!    ones (Remark 1);
+//! 3. everything else → block-based (FC) / block-punched (CONV);
+//! 4. when a block scheme is chosen, the block size is the **smallest**
+//!    candidate whose MAC-normalized latency (from the offline latency
+//!    model) is within β of coarse-grained structured pruning (§5.2.2) —
+//!    hardware first, then the finest granularity that hardware allows;
+//! 5. the compression rate comes from the reweighted algorithm
+//!    (spec-level stand-in: accuracy::auto_compression).
+
+use crate::accuracy::{auto_compression, Assignment};
+use crate::latmodel::LatencyModel;
+use crate::models::{LayerKind, LayerSpec, ModelSpec};
+use crate::pruning::Scheme;
+
+/// Rule-based mapping parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleConfig {
+    /// Acceptable latency degradation vs structured pruning (paper: 20%).
+    pub beta: f64,
+    /// Reference compression used during block-size selection.
+    pub reference_compression: f32,
+}
+
+impl Default for RuleConfig {
+    fn default() -> Self {
+        RuleConfig { beta: 0.20, reference_compression: 8.0 }
+    }
+}
+
+/// Select the block size for one layer per §5.2.2: smallest block whose
+/// normalized latency is within (1+β) of structured pruning's.
+pub fn select_block_size(
+    layer: &LayerSpec,
+    lat: &LatencyModel,
+    cfg: &RuleConfig,
+) -> (usize, usize) {
+    let comp = cfg.reference_compression;
+    let structured = lat
+        .latency_per_gmac(layer, &Scheme::StructuredRow, comp)
+        .unwrap_or(f64::MAX);
+    let mut fallback = *Scheme::block_size_candidates().last().unwrap();
+    for &(a, b) in Scheme::block_size_candidates() {
+        let scheme = block_scheme(layer, a, b);
+        if let Some(l) = lat.latency_per_gmac(layer, &scheme, comp) {
+            if l <= structured * (1.0 + cfg.beta) {
+                return (a, b);
+            }
+            fallback = (a, b);
+        }
+    }
+    // nothing met the threshold: the largest candidate is closest
+    fallback
+}
+
+fn block_scheme(layer: &LayerSpec, a: usize, b: usize) -> Scheme {
+    if layer.kind == LayerKind::Fc {
+        Scheme::Block { bp: a, bq: b }
+    } else {
+        Scheme::BlockPunched { bf: a, bc: b }
+    }
+}
+
+/// Map one layer (the Fig. 8 decision diamond).
+pub fn map_layer(
+    layer: &LayerSpec,
+    model: &ModelSpec,
+    lat: &LatencyModel,
+    cfg: &RuleConfig,
+) -> Assignment {
+    // 1. never prune 3x3 depthwise
+    if layer.is_3x3_dw() {
+        return Assignment::dense();
+    }
+    // 2. 3x3 CONV: dataset difficulty decides pattern vs block
+    if layer.is_3x3_conv() && model.dataset.is_hard() {
+        let compression = auto_compression(layer, &Scheme::Pattern, model.dataset);
+        return Assignment { scheme: Scheme::Pattern, compression };
+    }
+    // 3./4. block-based / block-punched with β-selected block size
+    let (a, b) = select_block_size(layer, lat, cfg);
+    let scheme = block_scheme(layer, a, b);
+    let compression = auto_compression(layer, &scheme, model.dataset);
+    Assignment { scheme, compression }
+}
+
+/// Map every layer of a model.  Training-free: consumes only the offline
+/// latency model and the layer specs.
+pub fn map_rule_based(
+    model: &ModelSpec,
+    lat: &LatencyModel,
+    cfg: &RuleConfig,
+) -> Vec<Assignment> {
+    model
+        .layers
+        .iter()
+        .map(|l| map_layer(l, model, lat, cfg))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Dataset};
+    use crate::simulator::DeviceProfile;
+
+    fn lat() -> LatencyModel {
+        LatencyModel::build(&DeviceProfile::s10())
+    }
+
+    #[test]
+    fn dw_layers_never_pruned() {
+        let m = zoo::mobilenet_v2(Dataset::ImageNet);
+        let assigns = map_rule_based(&m, &lat(), &RuleConfig::default());
+        for (l, a) in m.layers.iter().zip(&assigns) {
+            if l.is_3x3_dw() {
+                assert!(matches!(a.scheme, Scheme::None), "{} pruned", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn remark1_dataset_dispatch_for_3x3() {
+        let lm = lat();
+        let cfg = RuleConfig::default();
+        let hard = zoo::vgg16(Dataset::ImageNet);
+        let assigns = map_rule_based(&hard, &lm, &cfg);
+        for (l, a) in hard.layers.iter().zip(&assigns) {
+            if l.is_3x3_conv() {
+                assert!(matches!(a.scheme, Scheme::Pattern), "{}: {:?}", l.name, a.scheme);
+            }
+        }
+        let easy = zoo::vgg16(Dataset::Cifar10);
+        let assigns = map_rule_based(&easy, &lm, &cfg);
+        for (l, a) in easy.layers.iter().zip(&assigns) {
+            if l.is_3x3_conv() {
+                assert!(
+                    matches!(a.scheme, Scheme::BlockPunched { .. }),
+                    "{}: {:?}",
+                    l.name,
+                    a.scheme
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fc_gets_block_based() {
+        let m = zoo::vgg16(Dataset::ImageNet);
+        let assigns = map_rule_based(&m, &lat(), &RuleConfig::default());
+        for (l, a) in m.layers.iter().zip(&assigns) {
+            if l.kind == LayerKind::Fc {
+                assert!(matches!(a.scheme, Scheme::Block { .. }), "{}: {:?}", l.name, a.scheme);
+            }
+        }
+    }
+
+    #[test]
+    fn one_by_one_gets_block_punched() {
+        let m = zoo::mobilenet_v2(Dataset::ImageNet);
+        let assigns = map_rule_based(&m, &lat(), &RuleConfig::default());
+        for (l, a) in m.layers.iter().zip(&assigns) {
+            if l.kind == LayerKind::Conv && l.kh == 1 {
+                assert!(
+                    matches!(a.scheme, Scheme::BlockPunched { .. }),
+                    "{}: {:?}",
+                    l.name,
+                    a.scheme
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn beta_controls_block_size() {
+        let lm = lat();
+        let layer = LayerSpec::conv("c", 1, 256, 256, 14, 1);
+        let strict = RuleConfig { beta: 0.02, reference_compression: 8.0 };
+        let loose = RuleConfig { beta: 2.0, reference_compression: 8.0 };
+        let (a1, b1) = select_block_size(&layer, &lm, &strict);
+        let (a2, b2) = select_block_size(&layer, &lm, &loose);
+        assert!(
+            a1 * b1 >= a2 * b2,
+            "strict beta must pick an equal-or-larger block: {a1}x{b1} vs {a2}x{b2}"
+        );
+    }
+
+    #[test]
+    fn cifar_compressions_land_high() {
+        // Table 4: CIFAR-10 rule-based compressions are ~7-12x
+        let m = zoo::resnet50(Dataset::Cifar10);
+        let assigns = map_rule_based(&m, &lat(), &RuleConfig::default());
+        let c = crate::accuracy::overall_compression(&m, &assigns, false);
+        assert!((6.0..16.0).contains(&c), "compression {c}");
+    }
+
+    #[test]
+    fn imagenet_compressions_land_moderate() {
+        let m = zoo::resnet50(Dataset::ImageNet);
+        let assigns = map_rule_based(&m, &lat(), &RuleConfig::default());
+        let c = crate::accuracy::overall_compression(&m, &assigns, false);
+        assert!((2.5..9.0).contains(&c), "compression {c}");
+    }
+
+    #[test]
+    fn mapping_beats_dense_latency() {
+        let dev = DeviceProfile::s10();
+        let m = zoo::resnet50(Dataset::ImageNet);
+        let assigns = map_rule_based(&m, &lat(), &RuleConfig::default());
+        let eval = crate::mapping::evaluate(&m, &assigns, &dev);
+        let dense = crate::mapping::dense_latency_ms(&m, &dev);
+        assert!(eval.latency_ms < dense, "{} !< {}", eval.latency_ms, dense);
+        // and accuracy stays near baseline
+        assert!(eval.acc_drop < 0.02, "drop {}", eval.acc_drop);
+    }
+}

@@ -1,0 +1,438 @@
+//! Search-based mapping via REINFORCE policy gradients (paper §5.1).
+//!
+//! The RL agent observes per-layer state {layer type, kernel size, input
+//! channels, output channels} (plus size features) and emits a 2-D action
+//! {pruning regularity, block size} per layer.  The policy is a shared
+//! tanh-MLP with two softmax heads, trained with the score-function
+//! estimator and a moving-average baseline (Eq. 6):
+//!
+//!   ∇J ≈ (1/K) Σ_k (R(M_k) − B) ∇ log π(M_k | I; θ)
+//!
+//! (The paper parameterizes π as an encoder/decoder RNN; with per-layer
+//! state vectors and a shared trunk the policy is equivalent for this
+//! action space and trains in seconds — DESIGN.md notes the substitution.)
+//!
+//! The reward is the weighted sum of accuracy and negative latency; the
+//! fast evaluation path (one-shot magnitude pruning + 2-epoch retrain in
+//! the paper) is the calibrated accuracy model here, and the latency term
+//! comes from the same device cost model the rule-based method tabulates.
+//! The live proxy-CNN reward path is wired in crate::coordinator.
+
+use crate::accuracy::{acc_drop, auto_compression, Assignment};
+use crate::models::{LayerKind, LayerSpec, ModelSpec};
+use crate::pruning::Scheme;
+use crate::rng::Rng;
+use crate::simulator::{model_latency_ms, DeviceProfile, ExecConfig};
+
+const N_FEATURES: usize = 8;
+const HIDDEN: usize = 16;
+/// Regularity actions: 0 = block (block-based/punched), 1 = pattern,
+/// 2 = unstructured, 3 = structured.
+const N_REG: usize = 4;
+
+/// Search hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    pub iterations: usize,
+    /// Mappings sampled per iteration (K in Eq. 6).
+    pub samples: usize,
+    pub lr: f32,
+    /// Latency weight in the reward.
+    pub lambda: f32,
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig { iterations: 60, samples: 8, lr: 0.05, lambda: 2.0, seed: 0xC0FFEE }
+    }
+}
+
+/// State featurization (§5.1's 4-D state + log-scale size features).
+fn features(layer: &LayerSpec) -> [f32; N_FEATURES] {
+    let mut f = [0f32; N_FEATURES];
+    f[0] = layer.is_3x3_conv() as u8 as f32;
+    f[1] = layer.is_3x3_dw() as u8 as f32;
+    f[2] = (layer.kind == LayerKind::Fc) as u8 as f32;
+    f[3] = (layer.kind == LayerKind::Conv && !layer.is_3x3_conv()) as u8 as f32;
+    f[4] = (layer.params() as f32).log2() / 24.0;
+    f[5] = (layer.out_ch as f32).log2() / 12.0;
+    f[6] = ((layer.in_hw + 1) as f32).log2() / 8.0;
+    f[7] = ((layer.kh * layer.kw) as f32).log2() / 6.0;
+    f
+}
+
+/// The policy network: shared trunk + regularity head + block-size head.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    w1: Vec<f32>, // HIDDEN x N_FEATURES
+    b1: Vec<f32>,
+    wr: Vec<f32>, // N_REG x HIDDEN
+    br: Vec<f32>,
+    wb: Vec<f32>, // N_BLOCK x HIDDEN
+    bb: Vec<f32>,
+    n_block: usize,
+}
+
+/// Gradients, same layout as Policy.
+struct Grads {
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    wr: Vec<f32>,
+    br: Vec<f32>,
+    wb: Vec<f32>,
+    bb: Vec<f32>,
+}
+
+fn softmax_masked(logits: &[f32], valid: &[bool]) -> Vec<f32> {
+    let mut m = f32::NEG_INFINITY;
+    for (l, &v) in logits.iter().zip(valid) {
+        if v && *l > m {
+            m = *l;
+        }
+    }
+    let mut e: Vec<f32> = logits
+        .iter()
+        .zip(valid)
+        .map(|(l, &v)| if v { (l - m).exp() } else { 0.0 })
+        .collect();
+    let z: f32 = e.iter().sum::<f32>().max(1e-12);
+    for x in &mut e {
+        *x /= z;
+    }
+    e
+}
+
+impl Policy {
+    pub fn new(seed: u64) -> Policy {
+        let n_block = Scheme::block_size_candidates().len();
+        let mut rng = Rng::new(seed);
+        let mut init = |n: usize, fan: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() * (1.0 / fan as f32).sqrt()).collect()
+        };
+        Policy {
+            w1: init(HIDDEN * N_FEATURES, N_FEATURES),
+            b1: vec![0.0; HIDDEN],
+            wr: init(N_REG * HIDDEN, HIDDEN),
+            br: vec![0.0; N_REG],
+            wb: init(n_block * HIDDEN, HIDDEN),
+            bb: vec![0.0; n_block],
+            n_block,
+        }
+    }
+
+    fn forward(&self, x: &[f32; N_FEATURES]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut h = vec![0f32; HIDDEN];
+        for i in 0..HIDDEN {
+            let mut acc = self.b1[i];
+            for j in 0..N_FEATURES {
+                acc += self.w1[i * N_FEATURES + j] * x[j];
+            }
+            h[i] = acc.tanh();
+        }
+        let mut lr = vec![0f32; N_REG];
+        for i in 0..N_REG {
+            let mut acc = self.br[i];
+            for j in 0..HIDDEN {
+                acc += self.wr[i * HIDDEN + j] * h[j];
+            }
+            lr[i] = acc;
+        }
+        let mut lb = vec![0f32; self.n_block];
+        for i in 0..self.n_block {
+            let mut acc = self.bb[i];
+            for j in 0..HIDDEN {
+                acc += self.wb[i * HIDDEN + j] * h[j];
+            }
+            lb[i] = acc;
+        }
+        (h, lr, lb)
+    }
+
+    fn valid_regularities(layer: &LayerSpec) -> [bool; N_REG] {
+        [
+            true,                 // block (punched for conv, block for fc)
+            layer.is_3x3_conv(),  // pattern
+            true,                 // unstructured
+            true,                 // structured
+        ]
+    }
+
+    /// Sample (or greedy-decode) an action for a layer.
+    fn act(&self, layer: &LayerSpec, rng: Option<&mut Rng>) -> (usize, usize) {
+        let x = features(layer);
+        let (_, lr, lb) = self.forward(&x);
+        let vr = Self::valid_regularities(layer);
+        let pr = softmax_masked(&lr, &vr);
+        let vb = vec![true; self.n_block];
+        let pb = softmax_masked(&lb, &vb);
+        match rng {
+            Some(rng) => (rng.categorical(&pr), rng.categorical(&pb)),
+            None => (
+                pr.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap(),
+                pb.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap(),
+            ),
+        }
+    }
+
+    /// Accumulate ∇ log π(action | layer) * advantage into `g`.
+    fn accumulate_grad(
+        &self,
+        layer: &LayerSpec,
+        action: (usize, usize),
+        advantage: f32,
+        g: &mut Grads,
+    ) {
+        let x = features(layer);
+        let (h, lr, lb) = self.forward(&x);
+        let vr = Self::valid_regularities(layer);
+        let pr = softmax_masked(&lr, &vr);
+        let pb = softmax_masked(&lb, &vec![true; self.n_block]);
+
+        // d log softmax = onehot - p   (masked-out entries have p = 0)
+        let mut dh = vec![0f32; HIDDEN];
+        for i in 0..N_REG {
+            if !vr[i] {
+                continue;
+            }
+            let gi = ((i == action.0) as u8 as f32 - pr[i]) * advantage;
+            g.br[i] += gi;
+            for j in 0..HIDDEN {
+                g.wr[i * HIDDEN + j] += gi * h[j];
+                dh[j] += gi * self.wr[i * HIDDEN + j];
+            }
+        }
+        // block head contributes only when the block regularity was chosen
+        if action.0 == 0 {
+            for i in 0..self.n_block {
+                let gi = ((i == action.1) as u8 as f32 - pb[i]) * advantage;
+                g.bb[i] += gi;
+                for j in 0..HIDDEN {
+                    g.wb[i * HIDDEN + j] += gi * h[j];
+                    dh[j] += gi * self.wb[i * HIDDEN + j];
+                }
+            }
+        }
+        // through tanh
+        for i in 0..HIDDEN {
+            let dpre = dh[i] * (1.0 - h[i] * h[i]);
+            g.b1[i] += dpre;
+            for j in 0..N_FEATURES {
+                g.w1[i * N_FEATURES + j] += dpre * x[j];
+            }
+        }
+    }
+
+    fn apply(&mut self, g: &Grads, lr: f32) {
+        let upd = |w: &mut [f32], g: &[f32]| {
+            for (wi, gi) in w.iter_mut().zip(g) {
+                *wi += lr * gi;
+            }
+        };
+        upd(&mut self.w1, &g.w1);
+        upd(&mut self.b1, &g.b1);
+        upd(&mut self.wr, &g.wr);
+        upd(&mut self.br, &g.br);
+        upd(&mut self.wb, &g.wb);
+        upd(&mut self.bb, &g.bb);
+    }
+
+    fn zero_grads(&self) -> Grads {
+        Grads {
+            w1: vec![0.0; self.w1.len()],
+            b1: vec![0.0; self.b1.len()],
+            wr: vec![0.0; self.wr.len()],
+            br: vec![0.0; self.br.len()],
+            wb: vec![0.0; self.wb.len()],
+            bb: vec![0.0; self.bb.len()],
+        }
+    }
+}
+
+/// Decode an action pair into an assignment for a layer.
+fn decode(layer: &LayerSpec, model: &ModelSpec, action: (usize, usize)) -> Assignment {
+    // the rule of never pruning 3x3-DW is a hard constraint in both methods
+    if layer.is_3x3_dw() {
+        return Assignment::dense();
+    }
+    let scheme = match action.0 {
+        0 => {
+            let (a, b) = Scheme::block_size_candidates()[action.1];
+            if layer.kind == LayerKind::Fc {
+                Scheme::Block { bp: a, bq: b }
+            } else {
+                Scheme::BlockPunched { bf: a, bc: b }
+            }
+        }
+        1 => Scheme::Pattern,
+        2 => Scheme::Unstructured,
+        _ => Scheme::StructuredRow,
+    };
+    let compression = auto_compression(layer, &scheme, model.dataset);
+    Assignment { scheme, compression }
+}
+
+/// Reward of a full mapping (higher is better): weighted accuracy minus
+/// normalized latency (§5.1).
+pub fn reward(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    dev: &DeviceProfile,
+    dense_ms: f64,
+    lambda: f32,
+) -> f32 {
+    let drop_pct = acc_drop(model, assigns) * 100.0;
+    let cfgs: Vec<ExecConfig> = assigns
+        .iter()
+        .map(|a| ExecConfig::new(a.scheme, a.compression, dev))
+        .collect();
+    let lat = model_latency_ms(&model.layers, &cfgs, dev);
+    -drop_pct - lambda * (lat / dense_ms) as f32
+}
+
+/// Run the search; returns (assignments, final policy, reward trace).
+pub fn map_search_based(
+    model: &ModelSpec,
+    dev: &DeviceProfile,
+    cfg: &SearchConfig,
+) -> (Vec<Assignment>, Policy, Vec<f32>) {
+    let mut policy = Policy::new(cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let dense_ms = super::dense_latency_ms(model, dev);
+    let mut baseline = 0.0f32;
+    let mut initialized = false;
+    let mut trace = Vec::with_capacity(cfg.iterations);
+
+    for _iter in 0..cfg.iterations {
+        let mut g = policy.zero_grads();
+        let mut mean_r = 0.0;
+        let mut episodes: Vec<(Vec<(usize, usize)>, f32)> = Vec::with_capacity(cfg.samples);
+        for _k in 0..cfg.samples {
+            let actions: Vec<(usize, usize)> = model
+                .layers
+                .iter()
+                .map(|l| policy.act(l, Some(&mut rng)))
+                .collect();
+            let assigns: Vec<Assignment> = model
+                .layers
+                .iter()
+                .zip(&actions)
+                .map(|(l, &a)| decode(l, model, a))
+                .collect();
+            let r = reward(model, &assigns, dev, dense_ms, cfg.lambda);
+            mean_r += r / cfg.samples as f32;
+            episodes.push((actions, r));
+        }
+        if !initialized {
+            baseline = mean_r;
+            initialized = true;
+        }
+        for (actions, r) in &episodes {
+            let adv = (r - baseline) / cfg.samples as f32;
+            for (layer, &action) in model.layers.iter().zip(actions) {
+                if layer.is_3x3_dw() {
+                    continue; // hard-constrained, no learning signal
+                }
+                policy.accumulate_grad(layer, action, adv, &mut g);
+            }
+        }
+        policy.apply(&g, cfg.lr);
+        baseline = 0.9 * baseline + 0.1 * mean_r;
+        trace.push(mean_r);
+    }
+
+    // greedy decode
+    let assigns: Vec<Assignment> = model
+        .layers
+        .iter()
+        .map(|l| decode(l, model, policy.act(l, None)))
+        .collect();
+    (assigns, policy, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Dataset};
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig { iterations: 30, samples: 6, lr: 0.08, lambda: 2.0, seed: 42 }
+    }
+
+    #[test]
+    fn search_reward_improves() {
+        let dev = DeviceProfile::s10();
+        let m = zoo::resnet18(Dataset::Cifar10);
+        let (_, _, trace) = map_search_based(&m, &dev, &quick_cfg());
+        let head: f32 = trace[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = trace[trace.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(tail > head, "reward did not improve: {head} -> {tail}");
+    }
+
+    #[test]
+    fn search_respects_dw_constraint() {
+        let dev = DeviceProfile::s10();
+        let m = zoo::mobilenet_v2(Dataset::Cifar10);
+        let (assigns, _, _) = map_search_based(&m, &dev, &quick_cfg());
+        for (l, a) in m.layers.iter().zip(&assigns) {
+            if l.is_3x3_dw() {
+                assert!(matches!(a.scheme, Scheme::None));
+            }
+        }
+    }
+
+    #[test]
+    fn search_never_emits_pattern_off_3x3() {
+        let dev = DeviceProfile::s10();
+        let m = zoo::mobilenet_v2(Dataset::ImageNet);
+        let (assigns, _, _) = map_search_based(&m, &dev, &quick_cfg());
+        for (l, a) in m.layers.iter().zip(&assigns) {
+            if matches!(a.scheme, Scheme::Pattern) {
+                assert!(l.is_3x3_conv(), "{}: pattern on non-3x3", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn search_deterministic_for_seed() {
+        let dev = DeviceProfile::s10();
+        let m = zoo::resnet18(Dataset::Cifar10);
+        let (a1, _, _) = map_search_based(&m, &dev, &quick_cfg());
+        let (a2, _, _) = map_search_based(&m, &dev, &quick_cfg());
+        for (x, y) in a1.iter().zip(&a2) {
+            assert_eq!(x.scheme, y.scheme);
+        }
+    }
+
+    #[test]
+    fn search_beats_or_matches_naive_uniform() {
+        // paper: search-based >= applying one scheme everywhere
+        let dev = DeviceProfile::s10();
+        let m = zoo::resnet50(Dataset::Cifar10);
+        let cfg = SearchConfig { iterations: 80, ..quick_cfg() };
+        let (assigns, _, _) = map_search_based(&m, &dev, &cfg);
+        let dense_ms = crate::mapping::dense_latency_ms(&m, &dev);
+        let searched = reward(&m, &assigns, &dev, dense_ms, cfg.lambda);
+        let uniform: Vec<Assignment> = m
+            .layers
+            .iter()
+            .map(|l| {
+                let s = Scheme::Unstructured;
+                Assignment {
+                    scheme: s,
+                    compression: auto_compression(l, &s, m.dataset),
+                }
+            })
+            .collect();
+        let base = reward(&m, &uniform, &dev, dense_ms, cfg.lambda);
+        assert!(searched >= base, "searched {searched} < uniform-unstructured {base}");
+    }
+}

@@ -1,0 +1,286 @@
+//! DNN model specifications: the layer-level view the mapping methods
+//! operate on.
+//!
+//! The paper's two mapping methods consume only *per-layer structural
+//! information* — layer type, kernel size, channel counts, feature-map size
+//! (the RL state vector of §5.1) — plus params/MACs accounting (Fig. 3,
+//! Tables 4-5).  This module defines that representation and a zoo of the
+//! evaluated networks: VGG-16, ResNet-18/50, MobileNet-V1/V2 (CIFAR-10 and
+//! ImageNet variants), YOLOv4, and the FC layers of Fig. 10a.
+
+pub mod zoo;
+
+pub use zoo::*;
+
+/// Layer category, the first element of the paper's RL state vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Standard convolution (possibly 1x1 / 5x5 / 7x7).
+    Conv,
+    /// Depthwise convolution (one filter per input channel).
+    DepthwiseConv,
+    /// Fully connected / linear.
+    Fc,
+}
+
+/// One prunable layer of a network.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Kernel height/width (1 for FC).
+    pub kh: usize,
+    pub kw: usize,
+    /// Input channels (FC: input features).
+    pub in_ch: usize,
+    /// Output channels / filters (FC: output features).
+    pub out_ch: usize,
+    /// Input feature-map spatial size (FC: 1).
+    pub in_hw: usize,
+    /// Convolution stride (FC: 1).
+    pub stride: usize,
+}
+
+impl LayerSpec {
+    pub fn conv(name: &str, k: usize, in_ch: usize, out_ch: usize, in_hw: usize, stride: usize) -> Self {
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            kh: k,
+            kw: k,
+            in_ch,
+            out_ch,
+            in_hw,
+            stride,
+        }
+    }
+
+    pub fn dwconv(name: &str, k: usize, ch: usize, in_hw: usize, stride: usize) -> Self {
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::DepthwiseConv,
+            kh: k,
+            kw: k,
+            in_ch: ch,
+            out_ch: ch,
+            in_hw,
+            stride,
+        }
+    }
+
+    pub fn fc(name: &str, in_features: usize, out_features: usize) -> Self {
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            kh: 1,
+            kw: 1,
+            in_ch: in_features,
+            out_ch: out_features,
+            in_hw: 1,
+            stride: 1,
+        }
+    }
+
+    /// Output feature-map size (SAME padding assumed, as in the zoo nets).
+    pub fn out_hw(&self) -> usize {
+        if self.kind == LayerKind::Fc {
+            1
+        } else {
+            self.in_hw.div_ceil(self.stride)
+        }
+    }
+
+    /// Weight-parameter count (biases excluded — they are never pruned).
+    pub fn params(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv => self.out_ch * self.in_ch * self.kh * self.kw,
+            LayerKind::DepthwiseConv => self.out_ch * self.kh * self.kw,
+            LayerKind::Fc => self.in_ch * self.out_ch,
+        }
+    }
+
+    /// Multiply-accumulate count for one inference.
+    pub fn macs(&self) -> usize {
+        let out_hw = self.out_hw();
+        match self.kind {
+            LayerKind::Conv => self.out_ch * self.in_ch * self.kh * self.kw * out_hw * out_hw,
+            LayerKind::DepthwiseConv => self.out_ch * self.kh * self.kw * out_hw * out_hw,
+            LayerKind::Fc => self.in_ch * self.out_ch,
+        }
+    }
+
+    /// Is this a regular 3x3 CONV (pattern-based pruning's only habitat)?
+    pub fn is_3x3_conv(&self) -> bool {
+        self.kind == LayerKind::Conv && self.kh == 3 && self.kw == 3
+    }
+
+    /// Is this a 3x3 depthwise CONV (never pruned by the rule-based method)?
+    pub fn is_3x3_dw(&self) -> bool {
+        self.kind == LayerKind::DepthwiseConv && self.kh == 3 && self.kw == 3
+    }
+
+    /// GEMM-view dimensions (rows = C*KH*KW, cols = F), the shape the BCS
+    /// format and the latency model reason about.
+    pub fn gemm_dims(&self) -> (usize, usize) {
+        match self.kind {
+            LayerKind::Fc => (self.in_ch, self.out_ch),
+            LayerKind::Conv => (self.in_ch * self.kh * self.kw, self.out_ch),
+            LayerKind::DepthwiseConv => (self.kh * self.kw, self.out_ch),
+        }
+    }
+}
+
+/// Dataset difficulty drives the rule-based 3x3 decision (Remark 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Cifar10,
+    Cifar100,
+    ImageNet,
+    Coco,
+    Synthetic,
+}
+
+impl Dataset {
+    /// "Hard" datasets prefer pattern-based pruning on 3x3 layers
+    /// (paper §5.2.3: ImageNet-class tasks where even unpruned nets stay
+    /// under ~80% top-1).
+    pub fn is_hard(&self) -> bool {
+        matches!(self, Dataset::ImageNet | Dataset::Coco)
+    }
+
+    /// Baseline top-1 accuracy of a well-trained reference model — the
+    /// anchor for the analytic accuracy model.
+    pub fn baseline_acc(&self) -> f32 {
+        match self {
+            Dataset::Cifar10 => 0.946,
+            Dataset::Cifar100 => 0.78,
+            Dataset::ImageNet => 0.761,
+            Dataset::Coco => 0.573, // mAP for YOLOv4
+            Dataset::Synthetic => 0.95,
+        }
+    }
+}
+
+/// A whole network: ordered prunable layers + metadata.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub dataset: Dataset,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Published baseline top-1 accuracy (mAP for YOLOv4) for the exact
+    /// (network, dataset) pairs the paper evaluates; falls back to the
+    /// dataset-level anchor otherwise.
+    pub fn baseline_acc(&self) -> f32 {
+        match (self.name.as_str(), self.dataset) {
+            ("ResNet-50", Dataset::Cifar10) => 0.956,
+            ("VGG-16", Dataset::Cifar10) => 0.939,
+            ("MobileNetV2", Dataset::Cifar10) => 0.946,
+            ("ResNet-50", Dataset::ImageNet) => 0.761,
+            ("VGG-16", Dataset::ImageNet) => 0.745,
+            ("MobileNetV2", Dataset::ImageNet) => 0.710,
+            ("ResNet-18", Dataset::ImageNet) => 0.698,
+            ("MobileNet-V1", Dataset::ImageNet) => 0.709,
+            _ => self.dataset.baseline_acc(),
+        }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Fraction of weight parameters living in 3x3 CONV layers (Fig. 3a).
+    pub fn frac_params_3x3(&self) -> f32 {
+        let three: usize = self
+            .layers
+            .iter()
+            .filter(|l| l.is_3x3_conv())
+            .map(|l| l.params())
+            .sum();
+        three as f32 / self.total_params().max(1) as f32
+    }
+
+    /// Fraction of MACs in 3x3 CONV layers (Fig. 3b).
+    pub fn frac_macs_3x3(&self) -> f32 {
+        let three: usize = self
+            .layers
+            .iter()
+            .filter(|l| l.is_3x3_conv())
+            .map(|l| l.macs())
+            .sum();
+        three as f32 / self.total_macs().max(1) as f32
+    }
+
+    /// Fraction of params in 3x3 depthwise layers (§5.2.4 discussion).
+    pub fn frac_params_dw(&self) -> f32 {
+        let dw: usize = self
+            .layers
+            .iter()
+            .filter(|l| l.is_3x3_dw())
+            .map(|l| l.params())
+            .sum();
+        dw as f32 / self.total_params().max(1) as f32
+    }
+
+    /// Fraction of MACs in 3x3 depthwise layers.
+    pub fn frac_macs_dw(&self) -> f32 {
+        let dw: usize = self
+            .layers
+            .iter()
+            .filter(|l| l.is_3x3_dw())
+            .map(|l| l.macs())
+            .sum();
+        dw as f32 / self.total_macs().max(1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_accounting() {
+        let l = LayerSpec::conv("c", 3, 64, 128, 56, 1);
+        assert_eq!(l.params(), 128 * 64 * 9);
+        assert_eq!(l.macs(), 128 * 64 * 9 * 56 * 56);
+        assert!(l.is_3x3_conv());
+        assert_eq!(l.gemm_dims(), (64 * 9, 128));
+    }
+
+    #[test]
+    fn stride_shrinks_output() {
+        let l = LayerSpec::conv("c", 3, 8, 8, 56, 2);
+        assert_eq!(l.out_hw(), 28);
+        let odd = LayerSpec::conv("c", 3, 8, 8, 7, 2);
+        assert_eq!(odd.out_hw(), 4);
+    }
+
+    #[test]
+    fn dw_accounting() {
+        let l = LayerSpec::dwconv("d", 3, 32, 28, 1);
+        assert_eq!(l.params(), 32 * 9);
+        assert!(l.is_3x3_dw());
+        assert!(!l.is_3x3_conv());
+    }
+
+    #[test]
+    fn fc_accounting() {
+        let l = LayerSpec::fc("f", 1024, 128);
+        assert_eq!(l.params(), 1024 * 128);
+        assert_eq!(l.macs(), 1024 * 128);
+        assert_eq!(l.gemm_dims(), (1024, 128));
+    }
+
+    #[test]
+    fn dataset_difficulty() {
+        assert!(Dataset::ImageNet.is_hard());
+        assert!(Dataset::Coco.is_hard());
+        assert!(!Dataset::Cifar10.is_hard());
+    }
+}

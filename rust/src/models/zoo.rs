@@ -1,0 +1,452 @@
+//! The model zoo: every network the paper evaluates, as layer lists.
+//!
+//! Channel configurations follow the original architecture papers
+//! (Simonyan'14, He'16, Sandler'18, Howard'17, Bochkovskiy'20); parameter
+//! totals are asserted against the published counts in tests (within a few
+//! percent — we count prunable weights only, no biases/BN).
+
+use super::{Dataset, LayerSpec, ModelSpec};
+
+/// VGG-16. ImageNet variant: 13 conv + 3 FC (4096/4096/1000);
+/// CIFAR variant: 13 conv + 1 FC(512,10) as commonly used for CIFAR-10.
+pub fn vgg16(dataset: Dataset) -> ModelSpec {
+    let mut layers = Vec::new();
+    let (mut hw, cifar) = match dataset {
+        Dataset::ImageNet | Dataset::Coco => (224, false),
+        _ => (32, true),
+    };
+    let cfg: &[(usize, usize)] = &[
+        // (out_ch, convs in stage)
+        (64, 2),
+        (128, 2),
+        (256, 3),
+        (512, 3),
+        (512, 3),
+    ];
+    let mut in_ch = 3;
+    for (si, &(out_ch, n)) in cfg.iter().enumerate() {
+        for ci in 0..n {
+            layers.push(LayerSpec::conv(
+                &format!("conv{}_{}", si + 1, ci + 1),
+                3,
+                in_ch,
+                out_ch,
+                hw,
+                1,
+            ));
+            in_ch = out_ch;
+        }
+        hw /= 2; // maxpool
+    }
+    if cifar {
+        layers.push(LayerSpec::fc("fc1", 512, 10));
+    } else {
+        layers.push(LayerSpec::fc("fc1", 512 * 7 * 7, 4096));
+        layers.push(LayerSpec::fc("fc2", 4096, 4096));
+        layers.push(LayerSpec::fc("fc3", 4096, 1000));
+    }
+    ModelSpec { name: "VGG-16".into(), dataset, layers }
+}
+
+/// ResNet-18 (basic blocks, [2,2,2,2]).
+pub fn resnet18(dataset: Dataset) -> ModelSpec {
+    let mut layers = Vec::new();
+    let imagenet = matches!(dataset, Dataset::ImageNet | Dataset::Coco);
+    let mut hw;
+    let mut in_ch;
+    if imagenet {
+        layers.push(LayerSpec::conv("conv1", 7, 3, 64, 224, 2));
+        hw = 56; // after stride-2 conv + maxpool
+        in_ch = 64;
+    } else {
+        layers.push(LayerSpec::conv("conv1", 3, 3, 64, 32, 1));
+        hw = 32;
+        in_ch = 64;
+    }
+    let stages = [(64, 2), (128, 2), (256, 2), (512, 2)];
+    for (si, &(ch, blocks)) in stages.iter().enumerate() {
+        for bi in 0..blocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let pre = format!("layer{}_{}", si + 1, bi);
+            layers.push(LayerSpec::conv(&format!("{pre}_conv1"), 3, in_ch, ch, hw, stride));
+            let out_hw = hw.div_ceil(stride);
+            layers.push(LayerSpec::conv(&format!("{pre}_conv2"), 3, ch, ch, out_hw, 1));
+            if stride != 1 || in_ch != ch {
+                layers.push(LayerSpec::conv(&format!("{pre}_down"), 1, in_ch, ch, hw, stride));
+            }
+            in_ch = ch;
+            hw = out_hw;
+        }
+    }
+    let classes = if imagenet { 1000 } else { 10 };
+    layers.push(LayerSpec::fc("fc", 512, classes));
+    ModelSpec { name: "ResNet-18".into(), dataset, layers }
+}
+
+/// ResNet-50 (bottleneck blocks, [3,4,6,3]).
+pub fn resnet50(dataset: Dataset) -> ModelSpec {
+    let mut layers = Vec::new();
+    let imagenet = matches!(dataset, Dataset::ImageNet | Dataset::Coco);
+    let mut hw;
+    let mut in_ch;
+    if imagenet {
+        layers.push(LayerSpec::conv("conv1", 7, 3, 64, 224, 2));
+        hw = 56;
+        in_ch = 64;
+    } else {
+        layers.push(LayerSpec::conv("conv1", 3, 3, 64, 32, 1));
+        hw = 32;
+        in_ch = 64;
+    }
+    let stages = [(64usize, 3usize), (128, 4), (256, 6), (512, 3)];
+    for (si, &(width, blocks)) in stages.iter().enumerate() {
+        let out_ch = width * 4;
+        for bi in 0..blocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let pre = format!("layer{}_{}", si + 1, bi);
+            layers.push(LayerSpec::conv(&format!("{pre}_conv1"), 1, in_ch, width, hw, 1));
+            layers.push(LayerSpec::conv(&format!("{pre}_conv2"), 3, width, width, hw, stride));
+            let out_hw = hw.div_ceil(stride);
+            layers.push(LayerSpec::conv(&format!("{pre}_conv3"), 1, width, out_ch, out_hw, 1));
+            if stride != 1 || in_ch != out_ch {
+                layers.push(LayerSpec::conv(&format!("{pre}_down"), 1, in_ch, out_ch, hw, stride));
+            }
+            in_ch = out_ch;
+            hw = out_hw;
+        }
+    }
+    let classes = if imagenet { 1000 } else { 10 };
+    layers.push(LayerSpec::fc("fc", 2048, classes));
+    ModelSpec { name: "ResNet-50".into(), dataset, layers }
+}
+
+/// MobileNet-V1 (optionally width-scaled, e.g. 0.5x / 0.75x).
+pub fn mobilenet_v1_scaled(dataset: Dataset, width: f32) -> ModelSpec {
+    let s = |c: usize| ((c as f32 * width).round() as usize).max(8);
+    let mut layers = Vec::new();
+    let imagenet = matches!(dataset, Dataset::ImageNet | Dataset::Coco);
+    let mut hw = if imagenet { 224 } else { 32 };
+    layers.push(LayerSpec::conv("conv1", 3, 3, s(32), hw, if imagenet { 2 } else { 1 }));
+    if imagenet {
+        hw = 112;
+    }
+    // (out_ch, stride) pairs for the 13 dw-separable blocks
+    let cfg = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    let mut in_ch = s(32);
+    for (i, &(out_ch, stride)) in cfg.iter().enumerate() {
+        let stride = if imagenet { stride } else { if stride == 2 && hw <= 4 { 1 } else { stride } };
+        layers.push(LayerSpec::dwconv(&format!("dw{}", i + 1), 3, in_ch, hw, stride));
+        hw = hw.div_ceil(stride);
+        layers.push(LayerSpec::conv(&format!("pw{}", i + 1), 1, in_ch, s(out_ch), hw, 1));
+        in_ch = s(out_ch);
+    }
+    let classes = if imagenet { 1000 } else { 10 };
+    layers.push(LayerSpec::fc("fc", in_ch, classes));
+    ModelSpec {
+        name: if (width - 1.0).abs() < 1e-6 {
+            "MobileNet-V1".into()
+        } else {
+            format!("MobileNet-V1 {width:.2}x")
+        },
+        dataset,
+        layers,
+    }
+}
+
+pub fn mobilenet_v1(dataset: Dataset) -> ModelSpec {
+    mobilenet_v1_scaled(dataset, 1.0)
+}
+
+/// MobileNet-V2 (inverted residuals; optionally width-scaled).
+pub fn mobilenet_v2_scaled(dataset: Dataset, width: f32) -> ModelSpec {
+    let s = |c: usize| ((c as f32 * width / 8.0).round() as usize * 8).max(8);
+    let mut layers = Vec::new();
+    let imagenet = matches!(dataset, Dataset::ImageNet | Dataset::Coco);
+    let mut hw = if imagenet { 224 } else { 32 };
+    layers.push(LayerSpec::conv("conv1", 3, 3, s(32), hw, if imagenet { 2 } else { 1 }));
+    if imagenet {
+        hw = 112;
+    }
+    // (expansion t, out_ch c, repeats n, stride s)
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut in_ch = s(32);
+    let mut blk = 0;
+    for &(t, c, n, first_stride) in cfg {
+        for r in 0..n {
+            let stride = if r == 0 { first_stride } else { 1 };
+            let stride = if !imagenet && hw <= 4 { 1 } else { stride };
+            let hidden = in_ch * t;
+            blk += 1;
+            if t != 1 {
+                layers.push(LayerSpec::conv(&format!("b{blk}_expand"), 1, in_ch, hidden, hw, 1));
+            }
+            layers.push(LayerSpec::dwconv(&format!("b{blk}_dw"), 3, hidden, hw, stride));
+            hw = hw.div_ceil(stride);
+            layers.push(LayerSpec::conv(&format!("b{blk}_project"), 1, hidden, s(c), hw, 1));
+            in_ch = s(c);
+        }
+    }
+    let last = s(1280).max(1280.min(s(1280)));
+    layers.push(LayerSpec::conv("conv_last", 1, in_ch, last, hw, 1));
+    let classes = if imagenet { 1000 } else { 10 };
+    layers.push(LayerSpec::fc("fc", last, classes));
+    ModelSpec {
+        name: if (width - 1.0).abs() < 1e-6 {
+            "MobileNetV2".into()
+        } else {
+            format!("MobileNetV2 {width:.2}x")
+        },
+        dataset,
+        layers,
+    }
+}
+
+pub fn mobilenet_v2(dataset: Dataset) -> ModelSpec {
+    mobilenet_v2_scaled(dataset, 1.0)
+}
+
+/// YOLOv4: CSPDarknet53 backbone + SPP/PANet neck + YOLO heads.
+/// A faithful layer-level rendering (kernel sizes, channels, strides) —
+/// total prunable weights land near the paper's reported 64.36M.
+pub fn yolov4() -> ModelSpec {
+    let mut layers: Vec<LayerSpec> = Vec::new();
+    let mut idx = 0;
+    let mut conv = |layers: &mut Vec<LayerSpec>, k: usize, ic: usize, oc: usize, hw: usize, s: usize| {
+        idx += 1;
+        layers.push(LayerSpec::conv(&format!("conv{idx}"), k, ic, oc, hw, s));
+    };
+    let input = 608;
+    // --- CSPDarknet53 backbone ---
+    conv(&mut layers, 3, 3, 32, input, 1);
+    // stage template: downsample 3x3/s2, then CSP split with n residual
+    // blocks (each 1x1 + 3x3), then transition 1x1s.
+    let stages: &[(usize, usize, usize)] = &[
+        // (out_ch, num_res_blocks, in_hw)
+        (64, 1, 608),
+        (128, 2, 304),
+        (256, 8, 152),
+        (512, 8, 76),
+        (1024, 4, 38),
+    ];
+    let mut in_ch = 32;
+    for &(oc, nblocks, hw) in stages {
+        conv(&mut layers, 3, in_ch, oc, hw, 2);
+        let half = if nblocks == 1 { oc } else { oc / 2 };
+        let hw2 = hw / 2;
+        // CSP split paths
+        conv(&mut layers, 1, oc, half, hw2, 1);
+        conv(&mut layers, 1, oc, half, hw2, 1);
+        for _ in 0..nblocks {
+            conv(&mut layers, 1, half, half, hw2, 1);
+            conv(&mut layers, 3, half, half, hw2, 1);
+        }
+        conv(&mut layers, 1, half, half, hw2, 1);
+        conv(&mut layers, 1, half * 2, oc, hw2, 1);
+        in_ch = oc;
+    }
+    // --- SPP + PANet neck (19x19, 38x38, 76x76 maps) ---
+    conv(&mut layers, 1, 1024, 512, 19, 1);
+    conv(&mut layers, 3, 512, 1024, 19, 1);
+    conv(&mut layers, 1, 1024, 512, 19, 1);
+    // SPP concat -> 2048
+    conv(&mut layers, 1, 2048, 512, 19, 1);
+    conv(&mut layers, 3, 512, 1024, 19, 1);
+    conv(&mut layers, 1, 1024, 512, 19, 1);
+    // upsample path to 38x38
+    conv(&mut layers, 1, 512, 256, 19, 1);
+    conv(&mut layers, 1, 512, 256, 38, 1);
+    for _ in 0..2 {
+        conv(&mut layers, 1, 512, 256, 38, 1);
+        conv(&mut layers, 3, 256, 512, 38, 1);
+    }
+    conv(&mut layers, 1, 512, 256, 38, 1);
+    // upsample path to 76x76
+    conv(&mut layers, 1, 256, 128, 38, 1);
+    conv(&mut layers, 1, 256, 128, 76, 1);
+    for _ in 0..2 {
+        conv(&mut layers, 1, 256, 128, 76, 1);
+        conv(&mut layers, 3, 128, 256, 76, 1);
+    }
+    conv(&mut layers, 1, 256, 128, 76, 1);
+    // head 76x76
+    conv(&mut layers, 3, 128, 256, 76, 1);
+    conv(&mut layers, 1, 256, 255, 76, 1);
+    // downsample path back to 38x38
+    conv(&mut layers, 3, 128, 256, 76, 2);
+    for _ in 0..2 {
+        conv(&mut layers, 1, 512, 256, 38, 1);
+        conv(&mut layers, 3, 256, 512, 38, 1);
+    }
+    conv(&mut layers, 1, 512, 256, 38, 1);
+    conv(&mut layers, 3, 256, 512, 38, 1);
+    conv(&mut layers, 1, 512, 255, 38, 1);
+    // downsample path back to 19x19
+    conv(&mut layers, 3, 256, 512, 38, 2);
+    for _ in 0..2 {
+        conv(&mut layers, 1, 1024, 512, 19, 1);
+        conv(&mut layers, 3, 512, 1024, 19, 1);
+    }
+    conv(&mut layers, 1, 1024, 512, 19, 1);
+    conv(&mut layers, 3, 512, 1024, 19, 1);
+    conv(&mut layers, 1, 1024, 255, 19, 1);
+    ModelSpec { name: "YOLOv4".into(), dataset: Dataset::Coco, layers }
+}
+
+/// The two FC layers of Fig. 10a: VGG-16's first FC and BERT-base's
+/// intermediate FC.
+pub fn fig10a_fc_layers() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec::fc("vgg16_fc1", 25088, 4096),
+        LayerSpec::fc("bert_fc", 768, 3072),
+    ]
+}
+
+/// The proxy CNN trained end-to-end via the AOT artifacts (matches
+/// python/compile/model.py PARAM_SPECS).
+pub fn proxy_cnn() -> ModelSpec {
+    ModelSpec {
+        name: "ProxyCNN".into(),
+        dataset: Dataset::Synthetic,
+        layers: vec![
+            LayerSpec::conv("conv1", 3, 3, 16, 32, 1),
+            LayerSpec::conv("conv2", 3, 16, 32, 16, 1),
+            LayerSpec::conv("conv3", 3, 32, 64, 8, 1),
+            LayerSpec::fc("fc1", 1024, 128),
+            LayerSpec::fc("fc2", 128, 10),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(actual: usize, expect_m: f32, tol: f32) -> bool {
+        let a = actual as f32 / 1e6;
+        (a - expect_m).abs() / expect_m < tol
+    }
+
+    #[test]
+    fn vgg16_imagenet_params() {
+        let m = vgg16(Dataset::ImageNet);
+        // ~138M including FCs (weights only ≈ 138.3M)
+        assert!(approx(m.total_params(), 138.3, 0.03), "{}", m.total_params());
+        // MACs ~15.5G (conv-dominated)
+        assert!(approx(m.total_macs(), 15_500.0 * 1e0, 0.05), "{}", m.total_macs());
+    }
+
+    #[test]
+    fn resnet50_imagenet_params() {
+        let m = resnet50(Dataset::ImageNet);
+        // ~25.5M params, ~4.1G MACs
+        assert!(approx(m.total_params(), 25.0, 0.10), "{}", m.total_params());
+        assert!(approx(m.total_macs(), 4_100.0, 0.10), "{}", m.total_macs());
+        // paper: only ~44.3% of ResNet-50 params are in 3x3 CONV layers
+        let f = m.frac_params_3x3();
+        assert!((0.35..0.55).contains(&f), "frac={f}");
+    }
+
+    #[test]
+    fn resnet18_imagenet_params() {
+        let m = resnet18(Dataset::ImageNet);
+        assert!(approx(m.total_params(), 11.2, 0.10), "{}", m.total_params());
+        // ResNet-18 is 3x3-dominated, unlike ResNet-50
+        assert!(m.frac_params_3x3() > 0.9, "{}", m.frac_params_3x3());
+    }
+
+    #[test]
+    fn mobilenet_v2_imagenet_params() {
+        let m = mobilenet_v2(Dataset::ImageNet);
+        // ~3.5M params, ~300M MACs
+        assert!(approx(m.total_params(), 3.4, 0.15), "{}", m.total_params());
+        assert!(approx(m.total_macs(), 300.0, 0.15), "{}", m.total_macs());
+        // paper §5.2.4: 3x3-DW layers hold ~1.7-1.9% of params, ~6.9% of MACs
+        let p = m.frac_params_dw();
+        let c = m.frac_macs_dw();
+        assert!((0.01..0.035).contains(&p), "dw params frac={p}");
+        assert!((0.04..0.10).contains(&c), "dw macs frac={c}");
+        // no regular 3x3 convs except the stem
+        assert!(m.frac_params_3x3() < 0.05);
+    }
+
+    #[test]
+    fn mobilenet_v1_params() {
+        let m = mobilenet_v1(Dataset::ImageNet);
+        assert!(approx(m.total_params(), 4.2, 0.15), "{}", m.total_params());
+        let half = mobilenet_v1_scaled(Dataset::ImageNet, 0.5);
+        assert!(half.total_params() < m.total_params() / 3);
+        // 0.5x MobileNetV1 ≈ 150M MACs (Table 5 anchor)
+        assert!(approx(half.total_macs(), 150.0, 0.25), "{}", half.total_macs());
+    }
+
+    #[test]
+    fn yolov4_params_near_paper() {
+        let m = yolov4();
+        // Table 2: 64.36M weights
+        assert!(approx(m.total_params(), 64.36, 0.12), "{}", m.total_params());
+        // mixed kernel sizes: 3x3 fraction well below 1
+        let f = m.frac_params_3x3();
+        assert!((0.5..0.95).contains(&f), "frac={f}");
+    }
+
+    #[test]
+    fn cifar_variants_shrink() {
+        assert!(vgg16(Dataset::Cifar10).total_params() < vgg16(Dataset::ImageNet).total_params());
+        assert!(
+            resnet50(Dataset::Cifar10).total_macs() < resnet50(Dataset::ImageNet).total_macs()
+        );
+    }
+
+    #[test]
+    fn proxy_matches_python_manifest_counts() {
+        let m = proxy_cnn();
+        let params: usize = m.total_params();
+        // conv: 16*3*9 + 32*16*9 + 64*32*9 = 432+4608+18432; fc: 1024*128 + 128*10
+        assert_eq!(params, 432 + 4608 + 18432 + 131072 + 1280);
+    }
+
+    #[test]
+    fn all_models_have_positive_layers() {
+        for m in [
+            vgg16(Dataset::ImageNet),
+            vgg16(Dataset::Cifar10),
+            resnet18(Dataset::ImageNet),
+            resnet18(Dataset::Cifar10),
+            resnet50(Dataset::ImageNet),
+            resnet50(Dataset::Cifar10),
+            mobilenet_v1(Dataset::ImageNet),
+            mobilenet_v2(Dataset::ImageNet),
+            mobilenet_v2(Dataset::Cifar10),
+            yolov4(),
+            proxy_cnn(),
+        ] {
+            assert!(!m.layers.is_empty());
+            for l in &m.layers {
+                assert!(l.params() > 0, "{} {}", m.name, l.name);
+                assert!(l.macs() > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Pruning regularities and mask generation (paper §2.1, §4.1).
+//!
+//! Five regularities, exactly the paper's taxonomy (Fig. 1):
+//!
+//! * **Unstructured** — arbitrary weight locations (a/b);
+//! * **Structured** — whole rows (filters) / columns (channels) (c/d);
+//! * **Pattern-based** — 4-entry kernel patterns + connectivity pruning,
+//!   3x3 CONV only (e);
+//! * **Block-punched** — same intra-kernel locations pruned across a
+//!   (filters x channels) block of kernels, any CONV kernel size (f);
+//! * **Block-based** — independent row+column pruning inside equal-sized
+//!   blocks of an FC weight matrix (g).
+//!
+//! Masks are dense {0,1} tensors in the weight's natural layout (4-D for
+//! CONV, 2-D for FC).  One-shot magnitude pruning (used by the RL search's
+//! fast accuracy proxy, §5.1) lives in [`magnitude`]; the reweighted
+//! dynamic-regularization algorithm that *derives* per-layer rates lives in
+//! [`crate::reweighted`].
+
+pub mod magnitude;
+pub mod pattern;
+
+pub use magnitude::prune;
+pub use pattern::PatternLibrary;
+
+use crate::models::LayerSpec;
+
+/// A pruning scheme choice for one layer: the action space of both mapping
+/// methods ({regularity, block size} — §5.1's 2-D action vector).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// Leave the layer dense (the rule-based choice for 3x3-DW layers).
+    None,
+    /// Fine-grained, irregular (block size conceptually 1x1).
+    Unstructured,
+    /// Whole-row (filter) pruning.
+    StructuredRow,
+    /// Whole-column (channel) pruning.
+    StructuredColumn,
+    /// 4-entry kernel patterns + connectivity pruning (3x3 CONV only).
+    Pattern,
+    /// Block-based pruning for FC: rows/cols inside (bp x bq) blocks.
+    Block { bp: usize, bq: usize },
+    /// Block-punched pruning for CONV: kernel positions inside a
+    /// (bf filters x bc channels) block of kernels.
+    BlockPunched { bf: usize, bc: usize },
+}
+
+impl Scheme {
+    /// Short display name used in reports (matches the paper's tables).
+    pub fn label(&self) -> String {
+        match self {
+            Scheme::None => "none".into(),
+            Scheme::Unstructured => "unstructured".into(),
+            Scheme::StructuredRow => "structured-row".into(),
+            Scheme::StructuredColumn => "structured-col".into(),
+            Scheme::Pattern => "pattern".into(),
+            Scheme::Block { bp, bq } => format!("block {bp}x{bq}"),
+            Scheme::BlockPunched { bf, bc } => format!("punched {bf}x{bc}"),
+        }
+    }
+
+    /// Whether the scheme can legally be applied to the given layer.
+    pub fn applicable(&self, layer: &LayerSpec) -> bool {
+        use crate::models::LayerKind::*;
+        match self {
+            Scheme::None | Scheme::Unstructured => true,
+            Scheme::StructuredRow | Scheme::StructuredColumn => true,
+            Scheme::Pattern => layer.is_3x3_conv(),
+            Scheme::Block { .. } => layer.kind == Fc,
+            Scheme::BlockPunched { .. } => matches!(layer.kind, Conv | DepthwiseConv),
+        }
+    }
+
+    /// The block-size grid searched by both mapping methods.
+    pub fn block_size_candidates() -> &'static [(usize, usize)] {
+        &[(4, 4), (4, 16), (8, 16), (16, 32), (32, 64), (64, 128)]
+    }
+}
+
+/// Outcome of mask generation.
+#[derive(Debug, Clone)]
+pub struct PruneResult {
+    /// {0,1} mask, same shape as the weight tensor.
+    pub mask: crate::tensor::Tensor,
+    /// Non-zero (kept) weights.
+    pub kept: usize,
+    /// Total weights.
+    pub total: usize,
+}
+
+impl PruneResult {
+    /// Achieved compression rate (total / kept).
+    pub fn compression(&self) -> f32 {
+        self.total as f32 / self.kept.max(1) as f32
+    }
+
+    pub fn sparsity(&self) -> f32 {
+        1.0 - self.kept as f32 / self.total.max(1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LayerSpec;
+
+    #[test]
+    fn applicability_rules() {
+        let conv3 = LayerSpec::conv("c", 3, 16, 32, 28, 1);
+        let conv1 = LayerSpec::conv("c", 1, 16, 32, 28, 1);
+        let dw = LayerSpec::dwconv("d", 3, 16, 28, 1);
+        let fc = LayerSpec::fc("f", 128, 64);
+
+        assert!(Scheme::Pattern.applicable(&conv3));
+        assert!(!Scheme::Pattern.applicable(&conv1));
+        assert!(!Scheme::Pattern.applicable(&fc));
+
+        assert!(Scheme::BlockPunched { bf: 4, bc: 4 }.applicable(&conv1));
+        assert!(Scheme::BlockPunched { bf: 4, bc: 4 }.applicable(&dw));
+        assert!(!Scheme::BlockPunched { bf: 4, bc: 4 }.applicable(&fc));
+
+        assert!(Scheme::Block { bp: 4, bq: 4 }.applicable(&fc));
+        assert!(!Scheme::Block { bp: 4, bq: 4 }.applicable(&conv3));
+
+        assert!(Scheme::Unstructured.applicable(&fc));
+        assert!(Scheme::None.applicable(&dw));
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Scheme::Block { bp: 8, bq: 16 }.label(), "block 8x16");
+        assert_eq!(Scheme::Pattern.label(), "pattern");
+    }
+}

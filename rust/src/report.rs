@@ -1,0 +1,170 @@
+//! Table / figure text renderers used by the CLI and the benches to print
+//! the paper's tables and figure series.
+
+/// A fixed-width text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// A figure rendered as aligned (x, series...) columns plus a crude ASCII
+/// sparkline per series for shape reading.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub x_label: String,
+    pub x: Vec<String>,
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl Figure {
+    pub fn new(title: &str, x_label: &str) -> Figure {
+        Figure {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            x: Vec::new(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn set_x<S: ToString>(&mut self, xs: &[S]) {
+        self.x = xs.iter().map(|s| s.to_string()).collect();
+    }
+
+    pub fn add_series(&mut self, name: &str, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.x.len(), "series length mismatch");
+        self.series.push((name.to_string(), ys));
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &self.title,
+            &std::iter::once(self.x_label.as_str())
+                .chain(self.series.iter().map(|(n, _)| n.as_str()))
+                .collect::<Vec<_>>(),
+        );
+        for (i, x) in self.x.iter().enumerate() {
+            let mut row = vec![x.clone()];
+            for (_, ys) in &self.series {
+                row.push(format!("{:.4}", ys[i]));
+            }
+            t.row(row);
+        }
+        let mut out = t.render();
+        for (name, ys) in &self.series {
+            out.push_str(&format!("{:<18} {}\n", name, sparkline(ys)));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Unicode sparkline of a series.
+pub fn sparkline(ys: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &y in ys {
+        lo = lo.min(y);
+        hi = hi.max(y);
+    }
+    if !lo.is_finite() || !hi.is_finite() || (hi - lo).abs() < 1e-12 {
+        return "▄".repeat(ys.len());
+    }
+    ys.iter()
+        .map(|&y| {
+            let t = ((y - lo) / (hi - lo) * 7.0).round() as usize;
+            BARS[t.min(7)]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "bbbb", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["xxx".into(), "y".into(), "zz".into()]);
+        let r = t.render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("xxx"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines.len() >= 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn figure_renders_sparkline() {
+        let mut f = Figure::new("Fig", "x");
+        f.set_x(&[1, 2, 3]);
+        f.add_series("up", vec![0.0, 0.5, 1.0]);
+        let r = f.render();
+        assert!(r.contains('█'));
+        assert!(r.contains("up"));
+    }
+
+    #[test]
+    fn sparkline_degenerate() {
+        assert_eq!(sparkline(&[1.0, 1.0]), "▄▄");
+        assert_eq!(sparkline(&[]), "");
+    }
+}

@@ -1,0 +1,117 @@
+//! Typed view of `artifacts/manifest.json` (emitted by python/compile/aot.py).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+/// A named parameter tensor of the proxy model.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    /// "conv" | "fc" | "bias"
+    pub kind: String,
+    pub shape: Vec<usize>,
+}
+
+/// Input/output signature of one AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub m: Option<usize>,
+    pub k: Option<usize>,
+    pub n: Option<usize>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub img: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub params: Vec<ParamSpec>,
+    pub weight_idx: Vec<usize>,
+    pub weight_names: Vec<String>,
+    pub artifacts: HashMap<String, ArtifactSig>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text)?;
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    kind: p.get("kind")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = HashMap::new();
+        for (name, a) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: a.get("inputs")?.str_vec()?,
+                    outputs: a.get("outputs")?.str_vec()?,
+                    m: a.opt("m").map(|x| x.as_usize()).transpose()?,
+                    k: a.opt("k").map(|x| x.as_usize()).transpose()?,
+                    n: a.opt("n").map(|x| x.as_usize()).transpose()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            batch: v.get("batch")?.as_usize()?,
+            img: v.get("img")?.as_usize()?,
+            in_ch: v.get("in_ch")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            params,
+            weight_idx: v.get("weight_idx")?.usize_vec()?,
+            weight_names: v.get("weight_names")?.str_vec()?,
+            artifacts,
+        })
+    }
+
+    /// Shape of a parameter by name.
+    pub fn param_shape(&self, name: &str) -> Option<&[usize]> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| p.shape.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let json = r#"{
+            "batch": 8, "img": 32, "in_ch": 3, "num_classes": 10,
+            "params": [{"name": "w", "kind": "fc", "shape": [4, 2], "dtype": "f32"}],
+            "weight_idx": [0],
+            "weight_names": ["w"],
+            "artifacts": {"fwd": {"file": "f.hlo.txt", "inputs": ["w"], "outputs": ["y"]}},
+            "weights": [{"name": "w", "shape": [4, 2], "dtype": "f32"}]
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.param_shape("w"), Some(&[4usize, 2][..]));
+        assert!(m.artifacts.contains_key("fwd"));
+        assert_eq!(m.artifacts["fwd"].m, None);
+        assert_eq!(m.batch, 8);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse(r#"{"batch": 8}"#).is_err());
+    }
+}

@@ -1,0 +1,445 @@
+//! Analytic execution-cost model for pruned DNN layers on a mobile GPU.
+//!
+//! This is the substitution for the paper's on-device measurements (see
+//! DESIGN.md §2).  The model reproduces the *mechanisms* the paper reports,
+//! so relative orderings — which drive both mapping methods — match:
+//!
+//! * roofline: `latency = dispatch + max(compute, memory)` with partial
+//!   overlap;
+//! * **utilization saturates with block size** (Fig. 9): the SIMD-parallel
+//!   work unit of block-punched/block-based execution is the surviving
+//!   block; small blocks starve the lanes, large blocks approach dense
+//!   throughput;
+//! * **weight-reuse collapse on small feature maps** (Fig. 9): at
+//!   iso-MACs, fewer output positions mean less parallel work per weight
+//!   (`u_size`) and more weight traffic per MAC;
+//! * **irregularity costs** (Fig. 5): unstructured sparsity pays per-nnz
+//!   index arithmetic, gather traffic, and thread-divergence penalties
+//!   (reduced, not removed, by row reordering);
+//! * **pattern-based pruning** enjoys SIMD-fit 4-entry kernels with a small
+//!   per-pattern branch cost that *grows with kernel size* — the reason the
+//!   paper confines patterns to 3x3 (§2.1.1);
+//! * per-kernel dispatch overhead, reduced by layer fusion.
+
+use crate::models::{LayerKind, LayerSpec};
+use crate::pruning::Scheme;
+
+use super::device::DeviceProfile;
+
+/// Tile parameters chosen by the auto-tuner (App. A.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileParams {
+    /// Output-row tile (filters per workgroup).
+    pub tile_m: usize,
+    /// Output-column tile (spatial positions per workgroup).
+    pub tile_n: usize,
+    /// Inner-loop unroll factor.
+    pub unroll: usize,
+}
+
+impl TileParams {
+    /// A sane untuned default.
+    pub fn default_for(dev: &DeviceProfile) -> TileParams {
+        TileParams { tile_m: 8, tile_n: dev.simd_lanes, unroll: 4 }
+    }
+
+    /// The search grid the GA tuner explores.
+    pub fn candidates() -> Vec<TileParams> {
+        let mut out = Vec::new();
+        for &tile_m in &[4usize, 8, 16, 32] {
+            for &tile_n in &[16usize, 32, 64, 128, 256] {
+                for &unroll in &[1usize, 2, 4, 8] {
+                    out.push(TileParams { tile_m, tile_n, unroll });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Full execution configuration for one layer.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    pub scheme: Scheme,
+    /// Parameter compression rate (>= 1.0; 1.0 = dense).
+    pub compression: f32,
+    pub tile: TileParams,
+    /// Layer fusion applied (conv+bn+relu in one kernel).
+    pub fused: bool,
+    /// Row reordering applied (load balance for irregular sparsity).
+    pub reordered: bool,
+}
+
+impl ExecConfig {
+    pub fn dense(dev: &DeviceProfile) -> ExecConfig {
+        ExecConfig {
+            scheme: Scheme::None,
+            compression: 1.0,
+            tile: TileParams::default_for(dev),
+            fused: true,
+            reordered: true,
+        }
+    }
+
+    pub fn new(scheme: Scheme, compression: f32, dev: &DeviceProfile) -> ExecConfig {
+        ExecConfig {
+            scheme,
+            compression: compression.max(1.0),
+            tile: TileParams::default_for(dev),
+            fused: true,
+            reordered: true,
+        }
+    }
+}
+
+/// Scheme-dependent execution factors.
+struct SchemeFactors {
+    /// Peak-utilization ceiling for this regularity.
+    u_scheme: f64,
+    /// Extra compute ops per retained MAC (index math, branches).
+    extra_ops_per_mac: f64,
+    /// Index bytes per retained weight.
+    index_bytes_per_w: f64,
+    /// Thread-divergence multiplier (>= 1).
+    divergence: f64,
+}
+
+fn scheme_factors(
+    layer: &LayerSpec,
+    scheme: &Scheme,
+    dev: &DeviceProfile,
+    reordered: bool,
+) -> SchemeFactors {
+    let lanes = dev.simd_lanes as f64;
+    match scheme {
+        Scheme::None | Scheme::StructuredRow | Scheme::StructuredColumn => SchemeFactors {
+            u_scheme: 1.0,
+            extra_ops_per_mac: 0.0,
+            index_bytes_per_w: 0.0,
+            divergence: 1.0,
+        },
+        Scheme::Unstructured => SchemeFactors {
+            // gather-per-element; CSR index arithmetic roughly doubles the
+            // inner-loop op count and defeats vectorization
+            u_scheme: 0.30,
+            extra_ops_per_mac: 1.0,
+            index_bytes_per_w: 4.0,
+            divergence: if reordered { 1.10 } else { 1.30 },
+        },
+        Scheme::Pattern => {
+            // 4-entry patterns match SIMD registers; branch cost grows with
+            // the pattern candidate space, i.e. with kernel area (the paper:
+            // 8-16 pattern types are cheap for 3x3, prohibitive for 5x5+)
+            let area = (layer.kh * layer.kw) as f64;
+            let branch = 0.04 * (area / 9.0);
+            SchemeFactors {
+                u_scheme: 0.80,
+                extra_ops_per_mac: 0.10 + branch,
+                index_bytes_per_w: 0.5, // pattern id per kernel + kernel idx
+                divergence: if reordered { 1.03 } else { 1.12 },
+            }
+        }
+        Scheme::Block { bp, bq } => block_factors((bp * bq) as f64, lanes, reordered),
+        Scheme::BlockPunched { bf, bc } => block_factors((bf * bc) as f64, lanes, reordered),
+    }
+}
+
+/// Shared saturation curve for block-based/block-punched execution: the
+/// SIMD-parallel unit is the (surviving) block; utilization approaches the
+/// dense ceiling as the block grows past the lane width.
+fn block_factors(block_elems: f64, lanes: f64, reordered: bool) -> SchemeFactors {
+    let u = 0.97 * block_elems / (block_elems + lanes);
+    SchemeFactors {
+        u_scheme: u.max(0.05),
+        // one BCS column-list fetch amortized over the block
+        extra_ops_per_mac: 0.02 + 2.0 / block_elems.max(1.0),
+        index_bytes_per_w: 8.0 / block_elems.max(1.0).sqrt(),
+        divergence: if reordered { 1.02 } else { 1.08 },
+    }
+}
+
+/// Latency of one layer under `cfg` on `dev`, in milliseconds (batch 1).
+pub fn layer_latency_ms(layer: &LayerSpec, cfg: &ExecConfig, dev: &DeviceProfile) -> f64 {
+    let keep = 1.0 / cfg.compression.max(1.0) as f64;
+    let total_w = layer.params() as f64;
+    let kept_w = (total_w * keep).max(1.0);
+    let out_hw = layer.out_hw() as f64;
+    let out_positions = match layer.kind {
+        LayerKind::Fc => 1.0,
+        _ => out_hw * out_hw,
+    };
+    let macs = kept_w * out_positions;
+
+    let f = scheme_factors(layer, &cfg.scheme, dev, cfg.reordered);
+
+    // --- utilization ---------------------------------------------------
+    // machine-filling: output positions x filters is the parallel iteration
+    // space; small layers can't fill the GPU
+    let work = out_positions * layer.out_ch as f64;
+    let u_size = work / (work + dev.saturation_work);
+    let u_tile = tile_efficiency(layer, &cfg.tile, dev);
+    let util = (f.u_scheme * u_size * u_tile).max(1e-3);
+
+    // --- compute time ----------------------------------------------------
+    let ops = macs * (1.0 + f.extra_ops_per_mac);
+    let t_compute = ops / (dev.peak_macs * util) * 1e3;
+
+    // --- memory time -----------------------------------------------------
+    let in_hw = layer.in_hw as f64;
+    let input_bytes = match layer.kind {
+        LayerKind::Fc => layer.in_ch as f64 * 4.0,
+        _ => layer.in_ch as f64 * in_hw * in_hw * 4.0,
+    };
+    let output_bytes = layer.out_ch as f64 * out_positions * 4.0;
+    let weight_bytes = kept_w * 4.0 + kept_w * f.index_bytes_per_w;
+    let traffic = weight_bytes + input_bytes + output_bytes;
+    let t_mem = traffic / dev.mem_bw * 1e3;
+
+    // --- dispatch --------------------------------------------------------
+    // unfused: conv + bn + relu are separate kernel launches, and the
+    // intermediate tensor round-trips through memory
+    let (dispatch, mem_mult) = if cfg.fused {
+        (dev.dispatch_ms, 1.0)
+    } else {
+        (dev.dispatch_ms * 2.6, 1.0 + 2.0 * output_bytes / traffic)
+    };
+
+    let t_mem = t_mem * mem_mult;
+    let overlap = 0.15 * t_compute.min(t_mem);
+    dispatch + (t_compute.max(t_mem) + overlap) * f.divergence
+}
+
+/// Tile efficiency: penalties for lane-misaligned tiles, cache-overflowing
+/// footprints, and unroll factors outside the sweet spot.  The GA tuner
+/// (compiler::tuning) searches this surface.
+fn tile_efficiency(layer: &LayerSpec, tile: &TileParams, dev: &DeviceProfile) -> f64 {
+    let mut eff = 1.0;
+    if tile.tile_n % dev.simd_lanes != 0 {
+        eff *= 0.80;
+    }
+    let (rows, _cols) = layer.gemm_dims();
+    // footprint: weight tile + input tile + accumulators (f32)
+    let footprint = (tile.tile_m * tile.tile_n + tile.tile_n * rows.min(256) + tile.tile_m * 8) * 4;
+    if footprint > dev.l2_bytes {
+        eff *= 0.70;
+    }
+    match tile.unroll {
+        4 | 8 => {}
+        2 => eff *= 0.96,
+        1 => eff *= 0.90,
+        _ => eff *= 0.93,
+    }
+    // degenerate tiles larger than the layer waste lanes
+    if tile.tile_m > layer.out_ch {
+        eff *= 0.85;
+    }
+    eff
+}
+
+/// Whole-model latency: sum of per-layer latencies (the runtime executes
+/// layers sequentially on the mobile GPU, as the paper's framework does).
+pub fn model_latency_ms(
+    layers: &[LayerSpec],
+    cfgs: &[ExecConfig],
+    dev: &DeviceProfile,
+) -> f64 {
+    assert_eq!(layers.len(), cfgs.len());
+    layers
+        .iter()
+        .zip(cfgs)
+        .map(|(l, c)| layer_latency_ms(l, c, dev))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LayerSpec;
+
+    fn dev() -> DeviceProfile {
+        DeviceProfile::s10()
+    }
+
+    fn conv3(in_hw: usize, ch: usize) -> LayerSpec {
+        LayerSpec::conv("c", 3, ch, ch, in_hw, 1)
+    }
+
+    #[test]
+    fn dense_faster_than_nothing_is_false_latency_positive() {
+        let l = conv3(28, 128);
+        let lat = layer_latency_ms(&l, &ExecConfig::dense(&dev()), &dev());
+        assert!(lat > 0.0 && lat.is_finite());
+    }
+
+    #[test]
+    fn compression_reduces_latency() {
+        let l = conv3(28, 128);
+        let d = dev();
+        let dense = layer_latency_ms(&l, &ExecConfig::dense(&d), &d);
+        let pruned = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::BlockPunched { bf: 16, bc: 32 }, 8.0, &d),
+            &d,
+        );
+        assert!(pruned < dense, "pruned {pruned} >= dense {dense}");
+    }
+
+    #[test]
+    fn fig5_ordering_unstructured_slowest_structured_fastest() {
+        // same compression, ResNet-50-ish 3x3 layer
+        let l = conv3(28, 256);
+        let d = dev();
+        let c = 4.0;
+        let unstructured =
+            layer_latency_ms(&l, &ExecConfig::new(Scheme::Unstructured, c, &d), &d);
+        let small_block = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::BlockPunched { bf: 4, bc: 4 }, c, &d),
+            &d,
+        );
+        let big_block = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::BlockPunched { bf: 32, bc: 64 }, c, &d),
+            &d,
+        );
+        let structured =
+            layer_latency_ms(&l, &ExecConfig::new(Scheme::StructuredRow, c, &d), &d);
+        assert!(structured < big_block, "{structured} vs {big_block}");
+        assert!(big_block < small_block, "{big_block} vs {small_block}");
+        assert!(small_block < unstructured, "{small_block} vs {unstructured}");
+    }
+
+    #[test]
+    fn fig9_block_size_saturation() {
+        // latency decreases with block size but the marginal gain shrinks
+        let l = conv3(28, 128);
+        let d = dev();
+        let sizes = [(4, 4), (4, 16), (8, 16), (16, 32), (32, 64)];
+        let lats: Vec<f64> = sizes
+            .iter()
+            .map(|&(bf, bc)| {
+                layer_latency_ms(
+                    &l,
+                    &ExecConfig::new(Scheme::BlockPunched { bf, bc }, 8.0, &d),
+                    &d,
+                )
+            })
+            .collect();
+        for w in lats.windows(2) {
+            assert!(w[1] < w[0], "latency must fall with block size: {lats:?}");
+        }
+        let first_gain = lats[0] - lats[1];
+        let last_gain = lats[3] - lats[4];
+        assert!(last_gain < first_gain, "saturation expected: {lats:?}");
+    }
+
+    #[test]
+    fn fig9_small_feature_maps_are_slower_at_iso_macs() {
+        // 56x56x64 vs 7x7x512 keep MACs equal for 3x3 convs
+        let d = dev();
+        let big_fm = conv3(56, 64);
+        let small_fm = conv3(7, 512);
+        assert_eq!(big_fm.macs(), small_fm.macs());
+        let cfg = |_l: &LayerSpec| ExecConfig::new(Scheme::BlockPunched { bf: 8, bc: 16 }, 8.0, &d);
+        let a = layer_latency_ms(&big_fm, &cfg(&big_fm), &d);
+        let b = layer_latency_ms(&small_fm, &cfg(&small_fm), &d);
+        assert!(b > a, "7x7x512 ({b}ms) should be slower than 56x56x64 ({a}ms)");
+    }
+
+    #[test]
+    fn pattern_vs_block_crossover_fig10b() {
+        // paper: pattern ~ block 8x16 at 4-8x; pattern faster than small
+        // blocks, slower than very large blocks
+        let l = conv3(28, 128);
+        let d = dev();
+        let c = 8.0;
+        let pattern = layer_latency_ms(&l, &ExecConfig::new(Scheme::Pattern, c, &d), &d);
+        let b8x16 = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::BlockPunched { bf: 8, bc: 16 }, c, &d),
+            &d,
+        );
+        let b4x4 = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::BlockPunched { bf: 4, bc: 4 }, c, &d),
+            &d,
+        );
+        let b32x64 = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::BlockPunched { bf: 32, bc: 64 }, c, &d),
+            &d,
+        );
+        let ratio = pattern / b8x16;
+        assert!((0.6..1.6).contains(&ratio), "pattern/8x16 ratio {ratio}");
+        assert!(pattern < b4x4);
+        assert!(pattern > b32x64);
+    }
+
+    #[test]
+    fn fusion_and_reordering_help() {
+        let l = conv3(28, 128);
+        let d = dev();
+        let mut cfg = ExecConfig::new(Scheme::Unstructured, 4.0, &d);
+        let tuned = layer_latency_ms(&l, &cfg, &d);
+        cfg.fused = false;
+        let unfused = layer_latency_ms(&l, &cfg, &d);
+        cfg.fused = true;
+        cfg.reordered = false;
+        let unordered = layer_latency_ms(&l, &cfg, &d);
+        assert!(unfused > tuned);
+        assert!(unordered > tuned);
+    }
+
+    #[test]
+    fn faster_devices_are_faster() {
+        let l = conv3(56, 256);
+        let cfg = ExecConfig::dense(&DeviceProfile::s10());
+        let a = layer_latency_ms(&l, &cfg, &DeviceProfile::s10());
+        let b = layer_latency_ms(&l, &cfg, &DeviceProfile::s20());
+        let c = layer_latency_ms(&l, &cfg, &DeviceProfile::s21());
+        assert!(a > b && b > c);
+    }
+
+    #[test]
+    fn fc_is_memory_bound_and_block_size_helps() {
+        let l = LayerSpec::fc("fc", 25088, 4096);
+        let d = dev();
+        let tiny = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::Block { bp: 1, bq: 1 }, 8.0, &d),
+            &d,
+        );
+        let big = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::Block { bp: 64, bq: 128 }, 8.0, &d),
+            &d,
+        );
+        assert!(big < tiny);
+        // saturation: 64x128 -> 128x256 gains little
+        let bigger = layer_latency_ms(
+            &l,
+            &ExecConfig::new(Scheme::Block { bp: 128, bq: 256 }, 8.0, &d),
+            &d,
+        );
+        assert!((big - bigger) / big < 0.15);
+    }
+
+    #[test]
+    fn absolute_scale_sanity() {
+        // whole-model dense latencies should land in the paper's ballpark:
+        // dense VGG-16/ImageNet on S10 tens of ms (PatDNN reaches 18.9ms at
+        // 8x pattern), MobileNetV2 a few ms.
+        use crate::models::zoo;
+        let d = dev();
+        let vgg = zoo::vgg16(crate::models::Dataset::ImageNet);
+        let cfgs: Vec<ExecConfig> = vgg.layers.iter().map(|_| ExecConfig::dense(&d)).collect();
+        let lat = model_latency_ms(&vgg.layers, &cfgs, &d);
+        assert!((20.0..250.0).contains(&lat), "VGG-16 dense = {lat}ms");
+
+        let mnv2 = zoo::mobilenet_v2(crate::models::Dataset::ImageNet);
+        let cfgs: Vec<ExecConfig> = mnv2.layers.iter().map(|_| ExecConfig::dense(&d)).collect();
+        let lat2 = model_latency_ms(&mnv2.layers, &cfgs, &d);
+        assert!((1.5..15.0).contains(&lat2), "MobileNetV2 dense = {lat2}ms");
+        assert!(lat2 < lat);
+    }
+}

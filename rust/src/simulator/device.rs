@@ -1,0 +1,107 @@
+//! Mobile-SoC device profiles (the stand-ins for the paper's test phones).
+//!
+//! Numbers are derived from public specs of the Snapdragon 855/865/888
+//! mobile GPUs (Adreno 640/650/660): peak FP16 MAC throughput, effective
+//! LPDDR4X/5 bandwidth, SIMD lane width, and an empirical per-kernel
+//! dispatch overhead.  Absolute values only anchor the scale; the mapping
+//! methods depend on *relative* orderings, which come from the cost model.
+
+/// One target device.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Peak MACs/second (FP16) of the mobile GPU.
+    pub peak_macs: f64,
+    /// Effective memory bandwidth, bytes/second.
+    pub mem_bw: f64,
+    /// SIMD lane width the generated code vectorizes over.
+    pub simd_lanes: usize,
+    /// Concurrent thread groups (waves) the GPU sustains.
+    pub threads: usize,
+    /// Fixed per-kernel-launch overhead, milliseconds.
+    pub dispatch_ms: f64,
+    /// Last-level cache, bytes (tiling target).
+    pub l2_bytes: usize,
+    /// Work (output elems x filters) needed to saturate the GPU; the
+    /// utilization knee — smaller layers can't fill the machine.
+    pub saturation_work: f64,
+}
+
+impl DeviceProfile {
+    /// Samsung Galaxy S10 — Snapdragon 855, Adreno 640 (the paper's main
+    /// evaluation device).
+    pub fn s10() -> Self {
+        DeviceProfile {
+            name: "Galaxy S10 (Adreno 640)",
+            peak_macs: 450e9,
+            mem_bw: 34e9,
+            simd_lanes: 64,
+            threads: 8,
+            dispatch_ms: 0.030,
+            l2_bytes: 1 << 20,
+            saturation_work: 5.0e5,
+        }
+    }
+
+    /// Samsung Galaxy S20 — Snapdragon 865, Adreno 650.
+    pub fn s20() -> Self {
+        DeviceProfile {
+            name: "Galaxy S20 (Adreno 650)",
+            peak_macs: 600e9,
+            mem_bw: 44e9,
+            simd_lanes: 64,
+            threads: 8,
+            dispatch_ms: 0.027,
+            l2_bytes: (1 << 20) + (1 << 19),
+            saturation_work: 5.5e5,
+        }
+    }
+
+    /// Samsung Galaxy S21 — Snapdragon 888, Adreno 660.
+    pub fn s21() -> Self {
+        DeviceProfile {
+            name: "Galaxy S21 (Adreno 660)",
+            peak_macs: 740e9,
+            mem_bw: 51e9,
+            simd_lanes: 64,
+            threads: 8,
+            dispatch_ms: 0.024,
+            l2_bytes: 1 << 21,
+            saturation_work: 6.0e5,
+        }
+    }
+
+    /// Lookup by short name ("s10" | "s20" | "s21").
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "s10" => Some(Self::s10()),
+            "s20" => Some(Self::s20()),
+            "s21" => Some(Self::s21()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<DeviceProfile> {
+        vec![Self::s10(), Self::s20(), Self::s21()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generations_get_faster() {
+        let (a, b, c) = (DeviceProfile::s10(), DeviceProfile::s20(), DeviceProfile::s21());
+        assert!(a.peak_macs < b.peak_macs && b.peak_macs < c.peak_macs);
+        assert!(a.mem_bw < b.mem_bw && b.mem_bw < c.mem_bw);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(DeviceProfile::by_name("S10").is_some());
+        assert!(DeviceProfile::by_name("s21").is_some());
+        assert!(DeviceProfile::by_name("pixel").is_none());
+        assert_eq!(DeviceProfile::all().len(), 3);
+    }
+}

@@ -1,0 +1,14 @@
+//! Mobile-SoC latency simulator — the substitution for the paper's
+//! Samsung Galaxy test devices (DESIGN.md §2).
+//!
+//! [`device`] holds per-phone profiles (S10/S20/S21); [`cost`] is the
+//! analytic execution model that turns (layer, pruning scheme, block size,
+//! compression, compiler flags) into milliseconds.  The compiler's
+//! auto-tuner searches this model; the latency model (crate::latmodel)
+//! tabulates it; both mapping methods consume it.
+
+pub mod cost;
+pub mod device;
+
+pub use cost::{layer_latency_ms, model_latency_ms, ExecConfig, TileParams};
+pub use device::DeviceProfile;

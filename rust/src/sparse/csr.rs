@@ -1,0 +1,131 @@
+//! Compressed Sparse Row format — the baseline BCS is compared against.
+
+use crate::tensor::Tensor;
+
+/// Standard CSR over a 2-D matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub values: Vec<f32>,
+    pub col_idx: Vec<u32>,
+    pub row_ptr: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from a dense 2-D tensor (explicit zeros dropped).
+    pub fn from_dense(t: &Tensor) -> Csr {
+        assert_eq!(t.ndim(), 2);
+        let (rows, cols) = (t.shape()[0], t.shape()[1]);
+        let mut values = Vec::new();
+        let mut col_idx = Vec::new();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = t.at2(r, c);
+                if v != 0.0 {
+                    values.push(v);
+                    col_idx.push(c as u32);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        Csr { rows, cols, values, col_idx, row_ptr }
+    }
+
+    /// Expand back to dense.
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.cols]);
+        for r in 0..self.rows {
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                t.set2(r, self.col_idx[k as usize] as usize, self.values[k as usize]);
+            }
+        }
+        t
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Non-zeros in row `r`.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+
+    /// Storage footprint in bytes (f32 values + u32 indices/pointers).
+    pub fn storage_bytes(&self) -> usize {
+        self.values.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 4
+    }
+
+    /// Sparse matrix-vector product (reference for execution tests).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                acc += self.values[k as usize] * x[self.col_idx[k as usize] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sparse_tensor(rows: usize, cols: usize, density: f32, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(&[rows, cols]);
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    t.set2(r, c, rng.normal());
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = sparse_tensor(17, 23, 0.3, 1);
+        let csr = Csr::from_dense(&t);
+        assert_eq!(csr.to_dense(), t);
+        assert_eq!(csr.nnz(), t.nnz());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let t = Tensor::zeros(&[4, 4]);
+        let csr = Csr::from_dense(&t);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), t);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let t = sparse_tensor(8, 12, 0.4, 2);
+        let csr = Csr::from_dense(&t);
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let y = csr.spmv(&x);
+        for r in 0..8 {
+            let expect: f32 = (0..12).map(|c| t.at2(r, c) * x[c]).sum();
+            assert!((y[r] - expect).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn storage_shrinks_with_sparsity() {
+        let dense = sparse_tensor(64, 64, 0.9, 3);
+        let sparse = sparse_tensor(64, 64, 0.1, 4);
+        assert!(
+            Csr::from_dense(&sparse).storage_bytes() < Csr::from_dense(&dense).storage_bytes()
+        );
+    }
+}

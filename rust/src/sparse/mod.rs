@@ -1,0 +1,11 @@
+//! Sparse weight storage: CSR and the paper's Blocked Compressed Storage
+//! (BCS, §4.3 / Fig. 4), plus the row-reordering optimization that the
+//! compiler uses for thread load balance.
+
+pub mod bcs;
+pub mod csr;
+pub mod reorder;
+
+pub use bcs::Bcs;
+pub use csr::Csr;
+pub use reorder::{load_balance, permute_rows, reorder_rows, row_nnz_counts, LoadBalance};

@@ -1,0 +1,184 @@
+//! Row reordering for thread load balance (paper §4.3).
+//!
+//! After pruning, rows have unequal non-zero counts; naive row-to-thread
+//! assignment diverges.  The compiler groups rows with identical/similar
+//! nnz so consecutive rows (processed by the same SIMD thread group) carry
+//! equal work, eliminating divergence and enabling multi-row unrolling.
+
+use crate::tensor::Tensor;
+
+/// Load-balance statistics over a row-to-thread partition.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadBalance {
+    /// max(thread work) / mean(thread work); 1.0 = perfectly balanced.
+    pub imbalance: f32,
+    /// number of distinct nnz values among consecutive row groups — a
+    /// proxy for branch count in generated code.
+    pub pattern_switches: usize,
+}
+
+/// Compute load balance of the given row order for `threads` threads.
+/// Assignment is strided — position `i` goes to thread `i % threads` —
+/// matching the paper's "continuous rows ... processed by multi-threads
+/// simultaneously": each wave of `threads` consecutive rows runs in
+/// parallel, so equal-nnz neighbours mean equal per-wave work.
+pub fn load_balance(row_nnz: &[usize], order: &[usize], threads: usize) -> LoadBalance {
+    assert_eq!(row_nnz.len(), order.len());
+    let n = order.len();
+    let threads = threads.max(1).min(n.max(1));
+    let mut work = vec![0usize; threads];
+    for (pos, &r) in order.iter().enumerate() {
+        work[pos % threads] += row_nnz[r];
+    }
+    let total: usize = work.iter().sum();
+    let mean = total as f32 / threads as f32;
+    let max = *work.iter().max().unwrap_or(&0) as f32;
+    let imbalance = if mean > 0.0 { max / mean } else { 1.0 };
+
+    let mut switches = 0;
+    for w in order.windows(2) {
+        if row_nnz[w[0]] != row_nnz[w[1]] {
+            switches += 1;
+        }
+    }
+    LoadBalance { imbalance, pattern_switches: switches }
+}
+
+/// Reorder rows so identical column *patterns* become adjacent (maximizing
+/// BCS occurrence-run length), with patterns ordered by descending nnz so
+/// equal-work rows neighbour each other.  Returns the permutation `order`.
+pub fn reorder_rows(t: &Tensor) -> Vec<usize> {
+    assert_eq!(t.ndim(), 2);
+    let rows = t.shape()[0];
+    let cols = t.shape()[1];
+    let data = t.data();
+    // §Perf: one shared pattern arena + (nnz, hash) pre-keys instead of a
+    // per-row Vec and full lexicographic compares on every sort step
+    let mut arena: Vec<u32> = Vec::new();
+    let mut spans: Vec<(usize, usize)> = Vec::with_capacity(rows);
+    let mut keyed: Vec<(usize, usize, u64)> = Vec::with_capacity(rows); // (row, nnz, hash)
+    for r in 0..rows {
+        let start = arena.len();
+        let mut hash = 0xcbf2_9ce4_8422_2325u64;
+        for (c, v) in data[r * cols..(r + 1) * cols].iter().enumerate() {
+            if *v != 0.0 {
+                arena.push(c as u32);
+                hash = (hash ^ c as u64).wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        spans.push((start, arena.len()));
+        keyed.push((r, arena.len() - start, hash));
+    }
+    keyed.sort_unstable_by(|a, b| {
+        b.1.cmp(&a.1)
+            .then(a.2.cmp(&b.2))
+            .then_with(|| {
+                let pa = &arena[spans[a.0].0..spans[a.0].1];
+                let pb = &arena[spans[b.0].0..spans[b.0].1];
+                pa.cmp(pb)
+            })
+            .then(a.0.cmp(&b.0))
+    });
+    keyed.into_iter().map(|(r, _, _)| r).collect()
+}
+
+/// Apply a row permutation: `out[i] = t[order[i]]`.
+pub fn permute_rows(t: &Tensor, order: &[usize]) -> Tensor {
+    assert_eq!(t.ndim(), 2);
+    let (rows, cols) = (t.shape()[0], t.shape()[1]);
+    assert_eq!(order.len(), rows);
+    let mut out = Tensor::zeros(&[rows, cols]);
+    for (i, &r) in order.iter().enumerate() {
+        for c in 0..cols {
+            out.set2(i, c, t.at2(r, c));
+        }
+    }
+    out
+}
+
+/// Row nnz counts of a 2-D tensor.
+pub fn row_nnz_counts(t: &Tensor) -> Vec<usize> {
+    assert_eq!(t.ndim(), 2);
+    let cols = t.shape()[1];
+    (0..t.shape()[0])
+        .map(|r| (0..cols).filter(|&c| t.at2(r, c) != 0.0).count())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn ragged_tensor(seed: u64) -> Tensor {
+        // rows with wildly different nnz
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(&[64, 64]);
+        for r in 0..64 {
+            let density = if r % 4 == 0 { 0.9 } else { 0.1 };
+            for c in 0..64 {
+                if rng.bernoulli(density) {
+                    t.set2(r, c, rng.normal());
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn reorder_is_permutation() {
+        let t = ragged_tensor(1);
+        let order = reorder_rows(&t);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reorder_sorts_by_nnz_desc() {
+        let t = ragged_tensor(2);
+        let nnz = row_nnz_counts(&t);
+        let order = reorder_rows(&t);
+        for w in order.windows(2) {
+            assert!(nnz[w[0]] >= nnz[w[1]]);
+        }
+    }
+
+    #[test]
+    fn reordering_improves_balance() {
+        let t = ragged_tensor(3);
+        let nnz = row_nnz_counts(&t);
+        let identity: Vec<usize> = (0..64).collect();
+        let before = load_balance(&nnz, &identity, 8);
+        let after = load_balance(&nnz, &reorder_rows(&t), 8);
+        assert!(
+            after.imbalance <= before.imbalance,
+            "imbalance got worse: {} -> {}",
+            before.imbalance,
+            after.imbalance
+        );
+        assert!(after.pattern_switches <= before.pattern_switches);
+    }
+
+    #[test]
+    fn perfect_balance_on_uniform_rows() {
+        let mut t = Tensor::zeros(&[16, 16]);
+        for r in 0..16 {
+            for c in 0..4 {
+                t.set2(r, c, 1.0);
+            }
+        }
+        let nnz = row_nnz_counts(&t);
+        let lb = load_balance(&nnz, &reorder_rows(&t), 4);
+        assert!((lb.imbalance - 1.0).abs() < 1e-6);
+        assert_eq!(lb.pattern_switches, 0);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let t = Tensor::zeros(&[4, 4]);
+        let nnz = row_nnz_counts(&t);
+        let lb = load_balance(&nnz, &reorder_rows(&t), 8);
+        assert_eq!(lb.imbalance, 1.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal dense f32 tensor used across the coordinator.
+//!
+//! This is deliberately small: row-major storage, shape metadata, and the
+//! handful of views the pruning / sparse modules need (2-D GEMM view of 4-D
+//! CONV weights, block iteration).  Heavy numerics live in the AOT-compiled
+//! XLA artifacts; this type exists for weight manipulation, masking, and
+//! the simulator, not for fast math.
+
+use crate::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// One-filled tensor.
+    pub fn ones(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    /// Build from raw data; panics if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data len {}",
+            shape,
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// He-normal init (std = sqrt(2 / fan_in)).
+    pub fn he_normal(shape: &[usize], fan_in: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / fan_in.max(1) as f32).sqrt();
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Uniform init in [lo, hi).
+    pub fn uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.range_f32(lo, hi)).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        self.data[r * cols + c] = v;
+    }
+
+    /// 4-D accessor for CONV weights in (F, C, KH, KW) layout.
+    pub fn at4(&self, f: usize, c: usize, kh: usize, kw: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 4);
+        let (_, cs, hs, ws) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((f * cs + c) * hs + kh) * ws + kw]
+    }
+
+    pub fn set4(&mut self, f: usize, c: usize, kh: usize, kw: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 4);
+        let (cs, hs, ws) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((f * cs + c) * hs + kh) * ws + kw] = v;
+    }
+
+    /// GEMM view of a 4-D CONV weight: (F, C, KH, KW) -> (C*KH*KW, F),
+    /// matching the im2col layout used by the L1 kernel.
+    pub fn conv_to_gemm(&self) -> Tensor {
+        assert_eq!(self.ndim(), 4);
+        let (f, c, kh, kw) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let rows = c * kh * kw;
+        let mut out = vec![0.0f32; rows * f];
+        for fi in 0..f {
+            for r in 0..rows {
+                out[r * f + fi] = self.data[fi * rows + r];
+            }
+        }
+        Tensor { shape: vec![rows, f], data: out }
+    }
+
+    /// Inverse of [`conv_to_gemm`]: (C*KH*KW, F) -> (F, C, KH, KW).
+    pub fn gemm_to_conv(&self, c: usize, kh: usize, kw: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let rows = self.shape[0];
+        let f = self.shape[1];
+        assert_eq!(rows, c * kh * kw);
+        let mut out = vec![0.0f32; f * rows];
+        for fi in 0..f {
+            for r in 0..rows {
+                out[fi * rows + r] = self.data[r * f + fi];
+            }
+        }
+        Tensor { shape: vec![f, c, kh, kw], data: out }
+    }
+
+    /// Count of non-zero elements.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Fraction of zero elements.
+    pub fn sparsity(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f32 / self.data.len() as f32
+    }
+
+    /// Element-wise product (used for masking); shapes must match.
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a * b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_ones_shapes() {
+        let z = Tensor::zeros(&[2, 3]);
+        assert_eq!(z.len(), 6);
+        assert_eq!(z.nnz(), 0);
+        let o = Tensor::ones(&[4]);
+        assert_eq!(o.nnz(), 4);
+        assert_eq!(o.sparsity(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn accessors_roundtrip() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        t.set2(1, 2, 5.0);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.data()[1 * 4 + 2], 5.0);
+
+        let mut c = Tensor::zeros(&[2, 3, 3, 3]);
+        c.set4(1, 2, 0, 1, 7.0);
+        assert_eq!(c.at4(1, 2, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn conv_gemm_roundtrip() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::he_normal(&[6, 4, 3, 3], 36, &mut rng);
+        let g = w.conv_to_gemm();
+        assert_eq!(g.shape(), &[4 * 9, 6]);
+        let back = g.gemm_to_conv(4, 3, 3);
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn gemm_view_layout_matches_kernel() {
+        // w[f, c, kh, kw] must land at gemm[(c*KH+kh)*KW+kw, f]
+        let mut w = Tensor::zeros(&[2, 2, 3, 3]);
+        w.set4(1, 0, 2, 1, 9.0);
+        let g = w.conv_to_gemm();
+        assert_eq!(g.at2((0 * 3 + 2) * 3 + 1, 1), 9.0);
+    }
+
+    #[test]
+    fn hadamard_masks() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let m = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let p = t.hadamard(&m);
+        assert_eq!(p.data(), &[1.0, 0.0, 0.0, 4.0]);
+        assert_eq!(p.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn he_normal_scale() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::he_normal(&[64, 64], 64, &mut rng);
+        let var = t.sq_norm() / t.len() as f32;
+        let expect = 2.0 / 64.0;
+        assert!((var - expect).abs() < expect * 0.2, "var={var} expect={expect}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Training driver: executes the AOT train-step/forward artifacts over
+//! PJRT on a synthetic CIFAR-like dataset.
+//!
+//! This is the *live* counterpart of the analytic accuracy model: the
+//! end-to-end example trains the proxy CNN, runs reweighted-regularized
+//! epochs with host-side alpha updates, one-shot prunes under a mapped
+//! scheme, and masked-retrains — the paper's full pipeline at laptop scale.
+//! Python never runs here: the artifacts were lowered once at build time.
+
+pub mod synth;
+
+pub use synth::SynthDataset;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::accuracy::Assignment;
+use crate::pruning::{prune, PatternLibrary};
+use crate::reweighted;
+use crate::rng::Rng;
+use crate::runtime::{Executable, HostValue, Runtime};
+use crate::tensor::Tensor;
+
+/// Handle over the proxy model's training state.
+pub struct TrainDriver {
+    step_exe: Arc<Executable>,
+    fwd_exe: Arc<Executable>,
+    /// All parameters (weights + biases) in manifest order.
+    pub params: Vec<Tensor>,
+    /// Shapes per parameter.
+    shapes: Vec<Vec<usize>>,
+    /// Masks per prunable weight (weight order).
+    pub masks: Vec<Tensor>,
+    /// Alphas per prunable weight.
+    pub alphas: Vec<Tensor>,
+    weight_idx: Vec<usize>,
+    batch: usize,
+    in_elems: usize,
+    num_classes: usize,
+}
+
+/// One training-step result.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub ce: f32,
+    pub acc: f32,
+}
+
+impl TrainDriver {
+    /// Initialize from the runtime's manifest (He-init weights, zero bias,
+    /// dense masks, zero alphas).
+    pub fn new(rt: &Runtime, seed: u64) -> Result<TrainDriver> {
+        let m = rt.manifest().clone();
+        let step_exe = rt.load("train_step")?;
+        let fwd_exe = rt.load("forward")?;
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        let mut shapes = Vec::new();
+        for p in &m.params {
+            let t = if p.kind == "bias" {
+                Tensor::zeros(&p.shape)
+            } else {
+                let fan_in: usize = match p.kind.as_str() {
+                    "conv" => p.shape[1..].iter().product(),
+                    _ => p.shape[0],
+                };
+                Tensor::he_normal(&p.shape, fan_in, &mut rng)
+            };
+            shapes.push(p.shape.clone());
+            params.push(t);
+        }
+        let masks: Vec<Tensor> = m
+            .weight_idx
+            .iter()
+            .map(|&i| Tensor::ones(&shapes[i]))
+            .collect();
+        let alphas: Vec<Tensor> = m
+            .weight_idx
+            .iter()
+            .map(|&i| Tensor::zeros(&shapes[i]))
+            .collect();
+        Ok(TrainDriver {
+            step_exe,
+            fwd_exe,
+            params,
+            shapes,
+            masks,
+            alphas,
+            weight_idx: m.weight_idx.clone(),
+            batch: m.batch,
+            in_elems: m.in_ch * m.img * m.img,
+            num_classes: m.num_classes,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Prunable weight tensors (cloned views).
+    pub fn weights(&self) -> Vec<Tensor> {
+        self.weight_idx.iter().map(|&i| self.params[i].clone()).collect()
+    }
+
+    /// Set the pruning masks (weight order) and re-apply to params.
+    pub fn set_masks(&mut self, masks: Vec<Tensor>) -> Result<()> {
+        if masks.len() != self.weight_idx.len() {
+            return Err(anyhow!("expected {} masks", self.weight_idx.len()));
+        }
+        for (m, &wi) in masks.iter().zip(&self.weight_idx) {
+            if m.shape() != self.shapes[wi].as_slice() {
+                return Err(anyhow!("mask shape mismatch for weight {wi}"));
+            }
+        }
+        for (m, &wi) in masks.iter().zip(&self.weight_idx) {
+            self.params[wi] = self.params[wi].hadamard(m);
+        }
+        self.masks = masks;
+        Ok(())
+    }
+
+    /// Refresh reweighted alphas from current weights under per-layer
+    /// schemes (paper Eq. 2-4 alpha update, done between epochs).
+    pub fn update_alphas(&mut self, assigns: &[Assignment]) {
+        for (k, &wi) in self.weight_idx.iter().enumerate() {
+            let scheme = assigns[k].scheme;
+            self.alphas[k] = reweighted::alphas(&self.params[wi], &scheme, reweighted::EPS);
+        }
+    }
+
+    /// One SGD step through the AOT train-step artifact.
+    pub fn step(&mut self, x: &[f32], y: &[i32], lr: f32, lam: f32) -> Result<StepStats> {
+        debug_assert_eq!(x.len(), self.batch * self.in_elems);
+        debug_assert_eq!(y.len(), self.batch);
+        let mut inputs: Vec<HostValue> = Vec::with_capacity(self.params.len() + 14);
+        for (p, s) in self.params.iter().zip(&self.shapes) {
+            inputs.push(HostValue::f32(s, p.data().to_vec()));
+        }
+        for m in &self.masks {
+            inputs.push(HostValue::f32(m.shape(), m.data().to_vec()));
+        }
+        for a in &self.alphas {
+            inputs.push(HostValue::f32(a.shape(), a.data().to_vec()));
+        }
+        let hw = (self.in_elems / 3).isqrt();
+        inputs.push(HostValue::f32(&[self.batch, 3, hw, hw], x.to_vec()));
+        inputs.push(HostValue::i32(&[self.batch], y.to_vec()));
+        inputs.push(HostValue::scalar_f32(lr));
+        inputs.push(HostValue::scalar_f32(lam));
+
+        let out = self.step_exe.run(&inputs)?;
+        // outputs: new params (N) + ce + acc
+        let n = self.params.len();
+        for (i, new_p) in out[..n].iter().enumerate() {
+            self.params[i] = Tensor::from_vec(&self.shapes[i], new_p.clone());
+        }
+        Ok(StepStats { ce: out[n][0], acc: out[n + 1][0] })
+    }
+
+    /// Forward pass: returns logits (batch x classes).
+    pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let mut inputs: Vec<HostValue> = Vec::new();
+        for (p, s) in self.params.iter().zip(&self.shapes) {
+            inputs.push(HostValue::f32(s, p.data().to_vec()));
+        }
+        for m in &self.masks {
+            inputs.push(HostValue::f32(m.shape(), m.data().to_vec()));
+        }
+        let hw = (self.in_elems / 3).isqrt();
+        inputs.push(HostValue::f32(&[self.batch, 3, hw, hw], x.to_vec()));
+        let out = self.fwd_exe.run(&inputs)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Classification accuracy over a set of batches.
+    pub fn eval_acc(&self, ds: &SynthDataset, batches: usize, seed: u64) -> Result<f32> {
+        let mut rng = Rng::new(seed);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for _ in 0..batches {
+            let (x, y) = ds.batch(self.batch, &mut rng);
+            let logits = self.forward(&x)?;
+            for (b, &label) in y.iter().enumerate() {
+                let row = &logits[b * self.num_classes..(b + 1) * self.num_classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                correct += (pred == label as usize) as usize;
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total.max(1) as f32)
+    }
+
+    /// One-shot magnitude pruning of all weights under the given per-layer
+    /// assignments (proxy-model layer order == weight order), then mask.
+    pub fn prune_with(&mut self, assigns: &[Assignment], lib: &PatternLibrary) -> Result<Vec<f32>> {
+        let mut achieved = Vec::new();
+        let mut masks = Vec::new();
+        for (k, &wi) in self.weight_idx.iter().enumerate() {
+            let a = &assigns[k];
+            let r = prune(&self.params[wi], &a.scheme, a.compression, lib);
+            achieved.push(r.compression());
+            masks.push(r.mask);
+        }
+        self.set_masks(masks)?;
+        Ok(achieved)
+    }
+
+    /// Reweighted auto-prune (after regularized training): zero groups the
+    /// regularizer drove below tau; returns achieved per-layer compression.
+    pub fn auto_prune_with(&mut self, assigns: &[Assignment], tau: f32) -> Result<Vec<f32>> {
+        let mut achieved = Vec::new();
+        let mut masks = Vec::new();
+        for (k, &wi) in self.weight_idx.iter().enumerate() {
+            let r = reweighted::auto_prune(&self.params[wi], &assigns[k].scheme, tau);
+            achieved.push(r.compression());
+            masks.push(r.mask);
+        }
+        self.set_masks(masks)?;
+        Ok(achieved)
+    }
+}

@@ -1,0 +1,136 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` target's `main()`; this module gives
+//! those targets warmup + repeated timing with median/mean/p95 reporting and
+//! a black-box to defeat the optimizer.  Not statistics-grade, but stable
+//! enough for the before/after deltas recorded in EXPERIMENTS.md §Perf.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-exported optimizer barrier.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}   ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            self.iters
+        );
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Print the column header once per bench binary.
+pub fn header() {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "min", "median", "mean", "p95"
+    );
+    println!("{}", "-".repeat(92));
+}
+
+/// Time `f`, auto-calibrating the iteration count to fill ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let target_iters = (budget.as_nanos() / once.as_nanos()).clamp(5, 10_000) as usize;
+
+    let mut samples = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        min: samples[0],
+    };
+    stats.report();
+    stats
+}
+
+/// Fixed-iteration variant for expensive end-to-end benches.
+pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchStats {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        min: samples[0],
+    };
+    stats.report();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench_n("noop", 50, || {
+            black_box(1 + 1);
+        });
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert_eq!(s.iters, 50);
+    }
+
+    #[test]
+    fn calibration_bounds_iters() {
+        let s = bench("tiny", Duration::from_millis(5), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 5 && s.iters <= 10_000);
+    }
+}

@@ -1,0 +1,65 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! `for_cases(n, seed, |rng| ...)` runs a closure over `n` independently
+//! seeded RNGs and reports the failing seed on panic, so failures are
+//! reproducible with `check_case(seed, ...)`.
+
+use crate::rng::Rng;
+
+/// Run `body` for `n` pseudo-random cases; on panic, re-raise annotated
+/// with the failing case seed.
+pub fn for_cases<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(n: usize, seed: u64, body: F) {
+    for case in 0..n {
+        let case_seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            body(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {case_seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn check_case<F: FnOnce(&mut Rng)>(case_seed: u64, body: F) {
+    let mut rng = Rng::new(case_seed);
+    body(&mut rng);
+}
+
+/// Random dimension convenience: uniform in [lo, hi].
+pub fn dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        for_cases(25, 1, |_rng| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    fn dim_in_bounds() {
+        for_cases(100, 2, |rng| {
+            let d = dim(rng, 3, 9);
+            assert!((3..=9).contains(&d));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        for_cases(10, 3, |rng| {
+            let _ = rng.f32();
+            assert!(false, "intentional");
+        });
+    }
+}

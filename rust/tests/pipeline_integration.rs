@@ -1,0 +1,166 @@
+//! End-to-end integration over the live PJRT path: train-step semantics,
+//! penalty agreement with the host-side reweighted module, and a short
+//! full pipeline.  Skips gracefully when artifacts are absent.
+
+use prunemap::accuracy::Assignment;
+use prunemap::coordinator::{run_pipeline, PipelineConfig};
+use prunemap::latmodel::LatencyModel;
+use prunemap::mapping::{map_rule_based, RuleConfig};
+use prunemap::models::zoo;
+use prunemap::pruning::Scheme;
+use prunemap::rng::Rng;
+use prunemap::runtime::Runtime;
+use prunemap::simulator::DeviceProfile;
+use prunemap::train::{SynthDataset, TrainDriver};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut d = TrainDriver::new(&rt, 7).unwrap();
+    let ds = SynthDataset::cifar_like(7);
+    let mut rng = Rng::new(8);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..30 {
+        let (x, y) = ds.batch(d.batch_size(), &mut rng);
+        let s = d.step(&x, &y, 0.05, 0.0).unwrap();
+        if first.is_none() {
+            first = Some(s.ce);
+        }
+        last = s.ce;
+    }
+    assert!(last < first.unwrap(), "loss {first:?} -> {last}");
+}
+
+#[test]
+fn masks_survive_pjrt_training() {
+    let Some(rt) = runtime() else { return };
+    let mut d = TrainDriver::new(&rt, 9).unwrap();
+    let model = zoo::proxy_cnn();
+    let assigns: Vec<Assignment> = model
+        .layers
+        .iter()
+        .map(|l| Assignment {
+            scheme: if l.kind == prunemap::models::LayerKind::Fc {
+                Scheme::Block { bp: 8, bq: 8 }
+            } else {
+                Scheme::BlockPunched { bf: 4, bc: 4 }
+            },
+            compression: 4.0,
+        })
+        .collect();
+    let lib = prunemap::pruning::PatternLibrary::default8();
+    d.prune_with(&assigns, &lib).unwrap();
+    let masks: Vec<_> = d.masks.clone();
+    let ds = SynthDataset::cifar_like(9);
+    let mut rng = Rng::new(10);
+    for _ in 0..5 {
+        let (x, y) = ds.batch(d.batch_size(), &mut rng);
+        d.step(&x, &y, 0.05, 0.0).unwrap();
+    }
+    // every masked weight must still be zero after PJRT updates
+    for (w, m) in d.weights().iter().zip(&masks) {
+        for (v, mk) in w.data().iter().zip(m.data()) {
+            if *mk == 0.0 {
+                assert_eq!(*v, 0.0, "pruned weight resurrected");
+            }
+        }
+    }
+}
+
+#[test]
+fn reweighted_penalty_matches_in_graph_loss_shift() {
+    // CE reported by the artifact excludes the penalty term, but the
+    // penalty influences gradients: with a huge alpha the weights shrink.
+    let Some(rt) = runtime() else { return };
+    let model = zoo::proxy_cnn();
+    let assigns: Vec<Assignment> = model
+        .layers
+        .iter()
+        .map(|l| Assignment {
+            scheme: if l.kind == prunemap::models::LayerKind::Fc {
+                Scheme::StructuredRow
+            } else {
+                Scheme::BlockPunched { bf: 4, bc: 4 }
+            },
+            compression: 1.0,
+        })
+        .collect();
+    // identical training with and without the penalty; the regularized run
+    // must end with smaller weight norms (paper Eq. 1's lambda term)
+    let run = |lam: f32| -> f32 {
+        let mut d = TrainDriver::new(&rt, 11).unwrap();
+        d.update_alphas(&assigns);
+        let ds = SynthDataset::cifar_like(11);
+        let mut rng = Rng::new(12);
+        for _ in 0..12 {
+            let (x, y) = ds.batch(d.batch_size(), &mut rng);
+            d.step(&x, &y, 0.01, lam).unwrap();
+            d.update_alphas(&assigns);
+        }
+        d.weights().iter().map(|w| w.sq_norm()).sum()
+    };
+    let with_penalty = run(0.02);
+    let without = run(0.0);
+    assert!(
+        with_penalty < without,
+        "reweighted penalty failed to shrink weights: {with_penalty} !< {without}"
+    );
+}
+
+#[test]
+fn short_pipeline_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    let dev = DeviceProfile::s10();
+    let model = zoo::proxy_cnn();
+    let lat = LatencyModel::build(&dev);
+    let assigns = map_rule_based(&model, &lat, &RuleConfig::default());
+    let cfg = PipelineConfig {
+        pretrain_steps: 40,
+        reg_epochs: 2,
+        steps_per_epoch: 10,
+        retrain_steps: 30,
+        ..Default::default()
+    };
+    let rep = run_pipeline(&rt, &model, &assigns, &dev, &cfg).unwrap();
+    assert_eq!(
+        rep.loss_curve.len(),
+        cfg.pretrain_steps + cfg.reg_epochs * cfg.steps_per_epoch + cfg.retrain_steps
+    );
+    assert!(rep.overall_compression > 1.5, "{}", rep.overall_compression);
+    assert!(rep.speedup() > 1.0);
+    // learning happened
+    let head: f32 = rep.loss_curve[..10].iter().sum::<f32>() / 10.0;
+    let tail: f32 =
+        rep.loss_curve[rep.loss_curve.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(tail < head, "loss {head} -> {tail}");
+}
+
+#[test]
+fn forward_artifact_respects_masks() {
+    let Some(rt) = runtime() else { return };
+    let mut d = TrainDriver::new(&rt, 13).unwrap();
+    let ds = SynthDataset::cifar_like(13);
+    let mut rng = Rng::new(14);
+    let (x, _) = ds.batch(d.batch_size(), &mut rng);
+    let before = d.forward(&x).unwrap();
+    // zero all masks -> logits collapse to biases (zeros)
+    let zero_masks: Vec<_> = d
+        .masks
+        .iter()
+        .map(|m| prunemap::tensor::Tensor::zeros(m.shape()))
+        .collect();
+    d.set_masks(zero_masks).unwrap();
+    let after = d.forward(&x).unwrap();
+    assert!(before.iter().any(|v| v.abs() > 1e-3));
+    assert!(after.iter().all(|v| v.abs() < 1e-5), "masked forward non-zero");
+}

@@ -1,0 +1,215 @@
+//! Cross-module property tests (in-tree prop harness; proptest is
+//! unavailable offline).  Each property runs dozens of seeded random cases
+//! and reports the failing seed.
+
+use prunemap::compiler::dsl;
+use prunemap::compiler::ir::Graph;
+use prunemap::models::{zoo, Dataset, LayerSpec};
+use prunemap::pruning::{prune, PatternLibrary, Scheme};
+use prunemap::reweighted;
+use prunemap::rng::Rng;
+use prunemap::simulator::{layer_latency_ms, DeviceProfile, ExecConfig};
+use prunemap::sparse::{load_balance, permute_rows, reorder_rows, row_nnz_counts, Bcs, Csr};
+use prunemap::tensor::Tensor;
+use prunemap::util::prop::{dim, for_cases};
+
+fn random_sparse(rng: &mut Rng, rows: usize, cols: usize, density: f32) -> Tensor {
+    let mut t = Tensor::zeros(&[rows, cols]);
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.bernoulli(density) {
+                t.set2(r, c, rng.normal());
+            }
+        }
+    }
+    t
+}
+
+#[test]
+fn prop_bcs_roundtrip_any_matrix() {
+    for_cases(40, 0xB1, |rng| {
+        let rows = dim(rng, 1, 40);
+        let cols = dim(rng, 1, 40);
+        let density = rng.f32();
+        let t = random_sparse(rng, rows, cols, density);
+        let b = Bcs::from_dense(&t);
+        assert_eq!(b.to_dense(), t);
+        assert_eq!(b.nnz(), t.nnz());
+    });
+}
+
+#[test]
+fn prop_bcs_spmv_equals_csr_spmv() {
+    for_cases(30, 0xB2, |rng| {
+        let rows = dim(rng, 1, 30);
+        let cols = dim(rng, 1, 30);
+        let t = random_sparse(rng, rows, cols, 0.4);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+        let yb = Bcs::from_dense(&t).spmv(&x);
+        let yc = Csr::from_dense(&t).spmv(&x);
+        for (a, b) in yb.iter().zip(&yc) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_reorder_is_permutation_and_helps() {
+    for_cases(30, 0xB3, |rng| {
+        let rows = dim(rng, 2, 50);
+        let cols = dim(rng, 2, 50);
+        let density = rng.f32() * 0.8;
+        let t = random_sparse(rng, rows, cols, density);
+        let order = reorder_rows(&t);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..rows).collect::<Vec<_>>());
+        let nnz = row_nnz_counts(&t);
+        let before = load_balance(&nnz, &(0..rows).collect::<Vec<_>>(), 4);
+        let after = load_balance(&nnz, &order, 4);
+        // sorted order minimizes adjacent nnz transitions (branch count)...
+        assert!(after.pattern_switches <= before.pattern_switches);
+        // ...and may not materially worsen thread balance (random identity
+        // orders are occasionally near-perfect already, so allow slack)
+        assert!(
+            after.imbalance <= before.imbalance.max(1.0) * 1.15 + 1e-5,
+            "imbalance {} -> {}",
+            before.imbalance,
+            after.imbalance
+        );
+        // permuted matrix round-trips through BCS
+        let p = permute_rows(&t, &order);
+        assert_eq!(Bcs::from_dense(&p).to_dense(), p);
+    });
+}
+
+#[test]
+fn prop_masks_are_binary_and_meet_compression() {
+    let lib = PatternLibrary::default8();
+    for_cases(25, 0xB4, |rng| {
+        let f = dim(rng, 2, 24);
+        let c = dim(rng, 2, 24);
+        let w = Tensor::he_normal(&[f, c, 3, 3], c * 9, &mut rng.fork(1));
+        let comp = 2.0 + rng.f32() * 10.0;
+        let schemes = [
+            Scheme::Unstructured,
+            Scheme::StructuredRow,
+            Scheme::BlockPunched { bf: 4, bc: 4 },
+            Scheme::Pattern,
+        ];
+        for s in schemes {
+            let r = prune(&w, &s, comp, &lib);
+            // binary
+            assert!(r.mask.data().iter().all(|&v| v == 0.0 || v == 1.0));
+            // monotone: at least roughly the target survives (group
+            // granularity can overshoot, never undershoot below 1 group)
+            assert!(r.kept >= 1);
+            assert!(r.kept <= r.total);
+            if matches!(s, Scheme::Unstructured) {
+                assert!((r.compression() - comp).abs() / comp < 0.25, "{s:?} {comp} {}", r.compression());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_masking_is_idempotent() {
+    let lib = PatternLibrary::default8();
+    for_cases(20, 0xB5, |rng| {
+        let p = dim(rng, 4, 40);
+        let q = dim(rng, 4, 40);
+        let w = Tensor::he_normal(&[p, q], q, &mut rng.fork(2));
+        let r = prune(&w, &Scheme::Block { bp: 4, bq: 4 }, 4.0, &lib);
+        let once = w.hadamard(&r.mask);
+        let twice = once.hadamard(&r.mask);
+        assert_eq!(once, twice);
+        // pruning the masked tensor again with the same scheme keeps mask
+        let r2 = prune(&once, &Scheme::Block { bp: 4, bq: 4 }, 4.0, &lib);
+        let thrice = once.hadamard(&r2.mask);
+        assert_eq!(thrice.nnz(), once.hadamard(&r2.mask).nnz());
+    });
+}
+
+#[test]
+fn prop_reweighted_alpha_positive_and_inverse() {
+    for_cases(20, 0xB6, |rng| {
+        let f = dim(rng, 2, 12);
+        let c = dim(rng, 2, 12);
+        let w = Tensor::he_normal(&[f, c, 3, 3], c * 9, &mut rng.fork(3));
+        for s in [
+            Scheme::StructuredRow,
+            Scheme::BlockPunched { bf: 2, bc: 2 },
+            Scheme::Pattern,
+        ] {
+            let a = reweighted::alphas(&w, &s, reweighted::EPS);
+            assert!(a.data().iter().all(|&v| v > 0.0), "{s:?}: nonpositive alpha");
+            // penalty equals sum over groups of ||g||^2/(||g||^2+eps) <= #groups
+            let pen = reweighted::penalty(&w, &a);
+            let n_groups = reweighted::group_sq_norms(&w, &s).len() as f32;
+            assert!(pen <= n_groups + 1e-3, "{s:?}: pen {pen} > {n_groups}");
+        }
+    });
+}
+
+#[test]
+fn prop_latency_monotone_in_compression() {
+    let dev = DeviceProfile::s10();
+    for_cases(25, 0xB7, |rng| {
+        let ch = [32, 64, 128, 256][rng.below(4)];
+        let hw = [7, 14, 28, 56][rng.below(4)];
+        let k = [1, 3, 5][rng.below(3)];
+        let layer = LayerSpec::conv("l", k, ch, ch, hw, 1);
+        let scheme = Scheme::BlockPunched { bf: 8, bc: 16 };
+        let c1 = 1.5 + rng.f32() * 4.0;
+        let c2 = c1 * (1.5 + rng.f32());
+        let l1 = layer_latency_ms(&layer, &ExecConfig::new(scheme, c1, &dev), &dev);
+        let l2 = layer_latency_ms(&layer, &ExecConfig::new(scheme, c2, &dev), &dev);
+        assert!(l2 <= l1 + 1e-9, "higher compression slower: {l1} -> {l2}");
+    });
+}
+
+#[test]
+fn prop_dsl_roundtrip_random_chains() {
+    for_cases(25, 0xB8, |rng| {
+        // random conv/fc chain
+        let mut text = String::from("input x 1 3 32 32\n");
+        let mut prev = "x".to_string();
+        let mut ch = 3usize;
+        let n = dim(rng, 1, 6);
+        for i in 0..n {
+            let name = format!("l{i}");
+            if rng.bernoulli(0.7) {
+                let out = [8, 16, 32][rng.below(3)];
+                let k = [1, 3, 5][rng.below(3)];
+                text.push_str(&format!(
+                    "conv {name} {prev} k={k} in={ch} out={out} hw=32 stride=1\n"
+                ));
+                ch = out;
+            } else {
+                text.push_str(&format!("relu {name} {prev}\n"));
+            }
+            prev = name;
+        }
+        text.push_str(&format!("output {prev}\n"));
+        let g = dsl::parse(&text).unwrap();
+        let printed = dsl::print(&g);
+        let g2 = dsl::parse(&printed).unwrap();
+        assert!(dsl::graphs_equal(&g, &g2), "\n{text}\n--\n{printed}");
+    });
+}
+
+#[test]
+fn prop_model_graph_fusion_one_kernel_per_layer() {
+    // for pure chains (our zoo graphs), fusion must land exactly one
+    // kernel per prunable layer
+    for m in [
+        zoo::vgg16(Dataset::Cifar10),
+        zoo::resnet50(Dataset::ImageNet),
+        zoo::mobilenet_v1(Dataset::ImageNet),
+        zoo::yolov4(),
+    ] {
+        let g = Graph::from_model(&m);
+        let plan = prunemap::compiler::fuse(&g);
+        assert_eq!(plan.kernel_count(), m.layers.len(), "{}", m.name);
+    }
+}

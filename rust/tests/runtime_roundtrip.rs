@@ -1,0 +1,107 @@
+//! Integration: load AOT artifacts and execute them over PJRT.
+//!
+//! Requires `make artifacts` to have run; tests skip (with a notice) when
+//! the artifacts directory is absent so `cargo test` stays usable on a
+//! fresh checkout.
+
+use prunemap::runtime::{HostValue, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn block_matmul_artifact_matches_host_math() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("block_matmul").expect("load block_matmul");
+    let sig = exe.signature().clone();
+    let (m, k, n) = (sig.m.unwrap(), sig.k.unwrap(), sig.n.unwrap());
+
+    // x = ones, w = identity-ish pattern, mask = checkerboard on rows
+    let x = vec![1.0f32; m * k];
+    let mut w = vec![0.0f32; k * n];
+    for i in 0..k.min(n) {
+        w[i * n + i] = 2.0;
+    }
+    let mask: Vec<f32> = (0..k * n).map(|i| ((i / n) % 2) as f32).collect();
+
+    let out = exe
+        .run(&[
+            HostValue::f32(&[m, k], x),
+            HostValue::f32(&[k, n], w.clone()),
+            HostValue::f32(&[k, n], mask.clone()),
+        ])
+        .expect("execute");
+    assert_eq!(out.len(), 1);
+    let y = &out[0];
+    assert_eq!(y.len(), m * n);
+
+    // host reference: y[i,j] = sum_k x[i,k] * w[k,j] * mask[k,j]
+    for j in 0..n.min(8) {
+        let expect: f32 = (0..k).map(|kk| w[kk * n + j] * mask[kk * n + j]).sum();
+        assert!(
+            (y[j] - expect).abs() < 1e-4,
+            "col {j}: got {} want {expect}",
+            y[j]
+        );
+    }
+}
+
+#[test]
+fn group_norms_artifact_squares_weights() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("group_norms").expect("load group_norms");
+    let manifest = rt.manifest();
+    let mut inputs = Vec::new();
+    for wname in &manifest.weight_names {
+        let shape = manifest.param_shape(wname).unwrap().to_vec();
+        let nelem: usize = shape.iter().product();
+        inputs.push(HostValue::f32(
+            &shape,
+            (0..nelem).map(|i| (i % 5) as f32 - 2.0).collect(),
+        ));
+    }
+    let out = exe.run(&inputs).expect("execute");
+    assert_eq!(out.len(), manifest.weight_names.len());
+    // first output must be elementwise square of the first weight tensor
+    let w0 = inputs[0].as_f32().unwrap();
+    for (a, b) in out[0].iter().zip(w0.iter()) {
+        assert!((a - b * b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn forward_artifact_runs_and_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("forward").expect("load forward");
+    let m = rt.manifest();
+    let mut inputs = Vec::new();
+    let mut rng = prunemap::rng::Rng::new(0xF00D);
+    for p in &m.params {
+        let n: usize = p.shape.iter().product();
+        let scale = if p.kind == "bias" { 0.0 } else { 0.05 };
+        inputs.push(HostValue::f32(
+            &p.shape,
+            (0..n).map(|_| rng.normal() * scale).collect(),
+        ));
+    }
+    for wname in &m.weight_names {
+        let shape = m.param_shape(wname).unwrap().to_vec();
+        let n: usize = shape.iter().product();
+        inputs.push(HostValue::f32(&shape, vec![1.0; n]));
+    }
+    let xn = m.batch * m.in_ch * m.img * m.img;
+    inputs.push(HostValue::f32(
+        &[m.batch, m.in_ch, m.img, m.img],
+        (0..xn).map(|_| rng.normal()).collect(),
+    ));
+    let out = exe.run(&inputs).expect("execute forward");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), m.batch * m.num_classes);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}
