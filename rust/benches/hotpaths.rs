@@ -1,7 +1,9 @@
 //! Hot-path micro-benchmarks: the inner loops the §Perf pass optimizes.
-//! BCS conversion + SpMV, row reorder, mask generation, latency-model
-//! build, GA tuning, one RL search iteration, and (when artifacts exist)
-//! the PJRT block-matmul execution itself.
+//! Mask generation, BCS/CSR conversion, row reorder, the batched
+//! multi-threaded sparse execution engine (serial-vs-threaded and
+//! spmv-vs-spmm sweeps across block/pattern/unstructured layouts),
+//! latency-model build, GA tuning, one RL search iteration, and (under
+//! `--cfg pjrt`, when artifacts exist) the PJRT block-matmul execution.
 
 use std::time::Duration;
 
@@ -10,11 +12,34 @@ use prunemap::mapping::{map_search_based, SearchConfig};
 use prunemap::models::{zoo, Dataset, LayerSpec};
 use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::rng::Rng;
-use prunemap::runtime::{HostValue, Runtime};
 use prunemap::simulator::DeviceProfile;
-use prunemap::sparse::{permute_rows, reorder_rows, Bcs, Csr};
+use prunemap::sparse::{permute_rows, reorder_rows, Bcs, Csr, Engine, SparseKernel};
 use prunemap::tensor::Tensor;
-use prunemap::util::bench::{bench, black_box, header};
+use prunemap::util::bench::{bench, black_box, header, BenchStats};
+
+/// Masked + reordered GEMM view for one pruning layout.
+fn layout(
+    name: &'static str,
+    scheme: Scheme,
+    comp: f32,
+    lib: &PatternLibrary,
+    rng: &mut Rng,
+) -> (&'static str, Tensor) {
+    let t = match scheme {
+        Scheme::Block { .. } | Scheme::Unstructured => {
+            let w = Tensor::he_normal(&[1024, 1024], 1024, rng);
+            let r = prune(&w, &scheme, comp, lib);
+            w.hadamard(&r.mask)
+        }
+        _ => {
+            let w = Tensor::he_normal(&[128, 128, 3, 3], 128 * 9, rng);
+            let r = prune(&w, &scheme, comp, lib);
+            w.hadamard(&r.mask).conv_to_gemm()
+        }
+    };
+    let reordered = permute_rows(&t, &reorder_rows(&t));
+    (name, reordered)
+}
 
 fn main() {
     let budget = Duration::from_millis(400);
@@ -73,7 +98,65 @@ fn main() {
         bcs.storage_bytes() as f64 / csr.storage_bytes() as f64
     );
 
+    // --- execution engine: spmv vs spmm, serial vs threaded ----------------
+    let threads = rayon::current_num_threads().max(4);
+    println!("\n## execution engine (threads = {threads})\n");
+    header();
+    let serial = Engine::serial();
+    let threaded = Engine::new(threads);
+    let layouts = [
+        layout("block8x8", Scheme::Block { bp: 8, bq: 8 }, 10.0, &lib, &mut rng),
+        layout("pattern", Scheme::Pattern, 8.0, &lib, &mut rng),
+        layout("unstructured", Scheme::Unstructured, 10.0, &lib, &mut rng),
+    ];
+    for (name, t) in &layouts {
+        let kernel = Bcs::from_dense(t);
+        let (rows, cols) = kernel.dims();
+        let density = kernel.nnz() as f64 / (rows * cols) as f64;
+        println!(
+            "    {name}: {rows}x{cols}, {:.1}% dense, {} occurrence-runs, imbalance {:.3}",
+            density * 100.0,
+            kernel.work_units().len(),
+            threaded.predicted_balance(&kernel).imbalance
+        );
+        let xv: Vec<f32> = (0..cols).map(|i| (i as f32).cos()).collect();
+        bench(&format!("{name}_spmv_serial"), budget, || {
+            black_box(serial.spmv(&kernel, &xv));
+        });
+        bench(&format!("{name}_spmv_threaded"), budget, || {
+            black_box(threaded.spmv(&kernel, &xv));
+        });
+        for batch in [8usize, 32] {
+            let xb: Vec<f32> = (0..cols * batch).map(|i| (i as f32 * 0.37).cos()).collect();
+            bench(&format!("{name}_spmm_b{batch}_serial"), budget, || {
+                black_box(serial.spmm(&kernel, &xb, batch));
+            });
+            bench(&format!("{name}_spmm_b{batch}_threaded"), budget, || {
+                black_box(threaded.spmm(&kernel, &xb, batch));
+            });
+        }
+    }
+
+    // --- acceptance case: 1024x1024, ~10% dense, block-pruned, batch 32 ----
+    let (_, accept) = &layouts[0];
+    let kernel = Bcs::from_dense(accept);
+    let cols = kernel.dims().1;
+    let xb: Vec<f32> = (0..cols * 32).map(|i| (i as f32 * 0.11).sin()).collect();
+    let s = bench("accept_block_1024_spmm_b32_serial", budget, || {
+        black_box(kernel.spmm(&xb, 32));
+    });
+    let t = bench(
+        &format!("accept_block_1024_spmm_b32_threads{threads}"),
+        budget,
+        || {
+            black_box(threaded.spmm(&kernel, &xb, 32));
+        },
+    );
+    report_speedup(&s, &t);
+
     // --- mapping machinery -------------------------------------------------
+    println!();
+    header();
     bench("latmodel_build_s10", Duration::from_secs(2), || {
         black_box(LatencyModel::build(&dev));
     });
@@ -93,6 +176,21 @@ fn main() {
             &mut r,
         ));
     });
+    // measured-vs-modeled hook: the engine measurement the cost model sits
+    // beside (host CPU vs modeled mobile GPU — compare trends, not values)
+    let cmp = prunemap::simulator::measured_vs_modeled(
+        &layer,
+        &base,
+        &dev,
+        &reordered,
+        32,
+        threads,
+        5,
+    );
+    println!(
+        "    measured-vs-modeled: modeled {:.4}ms (mobile, batch 1) | measured {:.4}ms (host, batch 32, {} threads)",
+        cmp.modeled_ms, cmp.measured_ms, cmp.threads
+    );
     let m = zoo::resnet18(Dataset::Cifar10);
     bench("rl_search_10_iters_resnet18", Duration::from_secs(2), || {
         black_box(map_search_based(
@@ -102,7 +200,24 @@ fn main() {
         ));
     });
 
-    // --- PJRT execution (needs `make artifacts`) ---------------------------
+    // --- PJRT execution (needs --cfg pjrt + `make artifacts`) --------------
+    pjrt_bench();
+}
+
+/// Print the serial/threaded comparison the acceptance criteria track:
+/// threaded should be >= 1.5x serial at batch 32 with >= 4 threads.
+fn report_speedup(serial: &BenchStats, threaded: &BenchStats) {
+    let speedup = serial.median.as_secs_f64() / threaded.median.as_secs_f64().max(1e-12);
+    println!(
+        "    serial/threaded speedup: {speedup:.2}x (target >= 1.5x) {}",
+        if speedup >= 1.5 { "OK" } else { "BELOW TARGET" }
+    );
+}
+
+#[cfg(pjrt)]
+fn pjrt_bench() {
+    use prunemap::runtime::{HostValue, Runtime};
+    use std::time::Duration;
     match Runtime::open(Runtime::default_dir()) {
         Ok(rt) => {
             let exe = rt.load("block_matmul").expect("compile block_matmul");
@@ -121,4 +236,9 @@ fn main() {
         }
         Err(_) => println!("(skipping PJRT bench: run `make artifacts` first)"),
     }
+}
+
+#[cfg(not(pjrt))]
+fn pjrt_bench() {
+    println!("(skipping PJRT bench: build with RUSTFLAGS=\"--cfg pjrt\" and run `make artifacts`)");
 }

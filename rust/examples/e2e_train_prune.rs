@@ -11,19 +11,31 @@
 //! The run is recorded in EXPERIMENTS.md.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_train_prune
+//! make artifacts && RUSTFLAGS="--cfg pjrt" cargo run --release --example e2e_train_prune
 //! ```
+//!
+//! Needs the vendored `xla` bindings (see src/runtime/pjrt.rs); without
+//! `--cfg pjrt` this example only prints how to enable it.
 
-use prunemap::coordinator::{run_pipeline, PipelineConfig};
-use prunemap::experiments::describe_mapping;
-use prunemap::latmodel::LatencyModel;
-use prunemap::mapping::{map_rule_based, RuleConfig};
-use prunemap::models::zoo;
-use prunemap::report::sparkline;
-use prunemap::runtime::Runtime;
-use prunemap::simulator::DeviceProfile;
+#[cfg(not(pjrt))]
+fn main() {
+    eprintln!(
+        "e2e_train_prune needs the PJRT runtime: vendor the `xla` crate and rerun with \
+         RUSTFLAGS=\"--cfg pjrt\" (see src/runtime/pjrt.rs)"
+    );
+}
 
+#[cfg(pjrt)]
 fn main() -> anyhow::Result<()> {
+    use prunemap::coordinator::{run_pipeline, PipelineConfig};
+    use prunemap::experiments::describe_mapping;
+    use prunemap::latmodel::LatencyModel;
+    use prunemap::mapping::{map_rule_based, RuleConfig};
+    use prunemap::models::zoo;
+    use prunemap::report::sparkline;
+    use prunemap::runtime::Runtime;
+    use prunemap::simulator::DeviceProfile;
+
     let rt = Runtime::open(Runtime::default_dir())?;
     println!("PJRT platform: {}", rt.platform());
 
@@ -48,24 +60,39 @@ fn main() -> anyhow::Result<()> {
     let chunks = 10.max(curve.len() / 10);
     for (i, c) in curve.chunks(chunks).enumerate() {
         let mean: f64 = c.iter().sum::<f64>() / c.len() as f64;
-        println!("  steps {:>4}-{:<4}  mean CE {:.4}", i * chunks, i * chunks + c.len() - 1, mean);
+        println!(
+            "  steps {:>4}-{:<4}  mean CE {:.4}",
+            i * chunks,
+            i * chunks + c.len() - 1,
+            mean
+        );
     }
 
-    println!("\naccuracy: pretrained {:.3} | after prune {:.3} | after masked retrain {:.3}",
-        rep.acc_pretrained, rep.acc_after_prune, rep.acc_after_retrain);
-    println!("per-layer achieved compression: {:?}",
-        rep.layer_compressions.iter().map(|c| format!("{c:.1}x")).collect::<Vec<_>>());
+    println!(
+        "\naccuracy: pretrained {:.3} | after prune {:.3} | after masked retrain {:.3}",
+        rep.acc_pretrained, rep.acc_after_prune, rep.acc_after_retrain
+    );
+    println!(
+        "per-layer achieved compression: {:?}",
+        rep.layer_compressions.iter().map(|c| format!("{c:.1}x")).collect::<Vec<_>>()
+    );
     println!("overall compression {:.2}x", rep.overall_compression);
-    println!("simulated S10 latency: dense {:.3}ms -> pruned {:.3}ms ({:.2}x speedup)",
-        rep.dense_latency_ms, rep.pruned_latency_ms, rep.speedup());
+    println!(
+        "simulated S10 latency: dense {:.3}ms -> pruned {:.3}ms ({:.2}x speedup)",
+        rep.dense_latency_ms, rep.pruned_latency_ms, rep.speedup()
+    );
     println!("wall clock: {:.1}s", wall.as_secs_f64());
 
     // validation gates: the run must demonstrate learning + recovery
-    assert!(rep.loss_curve.first().unwrap() > rep.loss_curve.last().unwrap(),
-        "loss did not decrease");
+    assert!(
+        rep.loss_curve.first().unwrap() > rep.loss_curve.last().unwrap(),
+        "loss did not decrease"
+    );
     assert!(rep.acc_pretrained > 0.5, "pretraining failed to learn");
-    assert!(rep.acc_after_retrain >= rep.acc_after_prune - 0.02,
-        "retraining failed to recover");
+    assert!(
+        rep.acc_after_retrain >= rep.acc_after_prune - 0.02,
+        "retraining failed to recover"
+    );
     assert!(rep.overall_compression > 2.0, "compression too weak");
     assert!(rep.speedup() > 1.0, "no simulated speedup");
     println!("\ne2e OK");

@@ -11,16 +11,21 @@
 //!   state — latency depends on structure only, "does not depend on
 //!   absolute weight values"), implemented with scoped threads.
 
+#[cfg(pjrt)]
 use anyhow::Result;
 
 use crate::accuracy::Assignment;
 use crate::latmodel::LatencyModel;
 use crate::mapping::{self, MappingEval};
 use crate::models::ModelSpec;
+#[cfg(pjrt)]
 use crate::pruning::PatternLibrary;
+#[cfg(pjrt)]
 use crate::rng::Rng;
+#[cfg(pjrt)]
 use crate::runtime::Runtime;
 use crate::simulator::DeviceProfile;
+#[cfg(pjrt)]
 use crate::train::{SynthDataset, TrainDriver};
 
 /// Pipeline hyperparameters (laptop-scale defaults).
@@ -77,7 +82,9 @@ impl PipelineReport {
     }
 }
 
-/// Run the full live pipeline on the proxy CNN.
+/// Run the full live pipeline on the proxy CNN (PJRT builds only; the
+/// native-engine pipeline is exercised by the integration tests directly).
+#[cfg(pjrt)]
 pub fn run_pipeline(
     rt: &Runtime,
     model: &ModelSpec,

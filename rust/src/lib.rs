@@ -6,13 +6,15 @@
 //!
 //! Layer 3 (this crate) is the paper's system contribution: the five pruning
 //! regularities, the reweighted dynamic-regularization pruning algorithm,
-//! the BCS sparse format + compiler optimizations (fusion, auto-tuning,
-//! DSL codegen), the mobile-SoC latency simulator that substitutes for the
-//! paper's Samsung Galaxy test devices, the offline latency model, and the
-//! two automatic pruning-scheme mapping methods (rule-based and RL
-//! search-based).  Layers 1/2 (Pallas kernels + JAX model) are AOT-lowered
-//! to HLO text at build time and executed from [`runtime`] over PJRT —
-//! Python is never on the request path.
+//! the BCS sparse format + the batched multi-threaded sparse execution
+//! engine that runs it ([`sparse::exec`]), compiler optimizations (fusion,
+//! auto-tuning, DSL codegen), the mobile-SoC latency simulator that
+//! substitutes for the paper's Samsung Galaxy test devices, the offline
+//! latency model, and the two automatic pruning-scheme mapping methods
+//! (rule-based and RL search-based).  The default request path is the
+//! native engine ([`runtime::native`]); layers 1/2 (Pallas kernels + JAX
+//! model) are AOT-lowered to HLO text and executed over PJRT when built
+//! with `--cfg pjrt` — Python is never on the request path.
 //!
 //! Start at [`mapping`] for the paper's headline contribution, or run
 //! `cargo run --release -- table4` to regenerate the paper's main table.

@@ -17,11 +17,13 @@
 use anyhow::{anyhow, Result};
 
 use prunemap::accuracy::Assignment;
+#[cfg(pjrt)]
 use prunemap::coordinator::{run_pipeline, PipelineConfig};
 use prunemap::experiments as exp;
 use prunemap::latmodel::LatencyModel;
 use prunemap::mapping::{self, map_rule_based, map_search_based, RuleConfig, SearchConfig};
 use prunemap::models::{zoo, Dataset, ModelSpec};
+#[cfg(pjrt)]
 use prunemap::runtime::Runtime;
 use prunemap::simulator::DeviceProfile;
 use prunemap::util::cli::Args;
@@ -90,6 +92,7 @@ fn cmd_map(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(pjrt)]
 fn cmd_e2e(args: &Args) -> Result<()> {
     let rt = Runtime::open(Runtime::default_dir())?;
     println!("PJRT platform: {}", rt.platform());
@@ -169,7 +172,14 @@ fn run() -> Result<()> {
             println!("saved {} settings for {} to {out}", m.len(), m.device);
         }
         "map" => cmd_map(&args)?,
+        #[cfg(pjrt)]
         "e2e" => cmd_e2e(&args)?,
+        #[cfg(not(pjrt))]
+        "e2e" => {
+            return Err(anyhow!(
+                "the e2e pipeline needs the PJRT runtime: vendor the `xla` crate and rebuild with RUSTFLAGS=\"--cfg pjrt\" (see src/runtime/pjrt.rs)"
+            ));
+        }
         _ => {
             println!(
                 "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|e2e> [--device s10|s20|s21]"

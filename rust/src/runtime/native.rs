@@ -1,0 +1,239 @@
+//! Native sparse runtime: the default execution path.
+//!
+//! Where the PJRT runtime executes AOT-compiled HLO artifacts, this runtime
+//! executes the same masked-GEMM semantics directly through the batched
+//! multi-threaded sparse engine ([`crate::sparse::Engine`]).  It is always
+//! available (no vendored dependencies), deterministic at any thread
+//! count, and is the measured counterpart the simulator's cost model is
+//! compared against (`simulator::cost::measured_vs_modeled`).
+
+use crate::sparse::{Bcs, Csr, DenseKernel, Engine, SparseKernel};
+use crate::tensor::Tensor;
+
+/// Storage format selection for a [`SparseLayer`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Dense reference (zeros included) — baseline and fallback.
+    Dense,
+    /// Compressed sparse row — irregular sparsity.
+    Csr,
+    /// Blocked compressed storage — block/pattern-pruned layouts.
+    Bcs,
+    /// Pick BCS when its index overhead beats CSR's, else CSR (dense when
+    /// nearly nothing is pruned).
+    Auto,
+}
+
+/// One executable masked weight matrix (the GEMM view of a pruned layer).
+pub struct SparseLayer {
+    kernel: Box<dyn SparseKernel + Send>,
+    rows: usize,
+    cols: usize,
+}
+
+impl SparseLayer {
+    /// Build from an already-masked 2-D weight (zeros = pruned).
+    pub fn from_masked(w: &Tensor, choice: KernelChoice) -> SparseLayer {
+        assert_eq!(w.ndim(), 2);
+        let (rows, cols) = (w.shape()[0], w.shape()[1]);
+        let kernel: Box<dyn SparseKernel + Send> = match choice {
+            KernelChoice::Dense => Box::new(DenseKernel::from_tensor(w)),
+            KernelChoice::Csr => Box::new(Csr::from_dense(w)),
+            KernelChoice::Bcs => Box::new(Bcs::from_dense(w)),
+            KernelChoice::Auto => {
+                let total = w.len().max(1);
+                if w.nnz() * 10 >= total * 9 {
+                    Box::new(DenseKernel::from_tensor(w))
+                } else {
+                    let bcs = Bcs::from_dense(w);
+                    let csr = Csr::from_dense(w);
+                    if bcs.index_bytes() <= csr.index_bytes() {
+                        Box::new(bcs)
+                    } else {
+                        Box::new(csr)
+                    }
+                }
+            }
+        };
+        SparseLayer { kernel, rows, cols }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.kernel.nnz()
+    }
+
+    /// Which backend [`KernelChoice::Auto`] landed on.
+    pub fn backend(&self) -> &'static str {
+        self.kernel.label()
+    }
+
+    pub fn kernel(&self) -> &(dyn SparseKernel + Send) {
+        &*self.kernel
+    }
+}
+
+/// The native runtime: a threaded sparse engine plus the masked-GEMM entry
+/// points the PJRT artifacts expose.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeEngine {
+    engine: Engine,
+}
+
+impl NativeEngine {
+    pub fn new(threads: usize) -> NativeEngine {
+        NativeEngine { engine: Engine::new(threads) }
+    }
+
+    pub fn serial() -> NativeEngine {
+        NativeEngine { engine: Engine::serial() }
+    }
+
+    /// One worker per available core.
+    pub fn max_parallel() -> NativeEngine {
+        NativeEngine { engine: Engine::max_parallel() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Native counterpart of the `block_matmul` AOT artifact:
+    /// `y[m, n] = x[m, k] · (w ⊙ mask)[k, n]`, the masked weight executed
+    /// as a BCS kernel.
+    ///
+    /// The engine computes `Yᵀ = (w ⊙ mask)ᵀ · Xᵀ` with the `m` activation
+    /// rows as the batch dimension, which is exactly the layout the
+    /// compiler's im2col GEMM view produces.
+    ///
+    /// Masking, transposition, and BCS conversion run on every call —
+    /// this mirrors the artifact's one-shot signature for parity tests.
+    /// For repeated inference build a [`SparseLayer`] once and call
+    /// [`NativeEngine::linear`], which amortizes the conversion the way
+    /// the PJRT runtime's compile cache does.
+    pub fn block_matmul(&self, x: &[f32], m: usize, w: &Tensor, mask: &Tensor) -> Vec<f32> {
+        assert_eq!(w.ndim(), 2);
+        assert_eq!(w.shape(), mask.shape());
+        let (k, n) = (w.shape()[0], w.shape()[1]);
+        assert_eq!(x.len(), m * k, "x must be [m, k] row-major");
+        let wm_t = w.hadamard(mask).transpose2(); // [n, k]
+        let kernel = Bcs::from_dense(&wm_t);
+        // x [m, k] -> X [k, m] ("[cols, batch]" with batch = m)
+        let mut xt = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                xt[kk * m + i] = x[i * k + kk];
+            }
+        }
+        let yt = self.engine.spmm(&kernel, &xt, m); // [n, m]
+        let mut y = vec![0.0f32; m * n];
+        for j in 0..n {
+            for i in 0..m {
+                y[i * n + j] = yt[j * m + i];
+            }
+        }
+        y
+    }
+
+    /// Batched linear layer: `Y = W · X` with `X` `[cols, batch]`
+    /// row-major, `Y` `[rows, batch]`.
+    pub fn linear(&self, layer: &SparseLayer, x: &[f32], batch: usize) -> Vec<f32> {
+        self.engine.spmm(layer.kernel(), x, batch)
+    }
+
+    /// Linear + ReLU, the fused epilogue the compiler emits for hidden
+    /// layers.
+    pub fn linear_relu(&self, layer: &SparseLayer, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut y = self.linear(layer, x, batch);
+        for v in &mut y {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::{prune, PatternLibrary, Scheme};
+    use crate::rng::Rng;
+
+    #[test]
+    fn block_matmul_matches_host_math() {
+        // the same checkerboard case the PJRT artifact test pins
+        let (m, k, n) = (6, 12, 9);
+        let x = vec![1.0f32; m * k];
+        let mut w = Tensor::zeros(&[k, n]);
+        for i in 0..k.min(n) {
+            w.set2(i, i, 2.0);
+        }
+        let mask_data: Vec<f32> = (0..k * n).map(|i| ((i / n) % 2) as f32).collect();
+        let mask = Tensor::from_vec(&[k, n], mask_data);
+        let y = NativeEngine::new(3).block_matmul(&x, m, &w, &mask);
+        assert_eq!(y.len(), m * n);
+        for j in 0..n {
+            let expect: f32 = (0..k).map(|kk| w.at2(kk, j) * mask.at2(kk, j)).sum();
+            assert!((y[j] - expect).abs() < 1e-4, "col {j}: got {} want {expect}", y[j]);
+        }
+    }
+
+    #[test]
+    fn block_matmul_thread_count_invariant() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (8, 24, 16);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let w = Tensor::he_normal(&[k, n], k, &mut rng);
+        let mask_data: Vec<f32> =
+            (0..k * n).map(|_| rng.bernoulli(0.4) as u8 as f32).collect();
+        let mask = Tensor::from_vec(&[k, n], mask_data);
+        let serial = NativeEngine::serial().block_matmul(&x, m, &w, &mask);
+        let threaded = NativeEngine::new(8).block_matmul(&x, m, &w, &mask);
+        assert_eq!(serial, threaded);
+    }
+
+    #[test]
+    fn auto_choice_prefers_bcs_on_reordered_block_punched() {
+        // the paper's pipeline: punched mask -> GEMM view -> row reorder
+        // groups identical column patterns, which is where BCS's compact
+        // index wins over CSR
+        use crate::sparse::{permute_rows, reorder_rows};
+        let mut rng = Rng::new(12);
+        let w = Tensor::he_normal(&[64, 64, 3, 3], 64 * 9, &mut rng);
+        let r = prune(
+            &w,
+            &Scheme::BlockPunched { bf: 8, bc: 8 },
+            4.0,
+            &PatternLibrary::default8(),
+        );
+        let gemm = w.hadamard(&r.mask).conv_to_gemm();
+        let masked = permute_rows(&gemm, &reorder_rows(&gemm));
+        let layer = SparseLayer::from_masked(&masked, KernelChoice::Auto);
+        assert_eq!(layer.backend(), "bcs");
+        assert_eq!(layer.dims(), (64 * 9, 64));
+        assert_eq!(layer.nnz(), masked.nnz());
+        // near-dense input falls back to the dense kernel
+        let dense = Tensor::he_normal(&[32, 32], 32, &mut rng);
+        let dense_layer = SparseLayer::from_masked(&dense, KernelChoice::Auto);
+        assert_eq!(dense_layer.backend(), "dense");
+    }
+
+    #[test]
+    fn linear_relu_clamps() {
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, -1.0, 0.0]);
+        let layer = SparseLayer::from_masked(&w, KernelChoice::Csr);
+        let eng = NativeEngine::serial();
+        let y = eng.linear(&layer, &[3.0, 2.0], 1);
+        assert_eq!(y, vec![3.0, -3.0]);
+        let yr = eng.linear_relu(&layer, &[3.0, 2.0], 1);
+        assert_eq!(yr, vec![3.0, 0.0]);
+    }
+}

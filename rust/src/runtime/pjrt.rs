@@ -1,0 +1,166 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the bridge between the Rust coordinator and the Layer-1/2
+//! compute: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.  Artifacts are produced once by
+//! `make artifacts` (python/compile/aot.py) together with `manifest.json`
+//! describing each artifact's input/output signature; Python never runs at
+//! request time.
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Compiled only under `--cfg pjrt`: the `xla` bindings are not on
+//! crates.io and must be vendored as a path dependency first, e.g.
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { path = "../vendor/xla-rs" }
+//! ```
+//!
+//! then `RUSTFLAGS="--cfg pjrt" cargo build --release`.  The default build
+//! uses [`super::native`] instead.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactSig, Manifest};
+use super::HostValue;
+
+/// Convert an `xla::Error` into an `anyhow` report.
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// Lower a host value to an XLA literal.
+fn to_literal(v: &HostValue) -> Result<xla::Literal> {
+    let lit = match v {
+        HostValue::F32 { shape, data } => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data).reshape(&dims).map_err(xerr)?
+        }
+        HostValue::I32 { shape, data } => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data).reshape(&dims).map_err(xerr)?
+        }
+    };
+    Ok(lit)
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    sig: ArtifactSig,
+}
+
+impl Executable {
+    /// Execute with host values; returns the flattened output tuple as f32
+    /// vectors (all our artifact outputs are f32).
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.sig.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.name,
+                self.sig.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        let tuple = result[0][0].to_literal_sync().map_err(xerr)?;
+        let parts = tuple.to_tuple().map_err(xerr)?;
+        if parts.len() != self.sig.outputs.len() {
+            return Err(anyhow!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.sig.outputs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(xerr))
+            .collect()
+    }
+
+    pub fn signature(&self) -> &ArtifactSig {
+        &self.sig
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The PJRT runtime: one CPU client + the artifact manifest + a compile
+/// cache so each artifact is compiled exactly once per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (default `artifacts/`); reads
+    /// `manifest.json` and creates the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text).context("parsing manifest.json")?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Locate `artifacts/` relative to the crate root (env override:
+    /// `PRUNEMAP_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("PRUNEMAP_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let mut d = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        d.push("artifacts");
+        d
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once, cached) an artifact by manifest key, e.g.
+    /// `"train_step"`.
+    pub fn load(&self, key: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(key) {
+            return Ok(e.clone());
+        }
+        let sig = self
+            .manifest
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown artifact '{key}'"))?
+            .clone();
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        let executable =
+            std::sync::Arc::new(Executable { name: key.to_string(), exe, sig });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), executable.clone());
+        Ok(executable)
+    }
+}

@@ -251,6 +251,77 @@ pub fn model_latency_ms(
         .sum()
 }
 
+// ---------------------------------------------------------------------
+// Measured-vs-modeled hooks
+// ---------------------------------------------------------------------
+
+use crate::sparse::{Bcs, Csr, DenseKernel, Engine, SparseKernel};
+use crate::tensor::Tensor;
+
+/// Outcome of running a layer's masked GEMM view on the real sparse
+/// execution engine next to the analytic model's prediction.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyComparison {
+    /// Mobile-device latency the cost model predicts (batch 1), ms.
+    pub modeled_ms: f64,
+    /// Host wall-clock of the engine over the same weights, ms (min over
+    /// reps, whole batch).
+    pub measured_ms: f64,
+    pub threads: usize,
+    pub batch: usize,
+}
+
+impl LatencyComparison {
+    /// measured / modeled — a calibration signal, not an expectation of
+    /// equality: the model prices a mobile GPU, the measurement a host
+    /// CPU.  Trends (scheme orderings, thread scaling) are what the
+    /// benches compare.
+    pub fn ratio(&self) -> f64 {
+        self.measured_ms / self.modeled_ms.max(1e-12)
+    }
+}
+
+/// The execution backend the scheme's generated code would use for a
+/// masked 2-D GEMM view.
+pub fn kernel_for_scheme(masked_gemm: &Tensor, scheme: &Scheme) -> Box<dyn SparseKernel + Send> {
+    match scheme {
+        Scheme::None => Box::new(DenseKernel::from_tensor(masked_gemm)),
+        Scheme::Unstructured => Box::new(Csr::from_dense(masked_gemm)),
+        _ => Box::new(Bcs::from_dense(masked_gemm)),
+    }
+}
+
+/// Execute the masked GEMM view of a layer on the batched multi-threaded
+/// engine and report the measurement beside the model's prediction — the
+/// hook that keeps the simulator honest about the mechanisms it prices
+/// (irregularity cost, batch amortization, thread scaling).
+pub fn measured_vs_modeled(
+    layer: &LayerSpec,
+    cfg: &ExecConfig,
+    dev: &DeviceProfile,
+    masked_gemm: &Tensor,
+    batch: usize,
+    threads: usize,
+    reps: usize,
+) -> LatencyComparison {
+    assert_eq!(masked_gemm.ndim(), 2);
+    let modeled_ms = layer_latency_ms(layer, cfg, dev);
+    let kernel = kernel_for_scheme(masked_gemm, &cfg.scheme);
+    let engine = Engine::new(threads);
+    let cols = masked_gemm.shape()[1];
+    let x: Vec<f32> = (0..cols * batch)
+        .map(|i| ((i % 17) as f32) * 0.25 - 2.0)
+        .collect();
+    let _warmup = engine.spmm(&*kernel, &x, batch);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        std::hint::black_box(engine.spmm(&*kernel, &x, batch));
+        best = best.min(t.elapsed().as_secs_f64() * 1e3);
+    }
+    LatencyComparison { modeled_ms, measured_ms: best, threads: engine.threads(), batch }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,6 +493,37 @@ mod tests {
             &d,
         );
         assert!((big - bigger) / big < 0.15);
+    }
+
+    #[test]
+    fn measured_vs_modeled_produces_sane_numbers() {
+        use crate::pruning::{prune, PatternLibrary};
+        use crate::rng::Rng;
+        let d = dev();
+        let layer = LayerSpec::conv("c", 3, 32, 32, 14, 1);
+        let cfg = ExecConfig::new(Scheme::BlockPunched { bf: 8, bc: 8 }, 4.0, &d);
+        let mut rng = Rng::new(1);
+        let w = crate::tensor::Tensor::he_normal(&[32, 32, 3, 3], 32 * 9, &mut rng);
+        let r = prune(&w, &cfg.scheme, 4.0, &PatternLibrary::default8());
+        let gemm = w.hadamard(&r.mask).conv_to_gemm();
+        let c = measured_vs_modeled(&layer, &cfg, &d, &gemm, 8, 2, 3);
+        assert!(c.modeled_ms > 0.0 && c.modeled_ms.is_finite());
+        assert!(c.measured_ms > 0.0 && c.measured_ms.is_finite());
+        assert!(c.ratio() > 0.0);
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.batch, 8);
+    }
+
+    #[test]
+    fn kernel_for_scheme_picks_expected_backend() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(kernel_for_scheme(&t, &Scheme::None).label(), "dense");
+        assert_eq!(kernel_for_scheme(&t, &Scheme::Unstructured).label(), "csr");
+        assert_eq!(
+            kernel_for_scheme(&t, &Scheme::BlockPunched { bf: 4, bc: 4 }).label(),
+            "bcs"
+        );
+        assert_eq!(kernel_for_scheme(&t, &Scheme::Pattern).label(), "bcs");
     }
 
     #[test]

@@ -10,5 +10,8 @@
 pub mod cost;
 pub mod device;
 
-pub use cost::{layer_latency_ms, model_latency_ms, ExecConfig, TileParams};
+pub use cost::{
+    kernel_for_scheme, layer_latency_ms, measured_vs_modeled, model_latency_ms, ExecConfig,
+    LatencyComparison, TileParams,
+};
 pub use device::DeviceProfile;

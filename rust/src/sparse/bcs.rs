@@ -18,6 +18,7 @@
 use crate::tensor::Tensor;
 
 use super::csr::Csr;
+use super::exec::{SparseKernel, WorkUnit};
 
 /// BCS matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -82,17 +83,26 @@ impl Bcs {
 
     /// Number of distinct column lists.
     pub fn n_lists(&self) -> usize {
-        self.col_stride.len() - 1
+        self.col_stride.len().saturating_sub(1)
     }
 
     /// Column list for row `r` (binary search over occurrence runs).
+    ///
+    /// Out-of-range rows and malformed matrices (empty `occurrence`, as a
+    /// hand-built 0-row BCS can produce) resolve to the empty list instead
+    /// of panicking: `binary_search` returns `Err(0)` there, and the old
+    /// `i - 1` underflowed.
     pub fn row_cols(&self, r: usize) -> &[u32] {
         debug_assert!(r < self.rows);
         // occurrence is sorted; find the run containing r
         let li = match self.occurrence.binary_search(&(r as u32)) {
             Ok(i) => i,
+            Err(0) => return &[],
             Err(i) => i - 1,
         };
+        if li >= self.n_lists() {
+            return &[];
+        }
         let s = self.col_stride[li] as usize;
         let e = self.col_stride[li + 1] as usize;
         &self.compact_cols[s..e]
@@ -151,6 +161,75 @@ impl Bcs {
             }
         }
         y
+    }
+}
+
+impl SparseKernel for Bcs {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn nnz(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn label(&self) -> &'static str {
+        "bcs"
+    }
+
+    /// One unit per occurrence-run, so the engine resolves each compact
+    /// column list exactly once per dispatch — the access pattern the
+    /// paper's generated code uses.
+    fn work_units(&self) -> Vec<WorkUnit> {
+        (0..self.n_lists())
+            .map(|li| {
+                let r0 = self.occurrence[li] as usize;
+                let r1 = self.occurrence[li + 1] as usize;
+                WorkUnit {
+                    r0,
+                    r1,
+                    cost: (self.row_offset[r1] - self.row_offset[r0]) as usize,
+                }
+            })
+            .collect()
+    }
+
+    fn run_rows(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), (r1 - r0) * batch);
+        if r0 >= r1 {
+            return;
+        }
+        // locate the run containing r0, then walk runs covering [r0, r1).
+        // Err(0) means r0 precedes the first run (malformed occurrence,
+        // same contract as `row_cols`): those rows are empty, so start at
+        // the first run and leave the zero-initialized output untouched.
+        let (mut li, mut r) = match self.occurrence.binary_search(&(r0 as u32)) {
+            Ok(i) => (i, r0),
+            Err(0) => (0, self.occurrence.first().map_or(r1, |&o| (o as usize).min(r1))),
+            Err(i) => (i - 1, r0),
+        };
+        let n_lists = self.n_lists();
+        while r < r1 && li < n_lists {
+            let run_end = (self.occurrence[li + 1] as usize).min(r1);
+            let s = self.col_stride[li] as usize;
+            let e = self.col_stride[li + 1] as usize;
+            let cols = &self.compact_cols[s..e];
+            while r < run_end {
+                let base = self.row_offset[r] as usize;
+                let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
+                // ascending-k accumulation: bit-identical to the scalar
+                // `spmv` order at every batch width and thread count
+                for (k, &c) in cols.iter().enumerate() {
+                    let w = self.weights[base + k];
+                    let xrow = &x[c as usize * batch..(c as usize + 1) * batch];
+                    for (o, &xv) in orow.iter_mut().zip(xrow) {
+                        *o += w * xv;
+                    }
+                }
+                r += 1;
+            }
+            li += 1;
+        }
     }
 }
 
@@ -238,7 +317,7 @@ mod tests {
             c.storage_bytes()
         );
         // index overhead specifically collapses
-        assert!(b.index_bytes() * 2 < c.col_idx.len() * 4 + c.row_ptr.len() * 4);
+        assert!(b.index_bytes() * 2 < c.index_bytes());
         // far fewer distinct lists than rows
         assert!(b.n_lists() * 4 < b.rows, "lists={} rows={}", b.n_lists(), b.rows);
     }
@@ -271,6 +350,48 @@ mod tests {
         for (a, e) in yb.iter().zip(yc.iter()) {
             assert!((a - e).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn row_cols_no_underflow_on_malformed_zero_row_matrix() {
+        // regression: binary_search Err(0) used to hit `i - 1` and panic
+        // on a hand-built BCS whose occurrence table is empty
+        let malformed = Bcs {
+            rows: 1,
+            cols: 4,
+            weights: vec![],
+            row_offset: vec![0, 0],
+            compact_cols: vec![],
+            col_stride: vec![0],
+            occurrence: vec![],
+        };
+        assert_eq!(malformed.row_cols(0), &[] as &[u32]);
+
+        // a legitimate 0-row matrix round-trips and never panics
+        let empty = Bcs::from_dense(&Tensor::zeros(&[0, 7]));
+        assert_eq!(empty.rows, 0);
+        assert_eq!(empty.n_lists(), 0);
+        assert_eq!(empty.to_dense(), Tensor::zeros(&[0, 7]));
+
+        // occurrence starting past row 0 (malformed) resolves empty too
+        let shifted = Bcs {
+            rows: 4,
+            cols: 4,
+            weights: vec![1.0],
+            row_offset: vec![0, 0, 1, 1, 1],
+            compact_cols: vec![2],
+            col_stride: vec![0, 1],
+            occurrence: vec![1, 4],
+        };
+        assert_eq!(shifted.row_cols(0), &[] as &[u32]);
+        assert_eq!(shifted.row_cols(1), &[2]);
+
+        // the execution path honors the same contract: rows before the
+        // first run stay zero instead of borrowing run 0's column list
+        let x = [0.0, 0.0, 5.0, 0.0];
+        let mut out = vec![0.0f32; 2];
+        shifted.run_rows(&x, 1, 0, 2, &mut out);
+        assert_eq!(out, vec![0.0, 5.0]);
     }
 
     #[test]

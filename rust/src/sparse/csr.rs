@@ -2,6 +2,8 @@
 
 use crate::tensor::Tensor;
 
+use super::exec::{SparseKernel, WorkUnit};
+
 /// Standard CSR over a 2-D matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
@@ -59,6 +61,11 @@ impl Csr {
         self.values.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 4
     }
 
+    /// Index (non-value) bytes only — the quantity BCS competes on.
+    pub fn index_bytes(&self) -> usize {
+        self.col_idx.len() * 4 + self.row_ptr.len() * 4
+    }
+
     /// Sparse matrix-vector product (reference for execution tests).
     pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.cols);
@@ -71,6 +78,45 @@ impl Csr {
             y[r] = acc;
         }
         y
+    }
+}
+
+impl SparseKernel for Csr {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    fn label(&self) -> &'static str {
+        "csr"
+    }
+
+    /// One unit per row — CSR has no run structure to exploit, which is
+    /// exactly the per-row load-balance picture `reorder::load_balance`
+    /// models for irregular sparsity.
+    fn work_units(&self) -> Vec<WorkUnit> {
+        (0..self.rows)
+            .map(|r| WorkUnit { r0: r, r1: r + 1, cost: self.row_nnz(r) })
+            .collect()
+    }
+
+    fn run_rows(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), (r1 - r0) * batch);
+        for r in r0..r1 {
+            let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
+            // ascending-k accumulation: bit-identical to the scalar spmv
+            for k in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                let w = self.values[k];
+                let c = self.col_idx[k] as usize;
+                let xrow = &x[c * batch..(c + 1) * batch];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += w * xv;
+                }
+            }
+        }
     }
 }
 

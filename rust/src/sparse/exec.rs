@@ -1,0 +1,438 @@
+//! Batched multi-threaded sparse execution engine.
+//!
+//! The paper's speedups come from compiler-generated kernels that run the
+//! BCS format over multi-threaded SIMD hardware; the seed repo only modeled
+//! that execution in the simulator.  This module is the real code path:
+//!
+//! * [`SparseKernel`] — the execution contract: a sparse (or dense
+//!   reference) matrix that can compute any row range of `Y = A · X` for a
+//!   batched right-hand side (`X` is `[cols, batch]` row-major, one
+//!   activation column per sample, exactly the GEMM view the compiler
+//!   produces from im2col);
+//! * backends — [`DenseKernel`] (reference), [`Csr`](super::Csr), and
+//!   [`Bcs`](super::Bcs), the latter dispatching whole occurrence-runs so
+//!   the compact column list is resolved once per run;
+//! * [`Engine`] — rayon-based threaded dispatch.  Work units (BCS
+//!   occurrence-runs; rows for CSR/dense) are assigned to workers by the
+//!   same **stride rule** `unit i → worker i % threads` that
+//!   [`reorder`](super::reorder) models, so
+//!   [`LoadBalance`](super::LoadBalance) statistics computed offline
+//!   predict the real per-thread work of this engine.
+//!
+//! Determinism: a row's dot products are always accumulated in the same
+//! element order regardless of thread count or batch size, so
+//! `Engine::spmm` with N threads is **bit-for-bit identical** to the serial
+//! column-by-column `spmv` of the same backend.
+
+use crate::tensor::Tensor;
+
+use super::reorder::{load_balance, stride_worker, LoadBalance};
+
+/// A contiguous row range plus its cost (retained non-zeros), the unit of
+/// thread dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkUnit {
+    /// First row (inclusive).
+    pub r0: usize,
+    /// Last row (exclusive).
+    pub r1: usize,
+    /// Work estimate: non-zeros in the range (MACs per batch column).
+    pub cost: usize,
+}
+
+/// The execution contract every sparse backend implements.
+///
+/// `X` is `[cols, batch]` row-major (`x[c * batch + b]` is element `c` of
+/// sample `b`); `Y` is `[rows, batch]`.  With `batch == 1` this degenerates
+/// to SpMV.
+pub trait SparseKernel: Sync {
+    /// (rows, cols) of the operator.
+    fn dims(&self) -> (usize, usize);
+
+    /// Retained non-zeros.
+    fn nnz(&self) -> usize;
+
+    /// Short display name for benches and reports.
+    fn label(&self) -> &'static str;
+
+    /// Dispatchable work units covering `0..rows` exactly once, in row
+    /// order.  BCS returns its occurrence-runs; CSR/dense return rows.
+    fn work_units(&self) -> Vec<WorkUnit>;
+
+    /// Compute rows `r0..r1` of `Y = A · X` into `out` (length
+    /// `(r1 - r0) * batch`, **zero-initialized** by the caller, row-major
+    /// relative to `r0`).  Implementations must accumulate each output
+    /// element in ascending non-zero order so results are bit-identical
+    /// across dispatch strategies.
+    fn run_rows(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]);
+
+    /// Serial batched product `Y = A · X`.
+    fn spmm(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let (rows, cols) = self.dims();
+        assert_eq!(x.len(), cols * batch, "X must be [cols, batch] row-major");
+        let mut y = vec![0.0f32; rows * batch];
+        for u in self.work_units() {
+            self.run_rows(x, batch, u.r0, u.r1, &mut y[u.r0 * batch..u.r1 * batch]);
+        }
+        y
+    }
+
+    /// Serial mat-vec (batch = 1 spmm).
+    fn spmv_exec(&self, x: &[f32]) -> Vec<f32> {
+        self.spmm(x, 1)
+    }
+}
+
+/// Dense row-major reference backend: every element is touched, zeros
+/// included — the baseline sparse backends are validated against.
+#[derive(Debug, Clone)]
+pub struct DenseKernel {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseKernel {
+    pub fn from_tensor(t: &Tensor) -> DenseKernel {
+        assert_eq!(t.ndim(), 2);
+        DenseKernel {
+            rows: t.shape()[0],
+            cols: t.shape()[1],
+            data: t.data().to_vec(),
+        }
+    }
+}
+
+impl SparseKernel for DenseKernel {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    fn label(&self) -> &'static str {
+        "dense"
+    }
+
+    fn work_units(&self) -> Vec<WorkUnit> {
+        (0..self.rows)
+            .map(|r| WorkUnit { r0: r, r1: r + 1, cost: self.cols })
+            .collect()
+    }
+
+    fn run_rows(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), (r1 - r0) * batch);
+        for r in r0..r1 {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
+            for (c, &w) in row.iter().enumerate() {
+                let xrow = &x[c * batch..(c + 1) * batch];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += w * xv;
+                }
+            }
+        }
+    }
+}
+
+/// `y.as_mut_ptr()` smuggled across rayon workers.  Sound because each
+/// worker writes only the disjoint `[r0 * batch, r1 * batch)` spans of the
+/// units it owns (units partition the rows; the stride assignment
+/// partitions the units).
+struct SyncPtr(*mut f32);
+
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+/// Multi-threaded dispatcher over any [`SparseKernel`].
+///
+/// Unit `i` goes to worker `i % threads` — the stride assignment
+/// [`reorder::load_balance`](super::reorder::load_balance) models — so the
+/// offline [`LoadBalance`] report for a matrix is a prediction of this
+/// engine's thread utilization (see [`Engine::predicted_balance`]).
+#[derive(Debug, Clone, Copy)]
+pub struct Engine {
+    threads: usize,
+}
+
+impl Engine {
+    pub fn new(threads: usize) -> Engine {
+        Engine { threads: threads.max(1) }
+    }
+
+    /// Single-threaded engine (identical output, no rayon dispatch).
+    pub fn serial() -> Engine {
+        Engine::new(1)
+    }
+
+    /// One worker per available core.
+    pub fn max_parallel() -> Engine {
+        Engine::new(rayon::current_num_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Dispatch units: the backend's work units, with oversized runs split
+    /// so a single long occurrence-run (e.g. a uniform-pattern matrix)
+    /// cannot serialize the whole product.  Splitting never changes
+    /// results — rows are computed identically wherever they land.
+    pub fn dispatch_units<K: SparseKernel + ?Sized>(&self, kernel: &K) -> Vec<WorkUnit> {
+        let (rows, _) = kernel.dims();
+        let units = kernel.work_units();
+        if self.threads == 1 || rows == 0 {
+            return units;
+        }
+        let max_rows = rows.div_ceil(self.threads * 8).max(1);
+        let mut out = Vec::with_capacity(units.len());
+        for u in units {
+            let span = u.r1 - u.r0;
+            if span <= max_rows {
+                out.push(u);
+                continue;
+            }
+            let mut r = u.r0;
+            while r < u.r1 {
+                let e = (r + max_rows).min(u.r1);
+                out.push(WorkUnit { r0: r, r1: e, cost: u.cost * (e - r) / span });
+                r = e;
+            }
+        }
+        out
+    }
+
+    /// Batched product `Y = A · X` (`X` is `[cols, batch]` row-major).
+    /// Bit-for-bit identical to the serial [`SparseKernel::spmm`] at any
+    /// thread count.
+    pub fn spmm<K: SparseKernel + ?Sized>(&self, kernel: &K, x: &[f32], batch: usize) -> Vec<f32> {
+        let (rows, cols) = kernel.dims();
+        assert_eq!(x.len(), cols * batch, "X must be [cols, batch] row-major");
+        let mut y = vec![0.0f32; rows * batch];
+        let units = self.dispatch_units(kernel);
+        let workers = self.threads.min(units.len());
+        if workers <= 1 {
+            for u in &units {
+                kernel.run_rows(x, batch, u.r0, u.r1, &mut y[u.r0 * batch..u.r1 * batch]);
+            }
+            return y;
+        }
+        let ptr = SyncPtr(y.as_mut_ptr());
+        rayon::scope(|s| {
+            let units = &units;
+            let ptr = &ptr;
+            for w in 0..workers {
+                s.spawn(move |_| {
+                    // stride assignment: unit i -> worker i % workers
+                    for u in units.iter().skip(w).step_by(workers) {
+                        let len = (u.r1 - u.r0) * batch;
+                        // SAFETY: units cover disjoint row ranges and each
+                        // unit is visited by exactly one worker, so these
+                        // slices never alias; `y` outlives the scope.
+                        let out = unsafe {
+                            std::slice::from_raw_parts_mut(ptr.0.add(u.r0 * batch), len)
+                        };
+                        kernel.run_rows(x, batch, u.r0, u.r1, out);
+                    }
+                });
+            }
+        });
+        y
+    }
+
+    /// Mat-vec through the threaded dispatcher.
+    pub fn spmv<K: SparseKernel + ?Sized>(&self, kernel: &K, x: &[f32]) -> Vec<f32> {
+        self.spmm(kernel, x, 1)
+    }
+
+    /// The offline load-balance prediction for this engine's dispatch of
+    /// `kernel`: stride-assigned unit costs, same model as
+    /// [`reorder::load_balance`](super::reorder::load_balance).
+    pub fn predicted_balance<K: SparseKernel + ?Sized>(&self, kernel: &K) -> LoadBalance {
+        let units = self.dispatch_units(kernel);
+        let costs: Vec<usize> = units.iter().map(|u| u.cost).collect();
+        let order: Vec<usize> = (0..costs.len()).collect();
+        load_balance(&costs, &order, self.threads)
+    }
+
+    /// Actual per-worker cost split of the dispatch (for tests asserting
+    /// the prediction matches reality).
+    pub fn worker_costs<K: SparseKernel + ?Sized>(&self, kernel: &K) -> Vec<usize> {
+        let units = self.dispatch_units(kernel);
+        let workers = self.threads.min(units.len()).max(1);
+        let mut costs = vec![0usize; workers];
+        for (i, u) in units.iter().enumerate() {
+            costs[stride_worker(i, workers)] += u.cost;
+        }
+        costs
+    }
+}
+
+/// Pack per-sample input vectors (each `cols` long) into the
+/// `[cols, batch]` row-major layout [`SparseKernel::spmm`] consumes.
+pub fn pack_columns(columns: &[Vec<f32>]) -> Vec<f32> {
+    let batch = columns.len();
+    if batch == 0 {
+        return Vec::new();
+    }
+    let cols = columns[0].len();
+    let mut x = vec![0.0f32; cols * batch];
+    for (b, col) in columns.iter().enumerate() {
+        assert_eq!(col.len(), cols, "ragged batch");
+        for (c, &v) in col.iter().enumerate() {
+            x[c * batch + b] = v;
+        }
+    }
+    x
+}
+
+/// Extract output column `b` from a `[rows, batch]` result.
+pub fn unpack_column(y: &[f32], batch: usize, b: usize) -> Vec<f32> {
+    assert!(b < batch.max(1));
+    y.iter().skip(b).step_by(batch.max(1)).copied().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Bcs, Csr};
+    use super::*;
+    use crate::pruning::{prune, PatternLibrary, Scheme};
+    use crate::rng::Rng;
+
+    fn block_pruned(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::he_normal(&[rows, cols], cols, &mut rng);
+        let r = prune(&w, &Scheme::Block { bp: 8, bq: 8 }, 4.0, &PatternLibrary::default8());
+        w.hadamard(&r.mask)
+    }
+
+    #[test]
+    fn backends_agree_with_dense_reference() {
+        let t = block_pruned(64, 48, 1);
+        let dense = DenseKernel::from_tensor(&t);
+        let csr = Csr::from_dense(&t);
+        let bcs = Bcs::from_dense(&t);
+        let mut rng = Rng::new(2);
+        let batch = 5;
+        let x: Vec<f32> = (0..48 * batch).map(|_| rng.normal()).collect();
+        let yd = dense.spmm(&x, batch);
+        let yc = csr.spmm(&x, batch);
+        let yb = bcs.spmm(&x, batch);
+        assert_eq!(yd.len(), 64 * batch);
+        for i in 0..yd.len() {
+            assert!((yd[i] - yc[i]).abs() < 1e-4, "csr[{i}]");
+            assert!((yd[i] - yb[i]).abs() < 1e-4, "bcs[{i}]");
+        }
+    }
+
+    #[test]
+    fn threaded_bit_for_bit_serial() {
+        let t = block_pruned(96, 64, 3);
+        let bcs = Bcs::from_dense(&t);
+        let mut rng = Rng::new(4);
+        let batch = 7;
+        let x: Vec<f32> = (0..64 * batch).map(|_| rng.normal()).collect();
+        let serial = Engine::serial().spmm(&bcs, &x, batch);
+        for threads in [2, 3, 4, 8, 33] {
+            let y = Engine::new(threads).spmm(&bcs, &x, batch);
+            assert_eq!(serial, y, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn spmm_columns_match_spmv() {
+        let t = block_pruned(40, 40, 5);
+        let bcs = Bcs::from_dense(&t);
+        let mut rng = Rng::new(6);
+        let cols: Vec<Vec<f32>> = (0..9)
+            .map(|_| (0..40).map(|_| rng.normal()).collect())
+            .collect();
+        let x = pack_columns(&cols);
+        let y = Engine::new(4).spmm(&bcs, &x, 9);
+        for (b, col) in cols.iter().enumerate() {
+            // inherent serial scalar spmv: the bit-for-bit reference
+            assert_eq!(unpack_column(&y, 9, b), bcs.spmv(col), "column {b}");
+        }
+    }
+
+    #[test]
+    fn work_units_cover_rows_exactly() {
+        let t = block_pruned(50, 30, 7);
+        for kernel in [
+            Box::new(Bcs::from_dense(&t)) as Box<dyn SparseKernel>,
+            Box::new(Csr::from_dense(&t)),
+            Box::new(DenseKernel::from_tensor(&t)),
+        ] {
+            let units = kernel.work_units();
+            let mut next = 0usize;
+            for u in &units {
+                assert_eq!(u.r0, next, "{}: gap/overlap", kernel.label());
+                assert!(u.r1 > u.r0);
+                next = u.r1;
+            }
+            assert_eq!(next, 50, "{}", kernel.label());
+        }
+    }
+
+    #[test]
+    fn dispatch_splits_single_long_run() {
+        // uniform column pattern -> a single occurrence-run; the engine
+        // must still distribute it
+        let mut t = Tensor::zeros(&[256, 16]);
+        for r in 0..256 {
+            t.set2(r, 3, 1.0);
+            t.set2(r, 7, -1.0);
+        }
+        let bcs = Bcs::from_dense(&t);
+        assert_eq!(bcs.work_units().len(), 1);
+        let eng = Engine::new(4);
+        assert!(eng.dispatch_units(&bcs).len() >= 4);
+        let costs = eng.worker_costs(&bcs);
+        assert!(costs.iter().all(|&c| c > 0), "idle worker: {costs:?}");
+        // and results still match serial
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        assert_eq!(eng.spmv(&bcs, &x), bcs.spmv(&x));
+    }
+
+    #[test]
+    fn predicted_balance_matches_actual_dispatch() {
+        let t = block_pruned(128, 96, 8);
+        let bcs = Bcs::from_dense(&t);
+        let eng = Engine::new(4);
+        let predicted = eng.predicted_balance(&bcs);
+        let costs = eng.worker_costs(&bcs);
+        let total: usize = costs.iter().sum();
+        let mean = total as f32 / costs.len() as f32;
+        let max = *costs.iter().max().unwrap() as f32;
+        let actual = if mean > 0.0 { max / mean } else { 1.0 };
+        assert!(
+            (predicted.imbalance - actual).abs() < 1e-6,
+            "predicted {} vs actual {}",
+            predicted.imbalance,
+            actual
+        );
+    }
+
+    #[test]
+    fn zero_rows_and_empty_batch() {
+        let t = Tensor::zeros(&[0, 8]);
+        let bcs = Bcs::from_dense(&t);
+        assert_eq!(bcs.dims(), (0, 8));
+        let y = Engine::new(4).spmm(&bcs, &[0.0; 24], 3);
+        assert!(y.is_empty());
+        let t2 = Tensor::zeros(&[4, 4]);
+        let y2 = Engine::new(2).spmm(&Bcs::from_dense(&t2), &[], 0);
+        assert!(y2.is_empty());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let cols = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let x = pack_columns(&cols);
+        assert_eq!(x, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(unpack_column(&x, 2, 0), cols[0]);
+        assert_eq!(unpack_column(&x, 2, 1), cols[1]);
+    }
+}

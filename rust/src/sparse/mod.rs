@@ -1,11 +1,16 @@
-//! Sparse weight storage: CSR and the paper's Blocked Compressed Storage
-//! (BCS, §4.3 / Fig. 4), plus the row-reordering optimization that the
-//! compiler uses for thread load balance.
+//! Sparse weight storage and execution: CSR and the paper's Blocked
+//! Compressed Storage (BCS, §4.3 / Fig. 4), the row-reordering optimization
+//! the compiler uses for thread load balance, and the batched
+//! multi-threaded execution engine that actually runs them ([`exec`]).
 
 pub mod bcs;
 pub mod csr;
+pub mod exec;
 pub mod reorder;
 
 pub use bcs::Bcs;
 pub use csr::Csr;
-pub use reorder::{load_balance, permute_rows, reorder_rows, row_nnz_counts, LoadBalance};
+pub use exec::{pack_columns, unpack_column, DenseKernel, Engine, SparseKernel, WorkUnit};
+pub use reorder::{
+    load_balance, permute_rows, reorder_rows, row_nnz_counts, stride_worker, LoadBalance,
+};

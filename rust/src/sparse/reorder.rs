@@ -17,18 +17,28 @@ pub struct LoadBalance {
     pub pattern_switches: usize,
 }
 
+/// The stride rule shared by this model and the real executor
+/// ([`Engine`](super::exec::Engine)): work unit at position `pos` goes to
+/// worker `pos % threads`.
+pub fn stride_worker(pos: usize, threads: usize) -> usize {
+    pos % threads.max(1)
+}
+
 /// Compute load balance of the given row order for `threads` threads.
-/// Assignment is strided — position `i` goes to thread `i % threads` —
-/// matching the paper's "continuous rows ... processed by multi-threads
-/// simultaneously": each wave of `threads` consecutive rows runs in
-/// parallel, so equal-nnz neighbours mean equal per-wave work.
+/// Assignment is strided — position `i` goes to thread `i % threads`
+/// ([`stride_worker`]) — matching the paper's "continuous rows ...
+/// processed by multi-threads simultaneously": each wave of `threads`
+/// consecutive rows runs in parallel, so equal-nnz neighbours mean equal
+/// per-wave work.  `Engine::predicted_balance` feeds its dispatch units
+/// through this same function, so these statistics predict real thread
+/// work, not just modeled work.
 pub fn load_balance(row_nnz: &[usize], order: &[usize], threads: usize) -> LoadBalance {
     assert_eq!(row_nnz.len(), order.len());
     let n = order.len();
     let threads = threads.max(1).min(n.max(1));
     let mut work = vec![0usize; threads];
     for (pos, &r) in order.iter().enumerate() {
-        work[pos % threads] += row_nnz[r];
+        work[stride_worker(pos, threads)] += row_nnz[r];
     }
     let total: usize = work.iter().sum();
     let mean = total as f32 / threads as f32;

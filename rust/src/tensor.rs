@@ -144,6 +144,55 @@ impl Tensor {
         Tensor { shape: vec![f, c, kh, kw], data: out }
     }
 
+    /// 2-D transpose.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = self.data[r * cols + c];
+            }
+        }
+        Tensor { shape: vec![cols, rows], data: out }
+    }
+
+    /// Dense mat-vec reference: `y = A x` for a 2-D tensor.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.ndim(), 2);
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        assert_eq!(x.len(), cols);
+        (0..rows)
+            .map(|r| {
+                self.data[r * cols..(r + 1) * cols]
+                    .iter()
+                    .zip(x)
+                    .map(|(w, v)| w * v)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Dense batched product `Y = A · X` against a `[cols, batch]`
+    /// row-major input — the reference the sparse execution engine is
+    /// validated against.
+    pub fn matmul_cols(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(self.ndim(), 2);
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        assert_eq!(x.len(), cols * batch, "X must be [cols, batch] row-major");
+        let mut y = vec![0.0f32; rows * batch];
+        for r in 0..rows {
+            let row = &self.data[r * cols..(r + 1) * cols];
+            let yrow = &mut y[r * batch..(r + 1) * batch];
+            for (c, &w) in row.iter().enumerate() {
+                for (o, &xv) in yrow.iter_mut().zip(&x[c * batch..(c + 1) * batch]) {
+                    *o += w * xv;
+                }
+            }
+        }
+        y
+    }
+
     /// Count of non-zero elements.
     pub fn nnz(&self) -> usize {
         self.data.iter().filter(|v| **v != 0.0).count()
@@ -224,6 +273,30 @@ mod tests {
         w.set4(1, 0, 2, 1, 9.0);
         let g = w.conv_to_gemm();
         assert_eq!(g.at2((0 * 3 + 2) * 3 + 1, 1), 9.0);
+    }
+
+    #[test]
+    fn transpose2_roundtrip_and_layout() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let tt = t.transpose2();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(0, 1), 4.0);
+        assert_eq!(tt.transpose2(), t);
+    }
+
+    #[test]
+    fn matvec_and_matmul_cols_agree() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 2.0, -1.0, 3.0, 0.5]);
+        let x = vec![2.0, 1.0, -1.0];
+        let y = t.matvec(&x);
+        assert_eq!(y, vec![0.0, 0.5]);
+        // batch of two columns packed [cols, batch]
+        let xb = vec![2.0, 0.0, 1.0, 1.0, -1.0, 0.0];
+        let yb = t.matmul_cols(&xb, 2);
+        assert_eq!(yb.len(), 4);
+        assert!((yb[0] - y[0]).abs() < 1e-6 && (yb[2] - y[1]).abs() < 1e-6);
+        // second column: A · [0, 1, 0] = column 1 of A
+        assert!((yb[1] - 0.0).abs() < 1e-6 && (yb[3] - 3.0).abs() < 1e-6);
     }
 
     #[test]

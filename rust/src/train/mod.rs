@@ -6,23 +6,36 @@
 //! epochs with host-side alpha updates, one-shot prunes under a mapped
 //! scheme, and masked-retrains — the paper's full pipeline at laptop scale.
 //! Python never runs here: the artifacts were lowered once at build time.
+//!
+//! [`TrainDriver`] needs the PJRT runtime and is therefore compiled only
+//! under `--cfg pjrt` (see [`crate::runtime`]); [`SynthDataset`] is always
+//! available.
 
 pub mod synth;
 
 pub use synth::SynthDataset;
 
+#[cfg(pjrt)]
 use std::sync::Arc;
 
+#[cfg(pjrt)]
 use anyhow::{anyhow, Result};
 
+#[cfg(pjrt)]
 use crate::accuracy::Assignment;
+#[cfg(pjrt)]
 use crate::pruning::{prune, PatternLibrary};
+#[cfg(pjrt)]
 use crate::reweighted;
+#[cfg(pjrt)]
 use crate::rng::Rng;
+#[cfg(pjrt)]
 use crate::runtime::{Executable, HostValue, Runtime};
+#[cfg(pjrt)]
 use crate::tensor::Tensor;
 
 /// Handle over the proxy model's training state.
+#[cfg(pjrt)]
 pub struct TrainDriver {
     step_exe: Arc<Executable>,
     fwd_exe: Arc<Executable>,
@@ -47,6 +60,7 @@ pub struct StepStats {
     pub acc: f32,
 }
 
+#[cfg(pjrt)]
 impl TrainDriver {
     /// Initialize from the runtime's manifest (He-init weights, zero bias,
     /// dense masks, zero alphas).

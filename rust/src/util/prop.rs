@@ -59,7 +59,7 @@ mod tests {
     fn propagates_failure() {
         for_cases(10, 3, |rng| {
             let _ = rng.f32();
-            assert!(false, "intentional");
+            panic!("intentional");
         });
     }
 }

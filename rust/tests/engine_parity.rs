@@ -1,0 +1,170 @@
+//! Parity tests for the batched multi-threaded sparse execution engine:
+//! `spmm` with 1 and N threads must match column-by-column serial `spmv`
+//! **bit-for-bit** per backend, across the pruned-layout families and the
+//! edge cases that stress `row_cols`' binary search (0 rows, empty rows,
+//! all-dense, single occurrence-run).
+
+use prunemap::pruning::{prune, PatternLibrary, Scheme};
+use prunemap::rng::Rng;
+use prunemap::sparse::{
+    pack_columns, unpack_column, Bcs, Csr, DenseKernel, Engine, SparseKernel,
+};
+use prunemap::tensor::Tensor;
+
+/// All three backends over the same dense matrix.
+fn backends(t: &Tensor) -> Vec<Box<dyn SparseKernel>> {
+    vec![
+        Box::new(DenseKernel::from_tensor(t)),
+        Box::new(Csr::from_dense(t)),
+        Box::new(Bcs::from_dense(t)),
+    ]
+}
+
+/// Assert `spmm` (serial, 1-thread engine, N-thread engine) equals the
+/// backend's own column-by-column serial `spmv`, bit for bit.
+fn assert_spmm_parity(t: &Tensor, batch: usize, seed: u64) {
+    let (rows, cols) = (t.shape()[0], t.shape()[1]);
+    let mut rng = Rng::new(seed);
+    let columns: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..cols).map(|_| rng.normal()).collect())
+        .collect();
+    let x = pack_columns(&columns);
+    for kernel in backends(t) {
+        // column-by-column serial spmv: the reference
+        let reference: Vec<Vec<f32>> =
+            columns.iter().map(|c| kernel.spmv_exec(c)).collect();
+        let serial = kernel.spmm(&x, batch);
+        let one = Engine::new(1).spmm(&*kernel, &x, batch);
+        let many = Engine::new(7).spmm(&*kernel, &x, batch);
+        assert_eq!(serial, one, "{}: 1-thread engine != serial spmm", kernel.label());
+        assert_eq!(serial, many, "{}: 7-thread engine != serial spmm", kernel.label());
+        assert_eq!(serial.len(), rows * batch);
+        for (b, want) in reference.iter().enumerate() {
+            assert_eq!(
+                &unpack_column(&serial, batch, b),
+                want,
+                "{}: spmm column {b} != serial spmv",
+                kernel.label()
+            );
+        }
+    }
+}
+
+fn random_sparse(rows: usize, cols: usize, density: f32, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut t = Tensor::zeros(&[rows, cols]);
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.bernoulli(density) {
+                t.set2(r, c, rng.normal());
+            }
+        }
+    }
+    t
+}
+
+#[test]
+fn parity_unstructured_random() {
+    for (rows, cols, batch) in [(33, 17, 1), (64, 48, 5), (10, 80, 32)] {
+        let t = random_sparse(rows, cols, 0.25, rows as u64);
+        assert_spmm_parity(&t, batch, 0xE0 + rows as u64);
+    }
+}
+
+#[test]
+fn parity_block_pruned() {
+    let lib = PatternLibrary::default8();
+    let mut rng = Rng::new(1);
+    let w = Tensor::he_normal(&[96, 64], 64, &mut rng);
+    let r = prune(&w, &Scheme::Block { bp: 8, bq: 8 }, 4.0, &lib);
+    let t = w.hadamard(&r.mask);
+    for batch in [1, 2, 33] {
+        assert_spmm_parity(&t, batch, 0xE1);
+    }
+}
+
+#[test]
+fn parity_pattern_pruned_gemm_view() {
+    let lib = PatternLibrary::default8();
+    let mut rng = Rng::new(2);
+    let w = Tensor::he_normal(&[16, 16, 3, 3], 16 * 9, &mut rng);
+    let r = prune(&w, &Scheme::Pattern, 3.0, &lib);
+    let t = w.hadamard(&r.mask).conv_to_gemm();
+    assert_spmm_parity(&t, 4, 0xE2);
+}
+
+#[test]
+fn parity_zero_rows() {
+    let t = Tensor::zeros(&[0, 13]);
+    assert_spmm_parity(&t, 3, 0xE3);
+    for kernel in backends(&t) {
+        assert!(kernel.work_units().is_empty(), "{}", kernel.label());
+        assert!(Engine::new(4).spmm(&*kernel, &[1.0; 26], 2).is_empty());
+    }
+}
+
+#[test]
+fn parity_empty_rows_interleaved() {
+    // all-zero rows between populated ones: BCS gets empty column lists
+    // and run boundaries exactly where row_cols' binary search is touchy
+    let mut t = Tensor::zeros(&[12, 6]);
+    for r in [1usize, 2, 7, 11] {
+        for c in 0..6 {
+            if (r + c) % 2 == 0 {
+                t.set2(r, c, (r * 6 + c) as f32 * 0.1 - 1.0);
+            }
+        }
+    }
+    assert_spmm_parity(&t, 5, 0xE4);
+    let bcs = Bcs::from_dense(&t);
+    assert_eq!(bcs.row_cols(0), &[] as &[u32]);
+    assert!(!bcs.row_cols(11).is_empty());
+}
+
+#[test]
+fn parity_all_dense() {
+    // uniform in [0.5, 1.5): provably no exact zeros, so BCS degenerates
+    // to one full-width run per distinct row pattern
+    let mut rng = Rng::new(3);
+    let t = Tensor::uniform(&[24, 24], 0.5, 1.5, &mut rng);
+    assert_eq!(t.nnz(), 24 * 24);
+    let bcs = Bcs::from_dense(&t);
+    assert_eq!(bcs.n_lists(), 1, "identical all-dense patterns should share one run");
+    assert_spmm_parity(&t, 6, 0xE5);
+}
+
+#[test]
+fn parity_single_run() {
+    // every row shares one column pattern -> a single occurrence-run;
+    // the engine must split it and still match bit-for-bit
+    let mut t = Tensor::zeros(&[200, 32]);
+    for r in 0..200 {
+        for c in [0usize, 5, 9, 31] {
+            t.set2(r, c, 1.0 + (r * 32 + c) as f32 * 1e-3);
+        }
+    }
+    let bcs = Bcs::from_dense(&t);
+    assert_eq!(bcs.n_lists(), 1, "expected a single occurrence-run");
+    assert_spmm_parity(&t, 9, 0xE6);
+}
+
+#[test]
+fn parity_single_row_and_single_col() {
+    assert_spmm_parity(&random_sparse(1, 40, 0.5, 7), 3, 0xE7);
+    assert_spmm_parity(&random_sparse(40, 1, 0.5, 8), 3, 0xE8);
+}
+
+#[test]
+fn threaded_engine_beats_nothing_but_is_deterministic_across_repeats() {
+    // repeated threaded runs are identical (no atomics, no reduction
+    // reordering anywhere in the dispatch)
+    let t = random_sparse(128, 96, 0.15, 9);
+    let bcs = Bcs::from_dense(&t);
+    let mut rng = Rng::new(10);
+    let x: Vec<f32> = (0..96 * 16).map(|_| rng.normal()).collect();
+    let eng = Engine::new(8);
+    let first = eng.spmm(&bcs, &x, 16);
+    for _ in 0..5 {
+        assert_eq!(first, eng.spmm(&bcs, &x, 16));
+    }
+}

@@ -1,166 +1,306 @@
-//! End-to-end integration over the live PJRT path: train-step semantics,
-//! penalty agreement with the host-side reweighted module, and a short
-//! full pipeline.  Skips gracefully when artifacts are absent.
+//! End-to-end integration.
+//!
+//! The native-path tests always run: mapping → mask generation → GEMM
+//! view → batched multi-threaded sparse execution, asserting numerical
+//! parity with dense references and thread-count invariance.  The live
+//! PJRT pipeline tests (train-step semantics, penalty agreement, full
+//! pipeline) compile only under `--cfg pjrt` and skip gracefully when
+//! artifacts are absent.
 
-use prunemap::accuracy::Assignment;
-use prunemap::coordinator::{run_pipeline, PipelineConfig};
 use prunemap::latmodel::LatencyModel;
-use prunemap::mapping::{map_rule_based, RuleConfig};
+use prunemap::mapping::{self, map_rule_based, RuleConfig};
 use prunemap::models::zoo;
-use prunemap::pruning::Scheme;
+use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::rng::Rng;
-use prunemap::runtime::Runtime;
+use prunemap::runtime::{KernelChoice, NativeEngine, SparseLayer};
 use prunemap::simulator::DeviceProfile;
-use prunemap::train::{SynthDataset, TrainDriver};
-
-fn runtime() -> Option<Runtime> {
-    let dir = Runtime::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::open(dir).expect("open runtime"))
-}
+use prunemap::sparse::{pack_columns, permute_rows, reorder_rows};
+use prunemap::tensor::Tensor;
 
 #[test]
-fn train_step_reduces_loss() {
-    let Some(rt) = runtime() else { return };
-    let mut d = TrainDriver::new(&rt, 7).unwrap();
-    let ds = SynthDataset::cifar_like(7);
-    let mut rng = Rng::new(8);
-    let mut first = None;
-    let mut last = 0.0;
-    for _ in 0..30 {
-        let (x, y) = ds.batch(d.batch_size(), &mut rng);
-        let s = d.step(&x, &y, 0.05, 0.0).unwrap();
-        if first.is_none() {
-            first = Some(s.ce);
-        }
-        last = s.ce;
-    }
-    assert!(last < first.unwrap(), "loss {first:?} -> {last}");
-}
-
-#[test]
-fn masks_survive_pjrt_training() {
-    let Some(rt) = runtime() else { return };
-    let mut d = TrainDriver::new(&rt, 9).unwrap();
-    let model = zoo::proxy_cnn();
-    let assigns: Vec<Assignment> = model
-        .layers
-        .iter()
-        .map(|l| Assignment {
-            scheme: if l.kind == prunemap::models::LayerKind::Fc {
-                Scheme::Block { bp: 8, bq: 8 }
-            } else {
-                Scheme::BlockPunched { bf: 4, bc: 4 }
-            },
-            compression: 4.0,
-        })
-        .collect();
-    let lib = prunemap::pruning::PatternLibrary::default8();
-    d.prune_with(&assigns, &lib).unwrap();
-    let masks: Vec<_> = d.masks.clone();
-    let ds = SynthDataset::cifar_like(9);
-    let mut rng = Rng::new(10);
-    for _ in 0..5 {
-        let (x, y) = ds.batch(d.batch_size(), &mut rng);
-        d.step(&x, &y, 0.05, 0.0).unwrap();
-    }
-    // every masked weight must still be zero after PJRT updates
-    for (w, m) in d.weights().iter().zip(&masks) {
-        for (v, mk) in w.data().iter().zip(m.data()) {
-            if *mk == 0.0 {
-                assert_eq!(*v, 0.0, "pruned weight resurrected");
-            }
-        }
-    }
-}
-
-#[test]
-fn reweighted_penalty_matches_in_graph_loss_shift() {
-    // CE reported by the artifact excludes the penalty term, but the
-    // penalty influences gradients: with a huge alpha the weights shrink.
-    let Some(rt) = runtime() else { return };
-    let model = zoo::proxy_cnn();
-    let assigns: Vec<Assignment> = model
-        .layers
-        .iter()
-        .map(|l| Assignment {
-            scheme: if l.kind == prunemap::models::LayerKind::Fc {
-                Scheme::StructuredRow
-            } else {
-                Scheme::BlockPunched { bf: 4, bc: 4 }
-            },
-            compression: 1.0,
-        })
-        .collect();
-    // identical training with and without the penalty; the regularized run
-    // must end with smaller weight norms (paper Eq. 1's lambda term)
-    let run = |lam: f32| -> f32 {
-        let mut d = TrainDriver::new(&rt, 11).unwrap();
-        d.update_alphas(&assigns);
-        let ds = SynthDataset::cifar_like(11);
-        let mut rng = Rng::new(12);
-        for _ in 0..12 {
-            let (x, y) = ds.batch(d.batch_size(), &mut rng);
-            d.step(&x, &y, 0.01, lam).unwrap();
-            d.update_alphas(&assigns);
-        }
-        d.weights().iter().map(|w| w.sq_norm()).sum()
-    };
-    let with_penalty = run(0.02);
-    let without = run(0.0);
-    assert!(
-        with_penalty < without,
-        "reweighted penalty failed to shrink weights: {with_penalty} !< {without}"
-    );
-}
-
-#[test]
-fn short_pipeline_end_to_end() {
-    let Some(rt) = runtime() else { return };
+fn native_pipeline_mapped_layers_execute_with_parity() {
+    // rule-map the proxy CNN, generate real masks at the mapped rates,
+    // and execute every layer's GEMM view on the engine
     let dev = DeviceProfile::s10();
     let model = zoo::proxy_cnn();
     let lat = LatencyModel::build(&dev);
     let assigns = map_rule_based(&model, &lat, &RuleConfig::default());
-    let cfg = PipelineConfig {
-        pretrain_steps: 40,
-        reg_epochs: 2,
-        steps_per_epoch: 10,
-        retrain_steps: 30,
-        ..Default::default()
-    };
-    let rep = run_pipeline(&rt, &model, &assigns, &dev, &cfg).unwrap();
-    assert_eq!(
-        rep.loss_curve.len(),
-        cfg.pretrain_steps + cfg.reg_epochs * cfg.steps_per_epoch + cfg.retrain_steps
-    );
-    assert!(rep.overall_compression > 1.5, "{}", rep.overall_compression);
-    assert!(rep.speedup() > 1.0);
-    // learning happened
-    let head: f32 = rep.loss_curve[..10].iter().sum::<f32>() / 10.0;
-    let tail: f32 =
-        rep.loss_curve[rep.loss_curve.len() - 10..].iter().sum::<f32>() / 10.0;
-    assert!(tail < head, "loss {head} -> {tail}");
+    let lib = PatternLibrary::default8();
+    let mut rng = Rng::new(0xA11);
+    let eng_serial = NativeEngine::serial();
+    let eng_threads = NativeEngine::new(4);
+
+    let mut total = 0usize;
+    let mut kept = 0usize;
+    for (layer, a) in model.layers.iter().zip(&assigns) {
+        // realistic weight tensor in the layer's natural layout
+        let shape: Vec<usize> = if layer.kh > 1 || layer.kind != prunemap::models::LayerKind::Fc {
+            vec![layer.out_ch, layer.in_ch, layer.kh, layer.kw]
+        } else {
+            vec![layer.out_ch, layer.in_ch]
+        };
+        let fan: usize = shape[1..].iter().product();
+        let w = Tensor::he_normal(&shape, fan.max(1), &mut rng);
+        let r = prune(&w, &a.scheme, a.compression, &lib);
+        let masked = w.hadamard(&r.mask);
+        total += r.total;
+        kept += r.kept;
+
+        let gemm = if masked.ndim() == 4 {
+            masked.conv_to_gemm()
+        } else {
+            masked.clone()
+        };
+        let reordered = permute_rows(&gemm, &reorder_rows(&gemm));
+        let sl = SparseLayer::from_masked(&reordered, KernelChoice::Auto);
+        let (rows, cols) = sl.dims();
+        assert_eq!(sl.nnz(), reordered.nnz(), "{}", layer.name);
+
+        let batch = 6;
+        let x: Vec<f32> = (0..cols * batch).map(|_| rng.normal() * 0.2).collect();
+        let y_serial = eng_serial.linear(&sl, &x, batch);
+        let y_threaded = eng_threads.linear(&sl, &x, batch);
+        assert_eq!(y_serial, y_threaded, "{}: thread-count parity", layer.name);
+        let y_dense = reordered.matmul_cols(&x, batch);
+        assert_eq!(y_serial.len(), rows * batch);
+        for i in 0..y_serial.len() {
+            assert!(
+                (y_serial[i] - y_dense[i]).abs() < 1e-4,
+                "{}: engine vs dense at {i}: {} vs {}",
+                layer.name,
+                y_serial[i],
+                y_dense[i]
+            );
+        }
+    }
+    // the mapped masks actually compress the model
+    let achieved = total as f32 / kept.max(1) as f32;
+    assert!(achieved > 1.5, "overall mask compression {achieved}x");
+    // and the mapped configuration is predicted faster than dense
+    let e = mapping::evaluate(&model, &assigns, &dev);
+    assert!(e.latency_ms < mapping::dense_latency_ms(&model, &dev));
 }
 
 #[test]
-fn forward_artifact_respects_masks() {
-    let Some(rt) = runtime() else { return };
-    let mut d = TrainDriver::new(&rt, 13).unwrap();
-    let ds = SynthDataset::cifar_like(13);
-    let mut rng = Rng::new(14);
-    let (x, _) = ds.batch(d.batch_size(), &mut rng);
-    let before = d.forward(&x).unwrap();
-    // zero all masks -> logits collapse to biases (zeros)
-    let zero_masks: Vec<_> = d
-        .masks
+fn native_mlp_chain_forward_is_thread_invariant() {
+    // a small pruned MLP executed end to end: x -> fc1+relu -> fc2+relu
+    // -> logits, threaded result bit-identical to serial
+    let lib = PatternLibrary::default8();
+    let mut rng = Rng::new(0xB22);
+    let dims = [(48usize, 64usize), (32, 48), (10, 32)];
+    let layers: Vec<SparseLayer> = dims
         .iter()
-        .map(|m| prunemap::tensor::Tensor::zeros(m.shape()))
+        .map(|&(out, inp)| {
+            let w = Tensor::he_normal(&[out, inp], inp, &mut rng);
+            let r = prune(&w, &Scheme::Block { bp: 8, bq: 8 }, 3.0, &lib);
+            SparseLayer::from_masked(&w.hadamard(&r.mask), KernelChoice::Auto)
+        })
         .collect();
-    d.set_masks(zero_masks).unwrap();
-    let after = d.forward(&x).unwrap();
-    assert!(before.iter().any(|v| v.abs() > 1e-3));
-    assert!(after.iter().all(|v| v.abs() < 1e-5), "masked forward non-zero");
+
+    let batch = 16;
+    let cols: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..64).map(|_| rng.normal()).collect())
+        .collect();
+    let x0 = pack_columns(&cols);
+
+    let forward = |eng: &NativeEngine| -> Vec<f32> {
+        let h1 = eng.linear_relu(&layers[0], &x0, batch);
+        let h2 = eng.linear_relu(&layers[1], &h1, batch);
+        eng.linear(&layers[2], &h2, batch)
+    };
+    let serial = forward(&NativeEngine::serial());
+    assert_eq!(serial.len(), 10 * batch);
+    assert!(serial.iter().any(|&v| v != 0.0));
+    for threads in [2, 4, 8] {
+        assert_eq!(serial, forward(&NativeEngine::new(threads)), "threads={threads}");
+    }
+}
+
+#[test]
+fn native_engine_speedup_is_measurable_on_large_spmm() {
+    // not a benchmark (CI boxes are noisy) — just assert the threaded
+    // dispatch actually distributes work instead of serializing it
+    use prunemap::sparse::{Bcs, Engine};
+    let lib = PatternLibrary::default8();
+    let mut rng = Rng::new(0xC33);
+    let w = Tensor::he_normal(&[512, 512], 512, &mut rng);
+    let r = prune(&w, &Scheme::Block { bp: 8, bq: 8 }, 8.0, &lib);
+    let bcs = Bcs::from_dense(&w.hadamard(&r.mask));
+    let eng = Engine::new(4);
+    let costs = eng.worker_costs(&bcs);
+    assert!(costs.len() >= 2, "dispatch degenerated to one worker");
+    let balance = eng.predicted_balance(&bcs);
+    assert!(
+        balance.imbalance < 2.0,
+        "stride dispatch badly imbalanced: {}",
+        balance.imbalance
+    );
+}
+
+#[cfg(pjrt)]
+mod pjrt {
+    //! The live PJRT path; skips when artifacts are absent.
+
+    use prunemap::accuracy::Assignment;
+    use prunemap::coordinator::{run_pipeline, PipelineConfig};
+    use prunemap::latmodel::LatencyModel;
+    use prunemap::mapping::{map_rule_based, RuleConfig};
+    use prunemap::models::zoo;
+    use prunemap::pruning::Scheme;
+    use prunemap::rng::Rng;
+    use prunemap::runtime::Runtime;
+    use prunemap::simulator::DeviceProfile;
+    use prunemap::train::{SynthDataset, TrainDriver};
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::open(dir).expect("open runtime"))
+    }
+
+    #[test]
+    fn train_step_reduces_loss() {
+        let Some(rt) = runtime() else { return };
+        let mut d = TrainDriver::new(&rt, 7).unwrap();
+        let ds = SynthDataset::cifar_like(7);
+        let mut rng = Rng::new(8);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let (x, y) = ds.batch(d.batch_size(), &mut rng);
+            let s = d.step(&x, &y, 0.05, 0.0).unwrap();
+            if first.is_none() {
+                first = Some(s.ce);
+            }
+            last = s.ce;
+        }
+        assert!(last < first.unwrap(), "loss {first:?} -> {last}");
+    }
+
+    #[test]
+    fn masks_survive_pjrt_training() {
+        let Some(rt) = runtime() else { return };
+        let mut d = TrainDriver::new(&rt, 9).unwrap();
+        let model = zoo::proxy_cnn();
+        let assigns: Vec<Assignment> = model
+            .layers
+            .iter()
+            .map(|l| Assignment {
+                scheme: if l.kind == prunemap::models::LayerKind::Fc {
+                    Scheme::Block { bp: 8, bq: 8 }
+                } else {
+                    Scheme::BlockPunched { bf: 4, bc: 4 }
+                },
+                compression: 4.0,
+            })
+            .collect();
+        let lib = prunemap::pruning::PatternLibrary::default8();
+        d.prune_with(&assigns, &lib).unwrap();
+        let masks: Vec<_> = d.masks.clone();
+        let ds = SynthDataset::cifar_like(9);
+        let mut rng = Rng::new(10);
+        for _ in 0..5 {
+            let (x, y) = ds.batch(d.batch_size(), &mut rng);
+            d.step(&x, &y, 0.05, 0.0).unwrap();
+        }
+        // every masked weight must still be zero after PJRT updates
+        for (w, m) in d.weights().iter().zip(&masks) {
+            for (v, mk) in w.data().iter().zip(m.data()) {
+                if *mk == 0.0 {
+                    assert_eq!(*v, 0.0, "pruned weight resurrected");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reweighted_penalty_matches_in_graph_loss_shift() {
+        // CE reported by the artifact excludes the penalty term, but the
+        // penalty influences gradients: with a huge alpha the weights shrink.
+        let Some(rt) = runtime() else { return };
+        let model = zoo::proxy_cnn();
+        let assigns: Vec<Assignment> = model
+            .layers
+            .iter()
+            .map(|l| Assignment {
+                scheme: if l.kind == prunemap::models::LayerKind::Fc {
+                    Scheme::StructuredRow
+                } else {
+                    Scheme::BlockPunched { bf: 4, bc: 4 }
+                },
+                compression: 1.0,
+            })
+            .collect();
+        // identical training with and without the penalty; the regularized
+        // run must end with smaller weight norms (paper Eq. 1's lambda term)
+        let run = |lam: f32| -> f32 {
+            let mut d = TrainDriver::new(&rt, 11).unwrap();
+            d.update_alphas(&assigns);
+            let ds = SynthDataset::cifar_like(11);
+            let mut rng = Rng::new(12);
+            for _ in 0..12 {
+                let (x, y) = ds.batch(d.batch_size(), &mut rng);
+                d.step(&x, &y, 0.01, lam).unwrap();
+                d.update_alphas(&assigns);
+            }
+            d.weights().iter().map(|w| w.sq_norm()).sum()
+        };
+        let with_penalty = run(0.02);
+        let without = run(0.0);
+        assert!(
+            with_penalty < without,
+            "reweighted penalty failed to shrink weights: {with_penalty} !< {without}"
+        );
+    }
+
+    #[test]
+    fn short_pipeline_end_to_end() {
+        let Some(rt) = runtime() else { return };
+        let dev = DeviceProfile::s10();
+        let model = zoo::proxy_cnn();
+        let lat = LatencyModel::build(&dev);
+        let assigns = map_rule_based(&model, &lat, &RuleConfig::default());
+        let cfg = PipelineConfig {
+            pretrain_steps: 40,
+            reg_epochs: 2,
+            steps_per_epoch: 10,
+            retrain_steps: 30,
+            ..Default::default()
+        };
+        let rep = run_pipeline(&rt, &model, &assigns, &dev, &cfg).unwrap();
+        assert_eq!(
+            rep.loss_curve.len(),
+            cfg.pretrain_steps + cfg.reg_epochs * cfg.steps_per_epoch + cfg.retrain_steps
+        );
+        assert!(rep.overall_compression > 1.5, "{}", rep.overall_compression);
+        assert!(rep.speedup() > 1.0);
+        // learning happened
+        let head: f32 = rep.loss_curve[..10].iter().sum::<f32>() / 10.0;
+        let tail: f32 =
+            rep.loss_curve[rep.loss_curve.len() - 10..].iter().sum::<f32>() / 10.0;
+        assert!(tail < head, "loss {head} -> {tail}");
+    }
+
+    #[test]
+    fn forward_artifact_respects_masks() {
+        let Some(rt) = runtime() else { return };
+        let mut d = TrainDriver::new(&rt, 13).unwrap();
+        let ds = SynthDataset::cifar_like(13);
+        let mut rng = Rng::new(14);
+        let (x, _) = ds.batch(d.batch_size(), &mut rng);
+        let before = d.forward(&x).unwrap();
+        // zero all masks -> logits collapse to biases (zeros)
+        let zero_masks: Vec<_> = d
+            .masks
+            .iter()
+            .map(|m| prunemap::tensor::Tensor::zeros(m.shape()))
+            .collect();
+        d.set_masks(zero_masks).unwrap();
+        let after = d.forward(&x).unwrap();
+        assert!(before.iter().any(|v| v.abs() > 1e-3));
+        assert!(after.iter().all(|v| v.abs() < 1e-5), "masked forward non-zero");
+    }
 }

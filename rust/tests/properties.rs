@@ -9,7 +9,9 @@ use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::reweighted;
 use prunemap::rng::Rng;
 use prunemap::simulator::{layer_latency_ms, DeviceProfile, ExecConfig};
-use prunemap::sparse::{load_balance, permute_rows, reorder_rows, row_nnz_counts, Bcs, Csr};
+use prunemap::sparse::{
+    load_balance, permute_rows, reorder_rows, row_nnz_counts, Bcs, Csr, Engine,
+};
 use prunemap::tensor::Tensor;
 use prunemap::util::prop::{dim, for_cases};
 
@@ -49,6 +51,88 @@ fn prop_bcs_spmv_equals_csr_spmv() {
         let yc = Csr::from_dense(&t).spmv(&x);
         for (a, b) in yb.iter().zip(&yc) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_bcs_roundtrip_and_spmv_parity_on_pruned_masks() {
+    // the satellite property set on the paper's three mask families:
+    // exact BCS roundtrip, and BCS == CSR == dense matvec within 1e-5
+    let lib = PatternLibrary::default8();
+    for_cases(12, 0xB9, |rng| {
+        let f = 4 * dim(rng, 1, 8);
+        let c = 4 * dim(rng, 1, 8);
+        let w = Tensor::he_normal(&[f, c, 3, 3], c * 9, &mut rng.fork(1));
+        let comp = 2.0 + rng.f32() * 6.0;
+        for scheme in [
+            Scheme::Unstructured,
+            Scheme::Pattern,
+            Scheme::BlockPunched { bf: 4, bc: 4 },
+        ] {
+            let r = prune(&w, &scheme, comp, &lib);
+            let t = w.hadamard(&r.mask).conv_to_gemm();
+            let b = Bcs::from_dense(&t);
+            assert_eq!(b.to_dense(), t, "{scheme:?}: BCS roundtrip");
+            assert_eq!(b.nnz(), t.nnz(), "{scheme:?}");
+            let csr = Csr::from_dense(&t);
+            let x: Vec<f32> = (0..f).map(|_| rng.normal()).collect();
+            let yb = b.spmv(&x);
+            let yc = csr.spmv(&x);
+            let yd = t.matvec(&x);
+            for i in 0..yb.len() {
+                assert!((yb[i] - yc[i]).abs() < 1e-5, "{scheme:?} bcs/csr row {i}");
+                assert!((yb[i] - yd[i]).abs() < 1e-5, "{scheme:?} bcs/dense row {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bcs_index_bytes_beat_csr_on_block_pruned() {
+    // the paper's pipeline (punched mask -> GEMM view -> row reorder):
+    // BCS's whole reason to exist is a smaller non-value index
+    let lib = PatternLibrary::default8();
+    for_cases(10, 0xBA, |rng| {
+        let f = 8 * dim(rng, 2, 7);
+        let c = 8 * dim(rng, 2, 7);
+        let w = Tensor::he_normal(&[f, c, 3, 3], c * 9, &mut rng.fork(2));
+        let comp = 3.0 + rng.f32() * 5.0;
+        let r = prune(&w, &Scheme::BlockPunched { bf: 8, bc: 8 }, comp, &lib);
+        let gemm = w.hadamard(&r.mask).conv_to_gemm();
+        let t = permute_rows(&gemm, &reorder_rows(&gemm));
+        let b = Bcs::from_dense(&t);
+        let csr = Csr::from_dense(&t);
+        assert!(
+            b.index_bytes() <= csr.index_bytes(),
+            "{f}x{c} @ {comp:.1}x: BCS index {}B > CSR index {}B",
+            b.index_bytes(),
+            csr.index_bytes()
+        );
+    });
+}
+
+#[test]
+fn prop_engine_spmm_equals_serial_spmv_any_thread_count() {
+    for_cases(15, 0xBB, |rng| {
+        let rows = dim(rng, 1, 60);
+        let cols = dim(rng, 1, 40);
+        let t = random_sparse(rng, rows, cols, rng.f32() * 0.6);
+        let bcs = Bcs::from_dense(&t);
+        let batch = dim(rng, 1, 6);
+        let x: Vec<f32> = (0..cols * batch).map(|_| rng.normal()).collect();
+        let threads = dim(rng, 1, 9);
+        let y = Engine::new(threads).spmm(&bcs, &x, batch);
+        for b in 0..batch {
+            let col: Vec<f32> = (0..cols).map(|c| x[c * batch + b]).collect();
+            let serial = bcs.spmv(&col);
+            for r in 0..rows {
+                assert_eq!(
+                    y[r * batch + b],
+                    serial[r],
+                    "rows={rows} cols={cols} batch={batch} threads={threads} (r={r}, b={b})"
+                );
+            }
         }
     });
 }
