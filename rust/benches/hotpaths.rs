@@ -2,20 +2,28 @@
 //! Mask generation, BCS/CSR conversion, row reorder, the batched
 //! multi-threaded sparse execution engine (serial-vs-threaded and
 //! spmv-vs-spmm sweeps across block/pattern/unstructured layouts),
-//! latency-model build, GA tuning, one RL search iteration, and (under
-//! `--cfg pjrt`, when artifacts exist) the PJRT block-matmul execution.
+//! whole-network end-to-end inference through the graph executor (VGG-16 /
+//! MobileNet-V1 CIFAR at several batch sizes, with a measured-vs-modeled
+//! calibration JSON record per network), latency-model build, GA tuning,
+//! one RL search iteration, and (under `--cfg pjrt`, when artifacts exist)
+//! the PJRT block-matmul execution.
+//!
+//! `cargo bench -- --threads N` overrides the engine worker count.
 
 use std::time::Duration;
 
+use prunemap::accuracy::Assignment;
 use prunemap::latmodel::LatencyModel;
-use prunemap::mapping::{map_search_based, SearchConfig};
+use prunemap::mapping::{map_rule_based, map_search_based, RuleConfig, SearchConfig};
 use prunemap::models::{zoo, Dataset, LayerSpec};
 use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::rng::Rng;
-use prunemap::simulator::DeviceProfile;
+use prunemap::runtime::{CompiledNet, GraphExecutor, KernelChoice};
+use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::sparse::{permute_rows, reorder_rows, Bcs, Csr, Engine, SparseKernel};
 use prunemap::tensor::Tensor;
-use prunemap::util::bench::{bench, black_box, header, BenchStats};
+use prunemap::util::bench::{bench, bench_n, black_box, header, BenchStats};
+use prunemap::util::cli::Args;
 
 /// Masked + reordered GEMM view for one pruning layout.
 fn layout(
@@ -99,7 +107,11 @@ fn main() {
     );
 
     // --- execution engine: spmv vs spmm, serial vs threaded ----------------
-    let threads = rayon::current_num_threads().max(4);
+    let args = Args::from_env();
+    let threads = match args.get("threads") {
+        Some(_) => args.engine_threads().expect("--threads expects an integer"),
+        None => rayon::current_num_threads().max(4),
+    };
     println!("\n## execution engine (threads = {threads})\n");
     header();
     let serial = Engine::serial();
@@ -153,6 +165,48 @@ fn main() {
         },
     );
     report_speedup(&s, &t);
+
+    // --- whole-network graph executor (im2col conv + fused epilogues) ------
+    println!("\n## graph executor: end-to-end pruned networks (threads = {threads})\n");
+    header();
+    let lat = LatencyModel::build(&dev);
+    for (name, model) in [
+        ("mobilenet_v1_cifar", zoo::mobilenet_v1(Dataset::Cifar10)),
+        ("vgg16_cifar", zoo::vgg16(Dataset::Cifar10)),
+    ] {
+        let assigns: Vec<Assignment> = map_rule_based(&model, &lat, &RuleConfig::default());
+        let net = CompiledNet::compile(&model, &assigns, 11, KernelChoice::Auto)
+            .expect("compile network");
+        let (c, h, w) = net.input_shape;
+        println!(
+            "    {name}: {} layers -> {} steps, {} arena slots, {} retained weights",
+            net.layers.len(),
+            net.steps.len(),
+            net.num_slots,
+            net.total_nnz()
+        );
+        let serial_exec = GraphExecutor::serial();
+        let threaded_exec = GraphExecutor::new(threads);
+        for batch in [1usize, 8] {
+            let input: Vec<f32> = (0..batch * c * h * w)
+                .map(|i| ((i % 19) as f32) * 0.21 - 1.9)
+                .collect();
+            let s = bench_n(&format!("{name}_infer_b{batch}_serial"), 3, || {
+                black_box(serial_exec.run(&net, &input, batch).unwrap());
+            });
+            let t = bench_n(&format!("{name}_infer_b{batch}_threads{threads}"), 3, || {
+                black_box(threaded_exec.run(&net, &input, batch).unwrap());
+            });
+            if batch == 8 {
+                report_speedup(&s, &t);
+            }
+        }
+        // measured-vs-modeled calibration record (JSON via util::json) so
+        // BENCH trajectories can track model-vs-reality drift across PRs
+        let cmp = measured_vs_modeled_network(&model, &assigns, &dev, &net, 8, threads, 2)
+            .expect("calibration run");
+        println!("    calibration: {}", cmp.to_json().compact());
+    }
 
     // --- mapping machinery -------------------------------------------------
     println!();

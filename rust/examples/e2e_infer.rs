@@ -1,0 +1,93 @@
+//! End-to-end native inference: map a pruned zoo CNN and run every layer
+//! through the graph executor on the sparse engine.
+//!
+//! ```sh
+//! cargo run --release --example e2e_infer [-- --threads N --batch N]
+//! ```
+//!
+//! Prints the per-layer scheme mapping with measured per-step latency at
+//! several batch sizes, verifies the executor's determinism guarantee
+//! (bit-for-bit across thread counts), and writes a measured-vs-modeled
+//! calibration record to `target/measured_vs_modeled.json`.
+
+use prunemap::accuracy::Assignment;
+use prunemap::latmodel::LatencyModel;
+use prunemap::mapping::{map_rule_based, RuleConfig};
+use prunemap::models::{zoo, Dataset};
+use prunemap::runtime::{CompiledNet, GraphExecutor, KernelChoice};
+use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
+use prunemap::util::cli::Args;
+
+fn main() -> prunemap::Result<()> {
+    let args = Args::from_env();
+    let threads = args.engine_threads()?;
+
+    // 1. pick a zoo CNN and map the best-suited scheme per layer
+    //    (training-free rule-based method)
+    let dev = DeviceProfile::s10();
+    let model = zoo::mobilenet_v1(Dataset::Cifar10);
+    let lat = LatencyModel::build(&dev);
+    let assigns: Vec<Assignment> = map_rule_based(&model, &lat, &RuleConfig::default());
+
+    // 2. lower the fused plan once: masks, BCS/CSR conversion, im2col
+    //    shapes, arena slots — reused by every run below
+    let net = CompiledNet::compile(&model, &assigns, 7, KernelChoice::Auto)?;
+    println!(
+        "{}: {} prunable layers -> {} steps, {} arena slots, {} retained weights\n",
+        model.name,
+        net.layers.len(),
+        net.steps.len(),
+        net.num_slots,
+        net.total_nnz()
+    );
+
+    // 3. run end to end and report per-layer scheme + measured latency
+    let exec = GraphExecutor::new(threads);
+    let (c, h, w) = net.input_shape;
+    let batch = args.batch_size(1)?;
+    let input: Vec<f32> = (0..batch * c * h * w)
+        .map(|i| ((i % 13) as f32) * 0.3 - 1.8)
+        .collect();
+    let _warmup = exec.run(&net, &input, batch)?;
+    let (out, timings) = exec.run_timed(&net, &input, batch)?;
+    println!("{:<14} {:>14} {:>6} {:>8} {:>10}", "layer", "scheme", "comp", "backend", "ms");
+    let summaries: std::collections::HashMap<String, _> = net
+        .summaries()
+        .into_iter()
+        .map(|s| (s.name.clone(), s))
+        .collect();
+    let mut total = 0.0;
+    for t in &timings {
+        total += t.ms;
+        if let Some(s) = summaries.get(&t.name) {
+            println!(
+                "{:<14} {:>14} {:>5.1}x {:>8} {:>9.3}ms",
+                s.name, s.scheme, s.compression, s.backend, t.ms
+            );
+        }
+    }
+    println!("(+ glue steps) total {total:.3}ms | output {} logits/sample", out.len() / batch);
+
+    // 4. determinism: N threads and 1 thread agree bit-for-bit
+    let serial = GraphExecutor::serial().run(&net, &input, batch)?;
+    assert_eq!(serial, out, "threaded output must be bit-for-bit serial");
+    println!("determinism: {} threads == serial, bit-for-bit", exec.threads());
+
+    // 5. batch scaling + calibration record for BENCH trajectories
+    for b in [1usize, 4, 16] {
+        let cmp = measured_vs_modeled_network(&model, &assigns, &dev, &net, b, threads, 3)?;
+        println!(
+            "batch {b:>2}: measured {:.3}ms | modeled {:.3}ms (batch-1 mobile) | ratio {:.2}",
+            cmp.measured_ms,
+            cmp.modeled_ms,
+            cmp.ratio()
+        );
+        if b == 1 {
+            let path = "target/measured_vs_modeled.json";
+            std::fs::create_dir_all("target").ok();
+            std::fs::write(path, cmp.to_json().pretty())?;
+            println!("          wrote {path}");
+        }
+    }
+    Ok(())
+}

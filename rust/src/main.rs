@@ -11,6 +11,9 @@
 //!   all                    every table and figure in order
 //!   latmodel --out F       build + save the device latency model
 //!   map --model M --dataset D --method rule|search
+//!   infer --model M --dataset D [--threads N] [--batch N] [--json-out F]
+//!                          native end-to-end inference through the graph
+//!                          executor: per-layer scheme + measured latency
 //!   e2e [--steps N]        live pipeline on the proxy CNN (needs artifacts)
 //! ```
 
@@ -25,7 +28,8 @@ use prunemap::mapping::{self, map_rule_based, map_search_based, RuleConfig, Sear
 use prunemap::models::{zoo, Dataset, ModelSpec};
 #[cfg(pjrt)]
 use prunemap::runtime::Runtime;
-use prunemap::simulator::DeviceProfile;
+use prunemap::runtime::{CompiledNet, GraphExecutor, KernelChoice};
+use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::util::cli::Args;
 
 fn model_by_name(name: &str, ds: Dataset) -> Result<ModelSpec> {
@@ -89,6 +93,79 @@ fn cmd_map(args: &Args) -> Result<()> {
         dense / e.latency_ms,
         e.macs / 1e9
     );
+    Ok(())
+}
+
+/// Map a zoo model, synthesize masked weights, and run it end to end on
+/// the native graph executor — per-layer scheme + measured latency, plus a
+/// measured-vs-modeled calibration JSON record.
+fn cmd_infer(args: &Args) -> Result<()> {
+    let dev = device(args)?;
+    let ds = dataset_by_name(args.get_or("dataset", "cifar10"))?;
+    let model = model_by_name(args.get_or("model", "mobilenetv1"), ds)?;
+    let threads = args.engine_threads()?;
+    let batch = args.batch_size(1)?;
+    let seed = args.get_u64("seed", 7)?;
+    let reps = args.get_usize("reps", 3)?;
+    let assigns: Vec<Assignment> = match args.get_or("method", "rule") {
+        "rule" => {
+            let lat = LatencyModel::build(&dev);
+            map_rule_based(&model, &lat, &RuleConfig::default())
+        }
+        "search" => {
+            let cfg = SearchConfig {
+                iterations: args.get_usize("iterations", 30)?,
+                seed: args.get_u64("search-seed", 0xC0FFEE)?,
+                ..Default::default()
+            };
+            map_search_based(&model, &dev, &cfg).0
+        }
+        other => return Err(anyhow!("unknown method '{other}' (rule|search)")),
+    };
+
+    let net = CompiledNet::compile(&model, &assigns, seed, KernelChoice::Auto)?;
+    let exec = GraphExecutor::new(threads);
+    let (c, h, w) = net.input_shape;
+    let input: Vec<f32> = (0..batch * c * h * w)
+        .map(|i| ((i % 17) as f32) * 0.25 - 2.0)
+        .collect();
+    let _warmup = exec.run(&net, &input, batch)?;
+    let (_, timings) = exec.run_timed(&net, &input, batch)?;
+
+    println!(
+        "{} ({} layers, {} steps) | input {c}x{h}x{w} | batch {batch} | {threads} threads\n",
+        model.name,
+        net.layers.len(),
+        net.steps.len()
+    );
+    println!(
+        "{:<16} {:>14} {:>6} {:>8} {:>12} {:>10}",
+        "layer", "scheme", "comp", "backend", "nnz", "ms"
+    );
+    let summaries: std::collections::HashMap<String, prunemap::runtime::graph::LayerSummary> =
+        net.summaries().into_iter().map(|s| (s.name.clone(), s)).collect();
+    let mut total_ms = 0.0;
+    for t in &timings {
+        total_ms += t.ms;
+        match summaries.get(&t.name) {
+            Some(s) => println!(
+                "{:<16} {:>14} {:>5.1}x {:>8} {:>12} {:>9.3}ms",
+                s.name, s.scheme, s.compression, s.backend, s.nnz, t.ms
+            ),
+            None => println!(
+                "{:<16} {:>14} {:>6} {:>8} {:>12} {:>9.3}ms",
+                t.name, "-", "-", "-", "-", t.ms
+            ),
+        }
+    }
+    println!("\ntotal {total_ms:.3}ms measured (host, whole batch)");
+
+    let cmp = measured_vs_modeled_network(&model, &assigns, &dev, &net, batch, threads, reps)?;
+    println!("measured-vs-modeled: {}", cmp.to_json().compact());
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, cmp.to_json().pretty())?;
+        println!("wrote calibration record to {path}");
+    }
     Ok(())
 }
 
@@ -172,6 +249,7 @@ fn run() -> Result<()> {
             println!("saved {} settings for {} to {out}", m.len(), m.device);
         }
         "map" => cmd_map(&args)?,
+        "infer" => cmd_infer(&args)?,
         #[cfg(pjrt)]
         "e2e" => cmd_e2e(&args)?,
         #[cfg(not(pjrt))]
@@ -182,7 +260,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|e2e> [--device s10|s20|s21]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|e2e> [--device s10|s20|s21] [--threads N] [--batch N]"
             );
         }
     }

@@ -1,0 +1,300 @@
+//! im2col lowering: convolution as the batched GEMM the sparse engine runs.
+//!
+//! Activations flow through the executor in the **engine-native layout**
+//! `[C, batch, H*W]` (channel-major, then sample, then spatial position) —
+//! exactly the `[rows, B]` matrix [`crate::sparse::Engine::spmm`] produces
+//! when the GEMM batch dimension is `batch * out_positions`.  Keeping every
+//! step in this layout means a conv's output feeds the next layer's im2col
+//! with no transposes, and per-column accumulation order is independent of
+//! both thread count and batch width (the executor's bit-for-bit guarantee).
+//!
+//! Padding is SAME with `out = ceil(in / stride)`, mirroring
+//! [`crate::models::LayerSpec::out_hw`] so lowered shapes agree with the
+//! spec-level accounting the mapping methods use.
+//!
+//! The naive direct convolutions at the bottom are the *references* the
+//! property tests compare the lowered path against — deliberately the
+//! dumbest possible loops over NCHW.
+
+use crate::tensor::Tensor;
+
+/// SAME-padding geometry for one spatial axis: `(out_size, leading_pad)`.
+///
+/// `pad_total = (out - 1) * stride + k - in` split TF-style (smaller half
+/// leading).
+pub fn same_geometry(in_sz: usize, k: usize, stride: usize) -> (usize, usize) {
+    assert!(in_sz > 0 && k > 0 && stride > 0);
+    let out = in_sz.div_ceil(stride);
+    let pad_total = ((out - 1) * stride + k).saturating_sub(in_sz);
+    (out, pad_total / 2)
+}
+
+/// Repack a batched NCHW tensor `[batch, C, H*W]` into the engine-native
+/// activation layout `[C, batch, H*W]`.
+pub fn nchw_to_act(x: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+    assert_eq!(x.len(), batch * c * hw, "input must be [batch, C, H*W]");
+    let mut act = vec![0.0f32; x.len()];
+    for b in 0..batch {
+        for ci in 0..c {
+            let src = &x[(b * c + ci) * hw..(b * c + ci + 1) * hw];
+            act[(ci * batch + b) * hw..(ci * batch + b + 1) * hw].copy_from_slice(src);
+        }
+    }
+    act
+}
+
+/// Inverse of [`nchw_to_act`]: engine layout back to `[batch, C, H*W]`.
+pub fn act_to_nchw(act: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+    assert_eq!(act.len(), batch * c * hw, "activation must be [C, batch, H*W]");
+    let mut x = vec![0.0f32; act.len()];
+    for ci in 0..c {
+        for b in 0..batch {
+            let src = &act[(ci * batch + b) * hw..(ci * batch + b + 1) * hw];
+            x[(b * c + ci) * hw..(b * c + ci + 1) * hw].copy_from_slice(src);
+        }
+    }
+    x
+}
+
+/// Expand `[C, batch, H*W]` activations into im2col columns
+/// `X = [C*KH*KW, batch * out_positions]`, the `[cols, batch]` right-hand
+/// side [`crate::sparse::Engine::spmm`] consumes.
+///
+/// Column `b * npos + oh*OW + ow` holds the receptive field of output
+/// position `(oh, ow)` of sample `b`; row `(c*KH + kh)*KW + kw` matches
+/// [`Tensor::conv_to_gemm`]'s row layout, so a layer's transposed GEMM-view
+/// weights `[F, C*KH*KW]` multiply these columns directly.  Out-of-image
+/// taps stay zero (SAME padding).
+///
+/// Writes into `x` (cleared and zero-filled first, so the caller can reuse
+/// one scratch buffer across layers); returns `(out_h, out_w)`.
+pub fn im2col(
+    act: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    batch: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    x: &mut Vec<f32>,
+) -> (usize, usize) {
+    assert_eq!(act.len(), c * batch * h * w, "activation must be [C, batch, H*W]");
+    let (oh, pad_h) = same_geometry(h, kh, stride);
+    let (ow, pad_w) = same_geometry(w, kw, stride);
+    let npos = oh * ow;
+    let cols = batch * npos;
+    x.clear();
+    x.resize(c * kh * kw * cols, 0.0);
+    for ci in 0..c {
+        for khi in 0..kh {
+            for kwi in 0..kw {
+                let r = (ci * kh + khi) * kw + kwi;
+                let xrow = &mut x[r * cols..(r + 1) * cols];
+                for b in 0..batch {
+                    let src = &act[(ci * batch + b) * h * w..(ci * batch + b + 1) * h * w];
+                    let dst = &mut xrow[b * npos..(b + 1) * npos];
+                    for ohi in 0..oh {
+                        let ih = (ohi * stride + khi) as isize - pad_h as isize;
+                        if ih < 0 || ih >= h as isize {
+                            continue;
+                        }
+                        let irow = &src[ih as usize * w..(ih as usize + 1) * w];
+                        let orow = &mut dst[ohi * ow..(ohi + 1) * ow];
+                        for (owi, o) in orow.iter_mut().enumerate() {
+                            let iw = (owi * stride + kwi) as isize - pad_w as isize;
+                            if iw >= 0 && iw < w as isize {
+                                *o = irow[iw as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Naive direct convolution over NCHW input (reference for property tests).
+///
+/// `input` is `[batch, C, H, W]`, `weight` is 4-D `(F, C, KH, KW)` (already
+/// masked); returns `[batch, F, OH, OW]` with the same SAME-padding
+/// geometry as [`im2col`].
+pub fn direct_conv(
+    input: &[f32],
+    batch: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    weight: &Tensor,
+    stride: usize,
+) -> Vec<f32> {
+    assert_eq!(weight.ndim(), 4);
+    let (f, wc, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    assert_eq!(wc, c, "weight channels must match input channels");
+    assert_eq!(input.len(), batch * c * h * w);
+    let (oh, pad_h) = same_geometry(h, kh, stride);
+    let (ow, pad_w) = same_geometry(w, kw, stride);
+    let mut out = vec![0.0f32; batch * f * oh * ow];
+    for b in 0..batch {
+        for fi in 0..f {
+            for ohi in 0..oh {
+                for owi in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..c {
+                        for khi in 0..kh {
+                            let ih = (ohi * stride + khi) as isize - pad_h as isize;
+                            if ih < 0 || ih >= h as isize {
+                                continue;
+                            }
+                            for kwi in 0..kw {
+                                let iw = (owi * stride + kwi) as isize - pad_w as isize;
+                                if iw < 0 || iw >= w as isize {
+                                    continue;
+                                }
+                                acc += weight.at4(fi, ci, khi, kwi)
+                                    * input[((b * c + ci) * h + ih as usize) * w + iw as usize];
+                            }
+                        }
+                    }
+                    out[((b * f + fi) * oh + ohi) * ow + owi] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Naive depthwise convolution (reference): `weight` is `(C, 1, KH, KW)`,
+/// one filter per input channel; returns `[batch, C, OH, OW]`.
+pub fn direct_dwconv(
+    input: &[f32],
+    batch: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    weight: &Tensor,
+    stride: usize,
+) -> Vec<f32> {
+    assert_eq!(weight.ndim(), 4);
+    assert_eq!(weight.shape()[0], c, "depthwise weight must have C filters");
+    assert_eq!(weight.shape()[1], 1, "depthwise weight must have 1 channel per filter");
+    let (kh, kw) = (weight.shape()[2], weight.shape()[3]);
+    assert_eq!(input.len(), batch * c * h * w);
+    let (oh, pad_h) = same_geometry(h, kh, stride);
+    let (ow, pad_w) = same_geometry(w, kw, stride);
+    let mut out = vec![0.0f32; batch * c * oh * ow];
+    for b in 0..batch {
+        for ci in 0..c {
+            for ohi in 0..oh {
+                for owi in 0..ow {
+                    let mut acc = 0.0f32;
+                    for khi in 0..kh {
+                        let ih = (ohi * stride + khi) as isize - pad_h as isize;
+                        if ih < 0 || ih >= h as isize {
+                            continue;
+                        }
+                        for kwi in 0..kw {
+                            let iw = (owi * stride + kwi) as isize - pad_w as isize;
+                            if iw < 0 || iw >= w as isize {
+                                continue;
+                            }
+                            acc += weight.at4(ci, 0, khi, kwi)
+                                * input[((b * c + ci) * h + ih as usize) * w + iw as usize];
+                        }
+                    }
+                    out[((b * c + ci) * oh + ohi) * ow + owi] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn same_geometry_matches_spec_out_hw() {
+        // k=3 s=1: pad 1 each side, size preserved
+        assert_eq!(same_geometry(32, 3, 1), (32, 1));
+        // k=3 s=2 even input: out = in/2, leading pad 0 (TF SAME)
+        assert_eq!(same_geometry(32, 3, 2), (16, 0));
+        // k=3 s=2 odd input
+        assert_eq!(same_geometry(7, 3, 2), (4, 1));
+        // k=1: no padding ever
+        assert_eq!(same_geometry(9, 1, 1), (9, 0));
+        assert_eq!(same_geometry(9, 1, 2), (5, 0));
+        // k=7 s=2 ImageNet stem
+        assert_eq!(same_geometry(224, 7, 2), (112, 2));
+    }
+
+    #[test]
+    fn nchw_roundtrip() {
+        let mut rng = Rng::new(1);
+        let (batch, c, hw) = (3, 4, 6);
+        let x: Vec<f32> = (0..batch * c * hw).map(|_| rng.normal()).collect();
+        let act = nchw_to_act(&x, batch, c, hw);
+        // channel 2 of sample 1 lands at [(2*batch + 1) * hw ..]
+        assert_eq!(act[(2 * batch + 1) * hw], x[(c + 2) * hw]);
+        assert_eq!(act_to_nchw(&act, batch, c, hw), x);
+    }
+
+    #[test]
+    fn im2col_1x1_is_a_permutation_of_the_input() {
+        let mut rng = Rng::new(2);
+        let (c, h, w, batch) = (3, 4, 4, 2);
+        let act: Vec<f32> = (0..c * batch * h * w).map(|_| rng.normal()).collect();
+        let mut x = Vec::new();
+        let (oh, ow) = im2col(&act, c, h, w, batch, 1, 1, 1, &mut x);
+        assert_eq!((oh, ow), (h, w));
+        let npos = h * w;
+        for ci in 0..c {
+            for b in 0..batch {
+                for p in 0..npos {
+                    assert_eq!(
+                        x[ci * batch * npos + b * npos + p],
+                        act[(ci * batch + b) * npos + p]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_padding_taps_are_zero() {
+        // all-ones single-channel input, 3x3 stride 1: corner columns have
+        // exactly 4 in-image taps
+        let (c, h, w, batch) = (1, 3, 3, 1);
+        let act = vec![1.0f32; c * h * w];
+        let mut x = Vec::new();
+        let (oh, ow) = im2col(&act, c, h, w, batch, 3, 3, 1, &mut x);
+        assert_eq!((oh, ow), (3, 3));
+        let cols = oh * ow;
+        let col_sum = |j: usize| (0..9).map(|r| x[r * cols + j]).sum::<f32>();
+        assert_eq!(col_sum(0), 4.0); // top-left corner
+        assert_eq!(col_sum(4), 9.0); // center
+        assert_eq!(col_sum(8), 4.0); // bottom-right corner
+    }
+
+    #[test]
+    fn direct_conv_identity_kernel_passes_input_through() {
+        let mut rng = Rng::new(3);
+        let (batch, c, h, w) = (2, 2, 5, 5);
+        let input: Vec<f32> = (0..batch * c * h * w).map(|_| rng.normal()).collect();
+        // 1x1 identity mixing: F == C, w[f,c] = delta(f,c)
+        let mut wt = Tensor::zeros(&[c, c, 1, 1]);
+        for i in 0..c {
+            wt.set4(i, i, 0, 0, 1.0);
+        }
+        let out = direct_conv(&input, batch, c, h, w, &wt, 1);
+        assert_eq!(out, input);
+    }
+}

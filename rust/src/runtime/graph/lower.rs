@@ -1,0 +1,828 @@
+//! Lowering: fused compiler plan -> executable program.
+//!
+//! [`CompiledNet::lower`] walks a [`Graph`]'s [`FusionPlan`] in topological
+//! order and emits a flat list of [`Step`]s:
+//!
+//! * every `Op::Layer` becomes one [`StepOp::Gemm`] over a prebuilt
+//!   [`SparseLayer`] (compressed weights are converted **once** here and
+//!   reused across every run) — standard convs via im2col, depthwise convs
+//!   as a block-diagonal per-channel GEMM over the same im2col columns, FC
+//!   as a passthrough;
+//! * elementwise nodes the plan fused into a layer ride along as
+//!   [`EpiOp`]s; unfused ones become standalone steps;
+//! * **glue steps** (2x2 max pool / global average pool / flatten) are
+//!   inserted wherever the zoo specs imply a spatial reduction between
+//!   layers (`LayerSpec.in_hw` shrinking, FC consuming a conv map) — the
+//!   same implicit-downsample reconciliation real CNN graphs carry as
+//!   explicit pool nodes.
+//!
+//! Intermediate activations are assigned to **arena slots** by a linear
+//! scan over buffer liveness: a step's destination reuses the slot of any
+//! buffer whose last read has passed, so a deep chain like VGG-16 runs in a
+//! handful of physical buffers regardless of depth.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::accuracy::Assignment;
+use crate::compiler::fusion::FusionPlan;
+use crate::compiler::ir::{Graph, Op};
+use crate::models::{LayerKind, LayerSpec, ModelSpec};
+use crate::pruning::{prune, PatternLibrary, Scheme};
+use crate::rng::Rng;
+use crate::runtime::native::{KernelChoice, SparseLayer};
+use crate::tensor::Tensor;
+
+use super::ops::{BnParams, EpiOp};
+
+/// One masked (pruned) weight tensor in its natural layout: 4-D
+/// `(F, C, KH, KW)` for conv, 4-D `(C, 1, KH, KW)` for depthwise, 2-D
+/// `(in, out)` for FC.
+#[derive(Debug, Clone)]
+pub struct MaskedLayer {
+    pub spec: LayerSpec,
+    pub weight: Tensor,
+    pub scheme: Scheme,
+    pub compression: f32,
+}
+
+/// Weights + batch-norm statistics for a whole network.
+#[derive(Debug, Clone)]
+pub struct NetWeights {
+    pub layers: Vec<MaskedLayer>,
+    /// Per-BN-node parameters keyed by node name (`"{layer}_bn"` in the
+    /// canonical inference graph); missing entries fall back to identity.
+    pub bn: BTreeMap<String, BnParams>,
+}
+
+impl NetWeights {
+    /// Deterministically synthesize masked weights for `model` under the
+    /// per-layer `assigns` (He-normal init, one-shot magnitude masks) plus
+    /// synthetic BN statistics — the stand-in for a trained checkpoint.
+    pub fn synthesize(model: &ModelSpec, assigns: &[Assignment], seed: u64) -> Result<NetWeights> {
+        if model.layers.len() != assigns.len() {
+            bail!(
+                "{} layers but {} assignments for {}",
+                model.layers.len(),
+                assigns.len(),
+                model.name
+            );
+        }
+        let lib = PatternLibrary::default8();
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(model.layers.len());
+        let mut bn = BTreeMap::new();
+        for (spec, a) in model.layers.iter().zip(assigns) {
+            if !a.scheme.applicable(spec) {
+                bail!("scheme {} not applicable to layer '{}'", a.scheme.label(), spec.name);
+            }
+            let shape: Vec<usize> = match spec.kind {
+                LayerKind::Conv => vec![spec.out_ch, spec.in_ch, spec.kh, spec.kw],
+                LayerKind::DepthwiseConv => vec![spec.out_ch, 1, spec.kh, spec.kw],
+                LayerKind::Fc => vec![spec.in_ch, spec.out_ch],
+            };
+            let fan_in = match spec.kind {
+                LayerKind::Conv => spec.in_ch * spec.kh * spec.kw,
+                LayerKind::DepthwiseConv => spec.kh * spec.kw,
+                LayerKind::Fc => spec.in_ch,
+            };
+            let mut lrng = rng.fork(layers.len() as u64);
+            let w = Tensor::he_normal(&shape, fan_in, &mut lrng);
+            let r = prune(&w, &a.scheme, a.compression, &lib);
+            layers.push(MaskedLayer {
+                spec: spec.clone(),
+                weight: w.hadamard(&r.mask),
+                scheme: a.scheme,
+                compression: a.compression,
+            });
+            if spec.kind != LayerKind::Fc {
+                bn.insert(format!("{}_bn", spec.name), BnParams::synth(spec.out_ch, &mut lrng));
+            }
+        }
+        Ok(NetWeights { layers, bn })
+    }
+}
+
+/// How a prunable layer's GEMM consumes its input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmKind {
+    /// im2col + `[F, C*KH*KW]` sparse weights.
+    Conv,
+    /// im2col + block-diagonal `[C, C*KH*KW]` per-channel weights.
+    Depthwise,
+    /// `[out, in]` sparse weights over `[in, batch]` input.
+    Fc,
+}
+
+/// One executable prunable layer: compressed weights converted once at
+/// lowering, shared by every subsequent run.
+pub struct LayerExec {
+    pub name: String,
+    pub spec: LayerSpec,
+    pub kind: GemmKind,
+    pub sparse: SparseLayer,
+    pub scheme: Scheme,
+    pub compression: f32,
+}
+
+/// Program step kinds.
+pub enum StepOp {
+    /// Sparse GEMM of `layers[layer]` plus fused epilogue ops.
+    Gemm { layer: usize, epilogue: Vec<EpiOp> },
+    /// Standalone batch-norm.
+    BatchNorm(BnParams),
+    /// Standalone ReLU.
+    Relu,
+    /// Standalone residual add (`dst = src + slots[other]`).
+    Add { other: usize },
+    /// 2x2 max pool, stride 2.
+    MaxPool2x2,
+    /// Global average pool to 1x1.
+    GlobalAvgPool,
+    /// CHW flatten into FC feature order.
+    Flatten,
+}
+
+/// One step of the lowered program.  `src`/`dst` (and `Add.other` /
+/// `EpiOp::Add.slot`) are arena slot ids; shapes are per-sample `(C, H, W)`.
+pub struct Step {
+    pub name: String,
+    pub op: StepOp,
+    pub src: usize,
+    pub dst: usize,
+    pub in_shape: (usize, usize, usize),
+    pub out_shape: (usize, usize, usize),
+}
+
+/// A lowered, executable network: run it with
+/// [`GraphExecutor`](super::GraphExecutor).
+pub struct CompiledNet {
+    pub name: String,
+    pub steps: Vec<Step>,
+    pub layers: Vec<LayerExec>,
+    /// Per-sample input shape `(C, H, W)`.
+    pub input_shape: (usize, usize, usize),
+    /// Per-sample output shape `(C, H, W)` — the shape of the buffer the
+    /// graph's Output node consumes (not necessarily the last step's).
+    pub output_shape: (usize, usize, usize),
+    /// Physical arena slots the program needs.
+    pub num_slots: usize,
+    pub input_slot: usize,
+    pub output_slot: usize,
+}
+
+/// Per-layer summary for reports (scheme, backend, sparsity).
+#[derive(Debug, Clone)]
+pub struct LayerSummary {
+    pub name: String,
+    pub scheme: String,
+    pub compression: f32,
+    pub backend: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+}
+
+impl CompiledNet {
+    /// One-call path: canonical inference graph + fusion + synthesized
+    /// weights + lowering.
+    pub fn compile(
+        model: &ModelSpec,
+        assigns: &[Assignment],
+        seed: u64,
+        choice: KernelChoice,
+    ) -> Result<CompiledNet> {
+        let graph = Graph::from_model(model);
+        let plan = crate::compiler::fuse(&graph);
+        let weights = NetWeights::synthesize(model, assigns, seed)?;
+        Self::lower(&graph, &plan, &weights, choice, &model.name)
+    }
+
+    /// Lower a fused plan over explicit weights.
+    pub fn lower(
+        graph: &Graph,
+        plan: &FusionPlan,
+        weights: &NetWeights,
+        choice: KernelChoice,
+        name: &str,
+    ) -> Result<CompiledNet> {
+        graph.topo_check()?;
+        let mut b = Lowerer::new(graph, plan, weights, choice);
+        let out_buf = b.build()?;
+        b.finish(name, out_buf)
+    }
+
+    /// Per-sample output element count.
+    pub fn output_len(&self) -> usize {
+        let (c, h, w) = self.output_shape;
+        c * h * w
+    }
+
+    /// Retained non-zeros across all prunable layers.
+    pub fn total_nnz(&self) -> usize {
+        self.layers.iter().map(|l| l.sparse.nnz()).sum()
+    }
+
+    /// Per-layer scheme/backend summary in execution order.
+    pub fn summaries(&self) -> Vec<LayerSummary> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let (rows, cols) = l.sparse.dims();
+                LayerSummary {
+                    name: l.name.clone(),
+                    scheme: l.scheme.label(),
+                    compression: l.compression,
+                    backend: l.sparse.backend(),
+                    rows,
+                    cols,
+                    nnz: l.sparse.nnz(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Build state: steps over *virtual* buffer ids, later renamed to arena
+/// slots by liveness.
+struct Lowerer<'a> {
+    graph: &'a Graph,
+    plan: &'a FusionPlan,
+    weights: &'a NetWeights,
+    choice: KernelChoice,
+    steps: Vec<Step>,
+    layers: Vec<LayerExec>,
+    /// node id -> virtual buffer holding its output
+    node_buf: HashMap<usize, usize>,
+    /// virtual buffer id -> per-sample shape
+    shapes: Vec<(usize, usize, usize)>,
+    input_shape: (usize, usize, usize),
+    /// graph layer-node id -> index into `weights.layers`
+    layer_idx: HashMap<usize, usize>,
+}
+
+impl<'a> Lowerer<'a> {
+    fn new(
+        graph: &'a Graph,
+        plan: &'a FusionPlan,
+        weights: &'a NetWeights,
+        choice: KernelChoice,
+    ) -> Lowerer<'a> {
+        let layer_idx = graph
+            .layer_nodes()
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.id, i))
+            .collect();
+        Lowerer {
+            graph,
+            plan,
+            weights,
+            choice,
+            steps: Vec::new(),
+            layers: Vec::new(),
+            node_buf: HashMap::new(),
+            shapes: Vec::new(),
+            input_shape: (0, 0, 0),
+            layer_idx,
+        }
+    }
+
+    fn new_buf(&mut self, shape: (usize, usize, usize)) -> usize {
+        self.shapes.push(shape);
+        self.shapes.len() - 1
+    }
+
+    fn emit(&mut self, name: String, op: StepOp, src: usize, shape: (usize, usize, usize)) -> usize {
+        let in_shape = self.shapes[src];
+        let dst = self.new_buf(shape);
+        self.steps.push(Step { name, op, src, dst, in_shape, out_shape: shape });
+        dst
+    }
+
+    /// Emit all steps; returns the virtual buffer holding the graph output.
+    fn build(&mut self) -> Result<usize> {
+        let graph = self.graph;
+        let plan = self.plan;
+        // graph input
+        let input = graph
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Input { .. }))
+            .ok_or_else(|| anyhow!("graph has no input node"))?;
+        let Op::Input { shape } = &input.op else { unreachable!() };
+        if shape.len() != 4 {
+            bail!("input shape must be NCHW, got {shape:?}");
+        }
+        self.input_shape = (shape[1], shape[2], shape[3]);
+        let buf = self.new_buf(self.input_shape);
+        self.node_buf.insert(input.id, buf);
+
+        // fusion kernels are emitted in anchor (= topological) order
+        for kernel in &plan.kernels {
+            let anchor = &graph.nodes[kernel.anchor];
+            match &anchor.op {
+                Op::Layer { layer } => self.lower_layer(kernel.anchor, layer, &kernel.epilogue)?,
+                Op::BatchNorm | Op::Relu | Op::Add | Op::Pool => {
+                    self.lower_standalone(kernel.anchor)?
+                }
+                Op::Input { .. } | Op::Output => {
+                    bail!("fusion plan anchored at a non-compute node '{}'", anchor.name)
+                }
+            }
+        }
+
+        // resolve the output buffer
+        let out_node = graph.nodes.iter().find(|n| matches!(n.op, Op::Output));
+        match out_node {
+            Some(n) => {
+                let src = *n
+                    .inputs
+                    .first()
+                    .ok_or_else(|| anyhow!("output node has no input"))?;
+                self.node_buf
+                    .get(&src)
+                    .copied()
+                    .ok_or_else(|| anyhow!("output depends on unlowered node {src}"))
+            }
+            None => self
+                .steps
+                .last()
+                .map(|s| s.dst)
+                .ok_or_else(|| anyhow!("empty program")),
+        }
+    }
+
+    /// Input-side glue: pool/flatten until the activation matches what the
+    /// layer spec expects.
+    fn glue(&mut self, mut buf: usize, spec: &LayerSpec) -> Result<usize> {
+        match spec.kind {
+            LayerKind::Conv | LayerKind::DepthwiseConv => {
+                let (c, mut h, mut w) = self.shapes[buf];
+                if c != spec.in_ch {
+                    bail!(
+                        "layer '{}' expects {} input channels, got {c}",
+                        spec.name,
+                        spec.in_ch
+                    );
+                }
+                while h > spec.in_hw {
+                    let shape = (c, h.div_ceil(2), w.div_ceil(2));
+                    buf = self.emit(
+                        format!("{}_pre_pool", spec.name),
+                        StepOp::MaxPool2x2,
+                        buf,
+                        shape,
+                    );
+                    (h, w) = (shape.1, shape.2);
+                }
+                if h != spec.in_hw || w != spec.in_hw {
+                    bail!(
+                        "layer '{}' expects {}x{} input, got {h}x{w}",
+                        spec.name,
+                        spec.in_hw,
+                        spec.in_hw
+                    );
+                }
+                Ok(buf)
+            }
+            LayerKind::Fc => {
+                loop {
+                    let (c, h, w) = self.shapes[buf];
+                    if c * h * w == spec.in_ch {
+                        if h * w > 1 {
+                            buf = self.emit(
+                                format!("{}_flatten", spec.name),
+                                StepOp::Flatten,
+                                buf,
+                                (c * h * w, 1, 1),
+                            );
+                        }
+                        return Ok(buf);
+                    }
+                    if c == spec.in_ch {
+                        // 1x1 handled above; >1x1 global-average pools
+                        buf = self.emit(
+                            format!("{}_gap", spec.name),
+                            StepOp::GlobalAvgPool,
+                            buf,
+                            (c, 1, 1),
+                        );
+                        return Ok(buf);
+                    }
+                    if h <= 1 && w <= 1 {
+                        bail!(
+                            "layer '{}' expects {} input features, got {c}x{h}x{w}",
+                            spec.name,
+                            spec.in_ch
+                        );
+                    }
+                    buf = self.emit(
+                        format!("{}_pre_pool", spec.name),
+                        StepOp::MaxPool2x2,
+                        buf,
+                        (c, h.div_ceil(2), w.div_ceil(2)),
+                    );
+                }
+            }
+        }
+    }
+
+    fn lower_layer(&mut self, node: usize, spec: &LayerSpec, epilogue: &[usize]) -> Result<()> {
+        let graph = self.graph;
+        let weights = self.weights;
+        let n = &graph.nodes[node];
+        let src_node = *n
+            .inputs
+            .first()
+            .ok_or_else(|| anyhow!("layer '{}' has no input", spec.name))?;
+        let src = *self
+            .node_buf
+            .get(&src_node)
+            .ok_or_else(|| anyhow!("layer '{}' input not lowered", spec.name))?;
+        let src = self.glue(src, spec)?;
+
+        let li = *self
+            .layer_idx
+            .get(&node)
+            .ok_or_else(|| anyhow!("no weight index for layer node {node}"))?;
+        let masked = weights
+            .layers
+            .get(li)
+            .ok_or_else(|| anyhow!("no weights for layer '{}' (index {li})", spec.name))?;
+        if masked.spec.name != spec.name {
+            bail!(
+                "weight order mismatch: graph layer '{}' vs weights '{}'",
+                spec.name,
+                masked.spec.name
+            );
+        }
+        let (kind, a) = lower_weight(masked)?;
+        let sparse = SparseLayer::from_masked(&a, self.choice);
+        self.layers.push(LayerExec {
+            name: spec.name.clone(),
+            spec: spec.clone(),
+            kind,
+            sparse,
+            scheme: masked.scheme,
+            compression: masked.compression,
+        });
+
+        // fused epilogue ops, in plan order
+        let chain: HashSet<usize> =
+            std::iter::once(node).chain(epilogue.iter().copied()).collect();
+        let mut epi = Vec::with_capacity(epilogue.len());
+        for &e in epilogue {
+            let en = &graph.nodes[e];
+            match en.op {
+                Op::BatchNorm => {
+                    let p = self
+                        .weights
+                        .bn
+                        .get(&en.name)
+                        .cloned()
+                        .unwrap_or_else(|| BnParams::identity(spec.out_ch));
+                    if p.channels() != spec.out_ch {
+                        bail!(
+                            "bn '{}' has {} channels, layer '{}' outputs {}",
+                            en.name,
+                            p.channels(),
+                            spec.name,
+                            spec.out_ch
+                        );
+                    }
+                    epi.push(EpiOp::BatchNorm(p));
+                }
+                Op::Relu => epi.push(EpiOp::Relu),
+                Op::Add => {
+                    let other = *en
+                        .inputs
+                        .iter()
+                        .find(|i| !chain.contains(*i))
+                        .ok_or_else(|| anyhow!("fused add '{}' has no residual input", en.name))?;
+                    let slot = *self
+                        .node_buf
+                        .get(&other)
+                        .ok_or_else(|| anyhow!("residual input of '{}' not lowered", en.name))?;
+                    let out_shape = match spec.kind {
+                        LayerKind::Fc => (spec.out_ch, 1, 1),
+                        _ => (spec.out_ch, spec.out_hw(), spec.out_hw()),
+                    };
+                    if self.shapes[slot] != out_shape {
+                        bail!(
+                            "fused add '{}' shape mismatch: {:?} vs {:?}",
+                            en.name,
+                            self.shapes[slot],
+                            out_shape
+                        );
+                    }
+                    epi.push(EpiOp::Add { slot });
+                }
+                _ => bail!("non-elementwise node '{}' in epilogue", en.name),
+            }
+        }
+
+        let out_shape = match spec.kind {
+            LayerKind::Fc => (spec.out_ch, 1, 1),
+            _ => (spec.out_ch, spec.out_hw(), spec.out_hw()),
+        };
+        let dst = self.emit(
+            spec.name.clone(),
+            StepOp::Gemm { layer: self.layers.len() - 1, epilogue: epi },
+            src,
+            out_shape,
+        );
+        self.node_buf.insert(node, dst);
+        for &e in epilogue {
+            self.node_buf.insert(e, dst);
+        }
+        Ok(())
+    }
+
+    fn lower_standalone(&mut self, node: usize) -> Result<()> {
+        let graph = self.graph;
+        let n = &graph.nodes[node];
+        let src_node = *n
+            .inputs
+            .first()
+            .ok_or_else(|| anyhow!("node '{}' has no input", n.name))?;
+        let src = *self
+            .node_buf
+            .get(&src_node)
+            .ok_or_else(|| anyhow!("node '{}' input not lowered", n.name))?;
+        let (c, h, w) = self.shapes[src];
+        let dst = match n.op {
+            Op::BatchNorm => {
+                let p = self
+                    .weights
+                    .bn
+                    .get(&n.name)
+                    .cloned()
+                    .unwrap_or_else(|| BnParams::identity(c));
+                if p.channels() != c {
+                    bail!("bn '{}' has {} channels, input has {c}", n.name, p.channels());
+                }
+                self.emit(n.name.clone(), StepOp::BatchNorm(p), src, (c, h, w))
+            }
+            Op::Relu => self.emit(n.name.clone(), StepOp::Relu, src, (c, h, w)),
+            Op::Add => {
+                let other_node = *n
+                    .inputs
+                    .get(1)
+                    .ok_or_else(|| anyhow!("add '{}' needs two inputs", n.name))?;
+                let other = *self
+                    .node_buf
+                    .get(&other_node)
+                    .ok_or_else(|| anyhow!("add '{}' input not lowered", n.name))?;
+                if self.shapes[other] != (c, h, w) {
+                    bail!(
+                        "add '{}' shape mismatch: {:?} vs {:?}",
+                        n.name,
+                        self.shapes[other],
+                        (c, h, w)
+                    );
+                }
+                self.emit(n.name.clone(), StepOp::Add { other }, src, (c, h, w))
+            }
+            Op::Pool => self.emit(
+                n.name.clone(),
+                StepOp::MaxPool2x2,
+                src,
+                (c, h.div_ceil(2), w.div_ceil(2)),
+            ),
+            _ => bail!("unexpected standalone op '{}'", n.name),
+        };
+        self.node_buf.insert(node, dst);
+        Ok(())
+    }
+
+    /// Rename virtual buffers to physical arena slots by liveness (linear
+    /// scan: a destination takes any slot whose buffer's last read has
+    /// passed).
+    fn finish(mut self, name: &str, out_buf: usize) -> Result<CompiledNet> {
+        let nbufs = self.shapes.len();
+
+        // last step index reading each virtual buffer
+        let mut last_read = vec![0usize; nbufs];
+        for (i, s) in self.steps.iter().enumerate() {
+            let mut reads = vec![s.src];
+            match &s.op {
+                StepOp::Add { other } => reads.push(*other),
+                StepOp::Gemm { epilogue, .. } => {
+                    for e in epilogue {
+                        if let EpiOp::Add { slot } = e {
+                            reads.push(*slot);
+                        }
+                    }
+                }
+                _ => {}
+            }
+            for r in reads {
+                last_read[r] = i;
+            }
+        }
+        last_read[out_buf] = usize::MAX; // never freed
+
+        let mut phys = vec![usize::MAX; nbufs];
+        let mut free: Vec<usize> = Vec::new();
+        let mut num_slots = 0usize;
+        let mut take = |free: &mut Vec<usize>| {
+            free.pop().unwrap_or_else(|| {
+                num_slots += 1;
+                num_slots - 1
+            })
+        };
+        phys[0] = take(&mut free); // input buffer, defined before step 0
+        for i in 0..self.steps.len() {
+            let dst = self.steps[i].dst;
+            phys[dst] = take(&mut free);
+            // free buffers whose last read was this step
+            for (vb, &lr) in last_read.iter().enumerate() {
+                if lr == i && phys[vb] != usize::MAX && vb != out_buf && vb != dst {
+                    free.push(phys[vb]);
+                }
+            }
+            free.sort_unstable(); // deterministic reuse order
+        }
+
+        // rewrite slot ids
+        let remap = |v: usize| phys[v];
+        for s in &mut self.steps {
+            s.src = remap(s.src);
+            s.dst = remap(s.dst);
+            match &mut s.op {
+                StepOp::Add { other } => *other = remap(*other),
+                StepOp::Gemm { epilogue, .. } => {
+                    for e in epilogue {
+                        if let EpiOp::Add { slot } = e {
+                            *slot = remap(*slot);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        Ok(CompiledNet {
+            name: name.to_string(),
+            output_shape: self.shapes[out_buf],
+            steps: self.steps,
+            layers: self.layers,
+            input_shape: self.input_shape,
+            num_slots,
+            input_slot: phys[0],
+            output_slot: phys[out_buf],
+        })
+    }
+}
+
+/// Turn a masked weight into the 2-D operator matrix the engine executes.
+fn lower_weight(masked: &MaskedLayer) -> Result<(GemmKind, Tensor)> {
+    let w = &masked.weight;
+    match masked.spec.kind {
+        LayerKind::Conv => {
+            if w.ndim() != 4 {
+                bail!("conv weight for '{}' must be 4-D", masked.spec.name);
+            }
+            // (F, C, KH, KW) -> [C*KH*KW, F] -> [F, C*KH*KW]
+            Ok((GemmKind::Conv, w.conv_to_gemm().transpose2()))
+        }
+        LayerKind::DepthwiseConv => {
+            if w.ndim() != 4 || w.shape()[1] != 1 {
+                bail!("depthwise weight for '{}' must be (C, 1, KH, KW)", masked.spec.name);
+            }
+            let (c, kh, kw) = (w.shape()[0], w.shape()[2], w.shape()[3]);
+            // block-diagonal [C, C*KH*KW]: row c covers its own channel's
+            // im2col rows only — depthwise as per-channel blocked GEMM
+            let kk = kh * kw;
+            let mut a = Tensor::zeros(&[c, c * kk]);
+            for ci in 0..c {
+                for p in 0..kk {
+                    a.set2(ci, ci * kk + p, w.at4(ci, 0, p / kw, p % kw));
+                }
+            }
+            Ok((GemmKind::Depthwise, a))
+        }
+        LayerKind::Fc => {
+            if w.ndim() != 2 {
+                bail!("fc weight for '{}' must be 2-D (in, out)", masked.spec.name);
+            }
+            // (in, out) -> [out, in]
+            Ok((GemmKind::Fc, w.transpose2()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn simple_assigns(model: &ModelSpec) -> Vec<Assignment> {
+        model
+            .layers
+            .iter()
+            .map(|l| match l.kind {
+                LayerKind::Conv if l.is_3x3_conv() => Assignment {
+                    scheme: Scheme::BlockPunched { bf: 4, bc: 4 },
+                    compression: 3.0,
+                },
+                LayerKind::Conv => Assignment {
+                    scheme: Scheme::BlockPunched { bf: 4, bc: 4 },
+                    compression: 2.0,
+                },
+                LayerKind::DepthwiseConv => Assignment::dense(),
+                LayerKind::Fc => {
+                    Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn proxy_lowering_inserts_glue_and_reuses_slots() {
+        let m = zoo::proxy_cnn();
+        let net =
+            CompiledNet::compile(&m, &simple_assigns(&m), 1, KernelChoice::Auto).unwrap();
+        // proxy: conv1(32) -> conv2(16) -> conv3(8) -> fc1(1024=64*4*4) -> fc2
+        // needs pools before conv2/conv3, a pool + flatten before fc1
+        let pools = net
+            .steps
+            .iter()
+            .filter(|s| matches!(s.op, StepOp::MaxPool2x2))
+            .count();
+        assert_eq!(pools, 3, "expected implicit pools at 32->16->8->4");
+        assert!(net.steps.iter().any(|s| matches!(s.op, StepOp::Flatten)));
+        assert_eq!(net.layers.len(), 5);
+        assert_eq!(net.output_len(), 10);
+        // liveness keeps the arena tiny: a straight chain needs ~2-3 slots,
+        // never one per step
+        assert!(net.num_slots <= 3, "arena uses {} slots", net.num_slots);
+        assert!(net.num_slots < net.steps.len());
+    }
+
+    #[test]
+    fn mobilenet_gets_global_avg_pool_before_fc() {
+        let m = zoo::mobilenet_v1_scaled(crate::models::Dataset::Cifar10, 0.25);
+        let net =
+            CompiledNet::compile(&m, &simple_assigns(&m), 2, KernelChoice::Auto).unwrap();
+        assert!(net.steps.iter().any(|s| matches!(s.op, StepOp::GlobalAvgPool)));
+        // one Gemm per prunable layer, depthwise lowered as Depthwise
+        let dw = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == GemmKind::Depthwise)
+            .count();
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn depthwise_lowering_is_block_diagonal() {
+        let spec = LayerSpec::dwconv("dw", 3, 4, 8, 1);
+        let mut rng = Rng::new(3);
+        let w = Tensor::he_normal(&[4, 1, 3, 3], 9, &mut rng);
+        let masked = MaskedLayer {
+            spec,
+            weight: w.clone(),
+            scheme: Scheme::None,
+            compression: 1.0,
+        };
+        let (kind, a) = lower_weight(&masked).unwrap();
+        assert_eq!(kind, GemmKind::Depthwise);
+        assert_eq!(a.shape(), &[4, 36]);
+        for c in 0..4 {
+            for col in 0..36 {
+                let expect = if (c * 9..(c + 1) * 9).contains(&col) {
+                    w.at4(c, 0, (col - c * 9) / 3, (col - c * 9) % 3)
+                } else {
+                    0.0
+                };
+                assert_eq!(a.at2(c, col), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn channel_mismatch_is_an_error() {
+        let m = ModelSpec {
+            name: "bad".into(),
+            dataset: crate::models::Dataset::Synthetic,
+            layers: vec![
+                LayerSpec::conv("c1", 3, 3, 8, 8, 1),
+                LayerSpec::conv("c2", 3, 16, 8, 8, 1), // 16 != 8
+            ],
+        };
+        let assigns = vec![Assignment::dense(), Assignment::dense()];
+        let err = CompiledNet::compile(&m, &assigns, 1, KernelChoice::Auto);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn synthesize_rejects_inapplicable_scheme() {
+        let m = zoo::proxy_cnn();
+        let mut assigns = simple_assigns(&m);
+        assigns[0] = Assignment { scheme: Scheme::Block { bp: 4, bq: 4 }, compression: 2.0 };
+        assert!(NetWeights::synthesize(&m, &assigns, 1).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! Native CNN graph executor: whole pruned networks on the sparse engine.
+//!
+//! Where [`super::native`] executes isolated masked-GEMM views, this
+//! subsystem runs **every layer of a [`crate::models::ModelSpec`]** natively
+//! on [`crate::sparse::Engine`]:
+//!
+//! * [`lower`] turns a fused compiler plan ([`crate::compiler::fuse`]) into
+//!   a [`CompiledNet`] — compressed weights converted once into
+//!   [`SparseLayer`](super::SparseLayer)s, convs lowered through
+//!   [`im2col`] (stride + SAME padding; depthwise as a block-diagonal
+//!   per-channel GEMM; FC passthrough), elementwise nodes either fused as
+//!   epilogues or kept as standalone [`ops`] steps, and intermediate
+//!   activations assigned to a small arena of slots by DAG liveness;
+//! * [`GraphExecutor`] runs the program over NCHW batched input.
+//!
+//! **Determinism:** every GEMM column is accumulated in a fixed non-zero
+//! order by the engine and all other kernels are elementwise, so the output
+//! is bit-for-bit identical across thread counts *and* batch widths — the
+//! same guarantee the underlying engine makes, lifted to whole networks.
+
+pub mod im2col;
+pub mod lower;
+pub mod ops;
+
+pub use lower::{
+    CompiledNet, GemmKind, LayerExec, LayerSummary, MaskedLayer, NetWeights, Step, StepOp,
+};
+pub use ops::{BnParams, EpiOp};
+
+use anyhow::{bail, Result};
+
+use crate::sparse::Engine;
+
+use super::native::NativeEngine;
+
+/// Wall-clock of one executed step (for per-layer latency reports).
+#[derive(Debug, Clone)]
+pub struct StepTiming {
+    pub name: String,
+    pub ms: f64,
+}
+
+/// Runs a [`CompiledNet`] on the threaded native engine.
+#[derive(Debug, Clone, Copy)]
+pub struct GraphExecutor {
+    engine: NativeEngine,
+}
+
+impl GraphExecutor {
+    pub fn new(threads: usize) -> GraphExecutor {
+        GraphExecutor { engine: NativeEngine::new(threads) }
+    }
+
+    pub fn serial() -> GraphExecutor {
+        GraphExecutor { engine: NativeEngine::serial() }
+    }
+
+    pub fn with_engine(engine: NativeEngine) -> GraphExecutor {
+        GraphExecutor { engine }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+
+    /// Run one batched inference.  `input` is NCHW `[batch, C, H, W]`
+    /// row-major; the result is `[batch, out_features]` (NCHW-flattened
+    /// per sample for spatial outputs).
+    pub fn run(&self, net: &CompiledNet, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut sink = Vec::new();
+        self.run_inner(net, input, batch, false, &mut sink)
+    }
+
+    /// [`GraphExecutor::run`] plus per-step wall-clock timings.
+    pub fn run_timed(
+        &self,
+        net: &CompiledNet,
+        input: &[f32],
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<StepTiming>)> {
+        let mut timings = Vec::with_capacity(net.steps.len());
+        let y = self.run_inner(net, input, batch, true, &mut timings)?;
+        Ok((y, timings))
+    }
+
+    fn run_inner(
+        &self,
+        net: &CompiledNet,
+        input: &[f32],
+        batch: usize,
+        timed: bool,
+        timings: &mut Vec<StepTiming>,
+    ) -> Result<Vec<f32>> {
+        if batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        let (ic, ih, iw) = net.input_shape;
+        if input.len() != batch * ic * ih * iw {
+            bail!(
+                "input must be [batch={batch}, {ic}, {ih}, {iw}] = {} elements, got {}",
+                batch * ic * ih * iw,
+                input.len()
+            );
+        }
+        // arena: slot buffers keep their allocation across steps (and the
+        // im2col scratch across layers), so a run's allocation profile is
+        // bounded by the liveness-derived slot count, not network depth
+        let mut slots: Vec<Vec<f32>> = (0..net.num_slots).map(|_| Vec::new()).collect();
+        let mut scratch: Vec<f32> = Vec::new();
+        slots[net.input_slot] = im2col::nchw_to_act(input, batch, ic, ih * iw);
+
+        let engine = self.engine.engine();
+        for step in &net.steps {
+            let t0 = std::time::Instant::now();
+            let (c, h, w) = step.in_shape;
+            // the allocator guarantees dst != src (and dst != any residual
+            // slot), so taking dst's buffer out never aliases a read
+            debug_assert_ne!(step.src, step.dst, "step '{}'", step.name);
+            let mut out = std::mem::take(&mut slots[step.dst]);
+            match &step.op {
+                StepOp::Gemm { layer, epilogue } => {
+                    let lay = &net.layers[*layer];
+                    let mut y =
+                        run_gemm(engine, lay, &slots[step.src], (c, h, w), batch, &mut scratch)?;
+                    let (oc, oh, ow) = step.out_shape;
+                    let cols = batch * oh * ow;
+                    debug_assert_eq!(y.len(), oc * cols);
+                    for e in epilogue {
+                        match e {
+                            EpiOp::BatchNorm(p) => p.apply(&mut y, cols),
+                            EpiOp::Relu => ops::relu(&mut y),
+                            EpiOp::Add { slot } => ops::add_assign(&mut y, &slots[*slot]),
+                        }
+                    }
+                    out = y;
+                }
+                StepOp::BatchNorm(p) => {
+                    copy_into(&mut out, &slots[step.src]);
+                    p.apply(&mut out, batch * h * w);
+                }
+                StepOp::Relu => {
+                    copy_into(&mut out, &slots[step.src]);
+                    ops::relu(&mut out);
+                }
+                StepOp::Add { other } => {
+                    copy_into(&mut out, &slots[step.src]);
+                    ops::add_assign(&mut out, &slots[*other]);
+                }
+                StepOp::MaxPool2x2 => {
+                    ops::max_pool2x2(&slots[step.src], c, batch, h, w, &mut out);
+                }
+                StepOp::GlobalAvgPool => {
+                    ops::global_avg_pool(&slots[step.src], c, batch, h * w, &mut out);
+                }
+                StepOp::Flatten => {
+                    ops::flatten(&slots[step.src], c, batch, h * w, &mut out);
+                }
+            }
+            let (oc, oh, ow) = step.out_shape;
+            debug_assert_eq!(out.len(), oc * oh * ow * batch, "step '{}'", step.name);
+            slots[step.dst] = out;
+            if timed {
+                timings.push(StepTiming {
+                    name: step.name.clone(),
+                    ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+        }
+
+        let (oc, oh, ow) = net.output_shape;
+        Ok(im2col::act_to_nchw(&slots[net.output_slot], batch, oc, oh * ow))
+    }
+}
+
+/// Reuse `out`'s allocation for a copy of `src` (elementwise steps write a
+/// fresh buffer without reallocating the arena slot).
+fn copy_into(out: &mut Vec<f32>, src: &[f32]) {
+    out.clear();
+    out.extend_from_slice(src);
+}
+
+/// Execute one prunable layer's GEMM over the engine.
+fn run_gemm(
+    engine: &Engine,
+    lay: &LayerExec,
+    act: &[f32],
+    in_shape: (usize, usize, usize),
+    batch: usize,
+    scratch: &mut Vec<f32>,
+) -> Result<Vec<f32>> {
+    let (c, h, w) = in_shape;
+    match lay.kind {
+        GemmKind::Conv | GemmKind::Depthwise => {
+            let (oh, ow) = im2col::im2col(
+                act,
+                c,
+                h,
+                w,
+                batch,
+                lay.spec.kh,
+                lay.spec.kw,
+                lay.spec.stride,
+                scratch,
+            );
+            Ok(engine.spmm(lay.sparse.kernel(), scratch, batch * oh * ow))
+        }
+        GemmKind::Fc => {
+            // glue guarantees [in, batch, 1] activation == [in, batch] GEMM rhs
+            if act.len() != lay.spec.in_ch * batch {
+                bail!(
+                    "fc '{}' expects {} x batch inputs, got {}",
+                    lay.name,
+                    lay.spec.in_ch,
+                    act.len()
+                );
+            }
+            Ok(engine.spmm(lay.sparse.kernel(), act, batch))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::Assignment;
+    use crate::models::zoo;
+    use crate::pruning::Scheme;
+    use crate::runtime::KernelChoice;
+
+    #[test]
+    fn proxy_runs_end_to_end() {
+        let m = zoo::proxy_cnn();
+        let assigns: Vec<Assignment> = m
+            .layers
+            .iter()
+            .map(|l| {
+                if l.is_3x3_conv() {
+                    Assignment { scheme: Scheme::Pattern, compression: 2.25 }
+                } else {
+                    Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+                }
+            })
+            .collect();
+        let net = CompiledNet::compile(&m, &assigns, 42, KernelChoice::Auto).unwrap();
+        let batch = 2;
+        let n = batch * 3 * 32 * 32;
+        let input: Vec<f32> = (0..n).map(|i| ((i % 23) as f32) * 0.1 - 1.0).collect();
+        let y = GraphExecutor::new(2).run(&net, &input, batch).unwrap();
+        assert_eq!(y.len(), batch * 10);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // wrong input length is a hard error
+        assert!(GraphExecutor::serial().run(&net, &input[..n - 1], batch).is_err());
+    }
+
+    #[test]
+    fn timed_run_reports_every_step() {
+        let m = zoo::proxy_cnn();
+        let assigns: Vec<Assignment> = m.layers.iter().map(|_| Assignment::dense()).collect();
+        let net = CompiledNet::compile(&m, &assigns, 1, KernelChoice::Dense).unwrap();
+        let input = vec![0.5f32; 3 * 32 * 32];
+        let (y, t) = GraphExecutor::serial().run_timed(&net, &input, 1).unwrap();
+        assert_eq!(y.len(), 10);
+        assert_eq!(t.len(), net.steps.len());
+        assert!(t.iter().all(|s| s.ms >= 0.0));
+    }
+}

@@ -1,0 +1,211 @@
+//! Operator kernels for the non-prunable graph nodes.
+//!
+//! All kernels operate on the engine-native activation layout
+//! `[C, batch, H*W]` (see [`super::im2col`]).  The elementwise ones
+//! (batch-norm, ReLU, residual add) double as **fused epilogues**: when the
+//! fusion plan attaches them to a conv/FC kernel they run in-place on the
+//! GEMM output before it is stored, in exactly the order the standalone
+//! steps would have applied them — so a fused program is bit-for-bit
+//! identical to its unfused counterpart.
+
+use crate::rng::Rng;
+
+/// Inference-time batch-norm folded to a per-channel affine:
+/// `y = scale[c] * x + shift[c]` with
+/// `scale = gamma / sqrt(var + eps)`, `shift = beta - scale * mean`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BnParams {
+    pub scale: Vec<f32>,
+    pub shift: Vec<f32>,
+}
+
+impl BnParams {
+    /// Identity normalization (scale 1, shift 0).
+    pub fn identity(channels: usize) -> BnParams {
+        BnParams { scale: vec![1.0; channels], shift: vec![0.0; channels] }
+    }
+
+    /// Deterministic synthetic statistics (positive scales near 1, small
+    /// shifts) — stand-ins for trained parameters in tests and benches.
+    pub fn synth(channels: usize, rng: &mut Rng) -> BnParams {
+        BnParams {
+            scale: (0..channels).map(|_| rng.range_f32(0.6, 1.4)).collect(),
+            shift: (0..channels).map(|_| rng.range_f32(-0.2, 0.2)).collect(),
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.scale.len()
+    }
+
+    /// Apply in place to `[C, cols]` data (`cols = batch * H*W`).
+    pub fn apply(&self, y: &mut [f32], cols: usize) {
+        assert_eq!(y.len(), self.scale.len() * cols, "bn shape mismatch");
+        for (c, row) in y.chunks_mut(cols.max(1)).enumerate() {
+            let (s, t) = (self.scale[c], self.shift[c]);
+            for v in row {
+                *v = s * *v + t;
+            }
+        }
+    }
+}
+
+/// An elementwise op fused into a GEMM kernel's epilogue.
+#[derive(Debug, Clone)]
+pub enum EpiOp {
+    BatchNorm(BnParams),
+    Relu,
+    /// Residual add of another activation (arena slot id, same shape).
+    Add { slot: usize },
+}
+
+/// ReLU in place.
+pub fn relu(y: &mut [f32]) {
+    for v in y {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Elementwise `y += other` (residual add).
+pub fn add_assign(y: &mut [f32], other: &[f32]) {
+    assert_eq!(y.len(), other.len(), "residual shapes differ");
+    for (a, b) in y.iter_mut().zip(other) {
+        *a += b;
+    }
+}
+
+/// 2x2 max pool, stride 2, ceil semantics (odd trailing rows/cols pool over
+/// the in-image taps only).  `src` is `[C, batch, H*W]`; writes
+/// `[C, batch, OH*OW]` into `out` (cleared first).  Returns `(oh, ow)`.
+pub fn max_pool2x2(
+    src: &[f32],
+    c: usize,
+    batch: usize,
+    h: usize,
+    w: usize,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    assert_eq!(src.len(), c * batch * h * w);
+    let (oh, ow) = (h.div_ceil(2), w.div_ceil(2));
+    out.clear();
+    out.resize(c * batch * oh * ow, 0.0);
+    for ci in 0..c {
+        for b in 0..batch {
+            let plane = &src[(ci * batch + b) * h * w..(ci * batch + b + 1) * h * w];
+            let dst = &mut out[(ci * batch + b) * oh * ow..(ci * batch + b + 1) * oh * ow];
+            for ohi in 0..oh {
+                for owi in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dh in 0..2 {
+                        let ih = ohi * 2 + dh;
+                        if ih >= h {
+                            continue;
+                        }
+                        for dw in 0..2 {
+                            let iw = owi * 2 + dw;
+                            if iw >= w {
+                                continue;
+                            }
+                            m = m.max(plane[ih * w + iw]);
+                        }
+                    }
+                    dst[ohi * ow + owi] = m;
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Global average pool: `[C, batch, H*W]` -> `[C, batch, 1]`.
+pub fn global_avg_pool(src: &[f32], c: usize, batch: usize, hw: usize, out: &mut Vec<f32>) {
+    assert_eq!(src.len(), c * batch * hw);
+    assert!(hw > 0);
+    out.clear();
+    out.resize(c * batch, 0.0);
+    for (i, o) in out.iter_mut().enumerate() {
+        let plane = &src[i * hw..(i + 1) * hw];
+        *o = plane.iter().sum::<f32>() / hw as f32;
+    }
+}
+
+/// Flatten `[C, batch, H*W]` into FC input layout `[C*H*W, batch, 1]` —
+/// feature index `c*H*W + p` in CHW order, matching how the zoo specs count
+/// FC input features.
+pub fn flatten(src: &[f32], c: usize, batch: usize, hw: usize, out: &mut Vec<f32>) {
+    assert_eq!(src.len(), c * batch * hw);
+    out.clear();
+    out.resize(c * hw * batch, 0.0);
+    for ci in 0..c {
+        for b in 0..batch {
+            for p in 0..hw {
+                out[(ci * hw + p) * batch + b] = src[(ci * batch + b) * hw + p];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bn_applies_per_channel_affine() {
+        let bn = BnParams { scale: vec![2.0, -1.0], shift: vec![1.0, 0.5] };
+        let mut y = vec![1.0, 2.0, 3.0, 4.0]; // [2 channels, 2 cols]
+        bn.apply(&mut y, 2);
+        assert_eq!(y, vec![3.0, 5.0, -2.5, -3.5]);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let mut y = vec![-1.0, 2.0, -0.5];
+        relu(&mut y);
+        assert_eq!(y, vec![0.0, 2.0, 0.0]);
+        add_assign(&mut y, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![1.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn max_pool_even_and_odd() {
+        // 1 channel, 1 sample, 3x3 plane
+        let src: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        let (oh, ow) = max_pool2x2(&src, 1, 1, 3, 3, &mut out);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(out, vec![4.0, 5.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn global_avg_pool_means() {
+        let src = vec![1.0, 3.0, 2.0, 4.0]; // [2 planes of 2]
+        let mut out = Vec::new();
+        global_avg_pool(&src, 2, 1, 2, &mut out);
+        assert_eq!(out, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn flatten_orders_chw_per_sample() {
+        // C=2, batch=2, HW=2: act[(c*2 + b)*2 + p]
+        let src = vec![
+            0.0, 1.0, // c0 b0
+            10.0, 11.0, // c0 b1
+            2.0, 3.0, // c1 b0
+            12.0, 13.0, // c1 b1
+        ];
+        let mut out = Vec::new();
+        flatten(&src, 2, 2, 2, &mut out);
+        // feature f = c*2+p, layout [f, batch]
+        assert_eq!(out, vec![0.0, 10.0, 1.0, 11.0, 2.0, 12.0, 3.0, 13.0]);
+    }
+
+    #[test]
+    fn synth_bn_is_deterministic_and_positive_scale() {
+        let a = BnParams::synth(8, &mut Rng::new(7));
+        let b = BnParams::synth(8, &mut Rng::new(7));
+        assert_eq!(a, b);
+        assert!(a.scale.iter().all(|s| *s > 0.0));
+    }
+}

@@ -6,6 +6,9 @@
 //!   engine ([`crate::sparse::Engine`]) running BCS/CSR kernels directly on
 //!   the host.  Always compiled, no external dependencies; this is the
 //!   crate's real hot path and the surface future perf PRs target.
+//!   [`graph`] builds on it: whole pruned CNNs (im2col conv + fused
+//!   epilogues) lowered from the compiler's fusion plan and executed
+//!   end to end.
 //! * [`pjrt`] — the PJRT bridge that loads AOT artifacts (HLO text emitted
 //!   by python/compile/aot.py) and executes them through the `xla`
 //!   bindings.  Compiled only under `--cfg pjrt` (`RUSTFLAGS="--cfg
@@ -17,10 +20,12 @@
 
 mod manifest;
 
+pub mod graph;
 pub mod native;
 #[cfg(pjrt)]
 pub mod pjrt;
 
+pub use graph::{CompiledNet, GraphExecutor, NetWeights};
 pub use manifest::{ArtifactSig, Manifest, ParamSpec};
 pub use native::{KernelChoice, NativeEngine, SparseLayer};
 #[cfg(pjrt)]

@@ -322,6 +322,114 @@ pub fn measured_vs_modeled(
     LatencyComparison { modeled_ms, measured_ms: best, threads: engine.threads(), batch }
 }
 
+// ---------------------------------------------------------------------
+// Whole-network measured-vs-modeled
+// ---------------------------------------------------------------------
+
+use crate::accuracy::Assignment;
+use crate::models::ModelSpec;
+use crate::runtime::graph::{CompiledNet, GraphExecutor};
+use crate::util::json::Value;
+
+/// Whole-network calibration record: the cost model's per-kernel
+/// predictions summed over a model next to a measured end-to-end run of
+/// the same pruned network through [`GraphExecutor`] on the native engine.
+#[derive(Debug, Clone)]
+pub struct NetworkLatencyComparison {
+    pub model: String,
+    /// Sum of per-layer modeled latencies (mobile GPU, batch 1), ms.
+    pub modeled_ms: f64,
+    /// Measured whole-network wall-clock (host CPU, whole batch, min over
+    /// reps), ms.
+    pub measured_ms: f64,
+    pub threads: usize,
+    pub batch: usize,
+    /// `(layer name, modeled ms)` per prunable layer.
+    pub per_layer: Vec<(String, f64)>,
+}
+
+impl NetworkLatencyComparison {
+    /// measured / modeled — a drift signal for BENCH trajectories, not an
+    /// expectation of equality (mobile-GPU model vs host-CPU measurement).
+    pub fn ratio(&self) -> f64 {
+        self.measured_ms / self.modeled_ms.max(1e-12)
+    }
+
+    /// JSON record (`util::json`) so bench output can be tracked across
+    /// PRs: `{"model", "modeled_ms", "measured_ms", "ratio", "threads",
+    /// "batch", "per_layer": {name: ms}}`.
+    pub fn to_json(&self) -> Value {
+        let per_layer = Value::Obj(
+            self.per_layer
+                .iter()
+                .map(|(n, ms)| (n.clone(), Value::num(*ms)))
+                .collect(),
+        );
+        Value::obj(vec![
+            ("model", Value::str(self.model.clone())),
+            ("modeled_ms", Value::num(self.modeled_ms)),
+            ("measured_ms", Value::num(self.measured_ms)),
+            ("ratio", Value::num(self.ratio())),
+            ("threads", Value::num(self.threads as f64)),
+            ("batch", Value::num(self.batch as f64)),
+            ("per_layer", per_layer),
+        ])
+    }
+}
+
+/// Run a compiled network end to end on the native graph executor and
+/// report the measurement beside the cost model's summed per-kernel
+/// predictions — the whole-network counterpart of [`measured_vs_modeled`].
+pub fn measured_vs_modeled_network(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    dev: &DeviceProfile,
+    net: &CompiledNet,
+    batch: usize,
+    threads: usize,
+    reps: usize,
+) -> crate::Result<NetworkLatencyComparison> {
+    if model.layers.len() != assigns.len() {
+        anyhow::bail!(
+            "{} layers but {} assignments for {}",
+            model.layers.len(),
+            assigns.len(),
+            model.name
+        );
+    }
+    let per_layer: Vec<(String, f64)> = model
+        .layers
+        .iter()
+        .zip(assigns)
+        .map(|(l, a)| {
+            let cfg = ExecConfig::new(a.scheme, a.compression, dev);
+            (l.name.clone(), layer_latency_ms(l, &cfg, dev))
+        })
+        .collect();
+    let modeled_ms: f64 = per_layer.iter().map(|(_, ms)| ms).sum();
+
+    let exec = GraphExecutor::new(threads);
+    let (c, h, w) = net.input_shape;
+    let input: Vec<f32> = (0..batch * c * h * w)
+        .map(|i| ((i % 17) as f32) * 0.25 - 2.0)
+        .collect();
+    let _warmup = exec.run(net, &input, batch)?;
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        std::hint::black_box(exec.run(net, &input, batch)?);
+        best = best.min(t.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(NetworkLatencyComparison {
+        model: model.name.clone(),
+        modeled_ms,
+        measured_ms: best,
+        threads: exec.threads(),
+        batch,
+        per_layer,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -512,6 +620,32 @@ mod tests {
         assert!(c.ratio() > 0.0);
         assert_eq!(c.threads, 2);
         assert_eq!(c.batch, 8);
+    }
+
+    #[test]
+    fn measured_vs_modeled_network_produces_json_record() {
+        use crate::models::zoo;
+        use crate::runtime::KernelChoice;
+        let d = dev();
+        let m = zoo::proxy_cnn();
+        let assigns: Vec<Assignment> = m
+            .layers
+            .iter()
+            .map(|_| Assignment { scheme: Scheme::Unstructured, compression: 2.0 })
+            .collect();
+        let net = CompiledNet::compile(&m, &assigns, 5, KernelChoice::Auto).unwrap();
+        let cmp = measured_vs_modeled_network(&m, &assigns, &d, &net, 2, 2, 2).unwrap();
+        assert!(cmp.modeled_ms > 0.0 && cmp.modeled_ms.is_finite());
+        assert!(cmp.measured_ms > 0.0 && cmp.measured_ms.is_finite());
+        assert_eq!(cmp.per_layer.len(), m.layers.len());
+        let j = cmp.to_json();
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "ProxyCNN");
+        assert!(j.get("measured_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("per_layer").unwrap().as_obj().unwrap().len(), m.layers.len());
+        // the record round-trips through the parser (what BENCH readers do)
+        let round = Value::parse(&j.compact()).unwrap();
+        assert_eq!(round.get("batch").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(round.get("threads").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod cost;
 pub mod device;
 
 pub use cost::{
-    kernel_for_scheme, layer_latency_ms, measured_vs_modeled, model_latency_ms, ExecConfig,
-    LatencyComparison, TileParams,
+    kernel_for_scheme, layer_latency_ms, measured_vs_modeled, measured_vs_modeled_network,
+    model_latency_ms, ExecConfig, LatencyComparison, NetworkLatencyComparison, TileParams,
 };
 pub use device::DeviceProfile;

@@ -85,6 +85,20 @@ impl Args {
                 .map_err(|_| anyhow!("--{name} expects an integer, got '{s}'")),
         }
     }
+
+    /// Engine worker count from `--threads N` (default: one per available
+    /// core) — the knob every native-engine entry point shares instead of
+    /// hardcoding a thread count.
+    pub fn engine_threads(&self) -> Result<usize> {
+        let t = self.get_usize("threads", rayon::current_num_threads())?;
+        Ok(t.max(1))
+    }
+
+    /// Batch size from `--batch N` (clamped to >= 1).
+    pub fn batch_size(&self, default: usize) -> Result<usize> {
+        let b = self.get_usize("batch", default)?;
+        Ok(b.max(1))
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +125,20 @@ mod tests {
         let a = Args::parse(toks("cmd --fast"));
         assert!(a.flag("fast"));
         assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn engine_knobs() {
+        let a = Args::parse(toks("--threads 3 --batch 16"));
+        assert_eq!(a.engine_threads().unwrap(), 3);
+        assert_eq!(a.batch_size(1).unwrap(), 16);
+        let d = Args::parse(toks(""));
+        assert!(d.engine_threads().unwrap() >= 1);
+        assert_eq!(d.batch_size(4).unwrap(), 4);
+        // zero clamps to 1 (a zero-thread engine is meaningless)
+        let z = Args::parse(toks("--threads 0 --batch 0"));
+        assert_eq!(z.engine_threads().unwrap(), 1);
+        assert_eq!(z.batch_size(8).unwrap(), 1);
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! Graph-executor correctness: im2col-lowered convolution against naive
+//! direct references on random shapes/masks (incl. stride 2 and depthwise),
+//! whole-zoo-network determinism across thread counts and batch widths,
+//! and fused-vs-unfused epilogue equivalence.
+
+use prunemap::accuracy::Assignment;
+use prunemap::compiler::{fuse, Graph, Op};
+use prunemap::compiler::fusion::{FusedKernel, FusionPlan};
+use prunemap::models::{zoo, Dataset, LayerKind, LayerSpec, ModelSpec};
+use prunemap::pruning::Scheme;
+use prunemap::runtime::graph::im2col::{direct_conv, direct_dwconv};
+use prunemap::runtime::graph::{CompiledNet, GraphExecutor, NetWeights};
+use prunemap::runtime::KernelChoice;
+use prunemap::rng::Rng;
+use prunemap::util::prop::{dim, for_cases};
+
+/// Build input -> single layer -> output (no BN/ReLU) so the executor's
+/// output is directly comparable to a naive convolution.
+fn single_layer_net(
+    spec: &LayerSpec,
+    scheme: Scheme,
+    compression: f32,
+    seed: u64,
+) -> (CompiledNet, NetWeights) {
+    let model = ModelSpec {
+        name: "single".into(),
+        dataset: Dataset::Synthetic,
+        layers: vec![spec.clone()],
+    };
+    let assigns = vec![Assignment { scheme, compression }];
+    let weights = NetWeights::synthesize(&model, &assigns, seed).unwrap();
+    let mut g = Graph::default();
+    let i = g.add(
+        "in",
+        Op::Input { shape: vec![1, spec.in_ch, spec.in_hw, spec.in_hw] },
+        vec![],
+    );
+    let l = g.add(&spec.name, Op::Layer { layer: spec.clone() }, vec![i]);
+    g.add("out", Op::Output, vec![l]);
+    let plan = fuse(&g);
+    let net = CompiledNet::lower(&g, &plan, &weights, KernelChoice::Auto, "single").unwrap();
+    (net, weights)
+}
+
+fn rand_input(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{ctx}: element {i}: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn conv_matches_direct_reference_on_random_shapes() {
+    for_cases(10, 0xC0A1, |rng| {
+        let c = dim(rng, 1, 5);
+        let f = dim(rng, 1, 7);
+        let hw = dim(rng, 4, 9);
+        let k = if rng.bernoulli(0.7) { 3 } else { 1 };
+        let stride = if rng.bernoulli(0.5) { 1 } else { 2 };
+        let batch = dim(rng, 1, 3);
+        let spec = LayerSpec::conv("c", k, c, f, hw, stride);
+        let scheme = if rng.bernoulli(0.5) {
+            Scheme::Unstructured
+        } else {
+            Scheme::BlockPunched { bf: 2, bc: 2 }
+        };
+        let seed = rng.next_u64();
+        let (net, weights) = single_layer_net(&spec, scheme, 2.0, seed);
+        let input = rand_input(batch * c * hw * hw, rng);
+        let want = direct_conv(&input, batch, c, hw, hw, &weights.layers[0].weight, stride);
+        for threads in [1usize, 4] {
+            let got = GraphExecutor::new(threads).run(&net, &input, batch).unwrap();
+            assert_close(
+                &got,
+                &want,
+                1e-4,
+                &format!("conv c={c} f={f} hw={hw} k={k} s={stride} b={batch} t={threads}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn depthwise_matches_direct_reference() {
+    for_cases(8, 0xD0A2, |rng| {
+        let c = dim(rng, 1, 6);
+        let hw = dim(rng, 4, 8);
+        let stride = if rng.bernoulli(0.5) { 1 } else { 2 };
+        let batch = dim(rng, 1, 3);
+        let spec = LayerSpec::dwconv("dw", 3, c, hw, stride);
+        let scheme = if rng.bernoulli(0.5) {
+            Scheme::None
+        } else {
+            Scheme::BlockPunched { bf: 2, bc: 1 }
+        };
+        let seed = rng.next_u64();
+        let (net, weights) = single_layer_net(&spec, scheme, 1.5, seed);
+        let input = rand_input(batch * c * hw * hw, rng);
+        let want = direct_dwconv(&input, batch, c, hw, hw, &weights.layers[0].weight, stride);
+        for threads in [1usize, 4] {
+            let got = GraphExecutor::new(threads).run(&net, &input, batch).unwrap();
+            assert_close(
+                &got,
+                &want,
+                1e-4,
+                &format!("dw c={c} hw={hw} s={stride} b={batch} t={threads}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn stride2_odd_input_pins_same_padding() {
+    // 7x7 input, 3x3 stride-2: out 4x4, leading pad 1 — pinned against the
+    // naive reference so the SAME convention can never silently drift
+    let spec = LayerSpec::conv("c", 3, 2, 3, 7, 2);
+    let (net, weights) = single_layer_net(&spec, Scheme::Unstructured, 2.0, 99);
+    let mut rng = Rng::new(100);
+    let input = rand_input(2 * 2 * 7 * 7, &mut rng);
+    let want = direct_conv(&input, 2, 2, 7, 7, &weights.layers[0].weight, 2);
+    let got = GraphExecutor::serial().run(&net, &input, 2).unwrap();
+    assert_eq!(got.len(), 2 * 3 * 4 * 4);
+    assert_close(&got, &want, 1e-4, "stride2 odd");
+}
+
+fn zoo_assigns(model: &ModelSpec) -> Vec<Assignment> {
+    model
+        .layers
+        .iter()
+        .map(|l| match l.kind {
+            LayerKind::Conv if l.is_3x3_conv() => {
+                Assignment { scheme: Scheme::Pattern, compression: 2.25 }
+            }
+            LayerKind::Conv => {
+                Assignment { scheme: Scheme::BlockPunched { bf: 4, bc: 4 }, compression: 3.0 }
+            }
+            LayerKind::DepthwiseConv => Assignment::dense(),
+            LayerKind::Fc => {
+                Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn zoo_cnn_is_bit_for_bit_deterministic_across_threads_and_batches() {
+    // the acceptance case: a zoo CNN end to end through GraphExecutor
+    let model = zoo::mobilenet_v1_scaled(Dataset::Cifar10, 0.25);
+    let assigns = zoo_assigns(&model);
+    let net = CompiledNet::compile(&model, &assigns, 1234, KernelChoice::Auto).unwrap();
+    let (c, h, w) = net.input_shape;
+    assert_eq!((c, h, w), (3, 32, 32));
+
+    let mut rng = Rng::new(7);
+    let sample: Vec<f32> = rand_input(c * h * w, &mut rng);
+    let out1 = GraphExecutor::serial().run(&net, &sample, 1).unwrap();
+    assert_eq!(out1.len(), 10, "CIFAR-10 logits");
+    assert!(out1.iter().all(|v| v.is_finite()));
+
+    // 1 vs N threads: identical bits
+    for threads in [2usize, 4, 8] {
+        let out_t = GraphExecutor::new(threads).run(&net, &sample, 1).unwrap();
+        assert_eq!(out1, out_t, "threads={threads}");
+    }
+
+    // batch widths: sample 0 of a batch-3 run == the batch-1 run, and a
+    // repeated sample produces identical rows
+    let mut batch3 = sample.clone();
+    let other: Vec<f32> = rand_input(2 * c * h * w, &mut rng);
+    batch3.extend_from_slice(&other);
+    let out3 = GraphExecutor::new(4).run(&net, &batch3, 3).unwrap();
+    assert_eq!(out3.len(), 30);
+    assert_eq!(&out3[..10], &out1[..], "sample 0 must not depend on batch width");
+
+    let mut twice = sample.clone();
+    twice.extend_from_slice(&sample);
+    let out2 = GraphExecutor::new(4).run(&net, &twice, 2).unwrap();
+    assert_eq!(&out2[..10], &out2[10..], "identical samples, identical logits");
+}
+
+#[test]
+fn fused_epilogues_match_standalone_passes_bit_for_bit() {
+    let model = zoo::proxy_cnn();
+    let assigns = zoo_assigns(&model);
+    let weights = NetWeights::synthesize(&model, &assigns, 77).unwrap();
+    let g = Graph::from_model(&model);
+
+    let fused_plan = fuse(&g);
+    let unfused_plan = FusionPlan {
+        kernels: g
+            .nodes
+            .iter()
+            .filter(|n| !matches!(n.op, Op::Input { .. } | Op::Output))
+            .map(|n| FusedKernel { anchor: n.id, epilogue: vec![] })
+            .collect(),
+    };
+    assert!(unfused_plan.kernel_count() > fused_plan.kernel_count());
+
+    let fused =
+        CompiledNet::lower(&g, &fused_plan, &weights, KernelChoice::Auto, "fused").unwrap();
+    let unfused =
+        CompiledNet::lower(&g, &unfused_plan, &weights, KernelChoice::Auto, "unfused").unwrap();
+    assert!(fused.steps.len() < unfused.steps.len());
+
+    let mut rng = Rng::new(8);
+    let batch = 2;
+    let input = rand_input(batch * 3 * 32 * 32, &mut rng);
+    let a = GraphExecutor::new(3).run(&fused, &input, batch).unwrap();
+    let b = GraphExecutor::new(3).run(&unfused, &input, batch).unwrap();
+    assert_eq!(a, b, "fusion must not change results");
+}
+
+#[test]
+fn residual_add_fuses_and_matches_standalone() {
+    // input -> convA -> convB -> add(convB, convA): convB single-consumer,
+    // so the add fuses into convB's kernel
+    let spec_a = LayerSpec::conv("convA", 3, 2, 4, 6, 1);
+    let spec_b = LayerSpec::conv("convB", 3, 4, 4, 6, 1);
+    let model = ModelSpec {
+        name: "res".into(),
+        dataset: Dataset::Synthetic,
+        layers: vec![spec_a.clone(), spec_b.clone()],
+    };
+    let assigns = vec![
+        Assignment { scheme: Scheme::Unstructured, compression: 1.5 },
+        Assignment { scheme: Scheme::Unstructured, compression: 1.5 },
+    ];
+    let weights = NetWeights::synthesize(&model, &assigns, 5).unwrap();
+
+    let mut g = Graph::default();
+    let i = g.add("in", Op::Input { shape: vec![1, 2, 6, 6] }, vec![]);
+    let a = g.add("convA", Op::Layer { layer: spec_a }, vec![i]);
+    let b = g.add("convB", Op::Layer { layer: spec_b }, vec![a]);
+    let add = g.add("res_add", Op::Add, vec![b, a]);
+    g.add("out", Op::Output, vec![add]);
+
+    let plan = fuse(&g);
+    assert!(plan.is_fused_away(add), "add should fuse into convB");
+    let fused = CompiledNet::lower(&g, &plan, &weights, KernelChoice::Auto, "res").unwrap();
+
+    let unfused_plan = FusionPlan {
+        kernels: vec![
+            FusedKernel { anchor: a, epilogue: vec![] },
+            FusedKernel { anchor: b, epilogue: vec![] },
+            FusedKernel { anchor: add, epilogue: vec![] },
+        ],
+    };
+    let unfused =
+        CompiledNet::lower(&g, &unfused_plan, &weights, KernelChoice::Auto, "res_u").unwrap();
+
+    let mut rng = Rng::new(6);
+    let input = rand_input(2 * 6 * 6, &mut rng);
+    let ya = GraphExecutor::new(2).run(&fused, &input, 1).unwrap();
+    let yb = GraphExecutor::serial().run(&unfused, &input, 1).unwrap();
+    assert_eq!(ya, yb);
+    assert_eq!(ya.len(), 4 * 6 * 6);
+}
+
+#[test]
+fn vgg_style_glue_flattens_and_pools() {
+    // proxy CNN shrinks 32 -> 16 -> 8 between conv stages and flattens
+    // 64x4x4 into fc1 — the executor must insert the implicit glue
+    let model = zoo::proxy_cnn();
+    let assigns = zoo_assigns(&model);
+    let net = CompiledNet::compile(&model, &assigns, 21, KernelChoice::Auto).unwrap();
+    let mut rng = Rng::new(22);
+    let input = rand_input(3 * 32 * 32, &mut rng);
+    let y = GraphExecutor::new(2).run(&net, &input, 1).unwrap();
+    assert_eq!(y.len(), 10);
+    let y2 = GraphExecutor::serial().run(&net, &input, 1).unwrap();
+    assert_eq!(y, y2);
+}
