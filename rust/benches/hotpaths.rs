@@ -1,14 +1,18 @@
 //! Hot-path micro-benchmarks: the inner loops the §Perf pass optimizes.
 //! Mask generation, BCS/CSR conversion, row reorder, the batched
-//! multi-threaded sparse execution engine (serial-vs-threaded and
-//! spmv-vs-spmm sweeps across block/pattern/unstructured layouts),
-//! whole-network end-to-end inference through the graph executor (VGG-16 /
-//! MobileNet-V1 CIFAR at several batch sizes, with a measured-vs-modeled
-//! calibration JSON record per network), latency-model build, GA tuning,
-//! one RL search iteration, and (under `--cfg pjrt`, when artifacts exist)
-//! the PJRT block-matmul execution.
+//! multi-threaded sparse execution engine (serial-vs-threaded,
+//! spmv-vs-spmm, and the `spmm_simd_vs_scalar` /
+//! `fused_vs_materialized_im2col` acceptance pairs, each emitting a
+//! `BENCH {json}` record), whole-network end-to-end inference through the
+//! graph executor (VGG-16 / MobileNet-V1 CIFAR at several batch sizes,
+//! fused vs materialized im2col, with a measured-vs-modeled calibration
+//! JSON record per network), latency-model build, GA tuning, one RL search
+//! iteration, and (under `--cfg pjrt`, when artifacts exist) the PJRT
+//! block-matmul execution.
 //!
-//! `cargo bench -- --threads N` overrides the engine worker count.
+//! `cargo bench -- --threads N` overrides the engine worker count,
+//! `--tile N` the fused-im2col tile width, and `--json-out F` writes the
+//! collected `BENCH` comparison records to a JSON file.
 
 use std::time::Duration;
 
@@ -18,12 +22,14 @@ use prunemap::mapping::{map_rule_based, map_search_based, RuleConfig, SearchConf
 use prunemap::models::{zoo, Dataset, LayerSpec};
 use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::rng::Rng;
+use prunemap::runtime::graph::im2col::{im2col, Im2colPanels};
 use prunemap::runtime::{CompiledNet, GraphExecutor, KernelChoice};
 use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::sparse::{permute_rows, reorder_rows, Bcs, Csr, Engine, SparseKernel};
 use prunemap::tensor::Tensor;
-use prunemap::util::bench::{bench, bench_n, black_box, header, BenchStats};
+use prunemap::util::bench::{bench, bench_n, black_box, emit_comparison, header, BenchStats};
 use prunemap::util::cli::Args;
+use prunemap::util::json::Value;
 
 /// Masked + reordered GEMM view for one pruning layout.
 fn layout(
@@ -112,10 +118,14 @@ fn main() {
         Some(_) => args.engine_threads().expect("--threads expects an integer"),
         None => rayon::current_num_threads().max(4),
     };
-    println!("\n## execution engine (threads = {threads})\n");
+    let tile = args
+        .tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)
+        .expect("--tile expects an integer");
+    let mut records: Vec<Value> = Vec::new();
+    println!("\n## execution engine (threads = {threads}, tile = {tile})\n");
     header();
     let serial = Engine::serial();
-    let threaded = Engine::new(threads);
+    let threaded = Engine::new(threads).with_tile_cols(tile);
     let layouts = [
         layout("block8x8", Scheme::Block { bp: 8, bq: 8 }, 10.0, &lib, &mut rng),
         layout("pattern", Scheme::Pattern, 8.0, &lib, &mut rng),
@@ -166,6 +176,40 @@ fn main() {
     );
     report_speedup(&s, &t);
 
+    // --- acceptance pair: SIMD batch lanes vs the scalar reference loop ----
+    let scalar = bench("accept_block_1024_spmm_b32_scalar", budget, || {
+        black_box(kernel.spmm_scalar(&xb, 32));
+    });
+    let (rec, sp) = emit_comparison("spmm_simd_vs_scalar_1024x1024_b32", &scalar, &s);
+    records.push(rec);
+    println!("    simd/scalar speedup: {sp:.2}x (serial, batch 32)");
+
+    // --- acceptance pair: fused tile-order im2col vs materialized X --------
+    // conv 128->128 3x3 SAME on 32x32, batch 8: the whole lowering cost,
+    // expansion + spmm, on both paths
+    let convw = {
+        let w = Tensor::he_normal(&[128, 128, 3, 3], 128 * 9, &mut rng);
+        let r = prune(&w, &Scheme::BlockPunched { bf: 8, bc: 16 }, 8.0, &lib);
+        w.hadamard(&r.mask).conv_to_gemm().transpose2() // [F, C*KH*KW]
+    };
+    let conv_kernel = Bcs::from_dense(&convw);
+    let (cc, hh, ww, bb) = (128usize, 32usize, 32usize, 8usize);
+    let act: Vec<f32> = (0..cc * bb * hh * ww)
+        .map(|i| ((i % 13) as f32) * 0.3 - 1.8)
+        .collect();
+    let panels = Im2colPanels::new(&act, cc, hh, ww, bb, 3, 3, 1);
+    let mut xmat = Vec::new();
+    let mat = bench_n(&format!("conv128_b8_materialized_t{threads}"), 5, || {
+        let (oh, ow) = im2col(&act, cc, hh, ww, bb, 3, 3, 1, &mut xmat);
+        black_box(threaded.spmm(&conv_kernel, &xmat, bb * oh * ow));
+    });
+    let fus = bench_n(&format!("conv128_b8_fused_tile{tile}_t{threads}"), 5, || {
+        black_box(threaded.spmm_fused(&conv_kernel, &panels));
+    });
+    let (rec, sp) = emit_comparison("fused_vs_materialized_im2col_conv128_b8", &mat, &fus);
+    records.push(rec);
+    println!("    fused/materialized speedup: {sp:.2}x");
+
     // --- whole-network graph executor (im2col conv + fused epilogues) ------
     println!("\n## graph executor: end-to-end pruned networks (threads = {threads})\n");
     header();
@@ -186,7 +230,8 @@ fn main() {
             net.total_nnz()
         );
         let serial_exec = GraphExecutor::serial();
-        let threaded_exec = GraphExecutor::new(threads);
+        let threaded_exec = GraphExecutor::new(threads).with_tile_cols(tile);
+        let materialized_exec = GraphExecutor::new(threads).materialized();
         for batch in [1usize, 8] {
             let input: Vec<f32> = (0..batch * c * h * w)
                 .map(|i| ((i % 19) as f32) * 0.21 - 1.9)
@@ -199,6 +244,13 @@ fn main() {
             });
             if batch == 8 {
                 report_speedup(&s, &t);
+                let m = bench_n(&format!("{name}_infer_b{batch}_materialized"), 3, || {
+                    black_box(materialized_exec.run(&net, &input, batch).unwrap());
+                });
+                let (rec, sp) =
+                    emit_comparison(&format!("fused_vs_materialized_{name}_b8"), &m, &t);
+                records.push(rec);
+                println!("    fused/materialized speedup: {sp:.2}x");
             }
         }
         // measured-vs-modeled calibration record (JSON via util::json) so
@@ -256,6 +308,13 @@ fn main() {
 
     // --- PJRT execution (needs --cfg pjrt + `make artifacts`) --------------
     pjrt_bench();
+
+    // collected BENCH comparison records (regenerate with
+    // `cargo bench --bench hotpaths -- --json-out benches/records/hotpaths.json`)
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, Value::Arr(records).pretty()).expect("write bench records");
+        println!("\nwrote {path}");
+    }
 }
 
 /// Print the serial/threaded comparison the acceptance criteria track:

@@ -11,7 +11,8 @@
 //!   all                    every table and figure in order
 //!   latmodel --out F       build + save the device latency model
 //!   map --model M --dataset D --method rule|search
-//!   infer --model M --dataset D [--threads N] [--batch N] [--json-out F]
+//!   infer --model M --dataset D [--threads N] [--batch N] [--tile N]
+//!         [--materialized] [--json-out F]
 //!                          native end-to-end inference through the graph
 //!                          executor: per-layer scheme + measured latency
 //!   e2e [--steps N]        live pipeline on the proxy CNN (needs artifacts)
@@ -124,19 +125,27 @@ fn cmd_infer(args: &Args) -> Result<()> {
     };
 
     let net = CompiledNet::compile(&model, &assigns, seed, KernelChoice::Auto)?;
-    let exec = GraphExecutor::new(threads);
+    let tile = args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?;
+    let mut exec = GraphExecutor::new(threads).with_tile_cols(tile);
+    if args.materialized() {
+        exec = exec.materialized();
+    }
     let (c, h, w) = net.input_shape;
     let input: Vec<f32> = (0..batch * c * h * w)
         .map(|i| ((i % 17) as f32) * 0.25 - 2.0)
         .collect();
-    let _warmup = exec.run(&net, &input, batch)?;
-    let (_, timings) = exec.run_timed(&net, &input, batch)?;
+    // warm the buffer arena so the per-layer timings measure the
+    // steady-state path, same as the calibration record
+    let mut arena = prunemap::runtime::Arena::new();
+    let _warmup = exec.run_with_arena(&net, &input, batch, &mut arena)?;
+    let (_, timings) = exec.run_timed_with_arena(&net, &input, batch, &mut arena)?;
 
     println!(
-        "{} ({} layers, {} steps) | input {c}x{h}x{w} | batch {batch} | {threads} threads\n",
+        "{} ({} layers, {} steps) | input {c}x{h}x{w} | batch {batch} | {threads} threads | {} im2col\n",
         model.name,
         net.layers.len(),
-        net.steps.len()
+        net.steps.len(),
+        if exec.is_fused() { "fused" } else { "materialized" }
     );
     println!(
         "{:<16} {:>14} {:>6} {:>8} {:>12} {:>10}",
@@ -260,7 +269,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|e2e> [--device s10|s20|s21] [--threads N] [--batch N]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized]"
             );
         }
     }

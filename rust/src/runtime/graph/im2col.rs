@@ -16,6 +16,7 @@
 //! property tests compare the lowered path against — deliberately the
 //! dumbest possible loops over NCHW.
 
+use crate::sparse::PanelSource;
 use crate::tensor::Tensor;
 
 /// SAME-padding geometry for one spatial axis: `(out_size, leading_pad)`.
@@ -32,15 +33,23 @@ pub fn same_geometry(in_sz: usize, k: usize, stride: usize) -> (usize, usize) {
 /// Repack a batched NCHW tensor `[batch, C, H*W]` into the engine-native
 /// activation layout `[C, batch, H*W]`.
 pub fn nchw_to_act(x: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+    let mut act = Vec::new();
+    nchw_to_act_into(x, batch, c, hw, &mut act);
+    act
+}
+
+/// [`nchw_to_act`] into a caller-owned buffer (cleared and resized here),
+/// so an arena-recycled buffer can hold the input activation.
+pub fn nchw_to_act_into(x: &[f32], batch: usize, c: usize, hw: usize, act: &mut Vec<f32>) {
     assert_eq!(x.len(), batch * c * hw, "input must be [batch, C, H*W]");
-    let mut act = vec![0.0f32; x.len()];
+    act.clear();
+    act.resize(x.len(), 0.0);
     for b in 0..batch {
         for ci in 0..c {
             let src = &x[(b * c + ci) * hw..(b * c + ci + 1) * hw];
             act[(ci * batch + b) * hw..(ci * batch + b + 1) * hw].copy_from_slice(src);
         }
     }
-    act
 }
 
 /// Inverse of [`nchw_to_act`]: engine layout back to `[batch, C, H*W]`.
@@ -113,6 +122,112 @@ pub fn im2col(
         }
     }
     (oh, ow)
+}
+
+/// Tile-order im2col producer: the [`PanelSource`] the fused spmm
+/// consumes.  Where [`im2col`] materializes the whole
+/// `X = [C*KH*KW, batch * out_positions]` matrix up front, this yields
+/// `[C*KH*KW, tile]` column panels on demand — each generated directly in
+/// the `[cols, batch]` order [`crate::sparse::Engine::spmm_fused`] reads
+/// them, so a convolution's full `X` never exists and its activations are
+/// expanded straight into cache-resident tiles.
+///
+/// Column and row indexing are identical to [`im2col`] (column
+/// `b * npos + oh*OW + ow`, row `(c*KH + kh)*KW + kw`, SAME padding taps
+/// zero), which the property suite pins by reassembling panels into the
+/// materialized matrix.
+pub struct Im2colPanels<'a> {
+    act: &'a [f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    batch: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+    pad_h: usize,
+    pad_w: usize,
+}
+
+impl<'a> Im2colPanels<'a> {
+    /// Wrap `[C, batch, H*W]` activations for on-demand expansion.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        act: &'a [f32],
+        c: usize,
+        h: usize,
+        w: usize,
+        batch: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+    ) -> Im2colPanels<'a> {
+        assert_eq!(act.len(), c * batch * h * w, "activation must be [C, batch, H*W]");
+        let (oh, pad_h) = same_geometry(h, kh, stride);
+        let (ow, pad_w) = same_geometry(w, kw, stride);
+        Im2colPanels { act, c, h, w, batch, kh, kw, stride, oh, ow, pad_h, pad_w }
+    }
+
+    /// Output spatial size `(OH, OW)` (same geometry as [`im2col`]).
+    pub fn out_hw(&self) -> (usize, usize) {
+        (self.oh, self.ow)
+    }
+}
+
+impl PanelSource for Im2colPanels<'_> {
+    fn num_cols(&self) -> usize {
+        self.batch * self.oh * self.ow
+    }
+
+    fn k_rows(&self) -> usize {
+        self.c * self.kh * self.kw
+    }
+
+    fn fill(&self, j0: usize, width: usize, panel: &mut [f32]) {
+        debug_assert!(j0 + width <= self.num_cols());
+        debug_assert_eq!(panel.len(), self.k_rows() * width);
+        let npos = self.oh * self.ow;
+        for ci in 0..self.c {
+            for khi in 0..self.kh {
+                for kwi in 0..self.kw {
+                    let r = (ci * self.kh + khi) * self.kw + kwi;
+                    let prow = &mut panel[r * width..(r + 1) * width];
+                    // walk the tile as (sample, output-row) segments so the
+                    // div/mod geometry is resolved once per segment and each
+                    // segment streams one input row
+                    let mut jj = 0;
+                    while jj < width {
+                        let j = j0 + jj;
+                        let b = j / npos;
+                        let p = j % npos;
+                        let ohi = p / self.ow;
+                        let owi0 = p % self.ow;
+                        let seg = (self.ow - owi0).min(width - jj);
+                        let dst = &mut prow[jj..jj + seg];
+                        let ih = (ohi * self.stride + khi) as isize - self.pad_h as isize;
+                        if ih < 0 || ih >= self.h as isize {
+                            dst.fill(0.0);
+                        } else {
+                            let plane = (ci * self.batch + b) * self.h * self.w;
+                            let row0 = plane + ih as usize * self.w;
+                            let irow = &self.act[row0..row0 + self.w];
+                            for (d, owi) in dst.iter_mut().zip(owi0..) {
+                                let iw = (owi * self.stride + kwi) as isize - self.pad_w as isize;
+                                *d = if iw >= 0 && iw < self.w as isize {
+                                    irow[iw as usize]
+                                } else {
+                                    0.0
+                                };
+                            }
+                        }
+                        jj += seg;
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Naive direct convolution over NCHW input (reference for property tests).
@@ -282,6 +397,40 @@ mod tests {
         assert_eq!(col_sum(0), 4.0); // top-left corner
         assert_eq!(col_sum(4), 9.0); // center
         assert_eq!(col_sum(8), 4.0); // bottom-right corner
+    }
+
+    #[test]
+    fn panels_reassemble_into_materialized_im2col() {
+        let mut rng = Rng::new(5);
+        for (c, h, w, batch, kh, kw, stride) in
+            [(3, 5, 4, 2, 3, 3, 1), (2, 7, 7, 1, 3, 3, 2), (1, 4, 4, 3, 1, 1, 1)]
+        {
+            let act: Vec<f32> = (0..c * batch * h * w).map(|_| rng.normal()).collect();
+            let mut x = Vec::new();
+            let (oh, ow) = im2col(&act, c, h, w, batch, kh, kw, stride, &mut x);
+            let src = Im2colPanels::new(&act, c, h, w, batch, kh, kw, stride);
+            assert_eq!(src.out_hw(), (oh, ow));
+            let total = src.num_cols();
+            let k = src.k_rows();
+            for tile in [1usize, 3, 8, total.max(1)] {
+                let mut rebuilt = vec![f32::NAN; k * total];
+                let mut panel = Vec::new();
+                let mut j0 = 0;
+                while j0 < total {
+                    let width = (total - j0).min(tile);
+                    panel.clear();
+                    panel.resize(k * width, 0.0);
+                    src.fill(j0, width, &mut panel);
+                    for r in 0..k {
+                        for jj in 0..width {
+                            rebuilt[r * total + j0 + jj] = panel[r * width + jj];
+                        }
+                    }
+                    j0 += width;
+                }
+                assert_eq!(rebuilt, x, "{c}x{h}x{w} b={batch} k={kh} s={stride} tile={tile}");
+            }
+        }
     }
 
     #[test]

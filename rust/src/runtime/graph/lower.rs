@@ -19,7 +19,11 @@
 //! Intermediate activations are assigned to **arena slots** by a linear
 //! scan over buffer liveness: a step's destination reuses the slot of any
 //! buffer whose last read has passed, so a deep chain like VGG-16 runs in a
-//! handful of physical buffers regardless of depth.
+//! handful of physical buffers regardless of depth.  At run time the
+//! executor backs those slots with a size-classed buffer recycler
+//! ([`super::Arena`]) and feeds conv GEMMs through the fused tile-order
+//! im2col producer, so neither a step's replaced output buffer nor the
+//! materialized im2col matrix is ever allocated per layer.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 

@@ -11,12 +11,22 @@
 //!   per-channel GEMM; FC passthrough), elementwise nodes either fused as
 //!   epilogues or kept as standalone [`ops`] steps, and intermediate
 //!   activations assigned to a small arena of slots by DAG liveness;
-//! * [`GraphExecutor`] runs the program over NCHW batched input.
+//! * [`GraphExecutor`] runs the program over NCHW batched input.  Convs go
+//!   through the **fused tile-order im2col** path by default
+//!   ([`im2col::Im2colPanels`] + [`crate::sparse::Engine::spmm_fused`]):
+//!   activation tiles are expanded on demand instead of materializing the
+//!   full `X` matrix per layer (`GraphExecutor::materialized` keeps the
+//!   old path as the bench baseline);
+//! * [`Arena`] recycles activation buffers by **size class**: a slot's
+//!   previous buffer goes to a free list instead of being dropped when a
+//!   step's output replaces it, and `run_with_arena` carries the arena
+//!   across runs so steady-state inference stops allocating.
 //!
 //! **Determinism:** every GEMM column is accumulated in a fixed non-zero
 //! order by the engine and all other kernels are elementwise, so the output
-//! is bit-for-bit identical across thread counts *and* batch widths — the
-//! same guarantee the underlying engine makes, lifted to whole networks.
+//! is bit-for-bit identical across thread counts, batch widths, tile
+//! widths, and the fused/materialized im2col paths — the same guarantee
+//! the underlying engine makes, lifted to whole networks.
 
 pub mod im2col;
 pub mod lower;
@@ -27,10 +37,13 @@ pub use lower::{
 };
 pub use ops::{BnParams, EpiOp};
 
+use std::collections::BTreeMap;
+
 use anyhow::{bail, Result};
 
 use crate::sparse::Engine;
 
+use self::im2col::Im2colPanels;
 use super::native::NativeEngine;
 
 /// Wall-clock of one executed step (for per-layer latency reports).
@@ -40,35 +53,152 @@ pub struct StepTiming {
     pub ms: f64,
 }
 
+/// Allocation counters of an [`Arena`] (diagnostics and regression tests:
+/// a warm arena must serve a steady-state run entirely from free lists).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// `take` calls that missed every free list and allocated fresh.
+    pub allocs: usize,
+    /// `take` calls served from a size-class free list.
+    pub reuses: usize,
+    /// Buffers returned to the free lists.
+    pub released: usize,
+}
+
+/// Size-classed activation-buffer recycler.
+///
+/// Buffers are binned by power-of-two capacity class; `take` hands out a
+/// **cleared** (length 0) buffer from the requested size's class so stale
+/// contents can never be read, and every consumer `resize`s it before
+/// writing.  This closes the ROADMAP buffer-arena item: a slot's `Vec` is
+/// returned here instead of dropped when a GEMM output replaces it, and
+/// [`GraphExecutor::run_with_arena`] carries the arena across runs so the
+/// second and later inferences of a network allocate nothing at the arena
+/// level.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free: BTreeMap<usize, Vec<Vec<f32>>>,
+    stats: ArenaStats,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Allocation counters since construction (or [`Arena::reset_stats`]).
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Zero the counters (the free lists are kept): per-run deltas.
+    pub fn reset_stats(&mut self) {
+        self.stats = ArenaStats::default();
+    }
+
+    fn class(len: usize) -> usize {
+        len.next_power_of_two().max(1)
+    }
+
+    /// A cleared buffer whose size class covers `len`, reusing a freed
+    /// buffer when one exists.  Fresh buffers are allocated at exactly
+    /// their class capacity (≤ 2× overhead), so a recycled buffer can
+    /// serve any request of its class without ever growing — which keeps
+    /// classes stable and warm-arena runs allocation-free.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let class = Self::class(len);
+        match self.free.get_mut(&class).and_then(Vec::pop) {
+            Some(mut v) => {
+                self.stats.reuses += 1;
+                v.clear();
+                v
+            }
+            None => {
+                self.stats.allocs += 1;
+                Vec::with_capacity(class)
+            }
+        }
+    }
+
+    /// Return a buffer to its size-class free list (empty-capacity buffers
+    /// are dropped — there is nothing to recycle).  Filed under the largest
+    /// class the buffer can fully serve (capacity rounded **down** to a
+    /// power of two), so a reused buffer never has to grow — the
+    /// self-enforcing invariant behind allocation-free warm runs, even if
+    /// a future consumer grows a taken buffer past its class.
+    pub fn release(&mut self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        self.stats.released += 1;
+        let class = 1usize << (usize::BITS - 1 - v.capacity().leading_zeros());
+        self.free.entry(class).or_default().push(v);
+    }
+}
+
 /// Runs a [`CompiledNet`] on the threaded native engine.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct GraphExecutor {
     engine: NativeEngine,
+    fused: bool,
 }
 
 impl GraphExecutor {
     pub fn new(threads: usize) -> GraphExecutor {
-        GraphExecutor { engine: NativeEngine::new(threads) }
+        GraphExecutor { engine: NativeEngine::new(threads), fused: true }
     }
 
     pub fn serial() -> GraphExecutor {
-        GraphExecutor { engine: NativeEngine::serial() }
+        GraphExecutor { engine: NativeEngine::serial(), fused: true }
     }
 
     pub fn with_engine(engine: NativeEngine) -> GraphExecutor {
-        GraphExecutor { engine }
+        GraphExecutor { engine, fused: true }
+    }
+
+    /// Run convs through the materialized-X im2col path instead of the
+    /// fused tile-order producer — the baseline the
+    /// `fused_vs_materialized_im2col` benches compare against.
+    pub fn materialized(mut self) -> GraphExecutor {
+        self.fused = false;
+        self
+    }
+
+    /// Override the fused-im2col tile width (GEMM columns per panel).
+    pub fn with_tile_cols(mut self, tile: usize) -> GraphExecutor {
+        self.engine = self.engine.with_tile_cols(tile);
+        self
     }
 
     pub fn threads(&self) -> usize {
         self.engine.threads()
     }
 
+    /// Whether convs use the fused tile-order im2col path.
+    pub fn is_fused(&self) -> bool {
+        self.fused
+    }
+
     /// Run one batched inference.  `input` is NCHW `[batch, C, H, W]`
     /// row-major; the result is `[batch, out_features]` (NCHW-flattened
     /// per sample for spatial outputs).
     pub fn run(&self, net: &CompiledNet, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut arena = Arena::new();
+        self.run_with_arena(net, input, batch, &mut arena)
+    }
+
+    /// [`GraphExecutor::run`] against a caller-owned [`Arena`]: carry it
+    /// across runs and every activation buffer after the first run comes
+    /// off a size-class free list instead of the allocator.
+    pub fn run_with_arena(
+        &self,
+        net: &CompiledNet,
+        input: &[f32],
+        batch: usize,
+        arena: &mut Arena,
+    ) -> Result<Vec<f32>> {
         let mut sink = Vec::new();
-        self.run_inner(net, input, batch, false, &mut sink)
+        self.run_inner(net, input, batch, false, &mut sink, arena)
     }
 
     /// [`GraphExecutor::run`] plus per-step wall-clock timings.
@@ -78,8 +208,22 @@ impl GraphExecutor {
         input: &[f32],
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<StepTiming>)> {
+        let mut arena = Arena::new();
+        self.run_timed_with_arena(net, input, batch, &mut arena)
+    }
+
+    /// [`GraphExecutor::run_timed`] against a caller-owned [`Arena`], so a
+    /// warmed-up arena makes the per-step timings measure the steady-state
+    /// (allocation-free) path.
+    pub fn run_timed_with_arena(
+        &self,
+        net: &CompiledNet,
+        input: &[f32],
+        batch: usize,
+        arena: &mut Arena,
+    ) -> Result<(Vec<f32>, Vec<StepTiming>)> {
         let mut timings = Vec::with_capacity(net.steps.len());
-        let y = self.run_inner(net, input, batch, true, &mut timings)?;
+        let y = self.run_inner(net, input, batch, true, &mut timings, arena)?;
         Ok((y, timings))
     }
 
@@ -90,6 +234,7 @@ impl GraphExecutor {
         batch: usize,
         timed: bool,
         timings: &mut Vec<StepTiming>,
+        arena: &mut Arena,
     ) -> Result<Vec<f32>> {
         if batch == 0 {
             bail!("batch must be >= 1");
@@ -102,37 +247,49 @@ impl GraphExecutor {
                 input.len()
             );
         }
-        // arena: slot buffers keep their allocation across steps (and the
-        // im2col scratch across layers), so a run's allocation profile is
-        // bounded by the liveness-derived slot count, not network depth
+        // arena slots: every destination buffer is taken from (and every
+        // replaced buffer released to) the size-class free lists, so a
+        // run's allocation profile is bounded by the liveness-derived slot
+        // count — and with a warm arena it is zero
         let mut slots: Vec<Vec<f32>> = (0..net.num_slots).map(|_| Vec::new()).collect();
-        let mut scratch: Vec<f32> = Vec::new();
-        slots[net.input_slot] = im2col::nchw_to_act(input, batch, ic, ih * iw);
+        let mut inp = arena.take(input.len());
+        im2col::nchw_to_act_into(input, batch, ic, ih * iw, &mut inp);
+        slots[net.input_slot] = inp;
 
         let engine = self.engine.engine();
         for step in &net.steps {
             let t0 = std::time::Instant::now();
             let (c, h, w) = step.in_shape;
             // the allocator guarantees dst != src (and dst != any residual
-            // slot), so taking dst's buffer out never aliases a read
+            // slot), so replacing dst's buffer never aliases a read; the
+            // previous buffer goes back to the free list instead of being
+            // dropped (the ROADMAP arena fix)
             debug_assert_ne!(step.src, step.dst, "step '{}'", step.name);
-            let mut out = std::mem::take(&mut slots[step.dst]);
+            arena.release(std::mem::take(&mut slots[step.dst]));
+            let (oc, oh, ow) = step.out_shape;
+            let mut out = arena.take(oc * oh * ow * batch);
             match &step.op {
                 StepOp::Gemm { layer, epilogue } => {
                     let lay = &net.layers[*layer];
-                    let mut y =
-                        run_gemm(engine, lay, &slots[step.src], (c, h, w), batch, &mut scratch)?;
-                    let (oc, oh, ow) = step.out_shape;
+                    run_gemm(
+                        engine,
+                        lay,
+                        &slots[step.src],
+                        (c, h, w),
+                        batch,
+                        self.fused,
+                        arena,
+                        &mut out,
+                    )?;
                     let cols = batch * oh * ow;
-                    debug_assert_eq!(y.len(), oc * cols);
+                    debug_assert_eq!(out.len(), oc * cols);
                     for e in epilogue {
                         match e {
-                            EpiOp::BatchNorm(p) => p.apply(&mut y, cols),
-                            EpiOp::Relu => ops::relu(&mut y),
-                            EpiOp::Add { slot } => ops::add_assign(&mut y, &slots[*slot]),
+                            EpiOp::BatchNorm(p) => p.apply(&mut out, cols),
+                            EpiOp::Relu => ops::relu(&mut out),
+                            EpiOp::Add { slot } => ops::add_assign(&mut out, &slots[*slot]),
                         }
                     }
-                    out = y;
                 }
                 StepOp::BatchNorm(p) => {
                     copy_into(&mut out, &slots[step.src]);
@@ -156,7 +313,6 @@ impl GraphExecutor {
                     ops::flatten(&slots[step.src], c, batch, h * w, &mut out);
                 }
             }
-            let (oc, oh, ow) = step.out_shape;
             debug_assert_eq!(out.len(), oc * oh * ow * batch, "step '{}'", step.name);
             slots[step.dst] = out;
             if timed {
@@ -168,7 +324,11 @@ impl GraphExecutor {
         }
 
         let (oc, oh, ow) = net.output_shape;
-        Ok(im2col::act_to_nchw(&slots[net.output_slot], batch, oc, oh * ow))
+        let y = im2col::act_to_nchw(&slots[net.output_slot], batch, oc, oh * ow);
+        for s in slots {
+            arena.release(s);
+        }
+        Ok(y)
     }
 }
 
@@ -179,30 +339,36 @@ fn copy_into(out: &mut Vec<f32>, src: &[f32]) {
     out.extend_from_slice(src);
 }
 
-/// Execute one prunable layer's GEMM over the engine.
+/// Execute one prunable layer's GEMM over the engine, into `y`.
+#[allow(clippy::too_many_arguments)]
 fn run_gemm(
     engine: &Engine,
     lay: &LayerExec,
     act: &[f32],
     in_shape: (usize, usize, usize),
     batch: usize,
-    scratch: &mut Vec<f32>,
-) -> Result<Vec<f32>> {
+    fused: bool,
+    arena: &mut Arena,
+    y: &mut Vec<f32>,
+) -> Result<()> {
     let (c, h, w) = in_shape;
     match lay.kind {
         GemmKind::Conv | GemmKind::Depthwise => {
-            let (oh, ow) = im2col::im2col(
-                act,
-                c,
-                h,
-                w,
-                batch,
-                lay.spec.kh,
-                lay.spec.kw,
-                lay.spec.stride,
-                scratch,
-            );
-            Ok(engine.spmm(lay.sparse.kernel(), scratch, batch * oh * ow))
+            let (kh, kw, stride) = (lay.spec.kh, lay.spec.kw, lay.spec.stride);
+            if fused {
+                // tile-order im2col fused into the spmm consumer: the
+                // materialized X never exists
+                let src = Im2colPanels::new(act, c, h, w, batch, kh, kw, stride);
+                engine.spmm_fused_into(lay.sparse.kernel(), &src, y);
+            } else {
+                // materialized baseline: X lives in an arena-recycled
+                // scratch for exactly this GEMM
+                let ohw = lay.spec.out_hw();
+                let mut scratch = arena.take(c * kh * kw * batch * ohw * ohw);
+                let (oh, ow) = im2col::im2col(act, c, h, w, batch, kh, kw, stride, &mut scratch);
+                engine.spmm_into(lay.sparse.kernel(), &scratch, batch * oh * ow, y);
+                arena.release(scratch);
+            }
         }
         GemmKind::Fc => {
             // glue guarantees [in, batch, 1] activation == [in, batch] GEMM rhs
@@ -214,9 +380,10 @@ fn run_gemm(
                     act.len()
                 );
             }
-            Ok(engine.spmm(lay.sparse.kernel(), act, batch))
+            engine.spmm_into(lay.sparse.kernel(), act, batch, y);
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -248,6 +415,12 @@ mod tests {
         let y = GraphExecutor::new(2).run(&net, &input, batch).unwrap();
         assert_eq!(y.len(), batch * 10);
         assert!(y.iter().all(|v| v.is_finite()));
+        // fused and materialized paths are bit-for-bit identical, at any
+        // tile width
+        let ym = GraphExecutor::new(2).materialized().run(&net, &input, batch).unwrap();
+        assert_eq!(y, ym);
+        let yt = GraphExecutor::new(2).with_tile_cols(8).run(&net, &input, batch).unwrap();
+        assert_eq!(y, yt);
         // wrong input length is a hard error
         assert!(GraphExecutor::serial().run(&net, &input[..n - 1], batch).is_err());
     }
@@ -262,5 +435,38 @@ mod tests {
         assert_eq!(y.len(), 10);
         assert_eq!(t.len(), net.steps.len());
         assert!(t.iter().all(|s| s.ms >= 0.0));
+    }
+
+    #[test]
+    fn warm_arena_serves_second_run_without_allocating() {
+        let m = zoo::proxy_cnn();
+        let assigns: Vec<Assignment> = m.layers.iter().map(|_| Assignment::dense()).collect();
+        let net = CompiledNet::compile(&m, &assigns, 3, KernelChoice::Auto).unwrap();
+        let input = vec![0.25f32; 3 * 32 * 32];
+        let exec = GraphExecutor::serial();
+        let mut arena = Arena::new();
+        let y1 = exec.run_with_arena(&net, &input, 1, &mut arena).unwrap();
+        assert!(arena.stats().allocs > 0, "cold arena must allocate");
+        arena.reset_stats();
+        let y2 = exec.run_with_arena(&net, &input, 1, &mut arena).unwrap();
+        assert_eq!(y1, y2, "arena reuse must not change results");
+        let s = arena.stats();
+        assert_eq!(s.allocs, 0, "warm arena still allocated: {s:?}");
+        assert!(s.reuses > 0);
+    }
+
+    #[test]
+    fn arena_take_is_cleared_and_classed() {
+        let mut a = Arena::new();
+        let mut v = a.take(100);
+        v.resize(100, f32::NAN); // poison
+        a.release(v);
+        let v2 = a.take(100);
+        assert!(v2.is_empty(), "reused buffers are handed out cleared");
+        assert!(v2.capacity() >= 100);
+        assert_eq!(a.stats(), ArenaStats { allocs: 1, reuses: 1, released: 1 });
+        // zero-capacity buffers are not worth recycling
+        a.release(Vec::new());
+        assert_eq!(a.stats().released, 1);
     }
 }

@@ -25,7 +25,7 @@ pub mod native;
 #[cfg(pjrt)]
 pub mod pjrt;
 
-pub use graph::{CompiledNet, GraphExecutor, NetWeights};
+pub use graph::{Arena, ArenaStats, CompiledNet, GraphExecutor, NetWeights};
 pub use manifest::{ArtifactSig, Manifest, ParamSpec};
 pub use native::{KernelChoice, NativeEngine, SparseLayer};
 #[cfg(pjrt)]

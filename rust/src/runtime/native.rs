@@ -76,9 +76,10 @@ impl SparseLayer {
     }
 }
 
-/// The native runtime: a threaded sparse engine plus the masked-GEMM entry
-/// points the PJRT artifacts expose.
-#[derive(Debug, Clone, Copy)]
+/// The native runtime: a threaded sparse engine (with its persistent
+/// worker pool) plus the masked-GEMM entry points the PJRT artifacts
+/// expose.  Cloning shares the pool.
+#[derive(Debug, Clone)]
 pub struct NativeEngine {
     engine: Engine,
 }
@@ -97,8 +98,19 @@ impl NativeEngine {
         NativeEngine { engine: Engine::max_parallel() }
     }
 
+    /// Override the fused-im2col tile width (see
+    /// [`Engine::with_tile_cols`]).
+    pub fn with_tile_cols(mut self, tile: usize) -> NativeEngine {
+        self.engine = self.engine.with_tile_cols(tile);
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.engine.threads()
+    }
+
+    pub fn tile_cols(&self) -> usize {
+        self.engine.tile_cols()
     }
 
     pub fn engine(&self) -> &Engine {

@@ -413,11 +413,14 @@ pub fn measured_vs_modeled_network(
     let input: Vec<f32> = (0..batch * c * h * w)
         .map(|i| ((i % 17) as f32) * 0.25 - 2.0)
         .collect();
-    let _warmup = exec.run(net, &input, batch)?;
+    // warm arena carried across reps: the timed runs measure the
+    // steady-state (allocation-free) path, not cold-start allocation
+    let mut arena = crate::runtime::Arena::new();
+    let _warmup = exec.run_with_arena(net, &input, batch, &mut arena)?;
     let mut best = f64::INFINITY;
     for _ in 0..reps.max(1) {
         let t = std::time::Instant::now();
-        std::hint::black_box(exec.run(net, &input, batch)?);
+        std::hint::black_box(exec.run_with_arena(net, &input, batch, &mut arena)?);
         best = best.min(t.elapsed().as_secs_f64() * 1e3);
     }
     Ok(NetworkLatencyComparison {

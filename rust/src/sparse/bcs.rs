@@ -18,7 +18,7 @@
 use crate::tensor::Tensor;
 
 use super::csr::Csr;
-use super::exec::{SparseKernel, WorkUnit};
+use super::exec::{SparseKernel, WorkUnit, LANE};
 
 /// BCS matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -94,13 +94,10 @@ impl Bcs {
     /// `i - 1` underflowed.
     pub fn row_cols(&self, r: usize) -> &[u32] {
         debug_assert!(r < self.rows);
-        // occurrence is sorted; find the run containing r
-        let li = match self.occurrence.binary_search(&(r as u32)) {
-            Ok(i) => i,
-            Err(0) => return &[],
-            Err(i) => i - 1,
-        };
-        if li >= self.n_lists() {
+        // occurrence is sorted; find the run containing r (shared
+        // `run_start` resolution: a start past `r` means no run covers it)
+        let (li, start) = self.run_start(r, r + 1);
+        if start > r || li >= self.n_lists() {
             return &[];
         }
         let s = self.col_stride[li] as usize;
@@ -137,6 +134,21 @@ impl Bcs {
     /// Index (non-value) bytes only — the quantity BCS optimizes.
     pub fn index_bytes(&self) -> usize {
         self.storage_bytes() - self.weights.len() * 4
+    }
+
+    /// Resolve where execution of rows `[r0, r1)` starts: `(list index,
+    /// first row)`.  One home for the occurrence binary search shared by
+    /// the SIMD and scalar `run_rows` paths — `Err(0)` means `r0` precedes
+    /// the first run (malformed occurrence, same contract as
+    /// [`Bcs::row_cols`], whose old `i - 1` underflowed): those rows are
+    /// empty, so execution starts at the first run (clamped to `r1`) and
+    /// the zero-initialized output before it stays untouched.
+    fn run_start(&self, r0: usize, r1: usize) -> (usize, usize) {
+        match self.occurrence.binary_search(&(r0 as u32)) {
+            Ok(i) => (i, r0),
+            Err(0) => (0, self.occurrence.first().map_or(r1, |&o| (o as usize).min(r1))),
+            Err(i) => (i - 1, r0),
+        }
     }
 
     /// Sparse matrix-vector product.
@@ -199,15 +211,72 @@ impl SparseKernel for Bcs {
         if r0 >= r1 {
             return;
         }
-        // locate the run containing r0, then walk runs covering [r0, r1).
-        // Err(0) means r0 precedes the first run (malformed occurrence,
-        // same contract as `row_cols`): those rows are empty, so start at
-        // the first run and leave the zero-initialized output untouched.
-        let (mut li, mut r) = match self.occurrence.binary_search(&(r0 as u32)) {
-            Ok(i) => (i, r0),
-            Err(0) => (0, self.occurrence.first().map_or(r1, |&o| (o as usize).min(r1))),
-            Err(i) => (i - 1, r0),
-        };
+        // locate the run containing r0 (see `run_start` for the malformed-
+        // occurrence contract), then walk runs covering [r0, r1)
+        let (mut li, mut r) = self.run_start(r0, r1);
+        let n_lists = self.n_lists();
+        let full = batch - batch % LANE;
+        while r < r1 && li < n_lists {
+            let run_end = (self.occurrence[li + 1] as usize).min(r1);
+            let s = self.col_stride[li] as usize;
+            let e = self.col_stride[li + 1] as usize;
+            let cols = &self.compact_cols[s..e];
+            if cols.is_empty() {
+                r = run_end;
+                li += 1;
+                continue;
+            }
+            // lane blocks outermost, rows of the occurrence-run inner: the
+            // [len(cols), LANE] slab of X gathered for one block is reused
+            // by every row sharing the column list — the access pattern
+            // that makes the pruning schemes' block structure pay off.
+            // Per-element accumulation stays ascending-k: bit-identical to
+            // the scalar `spmv` order at every batch width, thread count,
+            // and lane blocking.
+            let mut b = 0;
+            while b < full {
+                for rr in r..run_end {
+                    let base = self.row_offset[rr] as usize;
+                    let mut acc = [0.0f32; LANE];
+                    for (k, &c) in cols.iter().enumerate() {
+                        let w = self.weights[base + k];
+                        let xs = &x[c as usize * batch + b..c as usize * batch + b + LANE];
+                        for (a, &xv) in acc.iter_mut().zip(xs) {
+                            *a += w * xv;
+                        }
+                    }
+                    let o0 = (rr - r0) * batch + b;
+                    for (o, a) in out[o0..o0 + LANE].iter_mut().zip(&acc) {
+                        *o += a;
+                    }
+                }
+                b += LANE;
+            }
+            if b < batch {
+                // scalar tail for the batch % LANE trailing columns
+                for rr in r..run_end {
+                    let base = self.row_offset[rr] as usize;
+                    let orow = &mut out[(rr - r0) * batch..(rr - r0 + 1) * batch];
+                    for bt in b..batch {
+                        let mut acc = 0.0f32;
+                        for (k, &c) in cols.iter().enumerate() {
+                            acc += self.weights[base + k] * x[c as usize * batch + bt];
+                        }
+                        orow[bt] += acc;
+                    }
+                }
+            }
+            r = run_end;
+            li += 1;
+        }
+    }
+
+    fn run_rows_scalar(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), (r1 - r0) * batch);
+        if r0 >= r1 {
+            return;
+        }
+        let (mut li, mut r) = self.run_start(r0, r1);
         let n_lists = self.n_lists();
         while r < r1 && li < n_lists {
             let run_end = (self.occurrence[li + 1] as usize).min(r1);
@@ -217,8 +286,7 @@ impl SparseKernel for Bcs {
             while r < run_end {
                 let base = self.row_offset[r] as usize;
                 let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
-                // ascending-k accumulation: bit-identical to the scalar
-                // `spmv` order at every batch width and thread count
+                // ascending-k accumulation, one batch element at a time
                 for (k, &c) in cols.iter().enumerate() {
                     let w = self.weights[base + k];
                     let xrow = &x[c as usize * batch..(c as usize + 1) * batch];

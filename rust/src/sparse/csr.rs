@@ -2,7 +2,7 @@
 
 use crate::tensor::Tensor;
 
-use super::exec::{SparseKernel, WorkUnit};
+use super::exec::{lane_row_indexed, SparseKernel, WorkUnit};
 
 /// Standard CSR over a 2-D matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -106,8 +106,25 @@ impl SparseKernel for Csr {
     fn run_rows(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), (r1 - r0) * batch);
         for r in r0..r1 {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            // ascending-k accumulation in [f32; LANE] register blocks:
+            // bit-identical to the scalar spmv order
+            lane_row_indexed(
+                &self.values[lo..hi],
+                &self.col_idx[lo..hi],
+                x,
+                batch,
+                &mut out[(r - r0) * batch..(r - r0 + 1) * batch],
+            );
+        }
+    }
+
+    fn run_rows_scalar(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), (r1 - r0) * batch);
+        for r in r0..r1 {
             let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
-            // ascending-k accumulation: bit-identical to the scalar spmv
+            // ascending-k accumulation, one batch element at a time
             for k in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
                 let w = self.values[k];
                 let c = self.col_idx[k] as usize;

@@ -12,7 +12,17 @@
 //! * backends — [`DenseKernel`] (reference), [`Csr`](super::Csr), and
 //!   [`Bcs`](super::Bcs), the latter dispatching whole occurrence-runs so
 //!   the compact column list is resolved once per run;
-//! * [`Engine`] — rayon-based threaded dispatch.  Work units (BCS
+//! * **SIMD lanes** — every backend's `run_rows` vectorizes over the batch
+//!   dimension in [`LANE`]-wide `[f32; 8]` accumulator blocks (portable
+//!   code LLVM auto-vectorizes; no nightly features), with the pre-rewrite
+//!   scalar loop kept as [`SparseKernel::run_rows_scalar`], the bit-for-bit
+//!   reference the parity suite locks the lanes against;
+//! * [`PanelSource`] — the fused right-hand-side contract: a producer
+//!   (e.g. tile-order im2col) that writes `[cols, tile]` panels of `X` on
+//!   demand so [`Engine::spmm_fused`] never needs the materialized matrix;
+//! * [`Engine`] — threaded dispatch over a **persistent thread pool** owned
+//!   by the engine (built once at construction, reused by every product
+//!   instead of a fresh `rayon::scope` per spmm).  Work units (BCS
 //!   occurrence-runs; rows for CSR/dense) are assigned to workers by the
 //!   same **stride rule** `unit i → worker i % threads` that
 //!   [`reorder`](super::reorder) models, so
@@ -20,13 +30,26 @@
 //!   predict the real per-thread work of this engine.
 //!
 //! Determinism: a row's dot products are always accumulated in the same
-//! element order regardless of thread count or batch size, so
-//! `Engine::spmm` with N threads is **bit-for-bit identical** to the serial
-//! column-by-column `spmv` of the same backend.
+//! element order regardless of thread count, batch size, lane blocking, or
+//! panel fusion, so `Engine::spmm` with N threads is **bit-for-bit
+//! identical** to the serial column-by-column `spmv` of the same backend.
+
+use std::sync::Arc;
 
 use crate::tensor::Tensor;
 
 use super::reorder::{load_balance, stride_worker, LoadBalance};
+
+/// Batch-lane width: `run_rows` processes the batch dimension in
+/// `[f32; LANE]` register blocks (plus a scalar tail), the portable shape
+/// LLVM lowers to 8-wide f32 SIMD.
+pub const LANE: usize = 8;
+
+/// Default fused-im2col tile width (GEMM columns per [`PanelSource`]
+/// panel): wide enough to amortize streaming the weights once per panel,
+/// small enough that a `[cols, tile]` panel stays cache-resident.  Always
+/// a multiple of [`LANE`].
+pub const DEFAULT_TILE_COLS: usize = 256;
 
 /// A contiguous row range plus its cost (retained non-zeros), the unit of
 /// thread dispatch.
@@ -38,6 +61,73 @@ pub struct WorkUnit {
     pub r1: usize,
     /// Work estimate: non-zeros in the range (MACs per batch column).
     pub cost: usize,
+}
+
+/// One output row over an index-compressed weight row:
+/// `orow[b] += Σ_k w[k] · x[cols[k], b]`, the batch processed as full
+/// `[f32; LANE]` register blocks plus a scalar tail.  Per-element
+/// accumulation is ascending-`k`, identical to the scalar path.
+#[inline]
+pub(crate) fn lane_row_indexed(
+    weights: &[f32],
+    cols: &[u32],
+    x: &[f32],
+    batch: usize,
+    orow: &mut [f32],
+) {
+    debug_assert_eq!(weights.len(), cols.len());
+    debug_assert_eq!(orow.len(), batch);
+    let full = batch - batch % LANE;
+    let mut b = 0;
+    while b < full {
+        let mut acc = [0.0f32; LANE];
+        for (&w, &c) in weights.iter().zip(cols) {
+            let xs = &x[c as usize * batch + b..c as usize * batch + b + LANE];
+            for (a, &xv) in acc.iter_mut().zip(xs) {
+                *a += w * xv;
+            }
+        }
+        for (o, a) in orow[b..b + LANE].iter_mut().zip(&acc) {
+            *o += a;
+        }
+        b += LANE;
+    }
+    for bt in full..batch {
+        let mut acc = 0.0f32;
+        for (&w, &c) in weights.iter().zip(cols) {
+            acc += w * x[c as usize * batch + bt];
+        }
+        orow[bt] += acc;
+    }
+}
+
+/// Dense-row variant of [`lane_row_indexed`]: every column is touched,
+/// zeros included (the reference semantics of [`DenseKernel`]).
+#[inline]
+pub(crate) fn lane_row_dense(wrow: &[f32], x: &[f32], batch: usize, orow: &mut [f32]) {
+    debug_assert_eq!(orow.len(), batch);
+    let full = batch - batch % LANE;
+    let mut b = 0;
+    while b < full {
+        let mut acc = [0.0f32; LANE];
+        for (c, &w) in wrow.iter().enumerate() {
+            let xs = &x[c * batch + b..c * batch + b + LANE];
+            for (a, &xv) in acc.iter_mut().zip(xs) {
+                *a += w * xv;
+            }
+        }
+        for (o, a) in orow[b..b + LANE].iter_mut().zip(&acc) {
+            *o += a;
+        }
+        b += LANE;
+    }
+    for bt in full..batch {
+        let mut acc = 0.0f32;
+        for (c, &w) in wrow.iter().enumerate() {
+            acc += w * x[c * batch + bt];
+        }
+        orow[bt] += acc;
+    }
 }
 
 /// The execution contract every sparse backend implements.
@@ -63,8 +153,13 @@ pub trait SparseKernel: Sync {
     /// `(r1 - r0) * batch`, **zero-initialized** by the caller, row-major
     /// relative to `r0`).  Implementations must accumulate each output
     /// element in ascending non-zero order so results are bit-identical
-    /// across dispatch strategies.
+    /// across dispatch strategies, lane widths, and panel tilings.
     fn run_rows(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]);
+
+    /// The pre-SIMD scalar inner loop (one batch element at a time):
+    /// the bit-for-bit reference `run_rows` is locked against by the
+    /// parity suite, and the baseline of the `spmm_simd_vs_scalar` bench.
+    fn run_rows_scalar(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]);
 
     /// Serial batched product `Y = A · X`.
     fn spmm(&self, x: &[f32], batch: usize) -> Vec<f32> {
@@ -77,9 +172,71 @@ pub trait SparseKernel: Sync {
         y
     }
 
+    /// Serial batched product through the scalar reference loop.
+    fn spmm_scalar(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let (rows, cols) = self.dims();
+        assert_eq!(x.len(), cols * batch, "X must be [cols, batch] row-major");
+        let mut y = vec![0.0f32; rows * batch];
+        for u in self.work_units() {
+            self.run_rows_scalar(x, batch, u.r0, u.r1, &mut y[u.r0 * batch..u.r1 * batch]);
+        }
+        y
+    }
+
     /// Serial mat-vec (batch = 1 spmm).
     fn spmv_exec(&self, x: &[f32]) -> Vec<f32> {
         self.spmm(x, 1)
+    }
+}
+
+/// A producer of right-hand-side panels for [`Engine::spmm_fused`]: the
+/// fused-im2col contract.  `fill` writes GEMM columns `j0..j0 + width` as
+/// a `[k_rows, width]` row-major panel — `X` restricted to one column
+/// tile, generated directly in the order the spmm consumes it, so the full
+/// `[k_rows, num_cols]` matrix never has to exist.
+pub trait PanelSource: Sync {
+    /// Total GEMM columns (the spmm batch dimension).
+    fn num_cols(&self) -> usize;
+
+    /// Panel rows; must equal the kernel's column count.
+    fn k_rows(&self) -> usize;
+
+    /// Write columns `j0..j0 + width` into `panel` (`[k_rows, width]`
+    /// row-major, fully overwritten — no zero-init required).
+    fn fill(&self, j0: usize, width: usize, panel: &mut [f32]);
+}
+
+/// A materialized `[k_rows, num_cols]` right-hand side exposed as a
+/// [`PanelSource`] (reference producer for parity tests and benches).
+pub struct SlicePanels<'a> {
+    x: &'a [f32],
+    k_rows: usize,
+    num_cols: usize,
+}
+
+impl<'a> SlicePanels<'a> {
+    pub fn new(x: &'a [f32], k_rows: usize, num_cols: usize) -> SlicePanels<'a> {
+        assert_eq!(x.len(), k_rows * num_cols, "X must be [k_rows, num_cols]");
+        SlicePanels { x, k_rows, num_cols }
+    }
+}
+
+impl PanelSource for SlicePanels<'_> {
+    fn num_cols(&self) -> usize {
+        self.num_cols
+    }
+
+    fn k_rows(&self) -> usize {
+        self.k_rows
+    }
+
+    fn fill(&self, j0: usize, width: usize, panel: &mut [f32]) {
+        debug_assert!(j0 + width <= self.num_cols);
+        debug_assert_eq!(panel.len(), self.k_rows * width);
+        for r in 0..self.k_rows {
+            let src = &self.x[r * self.num_cols + j0..r * self.num_cols + j0 + width];
+            panel[r * width..(r + 1) * width].copy_from_slice(src);
+        }
     }
 }
 
@@ -126,6 +283,14 @@ impl SparseKernel for DenseKernel {
         debug_assert_eq!(out.len(), (r1 - r0) * batch);
         for r in r0..r1 {
             let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            lane_row_dense(row, x, batch, &mut out[(r - r0) * batch..(r - r0 + 1) * batch]);
+        }
+    }
+
+    fn run_rows_scalar(&self, x: &[f32], batch: usize, r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), (r1 - r0) * batch);
+        for r in r0..r1 {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
             let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
             for (c, &w) in row.iter().enumerate() {
                 let xrow = &x[c * batch..(c + 1) * batch];
@@ -137,10 +302,9 @@ impl SparseKernel for DenseKernel {
     }
 }
 
-/// `y.as_mut_ptr()` smuggled across rayon workers.  Sound because each
-/// worker writes only the disjoint `[r0 * batch, r1 * batch)` spans of the
-/// units it owns (units partition the rows; the stride assignment
-/// partitions the units).
+/// `y.as_mut_ptr()` smuggled across pool workers.  Sound because each
+/// worker writes only disjoint spans (row ranges for `spmm`, column tiles
+/// for `spmm_fused`) of the units it owns.
 struct SyncPtr(*mut f32);
 
 unsafe impl Send for SyncPtr {}
@@ -148,21 +312,46 @@ unsafe impl Sync for SyncPtr {}
 
 /// Multi-threaded dispatcher over any [`SparseKernel`].
 ///
-/// Unit `i` goes to worker `i % threads` — the stride assignment
-/// [`reorder::load_balance`](super::reorder::load_balance) models — so the
-/// offline [`LoadBalance`] report for a matrix is a prediction of this
-/// engine's thread utilization (see [`Engine::predicted_balance`]).
-#[derive(Debug, Clone, Copy)]
+/// The engine owns a **persistent rayon thread pool**, built once at
+/// construction and reused by every product (replacing the per-spmm
+/// `rayon::scope` of earlier revisions, whose dispatch overhead dominated
+/// small layers).  Unit `i` goes to worker `i % threads` — the stride
+/// assignment [`reorder::load_balance`](super::reorder::load_balance)
+/// models — so the offline [`LoadBalance`] report for a matrix is a
+/// prediction of this engine's thread utilization (see
+/// [`Engine::predicted_balance`]).
+#[derive(Clone)]
 pub struct Engine {
     threads: usize,
+    tile_cols: usize,
+    pool: Option<Arc<rayon::ThreadPool>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("threads", &self.threads)
+            .field("tile_cols", &self.tile_cols)
+            .finish()
+    }
 }
 
 impl Engine {
     pub fn new(threads: usize) -> Engine {
-        Engine { threads: threads.max(1) }
+        let threads = threads.max(1);
+        let pool = (threads > 1).then(|| {
+            Arc::new(
+                rayon::ThreadPoolBuilder::new()
+                    .num_threads(threads)
+                    .thread_name(|i| format!("prunemap-engine-{i}"))
+                    .build()
+                    .expect("spawn engine thread pool"),
+            )
+        });
+        Engine { threads, tile_cols: DEFAULT_TILE_COLS, pool }
     }
 
-    /// Single-threaded engine (identical output, no rayon dispatch).
+    /// Single-threaded engine (identical output, no pool).
     pub fn serial() -> Engine {
         Engine::new(1)
     }
@@ -172,8 +361,20 @@ impl Engine {
         Engine::new(rayon::current_num_threads())
     }
 
+    /// Override the fused-im2col tile width (GEMM columns per panel),
+    /// rounded up to a multiple of [`LANE`] so full register blocks
+    /// dominate.
+    pub fn with_tile_cols(mut self, tile: usize) -> Engine {
+        self.tile_cols = tile.max(LANE).div_ceil(LANE) * LANE;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn tile_cols(&self) -> usize {
+        self.tile_cols
     }
 
     /// Dispatch units: the backend's work units, with oversized runs split
@@ -208,38 +409,137 @@ impl Engine {
     /// Bit-for-bit identical to the serial [`SparseKernel::spmm`] at any
     /// thread count.
     pub fn spmm<K: SparseKernel + ?Sized>(&self, kernel: &K, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut y = Vec::new();
+        self.spmm_into(kernel, x, batch, &mut y);
+        y
+    }
+
+    /// [`Engine::spmm`] into a caller-owned buffer (cleared and
+    /// zero-resized here), so arena-recycled buffers are reused instead of
+    /// a fresh `Vec` being allocated per product.
+    pub fn spmm_into<K: SparseKernel + ?Sized>(
+        &self,
+        kernel: &K,
+        x: &[f32],
+        batch: usize,
+        y: &mut Vec<f32>,
+    ) {
         let (rows, cols) = kernel.dims();
         assert_eq!(x.len(), cols * batch, "X must be [cols, batch] row-major");
-        let mut y = vec![0.0f32; rows * batch];
+        y.clear();
+        y.resize(rows * batch, 0.0);
         let units = self.dispatch_units(kernel);
         let workers = self.threads.min(units.len());
-        if workers <= 1 {
-            for u in &units {
-                kernel.run_rows(x, batch, u.r0, u.r1, &mut y[u.r0 * batch..u.r1 * batch]);
+        let pool = match &self.pool {
+            Some(pool) if workers > 1 => pool,
+            _ => {
+                for u in &units {
+                    kernel.run_rows(x, batch, u.r0, u.r1, &mut y[u.r0 * batch..u.r1 * batch]);
+                }
+                return;
             }
-            return y;
-        }
+        };
         let ptr = SyncPtr(y.as_mut_ptr());
-        rayon::scope(|s| {
-            let units = &units;
-            let ptr = &ptr;
-            for w in 0..workers {
-                s.spawn(move |_| {
-                    // stride assignment: unit i -> worker i % workers
-                    for u in units.iter().skip(w).step_by(workers) {
-                        let len = (u.r1 - u.r0) * batch;
-                        // SAFETY: units cover disjoint row ranges and each
-                        // unit is visited by exactly one worker, so these
-                        // slices never alias; `y` outlives the scope.
-                        let out = unsafe {
-                            std::slice::from_raw_parts_mut(ptr.0.add(u.r0 * batch), len)
-                        };
-                        kernel.run_rows(x, batch, u.r0, u.r1, out);
-                    }
-                });
+        let units = &units;
+        let ptr = &ptr;
+        pool.broadcast(|ctx| {
+            let w = ctx.index();
+            if w >= workers {
+                return;
+            }
+            // stride assignment: unit i -> worker i % workers
+            for u in units.iter().skip(w).step_by(workers) {
+                let len = (u.r1 - u.r0) * batch;
+                // SAFETY: units cover disjoint row ranges and each unit is
+                // visited by exactly one worker, so these slices never
+                // alias; `y` outlives the (blocking) broadcast.
+                let out = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u.r0 * batch), len) };
+                kernel.run_rows(x, batch, u.r0, u.r1, out);
             }
         });
+    }
+
+    /// Fused batched product `Y = A · X` where `X`'s column tiles are
+    /// generated on demand by `src` (e.g. tile-order im2col) instead of
+    /// materialized up front.
+    pub fn spmm_fused<K, P>(&self, kernel: &K, src: &P) -> Vec<f32>
+    where
+        K: SparseKernel + ?Sized,
+        P: PanelSource + ?Sized,
+    {
+        let mut y = Vec::new();
+        self.spmm_fused_into(kernel, src, &mut y);
         y
+    }
+
+    /// [`Engine::spmm_fused`] into a caller-owned buffer.  Each worker
+    /// fills a `[cols, tile]` panel, runs the SIMD kernels over it at
+    /// `batch = tile`, and scatters the `[rows, tile]` result into its
+    /// disjoint column range of `Y`.  Per-element accumulation order is
+    /// unchanged (ascending non-zeros), so the result is bit-for-bit
+    /// identical to [`Engine::spmm`] over the materialized `X`, at any
+    /// thread count and tile width.
+    pub fn spmm_fused_into<K, P>(&self, kernel: &K, src: &P, y: &mut Vec<f32>)
+    where
+        K: SparseKernel + ?Sized,
+        P: PanelSource + ?Sized,
+    {
+        let (rows, cols) = kernel.dims();
+        assert_eq!(cols, src.k_rows(), "panel rows must match kernel cols");
+        let total = src.num_cols();
+        y.clear();
+        y.resize(rows * total, 0.0);
+        if rows == 0 || total == 0 {
+            return;
+        }
+        let tile = self.tile_cols.max(LANE);
+        let npanels = total.div_ceil(tile);
+        let workers = self.threads.min(npanels);
+        let pool = match &self.pool {
+            Some(pool) if workers > 1 => pool,
+            _ => {
+                let mut panel = Vec::new();
+                let mut outp = Vec::new();
+                for i in 0..npanels {
+                    let j0 = i * tile;
+                    let width = (total - j0).min(tile);
+                    panel_product(kernel, src, j0, width, &mut panel, &mut outp);
+                    for r in 0..rows {
+                        y[r * total + j0..r * total + j0 + width]
+                            .copy_from_slice(&outp[r * width..(r + 1) * width]);
+                    }
+                }
+                return;
+            }
+        };
+        let ptr = SyncPtr(y.as_mut_ptr());
+        let ptr = &ptr;
+        pool.broadcast(|ctx| {
+            let w = ctx.index();
+            if w >= workers {
+                return;
+            }
+            let mut panel = Vec::new();
+            let mut outp = Vec::new();
+            // stride assignment: panel i -> worker i % workers, the same
+            // rule the row dispatch uses
+            let mut i = w;
+            while i < npanels {
+                let j0 = i * tile;
+                let width = (total - j0).min(tile);
+                panel_product(kernel, src, j0, width, &mut panel, &mut outp);
+                for r in 0..rows {
+                    // SAFETY: panels cover disjoint column ranges and each
+                    // panel is visited by exactly one worker, so these row
+                    // segments never alias; `y` outlives the broadcast.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(ptr.0.add(r * total + j0), width)
+                    };
+                    dst.copy_from_slice(&outp[r * width..(r + 1) * width]);
+                }
+                i += workers;
+            }
+        });
     }
 
     /// Mat-vec through the threaded dispatcher.
@@ -268,6 +568,29 @@ impl Engine {
         }
         costs
     }
+}
+
+/// Fill one `[cols, width]` panel from `src` and compute the kernel's full
+/// `[rows, width]` product over it (scratch buffers reused by the caller
+/// across panels).
+fn panel_product<K, P>(
+    kernel: &K,
+    src: &P,
+    j0: usize,
+    width: usize,
+    panel: &mut Vec<f32>,
+    outp: &mut Vec<f32>,
+) where
+    K: SparseKernel + ?Sized,
+    P: PanelSource + ?Sized,
+{
+    let (rows, cols) = kernel.dims();
+    panel.clear();
+    panel.resize(cols * width, 0.0);
+    src.fill(j0, width, panel);
+    outp.clear();
+    outp.resize(rows * width, 0.0);
+    kernel.run_rows(panel, width, 0, rows, outp);
 }
 
 /// Pack per-sample input vectors (each `cols` long) into the
@@ -328,6 +651,29 @@ mod tests {
     }
 
     #[test]
+    fn simd_lanes_match_scalar_reference() {
+        // the lockdown: the lane rewrite is bit-identical to the scalar
+        // loop at every batch width, lane-aligned or not
+        let t = block_pruned(96, 64, 3);
+        for kernel in [
+            Box::new(Bcs::from_dense(&t)) as Box<dyn SparseKernel>,
+            Box::new(Csr::from_dense(&t)),
+            Box::new(DenseKernel::from_tensor(&t)),
+        ] {
+            let mut rng = Rng::new(4);
+            for batch in [1usize, 7, 8, 9, 33] {
+                let x: Vec<f32> = (0..64 * batch).map(|_| rng.normal()).collect();
+                assert_eq!(
+                    kernel.spmm(&x, batch),
+                    kernel.spmm_scalar(&x, batch),
+                    "{} batch={batch}",
+                    kernel.label()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn threaded_bit_for_bit_serial() {
         let t = block_pruned(96, 64, 3);
         let bcs = Bcs::from_dense(&t);
@@ -339,6 +685,23 @@ mod tests {
             let y = Engine::new(threads).spmm(&bcs, &x, batch);
             assert_eq!(serial, y, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn persistent_pool_is_reused_across_products() {
+        // one engine, many spmm calls: the pool survives and stays correct
+        let t = block_pruned(64, 48, 9);
+        let bcs = Bcs::from_dense(&t);
+        let eng = Engine::new(4);
+        let mut rng = Rng::new(10);
+        for batch in [1usize, 3, 8, 12] {
+            let x: Vec<f32> = (0..48 * batch).map(|_| rng.normal()).collect();
+            assert_eq!(eng.spmm(&bcs, &x, batch), bcs.spmm(&x, batch), "batch={batch}");
+        }
+        // a cloned engine shares the same pool (Arc) and stays correct
+        let eng2 = eng.clone();
+        let x: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+        assert_eq!(eng2.spmv(&bcs, &x), bcs.spmv(&x));
     }
 
     #[test]
@@ -355,6 +718,37 @@ mod tests {
             // inherent serial scalar spmv: the bit-for-bit reference
             assert_eq!(unpack_column(&y, 9, b), bcs.spmv(col), "column {b}");
         }
+    }
+
+    #[test]
+    fn fused_panels_match_materialized_spmm() {
+        let t = block_pruned(48, 32, 11);
+        let bcs = Bcs::from_dense(&t);
+        let mut rng = Rng::new(12);
+        for total in [1usize, 7, 8, 40, 300] {
+            let x: Vec<f32> = (0..32 * total).map(|_| rng.normal()).collect();
+            let src = SlicePanels::new(&x, 32, total);
+            let want = Engine::serial().spmm(&bcs, &x, total);
+            for (threads, tile) in [(1usize, 8usize), (1, 256), (4, 8), (4, 24), (4, 256)] {
+                let eng = Engine::new(threads).with_tile_cols(tile);
+                assert_eq!(
+                    eng.spmm_fused(&bcs, &src),
+                    want,
+                    "total={total} threads={threads} tile={tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_into_reuses_and_zeroes_the_buffer() {
+        let t = block_pruned(32, 32, 13);
+        let bcs = Bcs::from_dense(&t);
+        let x: Vec<f32> = (0..32 * 3).map(|i| (i as f32).sin()).collect();
+        let want = bcs.spmm(&x, 3);
+        let mut y = vec![f32::NAN; 512]; // stale garbage, larger than needed
+        Engine::new(2).spmm_into(&bcs, &x, 3, &mut y);
+        assert_eq!(y, want, "stale buffer contents must never leak");
     }
 
     #[test]
@@ -425,6 +819,19 @@ mod tests {
         let t2 = Tensor::zeros(&[4, 4]);
         let y2 = Engine::new(2).spmm(&Bcs::from_dense(&t2), &[], 0);
         assert!(y2.is_empty());
+        // fused path over a zero-row / zero-column source
+        let src = SlicePanels::new(&[], 8, 0);
+        assert!(Engine::new(2).spmm_fused(&bcs, &src).is_empty());
+    }
+
+    #[test]
+    fn tile_cols_rounds_to_lane_multiples() {
+        assert_eq!(Engine::serial().with_tile_cols(1).tile_cols(), LANE);
+        assert_eq!(Engine::serial().with_tile_cols(8).tile_cols(), 8);
+        assert_eq!(Engine::serial().with_tile_cols(9).tile_cols(), 16);
+        assert_eq!(Engine::serial().with_tile_cols(250).tile_cols(), 256);
+        assert_eq!(Engine::serial().tile_cols(), DEFAULT_TILE_COLS);
+        assert_eq!(DEFAULT_TILE_COLS % LANE, 0);
     }
 
     #[test]

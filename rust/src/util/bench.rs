@@ -8,6 +8,8 @@
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Value;
+
 /// Re-exported optimizer barrier.
 pub fn black_box<T>(x: T) -> T {
     bb(x)
@@ -25,6 +27,20 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// JSON record (`util::json`) so bench output can be tracked across
+    /// PRs: `{"name", "iters", "min_ms", "median_ms", "mean_ms",
+    /// "p95_ms"}`.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(self.name.clone())),
+            ("iters", Value::num(self.iters as f64)),
+            ("min_ms", Value::num(self.min.as_secs_f64() * 1e3)),
+            ("median_ms", Value::num(self.median.as_secs_f64() * 1e3)),
+            ("mean_ms", Value::num(self.mean.as_secs_f64() * 1e3)),
+            ("p95_ms", Value::num(self.p95.as_secs_f64() * 1e3)),
+        ])
+    }
+
     pub fn report(&self) {
         println!(
             "{:<44} {:>10} {:>10} {:>10} {:>10}   ({} iters)",
@@ -113,6 +129,32 @@ pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchStats {
     stats
 }
 
+/// Build a baseline-vs-contender comparison record and the median
+/// speedup, without printing.
+pub fn comparison_record(
+    name: &str,
+    baseline: &BenchStats,
+    contender: &BenchStats,
+) -> (Value, f64) {
+    let speedup = baseline.median.as_secs_f64() / contender.median.as_secs_f64().max(1e-12);
+    let rec = Value::obj(vec![
+        ("bench", Value::str(name.to_string())),
+        ("baseline", baseline.to_json()),
+        ("contender", contender.to_json()),
+        ("speedup", Value::num(speedup)),
+    ]);
+    (rec, speedup)
+}
+
+/// Print one machine-readable `BENCH {json}` comparison line — the record
+/// BENCH trajectories grep out of bench logs across PRs — and return the
+/// record plus the baseline/contender median speedup.
+pub fn emit_comparison(name: &str, baseline: &BenchStats, contender: &BenchStats) -> (Value, f64) {
+    let (rec, speedup) = comparison_record(name, baseline, contender);
+    println!("BENCH {}", rec.compact());
+    (rec, speedup)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +166,26 @@ mod tests {
         });
         assert!(s.min <= s.median && s.median <= s.p95);
         assert_eq!(s.iters, 50);
+    }
+
+    #[test]
+    fn json_record_and_speedup() {
+        let mk = |name: &str, ms: u64| BenchStats {
+            name: name.to_string(),
+            iters: 3,
+            mean: Duration::from_millis(ms),
+            median: Duration::from_millis(ms),
+            p95: Duration::from_millis(ms),
+            min: Duration::from_millis(ms),
+        };
+        let base = mk("scalar", 40);
+        let cont = mk("simd", 10);
+        let (rec, speedup) = emit_comparison("spmm", &base, &cont);
+        assert!((speedup - 4.0).abs() < 1e-9);
+        assert_eq!(rec.get("bench").unwrap().as_str().unwrap(), "spmm");
+        let j = base.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "scalar");
+        assert!((j.get("median_ms").unwrap().as_f64().unwrap() - 40.0).abs() < 1e-9);
     }
 
     #[test]

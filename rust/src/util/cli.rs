@@ -99,6 +99,30 @@ impl Args {
         let b = self.get_usize("batch", default)?;
         Ok(b.max(1))
     }
+
+    /// Fused-im2col tile width from `--tile N` (GEMM columns per panel;
+    /// the engine rounds it up to a multiple of the 8-wide SIMD lane).
+    pub fn tile_cols(&self, default: usize) -> Result<usize> {
+        let t = self.get_usize("tile", default)?;
+        Ok(t.max(1))
+    }
+
+    /// `--materialized`: run convs through the materialized-X im2col path
+    /// instead of the fused tile-order producer (the bench baseline).
+    pub fn materialized(&self) -> bool {
+        self.flag("materialized")
+    }
+}
+
+/// Engine worker count for test binaries: `PRUNEMAP_TEST_THREADS` when
+/// set (CI runs the tier-1 suite at 1 and 4 to catch pool-lifecycle
+/// bugs), else `default`.
+pub fn env_threads(default: usize) -> usize {
+    std::env::var("PRUNEMAP_TEST_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+        .max(1)
 }
 
 #[cfg(test)]
@@ -129,9 +153,13 @@ mod tests {
 
     #[test]
     fn engine_knobs() {
-        let a = Args::parse(toks("--threads 3 --batch 16"));
+        let a = Args::parse(toks("--threads 3 --batch 16 --tile 64 --materialized"));
         assert_eq!(a.engine_threads().unwrap(), 3);
         assert_eq!(a.batch_size(1).unwrap(), 16);
+        assert_eq!(a.tile_cols(256).unwrap(), 64);
+        assert!(a.materialized());
+        assert!(!Args::parse(toks("")).materialized());
+        assert_eq!(Args::parse(toks("--tile 0")).tile_cols(256).unwrap(), 1);
         let d = Args::parse(toks(""));
         assert!(d.engine_threads().unwrap() >= 1);
         assert_eq!(d.batch_size(4).unwrap(), 4);

@@ -1,15 +1,23 @@
 //! Parity tests for the batched multi-threaded sparse execution engine:
-//! `spmm` with 1 and N threads must match column-by-column serial `spmv`
-//! **bit-for-bit** per backend, across the pruned-layout families and the
-//! edge cases that stress `row_cols`' binary search (0 rows, empty rows,
-//! all-dense, single occurrence-run).
+//! `spmm` with 1 and N threads (persistent pool) must match column-by-
+//! column serial `spmv` **bit-for-bit** per backend, the SIMD batch lanes
+//! must match the scalar reference loop, and both must hold across the
+//! pruned-layout families and the edge cases that stress `row_cols`'
+//! binary search (0 rows, empty rows, all-dense, single occurrence-run).
+//! Also here: the graph executor's size-classed buffer arena (reuse must
+//! never leak stale values, and a warm arena must stop allocating).
 
+use prunemap::accuracy::Assignment;
+use prunemap::models::zoo;
 use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::rng::Rng;
+use prunemap::runtime::{Arena, CompiledNet, GraphExecutor, KernelChoice};
 use prunemap::sparse::{
     pack_columns, unpack_column, Bcs, Csr, DenseKernel, Engine, SparseKernel,
 };
 use prunemap::tensor::Tensor;
+use prunemap::util::cli::env_threads;
+use prunemap::util::prop::{dim, for_cases};
 
 /// All three backends over the same dense matrix.
 fn backends(t: &Tensor) -> Vec<Box<dyn SparseKernel>> {
@@ -34,8 +42,10 @@ fn assert_spmm_parity(t: &Tensor, batch: usize, seed: u64) {
         let reference: Vec<Vec<f32>> =
             columns.iter().map(|c| kernel.spmv_exec(c)).collect();
         let serial = kernel.spmm(&x, batch);
+        let scalar = kernel.spmm_scalar(&x, batch);
         let one = Engine::new(1).spmm(&*kernel, &x, batch);
         let many = Engine::new(7).spmm(&*kernel, &x, batch);
+        assert_eq!(serial, scalar, "{}: SIMD lanes != scalar reference", kernel.label());
         assert_eq!(serial, one, "{}: 1-thread engine != serial spmm", kernel.label());
         assert_eq!(serial, many, "{}: 7-thread engine != serial spmm", kernel.label());
         assert_eq!(serial.len(), rows * batch);
@@ -157,14 +167,111 @@ fn parity_single_row_and_single_col() {
 #[test]
 fn threaded_engine_beats_nothing_but_is_deterministic_across_repeats() {
     // repeated threaded runs are identical (no atomics, no reduction
-    // reordering anywhere in the dispatch)
+    // reordering anywhere in the dispatch), and the persistent pool is
+    // reused across all of them
     let t = random_sparse(128, 96, 0.15, 9);
     let bcs = Bcs::from_dense(&t);
     let mut rng = Rng::new(10);
     let x: Vec<f32> = (0..96 * 16).map(|_| rng.normal()).collect();
-    let eng = Engine::new(8);
+    let eng = Engine::new(env_threads(8));
     let first = eng.spmm(&bcs, &x, 16);
     for _ in 0..5 {
         assert_eq!(first, eng.spmm(&bcs, &x, 16));
+    }
+}
+
+#[test]
+fn lane_width_parity_batches_around_the_lane() {
+    // batch widths straddling the 8-wide lane (1, 7, 8, 9, 33): spmm ==
+    // column-by-column spmv and SIMD == scalar, per backend, bit for bit
+    let lib = PatternLibrary::default8();
+    let mut rng = Rng::new(21);
+    let w = Tensor::he_normal(&[72, 56], 56, &mut rng);
+    let r = prune(&w, &Scheme::Block { bp: 8, bq: 8 }, 3.0, &lib);
+    let t = w.hadamard(&r.mask);
+    for batch in [1usize, 7, 8, 9, 33] {
+        assert_spmm_parity(&t, batch, 0xF0 + batch as u64);
+    }
+}
+
+#[test]
+fn persistent_pool_parity_at_random_thread_counts() {
+    // one engine per random thread count, several products through the
+    // same pool (different shapes and batches), always == serial
+    for_cases(10, 0xF1, |rng| {
+        let threads = dim(rng, 1, 16);
+        let eng = Engine::new(threads);
+        for _ in 0..3 {
+            let rows = dim(rng, 1, 80);
+            let cols = dim(rng, 1, 50);
+            let batch = dim(rng, 1, 12);
+            let t = {
+                let mut m = Tensor::zeros(&[rows, cols]);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        if rng.bernoulli(0.3) {
+                            m.set2(r, c, rng.normal());
+                        }
+                    }
+                }
+                m
+            };
+            let bcs = Bcs::from_dense(&t);
+            let x: Vec<f32> = (0..cols * batch).map(|_| rng.normal()).collect();
+            assert_eq!(
+                eng.spmm(&bcs, &x, batch),
+                bcs.spmm(&x, batch),
+                "threads={threads} rows={rows} cols={cols} batch={batch}"
+            );
+        }
+    });
+}
+
+fn zoo_net() -> CompiledNet {
+    let m = zoo::proxy_cnn();
+    let assigns: Vec<Assignment> = m
+        .layers
+        .iter()
+        .map(|_| Assignment { scheme: Scheme::Unstructured, compression: 2.0 })
+        .collect();
+    CompiledNet::compile(&m, &assigns, 99, KernelChoice::Auto).unwrap()
+}
+
+#[test]
+fn arena_reuse_never_leaks_stale_values() {
+    // run A poisons the arena's free lists with its activations; run B on
+    // a different input through the same arena must match a fresh-arena
+    // run bit for bit — a reused size-class buffer must never leak one
+    // layer's (or one run's) values into a later output
+    let net = zoo_net();
+    let exec = GraphExecutor::new(env_threads(4));
+    let mut rng = Rng::new(30);
+    let a: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.normal()).collect();
+    let fresh_b = exec.run(&net, &b, 1).unwrap();
+    let mut arena = Arena::new();
+    let _warm = exec.run_with_arena(&net, &a, 1, &mut arena).unwrap();
+    let reused_b = exec.run_with_arena(&net, &b, 1, &mut arena).unwrap();
+    assert_eq!(reused_b, fresh_b, "arena reuse changed the output");
+}
+
+#[test]
+fn warm_arena_runs_allocation_free() {
+    // the regression for the ROADMAP arena drop: after one warm-up run the
+    // size-class free lists serve every take, so the arena-level
+    // allocation counter stays at zero for later runs
+    let net = zoo_net();
+    let exec = GraphExecutor::new(env_threads(2));
+    let input = vec![0.5f32; 3 * 32 * 32];
+    let mut arena = Arena::new();
+    let y1 = exec.run_with_arena(&net, &input, 1, &mut arena).unwrap();
+    assert!(arena.stats().allocs > 0);
+    for run in 0..3 {
+        arena.reset_stats();
+        let y = exec.run_with_arena(&net, &input, 1, &mut arena).unwrap();
+        assert_eq!(y, y1);
+        let s = arena.stats();
+        assert_eq!(s.allocs, 0, "run {run} allocated through the arena: {s:?}");
+        assert!(s.reuses > 0, "run {run} never touched the free lists");
     }
 }

@@ -1,0 +1,137 @@
+//! Golden-output regression: a tiny deterministic CNN with hand-written
+//! **integer** weights whose end-to-end logits are checked in below.  All
+//! intermediate values are small integers, which f32 represents exactly
+//! and adds associatively, so these constants are immune to accumulation
+//! re-ordering and must match **bit-for-bit on every execution path**:
+//! scalar or SIMD lanes, serial or persistent-pool threaded, fused
+//! tile-order or materialized im2col, any tile width, any backend
+//! (dense/CSR/BCS/auto), any batch width.
+//!
+//! For float weights the executor's numerics are pinned structurally
+//! rather than by constants: the accumulation order is defined **in one
+//! place** — ascending non-zero order per output element, the order of
+//! the serial scalar `spmv` (`SparseKernel::run_rows_scalar`) — and the
+//! parity suites (`engine_parity.rs`, `properties.rs`) assert every other
+//! path reproduces it exactly.  If that order ever changes, this file and
+//! those suites are the single spot to re-pin.
+//!
+//! Network: 1×4×4 input → conv 3×3 SAME (1→2 ch, Sobel-x + Laplacian
+//! filters) → ReLU → implicit 2×2 max pool → flatten → FC 8→3.
+//! Reference values computed independently (exact integer arithmetic).
+
+use prunemap::compiler::{fuse, Graph, Op};
+use prunemap::models::LayerSpec;
+use prunemap::pruning::Scheme;
+use prunemap::runtime::graph::{CompiledNet, MaskedLayer, NetWeights};
+use prunemap::runtime::{GraphExecutor, KernelChoice};
+use prunemap::tensor::Tensor;
+use prunemap::util::cli::env_threads;
+
+/// Sample 0: pixels 0..16 row-major.  Sample 1: 15 - pixel index.
+fn inputs() -> (Vec<f32>, Vec<f32>) {
+    let s0: Vec<f32> = (0..16).map(|p| p as f32).collect();
+    let s1: Vec<f32> = (0..16).map(|p| (15 - p) as f32).collect();
+    (s0, s1)
+}
+
+/// The checked-in golden logits (exact integers; see module docs).
+const GOLDEN_S0: [f32; 3] = [-10.0, 53.0, 120.0];
+const GOLDEN_S1: [f32; 3] = [18.0, 61.0, 64.0];
+
+fn golden_net(choice: KernelChoice) -> CompiledNet {
+    let conv_spec = LayerSpec::conv("conv1", 3, 1, 2, 4, 1);
+    let fc_spec = LayerSpec::fc("fc1", 8, 3);
+
+    // (F=2, C=1, 3, 3): Sobel-x and Laplacian — both carry zeros, so the
+    // sparse backends get real work
+    #[rustfmt::skip]
+    let conv_w = Tensor::from_vec(&[2, 1, 3, 3], vec![
+        1.0, 0.0, -1.0,  2.0, 0.0, -2.0,  1.0, 0.0, -1.0,
+        0.0, 1.0,  0.0,  1.0, -4.0, 1.0,  0.0, 1.0,  0.0,
+    ]);
+    // (in=8, out=3)
+    #[rustfmt::skip]
+    let fc_w = Tensor::from_vec(&[8, 3], vec![
+         1.0,  0.0, -1.0,
+         0.0,  2.0,  0.0,
+         1.0, -1.0,  0.0,
+         0.0,  0.0,  3.0,
+        -2.0,  1.0,  0.0,
+         0.0,  0.0,  0.0,
+         1.0,  1.0,  1.0,
+         0.0, -1.0,  2.0,
+    ]);
+
+    let weights = NetWeights {
+        layers: vec![
+            MaskedLayer {
+                spec: conv_spec.clone(),
+                weight: conv_w,
+                scheme: Scheme::None,
+                compression: 1.0,
+            },
+            MaskedLayer {
+                spec: fc_spec.clone(),
+                weight: fc_w,
+                scheme: Scheme::None,
+                compression: 1.0,
+            },
+        ],
+        bn: Default::default(),
+    };
+
+    let mut g = Graph::default();
+    let i = g.add("in", Op::Input { shape: vec![1, 1, 4, 4] }, vec![]);
+    let c = g.add("conv1", Op::Layer { layer: conv_spec }, vec![i]);
+    let r = g.add("relu1", Op::Relu, vec![c]);
+    let f = g.add("fc1", Op::Layer { layer: fc_spec }, vec![r]);
+    g.add("out", Op::Output, vec![f]);
+    let plan = fuse(&g);
+    CompiledNet::lower(&g, &plan, &weights, choice, "golden").unwrap()
+}
+
+fn assert_golden(y: &[f32], want: &[&[f32; 3]], ctx: &str) {
+    let flat: Vec<f32> = want.iter().flat_map(|w| w.iter().copied()).collect();
+    assert_eq!(y, flat.as_slice(), "{ctx}");
+}
+
+#[test]
+fn golden_logits_every_backend_and_path() {
+    let (s0, s1) = inputs();
+    let mut both = s0.clone();
+    both.extend_from_slice(&s1);
+    for choice in [KernelChoice::Dense, KernelChoice::Csr, KernelChoice::Bcs, KernelChoice::Auto] {
+        let net = golden_net(choice);
+        let execs: Vec<(&str, GraphExecutor)> = vec![
+            ("serial_fused", GraphExecutor::serial()),
+            ("serial_tile8", GraphExecutor::serial().with_tile_cols(8)),
+            ("serial_materialized", GraphExecutor::serial().materialized()),
+            ("threaded_fused", GraphExecutor::new(env_threads(3))),
+            ("threaded_materialized", GraphExecutor::new(env_threads(3)).materialized()),
+        ];
+        for (name, exec) in &execs {
+            let ctx = format!("{choice:?}/{name}");
+            let y0 = exec.run(&net, &s0, 1).unwrap();
+            assert_golden(&y0, &[&GOLDEN_S0], &format!("{ctx} sample0"));
+            let y1 = exec.run(&net, &s1, 1).unwrap();
+            assert_golden(&y1, &[&GOLDEN_S1], &format!("{ctx} sample1"));
+            let yb = exec.run(&net, &both, 2).unwrap();
+            assert_golden(&yb, &[&GOLDEN_S0, &GOLDEN_S1], &format!("{ctx} batch2"));
+        }
+    }
+}
+
+#[test]
+fn golden_net_uses_the_expected_lowering() {
+    // the golden only means something if the program actually exercises
+    // the conv + glue + fc pipeline it was computed for
+    let net = golden_net(KernelChoice::Bcs);
+    assert_eq!(net.layers.len(), 2);
+    assert_eq!(net.input_shape, (1, 4, 4));
+    assert_eq!(net.output_shape, (3, 1, 1));
+    // conv GEMM is [2, 9] with 6 + 5 retained taps, fc is [3, 8] with 13
+    assert_eq!(net.layers[0].sparse.dims(), (2, 9));
+    assert_eq!(net.layers[0].sparse.nnz(), 11);
+    assert_eq!(net.layers[1].sparse.dims(), (3, 8));
+    assert_eq!(net.layers[1].sparse.nnz(), 13);
+}

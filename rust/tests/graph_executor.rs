@@ -12,6 +12,7 @@ use prunemap::runtime::graph::im2col::{direct_conv, direct_dwconv};
 use prunemap::runtime::graph::{CompiledNet, GraphExecutor, NetWeights};
 use prunemap::runtime::KernelChoice;
 use prunemap::rng::Rng;
+use prunemap::util::cli::env_threads;
 use prunemap::util::prop::{dim, for_cases};
 
 /// Build input -> single layer -> output (no BN/ReLU) so the executor's
@@ -261,6 +262,29 @@ fn residual_add_fuses_and_matches_standalone() {
     let yb = GraphExecutor::serial().run(&unfused, &input, 1).unwrap();
     assert_eq!(ya, yb);
     assert_eq!(ya.len(), 4 * 6 * 6);
+}
+
+#[test]
+fn fused_im2col_matches_materialized_on_a_zoo_cnn() {
+    // whole-network acceptance for the fused rewrite: fused tile-order
+    // im2col == materialized X, bit for bit, across thread counts, tile
+    // widths, and batch widths that are not lane multiples
+    let model = zoo::mobilenet_v1_scaled(Dataset::Cifar10, 0.25);
+    let assigns = zoo_assigns(&model);
+    let net = CompiledNet::compile(&model, &assigns, 555, KernelChoice::Auto).unwrap();
+    let (c, h, w) = net.input_shape;
+    let mut rng = Rng::new(556);
+    for batch in [1usize, 3] {
+        let input = rand_input(batch * c * h * w, &mut rng);
+        let want = GraphExecutor::serial().materialized().run(&net, &input, batch).unwrap();
+        for threads in [1usize, env_threads(4)] {
+            for tile in [8usize, 64, 256] {
+                let exec = GraphExecutor::new(threads).with_tile_cols(tile);
+                let got = exec.run(&net, &input, batch).unwrap();
+                assert_eq!(got, want, "batch={batch} threads={threads} tile={tile}");
+            }
+        }
+    }
 }
 
 #[test]

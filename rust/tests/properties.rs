@@ -8,9 +8,11 @@ use prunemap::models::{zoo, Dataset, LayerSpec};
 use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::reweighted;
 use prunemap::rng::Rng;
+use prunemap::runtime::graph::im2col::{im2col, Im2colPanels};
 use prunemap::simulator::{layer_latency_ms, DeviceProfile, ExecConfig};
 use prunemap::sparse::{
-    load_balance, permute_rows, reorder_rows, row_nnz_counts, Bcs, Csr, Engine,
+    load_balance, permute_rows, reorder_rows, row_nnz_counts, unpack_column, Bcs, Csr,
+    DenseKernel, Engine, SparseKernel,
 };
 use prunemap::tensor::Tensor;
 use prunemap::util::prop::{dim, for_cases};
@@ -132,6 +134,92 @@ fn prop_engine_spmm_equals_serial_spmv_any_thread_count() {
                     serial[r],
                     "rows={rows} cols={cols} batch={batch} threads={threads} (r={r}, b={b})"
                 );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fused_tile_im2col_equals_materialized() {
+    // fused tile-order im2col == materialized im2col for random shapes,
+    // strides, and SAME padding, incl. depthwise block-diagonal kernels —
+    // bit for bit, across backends, thread counts, and tile widths
+    for_cases(12, 0xBC, |rng| {
+        let c = dim(rng, 1, 5);
+        let h = dim(rng, 3, 9);
+        let w = dim(rng, 3, 9);
+        let batch = dim(rng, 1, 4);
+        let k = if rng.bernoulli(0.7) { 3 } else { 1 };
+        let stride = if rng.bernoulli(0.5) { 1 } else { 2 };
+        let act: Vec<f32> = (0..c * batch * h * w).map(|_| rng.normal()).collect();
+        let mut x = Vec::new();
+        let (oh, ow) = im2col(&act, c, h, w, batch, k, k, stride, &mut x);
+        let src = Im2colPanels::new(&act, c, h, w, batch, k, k, stride);
+        assert_eq!(src.out_hw(), (oh, ow));
+        // standard conv kernel [f, c*k*k] or depthwise block-diagonal
+        // [c, c*k*k] over the same panels
+        let depthwise = rng.bernoulli(0.4);
+        let a = if depthwise {
+            let mut t = Tensor::zeros(&[c, c * k * k]);
+            for ci in 0..c {
+                for p in 0..k * k {
+                    if rng.bernoulli(0.7) {
+                        t.set2(ci, ci * k * k + p, rng.normal());
+                    }
+                }
+            }
+            t
+        } else {
+            let f = dim(rng, 1, 6);
+            random_sparse(rng, f, c * k * k, 0.5)
+        };
+        let total = batch * oh * ow;
+        for kernel in [
+            Box::new(Bcs::from_dense(&a)) as Box<dyn SparseKernel>,
+            Box::new(Csr::from_dense(&a)),
+            Box::new(DenseKernel::from_tensor(&a)),
+        ] {
+            let want = kernel.spmm(&x, total);
+            for (threads, tile) in [(1usize, 8usize), (3, 8), (3, 64)] {
+                let eng = Engine::new(threads).with_tile_cols(tile);
+                assert_eq!(
+                    eng.spmm_fused(&*kernel, &src),
+                    want,
+                    "{} dw={depthwise} {c}x{h}x{w} b={batch} k={k} s={stride}",
+                    kernel.label()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_lane_width_parity_across_backends() {
+    // spmm at batch widths straddling the 8-wide lane (1, 7, 8, 9, 33)
+    // agrees column-by-column with spmv, and the SIMD lanes agree with
+    // the scalar reference — dense, CSR, and BCS alike
+    for_cases(8, 0xBD, |rng| {
+        let rows = dim(rng, 1, 50);
+        let cols = dim(rng, 1, 40);
+        let t = random_sparse(rng, rows, cols, rng.f32() * 0.7);
+        for kernel in [
+            Box::new(Bcs::from_dense(&t)) as Box<dyn SparseKernel>,
+            Box::new(Csr::from_dense(&t)),
+            Box::new(DenseKernel::from_tensor(&t)),
+        ] {
+            for batch in [1usize, 7, 8, 9, 33] {
+                let x: Vec<f32> = (0..cols * batch).map(|_| rng.normal()).collect();
+                let y = Engine::new(dim(rng, 1, 8)).spmm(&*kernel, &x, batch);
+                assert_eq!(y, kernel.spmm_scalar(&x, batch), "{} b={batch}", kernel.label());
+                for b in 0..batch {
+                    let col: Vec<f32> = (0..cols).map(|c| x[c * batch + b]).collect();
+                    assert_eq!(
+                        unpack_column(&y, batch, b),
+                        kernel.spmv_exec(&col),
+                        "{} batch={batch} column={b}",
+                        kernel.label()
+                    );
+                }
             }
         }
     });
