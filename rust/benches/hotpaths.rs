@@ -24,6 +24,7 @@ use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::rng::Rng;
 use prunemap::runtime::graph::im2col::{im2col, Im2colPanels};
 use prunemap::runtime::{CompiledNet, GraphExecutor, KernelChoice};
+use prunemap::serve::{PreparedModel, Session};
 use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::sparse::{permute_rows, reorder_rows, Bcs, Csr, Engine, SparseKernel};
 use prunemap::tensor::Tensor;
@@ -259,6 +260,56 @@ fn main() {
             .expect("calibration run");
         println!("    calibration: {}", cmp.to_json().compact());
     }
+
+    // --- serve session: dynamic micro-batching throughput ------------------
+    // compile once, then push a burst of single-sample requests through the
+    // session; baseline = blocking one-request-per-run round trips,
+    // contender = pipelined submits the micro-batcher coalesces into
+    // lane-aligned batches
+    println!("\n## serve session: compile-once / serve-many (threads = {threads})\n");
+    header();
+    let prepared = PreparedModel::builder()
+        .model("mobilenetv1")
+        .dataset("cifar10")
+        .method("rule")
+        .seed(11)
+        .build()
+        .expect("prepare model");
+    let sample = prepared.input_len();
+    let mk_input = |tag: usize| -> Vec<f32> {
+        (0..sample).map(|j| (((tag * 31 + j) % 17) as f32) * 0.25 - 2.0).collect()
+    };
+    let nreq = 48usize;
+    let single = Session::builder(prepared.clone())
+        .threads(threads)
+        .max_batch(1)
+        .max_wait(Duration::ZERO)
+        .build();
+    let one_per_run = bench_n(&format!("serve_one_per_run_{nreq}req_t{threads}"), 3, || {
+        for tag in 0..nreq {
+            black_box(single.infer(mk_input(tag)).unwrap());
+        }
+    });
+    let coalescing = Session::builder(prepared.clone())
+        .threads(threads)
+        .max_batch(32)
+        .max_wait(Duration::from_millis(5))
+        .build();
+    let coalesced = bench_n(&format!("serve_coalesced_b32_{nreq}req_t{threads}"), 3, || {
+        let tickets: Vec<_> =
+            (0..nreq).map(|tag| coalescing.submit(mk_input(tag)).unwrap()).collect();
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+    });
+    let (rec, sp) =
+        emit_comparison("serve_coalesced_vs_one_request_per_run", &one_per_run, &coalesced);
+    records.push(rec);
+    let st = coalescing.stats();
+    println!(
+        "    coalesced/single speedup: {sp:.2}x ({} requests in {} runs, max coalesced {}, {} padded lanes)",
+        st.requests, st.runs, st.max_coalesced, st.padded_lanes
+    );
 
     // --- mapping machinery -------------------------------------------------
     println!();

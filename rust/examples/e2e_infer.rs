@@ -1,20 +1,20 @@
-//! End-to-end native inference: map a pruned zoo CNN and run every layer
-//! through the graph executor on the sparse engine.
+//! End-to-end native inference through the serving API: map a pruned zoo
+//! CNN once, seal it into a `PreparedModel`, and serve concurrent
+//! requests through a micro-batching `Session`.
 //!
 //! ```sh
 //! cargo run --release --example e2e_infer [-- --threads N --batch N]
 //! ```
 //!
-//! Prints the per-layer scheme mapping with measured per-step latency at
-//! several batch sizes, verifies the executor's determinism guarantee
-//! (bit-for-bit across thread counts), and writes a measured-vs-modeled
-//! calibration record to `target/measured_vs_modeled.json`.
+//! Prints the per-layer scheme mapping with measured per-step latency,
+//! demonstrates submit/wait coalescing (with the determinism guarantee:
+//! a request's output is bit-identical whether it ran alone or rode a
+//! coalesced batch), and writes a measured-vs-modeled calibration record
+//! to `target/measured_vs_modeled.json`.
 
-use prunemap::accuracy::Assignment;
-use prunemap::latmodel::LatencyModel;
-use prunemap::mapping::{map_rule_based, RuleConfig};
-use prunemap::models::{zoo, Dataset};
-use prunemap::runtime::{CompiledNet, GraphExecutor, KernelChoice};
+use std::time::Duration;
+
+use prunemap::serve::{PreparedModel, Session, Ticket};
 use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::util::cli::Args;
 
@@ -22,34 +22,41 @@ fn main() -> prunemap::Result<()> {
     let args = Args::from_env();
     let threads = args.engine_threads()?;
 
-    // 1. pick a zoo CNN and map the best-suited scheme per layer
-    //    (training-free rule-based method)
-    let dev = DeviceProfile::s10();
-    let model = zoo::mobilenet_v1(Dataset::Cifar10);
-    let lat = LatencyModel::build(&dev);
-    let assigns: Vec<Assignment> = map_rule_based(&model, &lat, &RuleConfig::default());
-
-    // 2. lower the fused plan once: masks, BCS/CSR conversion, im2col
-    //    shapes, arena slots — reused by every run below
-    let net = CompiledNet::compile(&model, &assigns, 7, KernelChoice::Auto)?;
+    // 1. compile once: pick a zoo CNN, map the best-suited scheme per
+    //    layer (training-free rule-based method), synthesize masked
+    //    weights, and lower the fused plan — one sealed artifact
+    let prepared = PreparedModel::builder()
+        .model("mobilenetv1")
+        .dataset("cifar10")
+        .device("s10")
+        .method("rule")
+        .seed(7)
+        .build()?;
+    let net = prepared.net();
     println!(
         "{}: {} prunable layers -> {} steps, {} arena slots, {} retained weights\n",
-        model.name,
+        prepared.name(),
         net.layers.len(),
         net.steps.len(),
         net.num_slots,
         net.total_nnz()
     );
 
-    // 3. run end to end and report per-layer scheme + measured latency
-    let exec = GraphExecutor::new(threads);
-    let (c, h, w) = net.input_shape;
+    // 2. serve many: the session owns the engine pool, per-worker arena,
+    //    and request admission
+    let session = Session::builder(prepared.clone())
+        .threads(threads)
+        .max_batch(16)
+        .max_wait(Duration::from_millis(5))
+        .build();
+
+    // 3. warmed diagnostic run: per-layer scheme + measured latency
     let batch = args.batch_size(1)?;
+    let (c, h, w) = prepared.input_shape();
     let input: Vec<f32> = (0..batch * c * h * w)
         .map(|i| ((i % 13) as f32) * 0.3 - 1.8)
         .collect();
-    let _warmup = exec.run(&net, &input, batch)?;
-    let (out, timings) = exec.run_timed(&net, &input, batch)?;
+    let (out, timings) = session.run_timed(&input, batch)?;
     println!("{:<14} {:>14} {:>6} {:>8} {:>10}", "layer", "scheme", "comp", "backend", "ms");
     let summaries: std::collections::HashMap<String, _> = net
         .summaries()
@@ -68,14 +75,36 @@ fn main() -> prunemap::Result<()> {
     }
     println!("(+ glue steps) total {total:.3}ms | output {} logits/sample", out.len() / batch);
 
-    // 4. determinism: N threads and 1 thread agree bit-for-bit
-    let serial = GraphExecutor::serial().run(&net, &input, batch)?;
-    assert_eq!(serial, out, "threaded output must be bit-for-bit serial");
-    println!("determinism: {} threads == serial, bit-for-bit", exec.threads());
+    // 4. concurrent serving: submit a burst of single-sample requests and
+    //    let the micro-batcher coalesce them into lane-aligned batches
+    let sample = prepared.input_len();
+    let mk_input = |tag: usize| -> Vec<f32> {
+        (0..sample).map(|j| (((tag + j) % 13) as f32) * 0.3 - 1.8).collect()
+    };
+    let expect: Vec<Vec<f32>> = (0..24).map(|tag| session.infer(mk_input(tag)).unwrap()).collect();
+    let tickets: Vec<Ticket> = (0..24).map(|tag| session.submit(mk_input(tag)).unwrap()).collect();
+    for (tag, t) in tickets.into_iter().enumerate() {
+        let y = t.wait()?;
+        assert_eq!(y, expect[tag], "coalesced output must be bit-identical to solo runs");
+    }
+    let st = session.stats();
+    println!(
+        "\nserved {} requests in {} runs (max coalesced {}, {} padded lanes) — outputs bit-identical to solo runs",
+        st.requests, st.runs, st.max_coalesced, st.padded_lanes
+    );
 
     // 5. batch scaling + calibration record for BENCH trajectories
+    let dev = DeviceProfile::s10();
     for b in [1usize, 4, 16] {
-        let cmp = measured_vs_modeled_network(&model, &assigns, &dev, &net, b, threads, 3)?;
+        let cmp = measured_vs_modeled_network(
+            prepared.model(),
+            prepared.assigns(),
+            &dev,
+            net,
+            b,
+            threads,
+            3,
+        )?;
         println!(
             "batch {b:>2}: measured {:.3}ms | modeled {:.3}ms (batch-1 mobile) | ratio {:.2}",
             cmp.measured_ms,

@@ -1,5 +1,6 @@
 //! Quickstart: map the best-suited pruning scheme onto ResNet-50/ImageNet
-//! with the training-free rule-based method and report the win.
+//! with the training-free rule-based method, report the win, then seal a
+//! servable model and answer requests through the session API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -9,9 +10,10 @@ use prunemap::experiments::describe_mapping;
 use prunemap::latmodel::LatencyModel;
 use prunemap::mapping::{self, map_rule_based, RuleConfig};
 use prunemap::models::{zoo, Dataset};
+use prunemap::serve::{PreparedModel, Session};
 use prunemap::simulator::DeviceProfile;
 
-fn main() {
+fn main() -> prunemap::Result<()> {
     // 1. pick the target device and build (or load) its offline latency
     //    model — once per device, reusable for every DNN
     let dev = DeviceProfile::s10();
@@ -37,4 +39,33 @@ fn main() {
         dense,
         dense / e.latency_ms
     );
+
+    // 5. serve it: seal (spec, mapping, weights, compiled net) into one
+    //    artifact and answer requests through the micro-batching session.
+    //    A smaller CIFAR net keeps the demo snappy; the lifecycle is
+    //    identical for any zoo model.
+    let prepared = PreparedModel::builder()
+        .model("mobilenetv1")
+        .dataset("cifar10")
+        .method("rule")
+        .build()?;
+    let session = Session::builder(prepared.clone()).build();
+    let tickets: Vec<_> = (0..8)
+        .map(|tag| {
+            let input = vec![0.1 * tag as f32; prepared.input_len()];
+            session.submit(input).expect("submit")
+        })
+        .collect();
+    for t in tickets {
+        assert_eq!(t.wait()?.len(), prepared.output_len());
+    }
+    let st = session.stats();
+    println!(
+        "\nserved {} requests in {} coalesced runs through {} ({}-mapped)",
+        st.requests,
+        st.runs,
+        prepared.name(),
+        prepared.method()
+    );
+    Ok(())
 }

@@ -31,6 +31,7 @@ pub mod report;
 pub mod reweighted;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod sparse;
 pub mod tensor;

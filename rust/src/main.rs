@@ -1,6 +1,6 @@
 //! `prunemap` launcher: regenerate any paper table/figure, build latency
-//! models, map pruning schemes onto zoo models, and run the live PJRT
-//! pipeline.
+//! models, map pruning schemes onto zoo models, and serve inference
+//! through the compile-once/serve-many session API.
 //!
 //! ```text
 //! prunemap <command> [--device s10|s20|s21] [options] [--flags]
@@ -15,46 +15,33 @@
 //!         [--materialized] [--json-out F]
 //!                          native end-to-end inference through the graph
 //!                          executor: per-layer scheme + measured latency
+//!   serve --requests N [--clients N] [--max-batch N] [--max-wait-ms F]
+//!         [--workers N] [--save F | --load F]
+//!                          compile once, serve N concurrent requests
+//!                          through the micro-batching session API
 //!   e2e [--steps N]        live pipeline on the proxy CNN (needs artifacts)
 //! ```
 
+use std::time::Instant;
+
 use anyhow::{anyhow, Result};
 
-use prunemap::accuracy::Assignment;
-#[cfg(pjrt)]
-use prunemap::coordinator::{run_pipeline, PipelineConfig};
 use prunemap::experiments as exp;
 use prunemap::latmodel::LatencyModel;
-use prunemap::mapping::{self, map_rule_based, map_search_based, RuleConfig, SearchConfig};
+use prunemap::mapping::{self, MappingMethod};
 use prunemap::models::{zoo, Dataset, ModelSpec};
 #[cfg(pjrt)]
 use prunemap::runtime::Runtime;
-use prunemap::runtime::{CompiledNet, GraphExecutor, KernelChoice};
+use prunemap::serve::{PreparedModel, Session, Ticket};
 use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::util::cli::Args;
 
 fn model_by_name(name: &str, ds: Dataset) -> Result<ModelSpec> {
-    Ok(match name.to_ascii_lowercase().as_str() {
-        "vgg16" => zoo::vgg16(ds),
-        "resnet18" => zoo::resnet18(ds),
-        "resnet50" => zoo::resnet50(ds),
-        "mobilenetv1" => zoo::mobilenet_v1(ds),
-        "mobilenetv2" => zoo::mobilenet_v2(ds),
-        "yolov4" => zoo::yolov4(),
-        "proxy" => zoo::proxy_cnn(),
-        other => return Err(anyhow!("unknown model '{other}'")),
-    })
+    zoo::by_name(name, ds).ok_or_else(|| anyhow!("unknown model '{name}'"))
 }
 
 fn dataset_by_name(name: &str) -> Result<Dataset> {
-    Ok(match name.to_ascii_lowercase().as_str() {
-        "cifar10" => Dataset::Cifar10,
-        "cifar100" => Dataset::Cifar100,
-        "imagenet" => Dataset::ImageNet,
-        "coco" => Dataset::Coco,
-        "synthetic" => Dataset::Synthetic,
-        other => return Err(anyhow!("unknown dataset '{other}'")),
-    })
+    Dataset::by_name(name).ok_or_else(|| anyhow!("unknown dataset '{name}'"))
 }
 
 fn device(args: &Args) -> Result<DeviceProfile> {
@@ -66,86 +53,72 @@ fn cmd_map(args: &Args) -> Result<()> {
     let dev = device(args)?;
     let ds = dataset_by_name(args.get_or("dataset", "imagenet"))?;
     let model = model_by_name(args.get_or("model", "resnet50"), ds)?;
-    let method = args.get_or("method", "rule");
-    let assigns: Vec<Assignment> = match method {
-        "rule" => {
-            let lat = LatencyModel::build(&dev);
-            map_rule_based(&model, &lat, &RuleConfig::default())
-        }
-        "search" => {
-            let cfg = SearchConfig {
-                iterations: args.get_usize("iterations", 60)?,
-                seed: args.get_u64("seed", 0xC0FFEE)?,
-                ..Default::default()
-            };
-            map_search_based(&model, &dev, &cfg).0
-        }
-        other => return Err(anyhow!("unknown method '{other}' (rule|search)")),
-    };
+    let method = MappingMethod::from_args(args, 60, args.get_u64("seed", 0xC0FFEE)?)?;
+    let assigns = method.assign(&model, &dev);
     exp::describe_mapping(&model, &assigns).print();
     let e = mapping::evaluate(&model, &assigns, &dev);
     let dense = mapping::dense_latency_ms(&model, &dev);
+    // degenerate modeled latencies must not print as "infx speedup"
+    let speedup = if e.latency_ms > 1e-12 {
+        format!("{:.2}x", dense / e.latency_ms)
+    } else {
+        "n/a".to_string()
+    };
     println!(
-        "\ncompression {:.2}x | acc drop {:+.2}% | latency {:.2}ms (dense {:.2}ms, {:.2}x speedup) | MACs {:.2}G",
+        "\ncompression {:.2}x | acc drop {:+.2}% | latency {:.2}ms (dense {:.2}ms, {speedup} speedup) | MACs {:.2}G",
         e.compression,
         e.acc_drop * 100.0,
         e.latency_ms,
         dense,
-        dense / e.latency_ms,
         e.macs / 1e9
     );
     Ok(())
 }
 
-/// Map a zoo model, synthesize masked weights, and run it end to end on
-/// the native graph executor — per-layer scheme + measured latency, plus a
-/// measured-vs-modeled calibration JSON record.
+/// Build a [`PreparedModel`] from the shared CLI surface (`--model`,
+/// `--dataset`, `--device`, `--method`/`--iterations`/`--search-seed`,
+/// `--seed`) — the one resolution path `infer` and `serve` share.
+fn prepared_from_args(args: &Args) -> Result<PreparedModel> {
+    let method = MappingMethod::from_args(args, 30, args.get_u64("search-seed", 0xC0FFEE)?)?;
+    PreparedModel::builder()
+        .model(args.get_or("model", "mobilenetv1"))
+        .dataset(args.get_or("dataset", "cifar10"))
+        .device(args.get_or("device", "s10"))
+        .mapping(method)
+        .seed(args.get_u64("seed", 7)?)
+        .build()
+}
+
+/// Map a zoo model, seal it into a [`PreparedModel`], and run it end to
+/// end through a serving [`Session`] — per-layer scheme + measured
+/// latency, plus a measured-vs-modeled calibration JSON record.
 fn cmd_infer(args: &Args) -> Result<()> {
     let dev = device(args)?;
-    let ds = dataset_by_name(args.get_or("dataset", "cifar10"))?;
-    let model = model_by_name(args.get_or("model", "mobilenetv1"), ds)?;
     let threads = args.engine_threads()?;
     let batch = args.batch_size(1)?;
-    let seed = args.get_u64("seed", 7)?;
     let reps = args.get_usize("reps", 3)?;
-    let assigns: Vec<Assignment> = match args.get_or("method", "rule") {
-        "rule" => {
-            let lat = LatencyModel::build(&dev);
-            map_rule_based(&model, &lat, &RuleConfig::default())
-        }
-        "search" => {
-            let cfg = SearchConfig {
-                iterations: args.get_usize("iterations", 30)?,
-                seed: args.get_u64("search-seed", 0xC0FFEE)?,
-                ..Default::default()
-            };
-            map_search_based(&model, &dev, &cfg).0
-        }
-        other => return Err(anyhow!("unknown method '{other}' (rule|search)")),
-    };
+    let prepared = prepared_from_args(args)?;
+    let session = Session::builder(prepared.clone())
+        .threads(threads)
+        .tile_cols(args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?)
+        .fused(!args.materialized())
+        .build();
 
-    let net = CompiledNet::compile(&model, &assigns, seed, KernelChoice::Auto)?;
-    let tile = args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?;
-    let mut exec = GraphExecutor::new(threads).with_tile_cols(tile);
-    if args.materialized() {
-        exec = exec.materialized();
-    }
-    let (c, h, w) = net.input_shape;
+    let (c, h, w) = prepared.input_shape();
     let input: Vec<f32> = (0..batch * c * h * w)
         .map(|i| ((i % 17) as f32) * 0.25 - 2.0)
         .collect();
-    // warm the buffer arena so the per-layer timings measure the
-    // steady-state path, same as the calibration record
-    let mut arena = prunemap::runtime::Arena::new();
-    let _warmup = exec.run_with_arena(&net, &input, batch, &mut arena)?;
-    let (_, timings) = exec.run_timed_with_arena(&net, &input, batch, &mut arena)?;
+    // warmed diagnostic run (bypasses the micro-batcher): per-layer
+    // timings measure the steady-state allocation-free path
+    let (_, timings) = session.run_timed(&input, batch)?;
 
+    let net = prepared.net();
     println!(
         "{} ({} layers, {} steps) | input {c}x{h}x{w} | batch {batch} | {threads} threads | {} im2col\n",
-        model.name,
+        prepared.name(),
         net.layers.len(),
         net.steps.len(),
-        if exec.is_fused() { "fused" } else { "materialized" }
+        if session.is_fused() { "fused" } else { "materialized" }
     );
     println!(
         "{:<16} {:>14} {:>6} {:>8} {:>12} {:>10}",
@@ -169,11 +142,104 @@ fn cmd_infer(args: &Args) -> Result<()> {
     }
     println!("\ntotal {total_ms:.3}ms measured (host, whole batch)");
 
-    let cmp = measured_vs_modeled_network(&model, &assigns, &dev, &net, batch, threads, reps)?;
+    let cmp = measured_vs_modeled_network(
+        prepared.model(),
+        prepared.assigns(),
+        &dev,
+        net,
+        batch,
+        threads,
+        reps,
+    )?;
     println!("measured-vs-modeled: {}", cmp.to_json().compact());
     if let Some(path) = args.get("json-out") {
         std::fs::write(path, cmp.to_json().pretty())?;
         println!("wrote calibration record to {path}");
+    }
+    Ok(())
+}
+
+/// Compile once, then serve a burst of concurrent requests through the
+/// micro-batching [`Session`]: the serving-throughput counterpart of
+/// `infer`'s single diagnostic run.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let threads = args.engine_threads()?;
+    let requests = args.get_usize("requests", 64)?.max(1);
+    let clients = args.get_usize("clients", 8)?.max(1);
+    let prepared = match args.get("load") {
+        Some(path) => {
+            let p = PreparedModel::load(path)?;
+            println!("loaded prepared artifact from {path}");
+            p
+        }
+        None => prepared_from_args(args)?,
+    };
+    if let Some(path) = args.get("save") {
+        prepared.save(path)?;
+        println!("saved prepared artifact to {path}");
+    }
+    let session = Session::builder(prepared.clone())
+        .threads(threads)
+        .tile_cols(args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?)
+        .fused(!args.materialized())
+        .max_batch(args.max_batch(32)?)
+        .max_wait(args.max_wait(2.0)?)
+        .workers(args.get_usize("workers", 1)?)
+        .build();
+    println!(
+        "{} ({}-mapped, seed {}) | {} engine threads | max batch {} | max wait {:?} | {} worker(s)",
+        prepared.name(),
+        prepared.method(),
+        prepared.seed(),
+        session.threads(),
+        session.max_batch(),
+        session.max_wait(),
+        session.workers()
+    );
+
+    let sample = prepared.input_len();
+    let per_client = requests.div_ceil(clients);
+    let total = per_client * clients;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for client in 0..clients {
+            let session = &session;
+            scope.spawn(move || {
+                // each client keeps a small submission pipeline open so
+                // concurrent requests exist for the batcher to coalesce
+                let mut pending: Vec<Ticket> = Vec::new();
+                for r in 0..per_client {
+                    let tag = client * per_client + r;
+                    let input: Vec<f32> = (0..sample)
+                        .map(|j| (((tag + j) % 17) as f32) * 0.25 - 2.0)
+                        .collect();
+                    pending.push(session.submit(input).expect("submit"));
+                    if pending.len() >= 4 {
+                        pending.remove(0).wait().expect("serve request");
+                    }
+                }
+                for t in pending {
+                    t.wait().expect("serve request");
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let st = session.stats();
+    println!(
+        "\nserved {total} requests from {clients} client(s) in {:.1}ms -> {:.0} req/s",
+        elapsed.as_secs_f64() * 1e3,
+        total as f64 / elapsed.as_secs_f64().max(1e-9)
+    );
+    println!(
+        "{} runs | max coalesced {} | {:.2} requests/run | {} padded lanes",
+        st.runs,
+        st.max_coalesced,
+        st.requests as f64 / st.runs.max(1) as f64,
+        st.padded_lanes
+    );
+    for (batch, runs) in &st.batch_runs {
+        println!("  batch {batch:>4}: {runs} run(s)");
     }
     Ok(())
 }
@@ -184,14 +250,14 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     println!("PJRT platform: {}", rt.platform());
     let dev = device(args)?;
     let model = zoo::proxy_cnn();
-    let lat = LatencyModel::build(&dev);
-    let assigns = map_rule_based(&model, &lat, &RuleConfig::default());
+    let method = MappingMethod::from_args(args, 30, args.get_u64("search-seed", 0xC0FFEE)?)?;
+    let assigns = method.assign(&model, &dev);
     exp::describe_mapping(&model, &assigns).print();
-    let cfg = PipelineConfig {
+    let cfg = prunemap::coordinator::PipelineConfig {
         pretrain_steps: args.get_usize("steps", 150)?,
         ..Default::default()
     };
-    let rep = run_pipeline(&rt, &model, &assigns, &dev, &cfg)?;
+    let rep = prunemap::coordinator::run_pipeline(&rt, &model, &assigns, &dev, &cfg)?;
     println!(
         "\nacc: pretrained {:.3} -> pruned {:.3} -> retrained {:.3}",
         rep.acc_pretrained, rep.acc_after_prune, rep.acc_after_retrain
@@ -259,6 +325,7 @@ fn run() -> Result<()> {
         }
         "map" => cmd_map(&args)?,
         "infer" => cmd_infer(&args)?,
+        "serve" => cmd_serve(&args)?,
         #[cfg(pjrt)]
         "e2e" => cmd_e2e(&args)?,
         #[cfg(not(pjrt))]
@@ -269,7 +336,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|serve|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--max-batch N] [--max-wait-ms F]"
             );
         }
     }

@@ -18,10 +18,81 @@ pub mod search;
 pub use rule::{map_rule_based, RuleConfig};
 pub use search::{map_search_based, SearchConfig};
 
+use anyhow::{anyhow, Result};
+
 use crate::accuracy::Assignment;
 use crate::latmodel::LatencyModel;
 use crate::models::ModelSpec;
 use crate::simulator::{model_latency_ms, DeviceProfile, ExecConfig};
+use crate::util::cli::Args;
+
+/// A mapping method plus its configuration: the one place the
+/// `"rule"`-vs-`"search"` dispatch lives.  The CLI (`prunemap map`,
+/// `prunemap infer`, `prunemap serve`) and
+/// [`serve::PreparedModel::builder`](crate::serve::PreparedModel::builder)
+/// all resolve method names through here instead of hand-rolling the match.
+#[derive(Debug, Clone)]
+pub enum MappingMethod {
+    /// Training-free rule-based mapping (Fig. 8) over the device's offline
+    /// latency model.
+    Rule(RuleConfig),
+    /// REINFORCE policy-gradient search (§5.1).
+    Search(SearchConfig),
+}
+
+impl MappingMethod {
+    /// Resolve a method name (`"rule"` | `"search"`); `iterations` and
+    /// `seed` configure the search variant and are ignored by the rule
+    /// variant.
+    pub fn parse(name: &str, iterations: usize, seed: u64) -> Result<MappingMethod> {
+        match name {
+            "rule" => Ok(MappingMethod::Rule(RuleConfig::default())),
+            "search" => Ok(MappingMethod::Search(SearchConfig {
+                iterations,
+                seed,
+                ..Default::default()
+            })),
+            other => Err(anyhow!("unknown method '{other}' (rule|search)")),
+        }
+    }
+
+    /// [`MappingMethod::parse`] from parsed CLI arguments: `--method` with
+    /// `--iterations` (falling back to `default_iterations`); the search
+    /// seed is resolved by the caller (commands differ on which flag names
+    /// it).
+    pub fn from_args(
+        args: &Args,
+        default_iterations: usize,
+        search_seed: u64,
+    ) -> Result<MappingMethod> {
+        Self::parse(
+            args.get_or("method", "rule"),
+            args.get_usize("iterations", default_iterations)?,
+            search_seed,
+        )
+    }
+
+    /// Short display name (`"rule"` | `"search"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            MappingMethod::Rule(_) => "rule",
+            MappingMethod::Search(_) => "search",
+        }
+    }
+
+    /// Run the method end to end: per-layer assignments for `model` on
+    /// `dev`.  The rule variant builds the device's latency model
+    /// internally.
+    pub fn assign(&self, model: &ModelSpec, dev: &DeviceProfile) -> Vec<Assignment> {
+        match self {
+            MappingMethod::Rule(cfg) => {
+                let lat = LatencyModel::build(dev);
+                map_rule_based(model, &lat, cfg)
+            }
+            MappingMethod::Search(cfg) => map_search_based(model, dev, cfg).0,
+        }
+    }
+}
 
 /// Summary of a mapping's quality.
 #[derive(Debug, Clone, Copy)]
@@ -68,4 +139,42 @@ pub fn assignment_latency(
             dev,
         )
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_and_label() {
+        assert!(matches!(MappingMethod::parse("rule", 0, 0).unwrap(), MappingMethod::Rule(_)));
+        let m = MappingMethod::parse("search", 17, 42).unwrap();
+        match &m {
+            MappingMethod::Search(cfg) => {
+                assert_eq!(cfg.iterations, 17);
+                assert_eq!(cfg.seed, 42);
+            }
+            other => panic!("expected search, got {other:?}"),
+        }
+        assert_eq!(m.label(), "search");
+        assert!(MappingMethod::parse("magic", 0, 0).is_err());
+    }
+
+    #[test]
+    fn method_from_args_reads_method_and_iterations() {
+        let toks = |s: &str| s.split_whitespace().map(str::to_string).collect::<Vec<_>>();
+        let a = Args::parse(toks("--method search --iterations 9"));
+        match MappingMethod::from_args(&a, 30, 7).unwrap() {
+            MappingMethod::Search(cfg) => {
+                assert_eq!(cfg.iterations, 9);
+                assert_eq!(cfg.seed, 7);
+            }
+            other => panic!("expected search, got {other:?}"),
+        }
+        let d = Args::parse(toks(""));
+        assert!(matches!(
+            MappingMethod::from_args(&d, 30, 7).unwrap(),
+            MappingMethod::Rule(_)
+        ));
+    }
 }

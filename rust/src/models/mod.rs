@@ -141,6 +141,31 @@ pub enum Dataset {
 }
 
 impl Dataset {
+    /// CLI/serialization name; inverse of [`Dataset::by_name`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Cifar10 => "cifar10",
+            Dataset::Cifar100 => "cifar100",
+            Dataset::ImageNet => "imagenet",
+            Dataset::Coco => "coco",
+            Dataset::Synthetic => "synthetic",
+        }
+    }
+
+    /// Look a dataset up by its CLI name (case-insensitive); `None` for
+    /// unknown names.  The single registry `main.rs`, the serve builder,
+    /// and artifact deserialization share.
+    pub fn by_name(name: &str) -> Option<Dataset> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "cifar10" => Dataset::Cifar10,
+            "cifar100" => Dataset::Cifar100,
+            "imagenet" => Dataset::ImageNet,
+            "coco" => Dataset::Coco,
+            "synthetic" => Dataset::Synthetic,
+            _ => return None,
+        })
+    }
+
     /// "Hard" datasets prefer pattern-based pruning on 3x3 layers
     /// (paper §5.2.3: ImageNet-class tasks where even unpruned nets stay
     /// under ~80% top-1).
@@ -282,5 +307,20 @@ mod tests {
         assert!(Dataset::ImageNet.is_hard());
         assert!(Dataset::Coco.is_hard());
         assert!(!Dataset::Cifar10.is_hard());
+    }
+
+    #[test]
+    fn dataset_names_roundtrip() {
+        for ds in [
+            Dataset::Cifar10,
+            Dataset::Cifar100,
+            Dataset::ImageNet,
+            Dataset::Coco,
+            Dataset::Synthetic,
+        ] {
+            assert_eq!(Dataset::by_name(ds.name()), Some(ds));
+        }
+        assert_eq!(Dataset::by_name("CIFAR10"), Some(Dataset::Cifar10));
+        assert_eq!(Dataset::by_name("mnist"), None);
     }
 }

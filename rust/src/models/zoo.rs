@@ -323,6 +323,23 @@ pub fn fig10a_fc_layers() -> Vec<LayerSpec> {
     ]
 }
 
+/// Look a zoo model up by its CLI name (case-insensitive); `None` for
+/// unknown names.  The single registry `main.rs` and the serve builder
+/// share (YOLOv4 and the proxy CNN carry their own dataset and ignore
+/// `dataset`).
+pub fn by_name(name: &str, dataset: Dataset) -> Option<ModelSpec> {
+    Some(match name.to_ascii_lowercase().as_str() {
+        "vgg16" => vgg16(dataset),
+        "resnet18" => resnet18(dataset),
+        "resnet50" => resnet50(dataset),
+        "mobilenetv1" => mobilenet_v1(dataset),
+        "mobilenetv2" => mobilenet_v2(dataset),
+        "yolov4" => yolov4(),
+        "proxy" => proxy_cnn(),
+        _ => return None,
+    })
+}
+
 /// The proxy CNN trained end-to-end via the AOT artifacts (matches
 /// python/compile/model.py PARAM_SPECS).
 pub fn proxy_cnn() -> ModelSpec {
@@ -389,6 +406,17 @@ mod tests {
         assert!((0.04..0.10).contains(&c), "dw macs frac={c}");
         // no regular 3x3 convs except the stem
         assert!(m.frac_params_3x3() < 0.05);
+    }
+
+    #[test]
+    fn by_name_covers_the_zoo() {
+        for name in ["vgg16", "resnet18", "resnet50", "mobilenetv1", "mobilenetv2"] {
+            let m = by_name(name, Dataset::Cifar10).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(m.dataset, Dataset::Cifar10);
+        }
+        assert_eq!(by_name("yolov4", Dataset::Cifar10).unwrap().dataset, Dataset::Coco);
+        assert_eq!(by_name("PROXY", Dataset::Cifar10).unwrap().name, "ProxyCNN");
+        assert!(by_name("alexnet", Dataset::Cifar10).is_none());
     }
 
     #[test]

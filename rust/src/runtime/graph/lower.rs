@@ -197,10 +197,25 @@ impl CompiledNet {
         seed: u64,
         choice: KernelChoice,
     ) -> Result<CompiledNet> {
+        Ok(Self::compile_with_weights(model, assigns, seed, choice)?.1)
+    }
+
+    /// [`CompiledNet::compile`] that also hands back the synthesized
+    /// weights — the single definition of the graph -> fusion ->
+    /// synthesize -> lower pipeline, shared with
+    /// [`crate::serve::PreparedModel`], which seals both into its
+    /// artifact.
+    pub fn compile_with_weights(
+        model: &ModelSpec,
+        assigns: &[Assignment],
+        seed: u64,
+        choice: KernelChoice,
+    ) -> Result<(NetWeights, CompiledNet)> {
         let graph = Graph::from_model(model);
         let plan = crate::compiler::fuse(&graph);
         let weights = NetWeights::synthesize(model, assigns, seed)?;
-        Self::lower(&graph, &plan, &weights, choice, &model.name)
+        let net = Self::lower(&graph, &plan, &weights, choice, &model.name)?;
+        Ok((weights, net))
     }
 
     /// Lower a fused plan over explicit weights.

@@ -27,6 +27,13 @@
 //! is bit-for-bit identical across thread counts, batch widths, tile
 //! widths, and the fused/materialized im2col paths — the same guarantee
 //! the underlying engine makes, lifted to whole networks.
+//!
+//! **Layering:** this is the *low-level* execution API — explicit batches,
+//! per-step timings, caller-owned arenas.  For serving (compile once,
+//! admit concurrent single-sample requests, dynamic micro-batching) build
+//! a [`crate::serve::Session`] over a [`crate::serve::PreparedModel`]
+//! instead; it drives this executor underneath and inherits the
+//! determinism guarantee per request.
 
 pub mod im2col;
 pub mod lower;
@@ -136,7 +143,8 @@ impl Arena {
     }
 }
 
-/// Runs a [`CompiledNet`] on the threaded native engine.
+/// Runs a [`CompiledNet`] on the threaded native engine — the low-level
+/// layer underneath [`crate::serve::Session`].
 #[derive(Debug, Clone)]
 pub struct GraphExecutor {
     engine: NativeEngine,

@@ -114,4 +114,89 @@ mod tests {
     fn missing_key_errors() {
         assert!(Manifest::parse(r#"{"batch": 8}"#).is_err());
     }
+
+    #[test]
+    fn parses_param_and_artifact_fields() {
+        let json = r#"{
+            "batch": 4, "img": 28, "in_ch": 1, "num_classes": 7,
+            "params": [
+                {"name": "conv1_w", "kind": "conv", "shape": [16, 1, 3, 3]},
+                {"name": "fc_w", "kind": "fc", "shape": [784, 7]},
+                {"name": "fc_b", "kind": "bias", "shape": [7]}
+            ],
+            "weight_idx": [0, 1],
+            "weight_names": ["conv1_w", "fc_w"],
+            "artifacts": {
+                "block_matmul": {
+                    "file": "block_matmul.hlo.txt",
+                    "inputs": ["x", "w", "mask"],
+                    "outputs": ["y"],
+                    "m": 256, "k": 512, "n": 512
+                },
+                "fwd": {"file": "fwd.hlo.txt", "inputs": ["x"], "outputs": ["logits"]}
+            }
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!((m.batch, m.img, m.in_ch, m.num_classes), (4, 28, 1, 7));
+
+        // ParamSpec: name/kind/shape survive, lookup by name works
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[0].kind, "conv");
+        assert_eq!(m.params[0].shape, vec![16, 1, 3, 3]);
+        assert_eq!(m.params[2].kind, "bias");
+        assert_eq!(m.param_shape("fc_w"), Some(&[784usize, 7][..]));
+        assert_eq!(m.param_shape("nope"), None);
+        assert_eq!(m.weight_idx, vec![0, 1]);
+        assert_eq!(m.weight_names, vec!["conv1_w".to_string(), "fc_w".to_string()]);
+
+        // ArtifactSig: file/inputs/outputs plus the optional GEMM dims
+        let bm = &m.artifacts["block_matmul"];
+        assert_eq!(bm.file, "block_matmul.hlo.txt");
+        assert_eq!(bm.inputs, vec!["x".to_string(), "w".to_string(), "mask".to_string()]);
+        assert_eq!(bm.outputs, vec!["y".to_string()]);
+        assert_eq!((bm.m, bm.k, bm.n), (Some(256), Some(512), Some(512)));
+        let fwd = &m.artifacts["fwd"];
+        assert_eq!((fwd.m, fwd.k, fwd.n), (None, None, None));
+    }
+
+    #[test]
+    fn malformed_manifests_error() {
+        // truncated document
+        assert!(Manifest::parse(r#"{"batch": 8, "img": 32"#).is_err());
+        // params must be an array of objects with string names
+        assert!(Manifest::parse(
+            r#"{
+                "batch": 1, "img": 8, "in_ch": 1, "num_classes": 2,
+                "params": {"name": "w"},
+                "weight_idx": [], "weight_names": [], "artifacts": {}
+            }"#
+        )
+        .is_err());
+        // shapes must be non-negative integers
+        assert!(Manifest::parse(
+            r#"{
+                "batch": 1, "img": 8, "in_ch": 1, "num_classes": 2,
+                "params": [{"name": "w", "kind": "fc", "shape": [4, -2]}],
+                "weight_idx": [], "weight_names": [], "artifacts": {}
+            }"#
+        )
+        .is_err());
+        // artifacts must be an object of signatures with inputs/outputs
+        assert!(Manifest::parse(
+            r#"{
+                "batch": 1, "img": 8, "in_ch": 1, "num_classes": 2,
+                "params": [], "weight_idx": [], "weight_names": [],
+                "artifacts": {"fwd": {"file": "f.hlo.txt", "inputs": ["x"]}}
+            }"#
+        )
+        .is_err());
+        // a non-integral batch is rejected by the usize accessor
+        assert!(Manifest::parse(
+            r#"{
+                "batch": 1.5, "img": 8, "in_ch": 1, "num_classes": 2,
+                "params": [], "weight_idx": [], "weight_names": [], "artifacts": {}
+            }"#
+        )
+        .is_err());
+    }
 }

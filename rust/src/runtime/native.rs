@@ -24,6 +24,30 @@ pub enum KernelChoice {
     Auto,
 }
 
+impl KernelChoice {
+    /// CLI/serialization name; inverse of [`KernelChoice::by_name`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelChoice::Dense => "dense",
+            KernelChoice::Csr => "csr",
+            KernelChoice::Bcs => "bcs",
+            KernelChoice::Auto => "auto",
+        }
+    }
+
+    /// Look a kernel choice up by its CLI name (case-insensitive); `None`
+    /// for unknown names.
+    pub fn by_name(name: &str) -> Option<KernelChoice> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "dense" => KernelChoice::Dense,
+            "csr" => KernelChoice::Csr,
+            "bcs" => KernelChoice::Bcs,
+            "auto" => KernelChoice::Auto,
+            _ => return None,
+        })
+    }
+}
+
 /// One executable masked weight matrix (the GEMM view of a pruned layer).
 pub struct SparseLayer {
     kernel: Box<dyn SparseKernel + Send>,
@@ -236,6 +260,15 @@ mod tests {
         let dense = Tensor::he_normal(&[32, 32], 32, &mut rng);
         let dense_layer = SparseLayer::from_masked(&dense, KernelChoice::Auto);
         assert_eq!(dense_layer.backend(), "dense");
+    }
+
+    #[test]
+    fn kernel_choice_names_roundtrip() {
+        for c in [KernelChoice::Dense, KernelChoice::Csr, KernelChoice::Bcs, KernelChoice::Auto] {
+            assert_eq!(KernelChoice::by_name(c.name()), Some(c));
+        }
+        assert_eq!(KernelChoice::by_name("AUTO"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::by_name("coo"), None);
     }
 
     #[test]

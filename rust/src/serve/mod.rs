@@ -1,0 +1,47 @@
+//! Compile-once / serve-many inference: the crate's front-door API.
+//!
+//! The lower layers expose the pipeline as loose stages — run a mapping
+//! method, [`NetWeights::synthesize`](crate::runtime::NetWeights::synthesize),
+//! [`CompiledNet::compile`](crate::runtime::CompiledNet::compile), then
+//! drive a [`GraphExecutor`](crate::runtime::GraphExecutor) with a
+//! caller-chosen batch.  That is the right surface for benchmarks and
+//! parity tests, but a serving process wants one object that owns the
+//! compiled artifact and one that owns admission.  This module provides
+//! both:
+//!
+//! * [`PreparedModel`] — `(ModelSpec, assignments, NetWeights,
+//!   CompiledNet)` sealed into a single immutable artifact behind an
+//!   `Arc`, so clones are cheap and every session/worker shares the same
+//!   converted sparse kernels.  Built fluently via
+//!   [`PreparedModel::builder`] (zoo model, dataset, mapping method, seed,
+//!   kernel choice), and `save`/`load`-able as a JSON *recipe*
+//!   ([`crate::util::json`]): the spec, per-layer assignments, and the
+//!   weight seed round-trip, and weights are re-synthesized
+//!   deterministically on load — a mapping computed once (e.g. by the RL
+//!   search) is served forever without re-running search.
+//! * [`Session`] — built from a `PreparedModel` via [`SessionBuilder`]
+//!   (threads, tile width, fused/materialized im2col, max batch, max
+//!   wait, worker count).  It owns the persistent
+//!   [`Engine`](crate::sparse::Engine) pool and a per-worker
+//!   [`Arena`](crate::runtime::Arena), and exposes
+//!   [`Session::submit`]`(input) -> `[`Ticket`] plus the blocking
+//!   [`Session::infer`] wrapper.  A **dynamic micro-batcher** coalesces
+//!   concurrently submitted requests into lane-aligned batches (multiples
+//!   of the engine's 8-wide [`LANE`](crate::sparse::LANE), latency bounded
+//!   by the max-wait knob) before one fused executor run, then scatters
+//!   per-request outputs.  Because every GEMM column accumulates in a
+//!   fixed non-zero order and all other kernels are elementwise, a
+//!   request's output is **bit-identical** whether it ran alone or rode a
+//!   coalesced batch — the executor's determinism guarantee lifted to the
+//!   serving layer (locked by `tests/serve_api.rs`).
+//!
+//! [`GraphExecutor`](crate::runtime::GraphExecutor) remains public as the
+//! low-level layer underneath: reach for it when you need explicit
+//! batches, per-step timings, or arena control; reach for this module when
+//! you need a front door.
+
+pub mod prepared;
+pub mod session;
+
+pub use prepared::{PreparedModel, PreparedModelBuilder};
+pub use session::{Session, SessionBuilder, SessionStats, Ticket};

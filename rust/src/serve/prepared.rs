@@ -1,0 +1,545 @@
+//! [`PreparedModel`]: the sealed, shareable inference artifact.
+//!
+//! Everything the serving layer needs to answer a request — the layer
+//! spec, the per-layer pruning assignments, the synthesized masked
+//! weights, and the lowered [`CompiledNet`] with its converted sparse
+//! kernels — is built once here and frozen behind an `Arc`.  `Clone` is a
+//! refcount bump, so sessions, workers, and benches all execute the same
+//! kernels.  [`PreparedModel::save`]/[`PreparedModel::load`] persist the
+//! *recipe* (spec + assignments + seed + kernel choice) through
+//! [`crate::util::json`]; weights re-synthesize deterministically from the
+//! seed on load, so a search-based mapping is computed once and served
+//! repeatedly.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::accuracy::Assignment;
+use crate::mapping::MappingMethod;
+use crate::models::{zoo, Dataset, LayerKind, LayerSpec, ModelSpec};
+use crate::pruning::Scheme;
+use crate::runtime::{CompiledNet, KernelChoice, NetWeights};
+use crate::simulator::DeviceProfile;
+use crate::util::json::Value;
+
+use super::session::{Session, SessionBuilder};
+
+/// Artifact format tag written by [`PreparedModel::save`].
+const FORMAT: &str = "prunemap.prepared.v1";
+
+struct Inner {
+    model: ModelSpec,
+    assigns: Vec<Assignment>,
+    seed: u64,
+    choice: KernelChoice,
+    weights: NetWeights,
+    net: CompiledNet,
+    /// Provenance label: `"rule"`, `"search"`, `"explicit"`, or `"loaded"`.
+    method: String,
+}
+
+/// An immutable, cheaply-`Clone` compiled inference artifact: spec +
+/// assignments + synthesized weights + lowered network, shared via `Arc`.
+/// See the [module docs](super) for the serving lifecycle.
+#[derive(Clone)]
+pub struct PreparedModel {
+    inner: Arc<Inner>,
+}
+
+impl PreparedModel {
+    /// Start a fluent build: zoo model, dataset, mapping method, weight
+    /// seed, kernel choice.
+    pub fn builder() -> PreparedModelBuilder {
+        PreparedModelBuilder::default()
+    }
+
+    /// Seal explicit parts into an artifact: synthesize masked weights
+    /// from `seed` and lower the fused plan once.  `method` is a
+    /// provenance label carried for reports.
+    pub fn from_parts(
+        model: ModelSpec,
+        assigns: Vec<Assignment>,
+        seed: u64,
+        choice: KernelChoice,
+        method: &str,
+    ) -> Result<PreparedModel> {
+        let (weights, net) = CompiledNet::compile_with_weights(&model, &assigns, seed, choice)?;
+        Ok(PreparedModel {
+            inner: Arc::new(Inner {
+                model,
+                assigns,
+                seed,
+                choice,
+                weights,
+                net,
+                method: method.to_string(),
+            }),
+        })
+    }
+
+    pub fn model(&self) -> &ModelSpec {
+        &self.inner.model
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.model.name
+    }
+
+    pub fn assigns(&self) -> &[Assignment] {
+        &self.inner.assigns
+    }
+
+    pub fn weights(&self) -> &NetWeights {
+        &self.inner.weights
+    }
+
+    /// The lowered network (converted sparse kernels, program steps) —
+    /// hand this to a [`GraphExecutor`](crate::runtime::GraphExecutor)
+    /// for low-level control, or build a [`Session`] for serving.
+    pub fn net(&self) -> &CompiledNet {
+        &self.inner.net
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.inner.seed
+    }
+
+    pub fn kernel_choice(&self) -> KernelChoice {
+        self.inner.choice
+    }
+
+    /// Provenance of the assignments: `"rule"`, `"search"`, `"explicit"`,
+    /// or `"loaded"`.
+    pub fn method(&self) -> &str {
+        &self.inner.method
+    }
+
+    /// Per-sample input shape `(C, H, W)`.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        self.inner.net.input_shape
+    }
+
+    /// Per-sample input element count (one request's payload length).
+    pub fn input_len(&self) -> usize {
+        let (c, h, w) = self.inner.net.input_shape;
+        c * h * w
+    }
+
+    /// Per-sample output element count.
+    pub fn output_len(&self) -> usize {
+        self.inner.net.output_len()
+    }
+
+    /// Start building a serving [`Session`] over this artifact.
+    pub fn session(&self) -> SessionBuilder {
+        Session::builder(self.clone())
+    }
+
+    /// The artifact recipe as a JSON value (see [`PreparedModel::save`]).
+    pub fn to_json(&self) -> Value {
+        let assigns = self
+            .inner
+            .assigns
+            .iter()
+            .map(assignment_to_json)
+            .collect();
+        Value::obj(vec![
+            ("format", Value::str(FORMAT)),
+            ("model", model_to_json(&self.inner.model)),
+            ("assignments", Value::arr(assigns)),
+            // string-encoded so the full u64 range survives JSON's f64
+            ("seed", Value::str(self.inner.seed.to_string())),
+            ("kernel", Value::str(self.inner.choice.name())),
+            ("method", Value::str(self.inner.method.clone())),
+        ])
+    }
+
+    /// Persist the recipe — spec, assignments, seed, kernel choice — as
+    /// pretty JSON.  Weights are *not* stored: they re-synthesize
+    /// bit-identically from the seed on [`PreparedModel::load`], so the
+    /// round trip reproduces identical logits at a few kilobytes.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("write prepared artifact to {}", path.display()))
+    }
+
+    /// Rebuild an artifact saved by [`PreparedModel::save`]: parse the
+    /// recipe, re-synthesize weights, and re-lower the network.
+    pub fn load(path: impl AsRef<Path>) -> Result<PreparedModel> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read prepared artifact from {}", path.display()))?;
+        Self::from_json(&Value::parse(&text)?)
+            .with_context(|| format!("parse prepared artifact {}", path.display()))
+    }
+
+    /// [`PreparedModel::load`] from an already-parsed JSON value.
+    pub fn from_json(v: &Value) -> Result<PreparedModel> {
+        let format = v.get("format")?.as_str()?;
+        if format != FORMAT {
+            bail!("unsupported artifact format '{format}' (expected '{FORMAT}')");
+        }
+        let model = model_from_json(v.get("model")?)?;
+        let assigns = v
+            .get("assignments")?
+            .as_arr()?
+            .iter()
+            .map(assignment_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let seed = v.get("seed")?.as_u64()?;
+        let kernel = v.get("kernel")?.as_str()?;
+        let choice = KernelChoice::by_name(kernel)
+            .ok_or_else(|| anyhow!("unknown kernel choice '{kernel}'"))?;
+        let method = match v.opt("method") {
+            Some(m) => m.as_str()?.to_string(),
+            None => "loaded".to_string(),
+        };
+        Self::from_parts(model, assigns, seed, choice, &method)
+    }
+}
+
+/// Fluent configuration for [`PreparedModel`]: pick a zoo model (or pass a
+/// spec), a dataset, a mapping method (or explicit assignments), the
+/// weight seed, and the sparse-format choice; `build()` runs the mapping
+/// and seals the artifact.
+pub struct PreparedModelBuilder {
+    model_name: Option<String>,
+    model_spec: Option<ModelSpec>,
+    dataset: String,
+    device: String,
+    method: String,
+    iterations: usize,
+    search_seed: u64,
+    mapping: Option<MappingMethod>,
+    assignments: Option<Vec<Assignment>>,
+    seed: u64,
+    choice: KernelChoice,
+}
+
+impl Default for PreparedModelBuilder {
+    fn default() -> Self {
+        PreparedModelBuilder {
+            model_name: None,
+            model_spec: None,
+            dataset: "cifar10".to_string(),
+            device: "s10".to_string(),
+            method: "rule".to_string(),
+            iterations: 30,
+            search_seed: 0xC0FFEE,
+            mapping: None,
+            assignments: None,
+            seed: 7,
+            choice: KernelChoice::Auto,
+        }
+    }
+}
+
+impl PreparedModelBuilder {
+    /// Zoo model name (`vgg16`, `resnet18`, `resnet50`, `mobilenetv1`,
+    /// `mobilenetv2`, `yolov4`, `proxy`).
+    pub fn model(mut self, name: &str) -> Self {
+        self.model_name = Some(name.to_string());
+        self
+    }
+
+    /// Use an explicit [`ModelSpec`] instead of a zoo name.
+    pub fn model_spec(mut self, spec: ModelSpec) -> Self {
+        self.model_spec = Some(spec);
+        self
+    }
+
+    /// Dataset name (`cifar10`, `cifar100`, `imagenet`, `coco`,
+    /// `synthetic`); drives zoo variants and the mapping's difficulty
+    /// dispatch.  Default `cifar10`.
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.dataset = name.to_string();
+        self
+    }
+
+    /// Device profile the mapping optimizes for (`s10` | `s20` | `s21`).
+    /// Default `s10`.
+    pub fn device(mut self, name: &str) -> Self {
+        self.device = name.to_string();
+        self
+    }
+
+    /// Mapping method name (`rule` | `search`).  Default `rule`.
+    pub fn method(mut self, name: &str) -> Self {
+        self.method = name.to_string();
+        self
+    }
+
+    /// Search iterations (search method only).  Default 30.
+    pub fn iterations(mut self, n: usize) -> Self {
+        self.iterations = n;
+        self
+    }
+
+    /// Search RNG seed (search method only).
+    pub fn search_seed(mut self, seed: u64) -> Self {
+        self.search_seed = seed;
+        self
+    }
+
+    /// Use an already-resolved [`MappingMethod`] (overrides
+    /// `method`/`iterations`/`search_seed`).
+    pub fn mapping(mut self, method: MappingMethod) -> Self {
+        self.mapping = Some(method);
+        self
+    }
+
+    /// Skip mapping entirely and use these per-layer assignments.
+    pub fn assignments(mut self, assigns: Vec<Assignment>) -> Self {
+        self.assignments = Some(assigns);
+        self
+    }
+
+    /// Weight-synthesis seed (the stand-in for a trained checkpoint).
+    /// Default 7.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Sparse-format selection per layer.  Default
+    /// [`KernelChoice::Auto`].
+    pub fn kernel(mut self, choice: KernelChoice) -> Self {
+        self.choice = choice;
+        self
+    }
+
+    /// Resolve names, run the mapping (unless explicit assignments were
+    /// given), synthesize weights, and lower the network.
+    pub fn build(self) -> Result<PreparedModel> {
+        let ds = Dataset::by_name(&self.dataset)
+            .ok_or_else(|| anyhow!("unknown dataset '{}'", self.dataset))?;
+        let model = match (self.model_spec, self.model_name) {
+            (Some(spec), _) => spec,
+            (None, Some(name)) => zoo::by_name(&name, ds)
+                .ok_or_else(|| anyhow!("unknown model '{name}'"))?,
+            (None, None) => {
+                bail!("PreparedModel::builder() needs .model(name) or .model_spec(spec)")
+            }
+        };
+        let (assigns, method) = match self.assignments {
+            Some(a) => (a, "explicit".to_string()),
+            None => {
+                let dev = DeviceProfile::by_name(&self.device)
+                    .ok_or_else(|| anyhow!("unknown device '{}'", self.device))?;
+                let m = match self.mapping {
+                    Some(m) => m,
+                    None => MappingMethod::parse(&self.method, self.iterations, self.search_seed)?,
+                };
+                let label = m.label().to_string();
+                (m.assign(&model, &dev), label)
+            }
+        };
+        PreparedModel::from_parts(model, assigns, self.seed, self.choice, &method)
+    }
+}
+
+// ---- JSON (de)serialization helpers ------------------------------------
+
+fn kind_name(kind: LayerKind) -> &'static str {
+    match kind {
+        LayerKind::Conv => "conv",
+        LayerKind::DepthwiseConv => "dwconv",
+        LayerKind::Fc => "fc",
+    }
+}
+
+fn kind_from_name(name: &str) -> Result<LayerKind> {
+    Ok(match name {
+        "conv" => LayerKind::Conv,
+        "dwconv" => LayerKind::DepthwiseConv,
+        "fc" => LayerKind::Fc,
+        other => bail!("unknown layer kind '{other}'"),
+    })
+}
+
+fn layer_to_json(l: &LayerSpec) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(l.name.clone())),
+        ("kind", Value::str(kind_name(l.kind))),
+        ("kh", Value::num(l.kh as f64)),
+        ("kw", Value::num(l.kw as f64)),
+        ("in_ch", Value::num(l.in_ch as f64)),
+        ("out_ch", Value::num(l.out_ch as f64)),
+        ("in_hw", Value::num(l.in_hw as f64)),
+        ("stride", Value::num(l.stride as f64)),
+    ])
+}
+
+fn layer_from_json(v: &Value) -> Result<LayerSpec> {
+    Ok(LayerSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        kind: kind_from_name(v.get("kind")?.as_str()?)?,
+        kh: v.get("kh")?.as_usize()?,
+        kw: v.get("kw")?.as_usize()?,
+        in_ch: v.get("in_ch")?.as_usize()?,
+        out_ch: v.get("out_ch")?.as_usize()?,
+        in_hw: v.get("in_hw")?.as_usize()?,
+        stride: v.get("stride")?.as_usize()?,
+    })
+}
+
+fn model_to_json(m: &ModelSpec) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(m.name.clone())),
+        ("dataset", Value::str(m.dataset.name())),
+        ("layers", Value::arr(m.layers.iter().map(layer_to_json).collect())),
+    ])
+}
+
+fn model_from_json(v: &Value) -> Result<ModelSpec> {
+    let ds = v.get("dataset")?.as_str()?;
+    Ok(ModelSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        dataset: Dataset::by_name(ds).ok_or_else(|| anyhow!("unknown dataset '{ds}'"))?,
+        layers: v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(layer_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn scheme_to_json(s: &Scheme) -> Value {
+    match s {
+        Scheme::None => Value::obj(vec![("kind", Value::str("none"))]),
+        Scheme::Unstructured => Value::obj(vec![("kind", Value::str("unstructured"))]),
+        Scheme::StructuredRow => Value::obj(vec![("kind", Value::str("structured-row"))]),
+        Scheme::StructuredColumn => Value::obj(vec![("kind", Value::str("structured-col"))]),
+        Scheme::Pattern => Value::obj(vec![("kind", Value::str("pattern"))]),
+        Scheme::Block { bp, bq } => Value::obj(vec![
+            ("kind", Value::str("block")),
+            ("bp", Value::num(*bp as f64)),
+            ("bq", Value::num(*bq as f64)),
+        ]),
+        Scheme::BlockPunched { bf, bc } => Value::obj(vec![
+            ("kind", Value::str("punched")),
+            ("bf", Value::num(*bf as f64)),
+            ("bc", Value::num(*bc as f64)),
+        ]),
+    }
+}
+
+fn scheme_from_json(v: &Value) -> Result<Scheme> {
+    Ok(match v.get("kind")?.as_str()? {
+        "none" => Scheme::None,
+        "unstructured" => Scheme::Unstructured,
+        "structured-row" => Scheme::StructuredRow,
+        "structured-col" => Scheme::StructuredColumn,
+        "pattern" => Scheme::Pattern,
+        "block" => Scheme::Block {
+            bp: v.get("bp")?.as_usize()?,
+            bq: v.get("bq")?.as_usize()?,
+        },
+        "punched" => Scheme::BlockPunched {
+            bf: v.get("bf")?.as_usize()?,
+            bc: v.get("bc")?.as_usize()?,
+        },
+        other => bail!("unknown scheme kind '{other}'"),
+    })
+}
+
+fn assignment_to_json(a: &Assignment) -> Value {
+    Value::obj(vec![
+        ("scheme", scheme_to_json(&a.scheme)),
+        ("compression", Value::num(f64::from(a.compression))),
+    ])
+}
+
+fn assignment_from_json(v: &Value) -> Result<Assignment> {
+    Ok(Assignment {
+        scheme: scheme_from_json(v.get("scheme")?)?,
+        compression: v.get("compression")?.as_f64()? as f32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn proxy_assigns(model: &ModelSpec) -> Vec<Assignment> {
+        model
+            .layers
+            .iter()
+            .map(|l| {
+                if l.is_3x3_conv() {
+                    Assignment { scheme: Scheme::BlockPunched { bf: 4, bc: 4 }, compression: 2.0 }
+                } else {
+                    Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builder_seals_a_runnable_artifact() {
+        let m = zoo::proxy_cnn();
+        let assigns = proxy_assigns(&m);
+        let p = PreparedModel::builder()
+            .model("proxy")
+            .assignments(assigns)
+            .seed(3)
+            .build()
+            .unwrap();
+        assert_eq!(p.name(), "ProxyCNN");
+        assert_eq!(p.method(), "explicit");
+        assert_eq!(p.input_shape(), (3, 32, 32));
+        assert_eq!(p.input_len(), 3 * 32 * 32);
+        assert_eq!(p.output_len(), 10);
+        assert_eq!(p.assigns().len(), m.layers.len());
+        // clones share the same sealed artifact
+        let q = p.clone();
+        assert!(std::ptr::eq(p.net(), q.net()));
+    }
+
+    #[test]
+    fn builder_rejects_unknowns() {
+        assert!(PreparedModel::builder().build().is_err());
+        assert!(PreparedModel::builder().model("alexnet").build().is_err());
+        assert!(PreparedModel::builder().model("proxy").dataset("mnist").build().is_err());
+        assert!(PreparedModel::builder().model("proxy").device("pixel").build().is_err());
+        assert!(PreparedModel::builder().model("proxy").method("magic").build().is_err());
+    }
+
+    #[test]
+    fn recipe_json_roundtrips() {
+        let m = zoo::proxy_cnn();
+        let assigns = proxy_assigns(&m);
+        let p = PreparedModel::builder()
+            .model("proxy")
+            .assignments(assigns)
+            .seed(0xDEAD_BEEF_DEAD_BEEF)
+            .kernel(KernelChoice::Csr)
+            .build()
+            .unwrap();
+        let v = Value::parse(&p.to_json().pretty()).unwrap();
+        let q = PreparedModel::from_json(&v).unwrap();
+        assert_eq!(q.seed(), 0xDEAD_BEEF_DEAD_BEEF);
+        assert_eq!(q.kernel_choice(), KernelChoice::Csr);
+        assert_eq!(q.model().layers, p.model().layers);
+        for (a, b) in p.assigns().iter().zip(q.assigns()) {
+            assert_eq!(a.scheme.label(), b.scheme.label());
+            assert_eq!(a.compression, b.compression);
+        }
+        // identical weights — the determinism behind save/load parity
+        for (a, b) in p.weights().layers.iter().zip(&q.weights().layers) {
+            assert_eq!(a.weight.data(), b.weight.data(), "layer {}", a.spec.name);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_artifacts() {
+        let bad_format = Value::parse(r#"{"format": "prunemap.prepared.v9"}"#).unwrap();
+        assert!(PreparedModel::from_json(&bad_format).is_err());
+        assert!(PreparedModel::from_json(&Value::parse("{}").unwrap()).is_err());
+    }
+}

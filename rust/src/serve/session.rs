@@ -1,0 +1,424 @@
+//! [`Session`]: request admission + dynamic micro-batching over a
+//! [`PreparedModel`].
+//!
+//! A session owns everything mutable about serving: the
+//! [`GraphExecutor`]s (whose engines share one persistent rayon pool), a
+//! per-worker [`Arena`] that makes steady-state runs allocation-free, and
+//! the request queue.  Callers [`Session::submit`] one sample at a time
+//! and get a [`Ticket`]; batcher workers coalesce whatever is queued into
+//! a **lane-aligned** batch (a multiple of the engine's
+//! [`LANE`](crate::sparse::LANE), padded with zero samples, never more
+//! than the max-batch cap), hold an under-full batch open for at most the
+//! max-wait window, run the network once, and scatter each request's
+//! output back through its ticket.  Per-request outputs are bit-identical
+//! to a solo run — the engine accumulates every output element in the
+//! same order at any batch width, and padding lanes are never read back.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::graph::StepTiming;
+use crate::runtime::{Arena, GraphExecutor};
+use crate::sparse::{align_to_lane, DEFAULT_TILE_COLS};
+
+use super::PreparedModel;
+
+/// What a batcher worker sends back per request (errors as strings so one
+/// failed run can fan out to every rider of the batch).
+type Served = std::result::Result<Vec<f32>, String>;
+
+/// A pending request: one sample plus its reply channel.
+struct Request {
+    input: Vec<f32>,
+    tx: mpsc::Sender<Served>,
+}
+
+/// Admission counters, observable via [`Session::stats`].  The batch
+/// histogram keys are *executed* batch widths (real requests + padding
+/// lanes), so lane alignment and the max-batch cap are directly testable.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Requests served (not counting padding lanes).
+    pub requests: usize,
+    /// Executor runs dispatched.
+    pub runs: usize,
+    /// Zero-sample lanes added to align batches to the SIMD lane width.
+    pub padded_lanes: usize,
+    /// Largest number of real requests coalesced into one run.
+    pub max_coalesced: usize,
+    /// Executed batch width -> number of runs at that width.
+    pub batch_runs: BTreeMap<usize, usize>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    closed: AtomicBool,
+    stats: Mutex<SessionStats>,
+    max_batch: usize,
+    max_wait: Duration,
+    sample_len: usize,
+    out_len: usize,
+}
+
+/// A handle to one submitted request; [`Ticket::wait`] blocks until its
+/// batch has run.
+pub struct Ticket {
+    rx: mpsc::Receiver<Served>,
+}
+
+impl Ticket {
+    /// Block for this request's output (`[out_features]` for the sample).
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.rx.recv() {
+            Ok(Ok(y)) => Ok(y),
+            Ok(Err(msg)) => Err(anyhow!(msg)),
+            Err(_) => Err(anyhow!("session shut down before the request was served")),
+        }
+    }
+}
+
+/// Configuration for a [`Session`]; see the field setters.  Build with
+/// [`Session::builder`] or [`PreparedModel::session`].
+pub struct SessionBuilder {
+    prepared: PreparedModel,
+    threads: usize,
+    tile_cols: usize,
+    fused: bool,
+    max_batch: usize,
+    max_wait: Duration,
+    workers: usize,
+}
+
+impl SessionBuilder {
+    fn new(prepared: PreparedModel) -> SessionBuilder {
+        SessionBuilder {
+            prepared,
+            threads: rayon::current_num_threads(),
+            tile_cols: DEFAULT_TILE_COLS,
+            fused: true,
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+        }
+    }
+
+    /// Engine worker threads per executor run (the persistent pool is
+    /// built once and shared by every run).  Default: one per core.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Fused-im2col tile width (GEMM columns per panel).
+    pub fn tile_cols(mut self, tile: usize) -> Self {
+        self.tile_cols = tile.max(1);
+        self
+    }
+
+    /// `false` routes convs through the materialized-X im2col baseline
+    /// instead of the fused tile-order producer.  Default fused.
+    pub fn fused(mut self, fused: bool) -> Self {
+        self.fused = fused;
+        self
+    }
+
+    /// Most requests one run may serve.  Rounded **up** to a lane multiple
+    /// (minimum one lane block) so coalesced batches always align; the
+    /// effective value is [`Session::max_batch`].  Default 32.
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// How long the micro-batcher holds an under-full batch open for more
+    /// requests — the tail-latency bound.  `Duration::ZERO` dispatches
+    /// whatever is queued immediately.  Default 2ms.
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.max_wait = max_wait;
+        self
+    }
+
+    /// Batcher worker threads, each owning a persistent [`Arena`] (warm
+    /// runs allocate nothing) and draining the shared queue.  Default 1.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Spawn the batcher workers and open the session for requests.
+    pub fn build(self) -> Session {
+        let exec = {
+            let e = GraphExecutor::new(self.threads).with_tile_cols(self.tile_cols);
+            if self.fused {
+                e
+            } else {
+                e.materialized()
+            }
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            stats: Mutex::new(SessionStats::default()),
+            max_batch: align_to_lane(self.max_batch),
+            max_wait: self.max_wait,
+            sample_len: self.prepared.input_len(),
+            out_len: self.prepared.output_len(),
+        });
+        let workers = (0..self.workers)
+            .map(|i| {
+                let exec = exec.clone();
+                let prepared = self.prepared.clone();
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("prunemap-serve-{i}"))
+                    .spawn(move || worker_loop(&exec, &prepared, &shared))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Session { prepared: self.prepared, exec, shared, workers }
+    }
+}
+
+/// A live serving endpoint over one [`PreparedModel`]; see the
+/// [module docs](self).  Dropping the session serves every queued request,
+/// then joins the workers.
+pub struct Session {
+    prepared: PreparedModel,
+    exec: GraphExecutor,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Session {
+    /// Start configuring a session over `prepared`.
+    pub fn builder(prepared: PreparedModel) -> SessionBuilder {
+        SessionBuilder::new(prepared)
+    }
+
+    /// The sealed artifact this session serves.
+    pub fn prepared(&self) -> &PreparedModel {
+        &self.prepared
+    }
+
+    /// Effective coalescing cap: the builder's `max_batch` rounded up to a
+    /// lane multiple.  No executed batch ever exceeds this.
+    pub fn max_batch(&self) -> usize {
+        self.shared.max_batch
+    }
+
+    /// The micro-batcher's admission window.
+    pub fn max_wait(&self) -> Duration {
+        self.shared.max_wait
+    }
+
+    /// Engine worker threads per executor run.
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
+    }
+
+    /// Whether convs run the fused tile-order im2col path.
+    pub fn is_fused(&self) -> bool {
+        self.exec.is_fused()
+    }
+
+    /// Batcher worker count.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// A snapshot of the admission counters.
+    pub fn stats(&self) -> SessionStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Enqueue one sample (NCHW-flattened `[C*H*W]`) and return a
+    /// [`Ticket`] for its output.  Concurrent submissions coalesce into
+    /// lane-aligned batches; the call itself never blocks on execution.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Ticket> {
+        if input.len() != self.shared.sample_len {
+            let (c, h, w) = self.prepared.input_shape();
+            bail!(
+                "input must be one [{c}, {h}, {w}] sample = {} elements, got {}",
+                self.shared.sample_len,
+                input.len()
+            );
+        }
+        let (tx, rx) = mpsc::channel();
+        self.shared.queue.lock().unwrap().push_back(Request { input, tx });
+        self.shared.cv.notify_all();
+        Ok(Ticket { rx })
+    }
+
+    /// Blocking convenience: [`Session::submit`] + [`Ticket::wait`].
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(input)?.wait()
+    }
+
+    /// Diagnostic direct run (bypasses the micro-batcher): one warmed
+    /// batched inference with per-step timings, as `prunemap infer`
+    /// reports.  `input` is `[batch, C, H, W]` row-major.
+    pub fn run_timed(&self, input: &[f32], batch: usize) -> Result<(Vec<f32>, Vec<StepTiming>)> {
+        let mut arena = Arena::new();
+        let _warmup = self.exec.run_with_arena(self.prepared.net(), input, batch, &mut arena)?;
+        self.exec.run_timed_with_arena(self.prepared.net(), input, batch, &mut arena)
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        {
+            // flip `closed` and notify while holding the queue mutex:
+            // a worker between its `closed` check and `cv.wait` still
+            // holds the lock, so the store+notify cannot slip into that
+            // window and strand it (the classic lost wakeup)
+            let _queue = self.shared.queue.lock().unwrap();
+            self.shared.closed.store(true, Ordering::Release);
+            self.shared.cv.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// One batcher worker: wait for requests, coalesce up to `max_batch`
+/// within `max_wait`, pad the batch to a lane multiple, run once, scatter.
+/// On close the queue is drained — pending tickets are served, not
+/// dropped.
+fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) {
+    let net = prepared.net();
+    let sample = shared.sample_len;
+    let out_len = shared.out_len;
+    let mut arena = Arena::new();
+    let mut input: Vec<f32> = Vec::new();
+    loop {
+        let mut q = shared.queue.lock().unwrap();
+        // phase 1: block until there is at least one request (or shutdown
+        // with an empty queue)
+        loop {
+            if !q.is_empty() {
+                break;
+            }
+            if shared.closed.load(Ordering::Acquire) {
+                return;
+            }
+            q = shared.cv.wait(q).unwrap();
+        }
+        // phase 2: hold the batch open for up to `max_wait` hoping to fill
+        // it to `max_batch` (skipped when closing: drain immediately)
+        let deadline = Instant::now() + shared.max_wait;
+        while q.len() < shared.max_batch && !shared.closed.load(Ordering::Acquire) {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = q.len().min(shared.max_batch);
+        let reqs: Vec<Request> = q.drain(..take).collect();
+        drop(q);
+        if reqs.is_empty() {
+            // another worker drained the queue while we held the batch
+            // open; go back to waiting
+            continue;
+        }
+
+        // pad to the lane-aligned width (<= max_batch, which is itself
+        // lane-aligned); padding lanes are zero samples whose outputs are
+        // never read
+        let batch = align_to_lane(reqs.len());
+        input.clear();
+        input.resize(batch * sample, 0.0);
+        for (i, r) in reqs.iter().enumerate() {
+            input[i * sample..(i + 1) * sample].copy_from_slice(&r.input);
+        }
+        let result = exec.run_with_arena(net, &input, batch, &mut arena);
+        {
+            let mut st = shared.stats.lock().unwrap();
+            st.requests += reqs.len();
+            st.runs += 1;
+            st.padded_lanes += batch - reqs.len();
+            st.max_coalesced = st.max_coalesced.max(reqs.len());
+            *st.batch_runs.entry(batch).or_insert(0) += 1;
+        }
+        match result {
+            Ok(y) => {
+                for (i, r) in reqs.iter().enumerate() {
+                    let _ = r.tx.send(Ok(y[i * out_len..(i + 1) * out_len].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in &reqs {
+                    let _ = r.tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::Assignment;
+
+    fn proxy_session(max_batch: usize, max_wait: Duration) -> Session {
+        let prepared = PreparedModel::builder()
+            .model("proxy")
+            .assignments(
+                crate::models::zoo::proxy_cnn()
+                    .layers
+                    .iter()
+                    .map(|_| Assignment::dense())
+                    .collect(),
+            )
+            .seed(5)
+            .build()
+            .unwrap();
+        Session::builder(prepared)
+            .threads(1)
+            .max_batch(max_batch)
+            .max_wait(max_wait)
+            .build()
+    }
+
+    #[test]
+    fn submit_validates_sample_length() {
+        let s = proxy_session(8, Duration::ZERO);
+        assert!(s.submit(vec![0.0; 5]).is_err());
+        let y = s.infer(vec![0.1; s.prepared().input_len()]).unwrap();
+        assert_eq!(y.len(), 10);
+    }
+
+    #[test]
+    fn max_batch_rounds_up_to_a_lane_multiple() {
+        let s = proxy_session(1, Duration::ZERO);
+        assert_eq!(s.max_batch(), crate::sparse::LANE);
+        let s = proxy_session(20, Duration::ZERO);
+        assert_eq!(s.max_batch(), 24);
+    }
+
+    #[test]
+    fn drop_serves_pending_tickets() {
+        let s = proxy_session(32, Duration::from_millis(200));
+        let n = s.prepared().input_len();
+        let tickets: Vec<Ticket> =
+            (0..3).map(|i| s.submit(vec![0.01 * i as f32; n]).unwrap()).collect();
+        drop(s);
+        for t in tickets {
+            let y = t.wait().expect("pending requests are drained on close");
+            assert_eq!(y.len(), 10);
+        }
+    }
+}

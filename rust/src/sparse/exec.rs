@@ -51,6 +51,15 @@ pub const LANE: usize = 8;
 /// a multiple of [`LANE`].
 pub const DEFAULT_TILE_COLS: usize = 256;
 
+/// Round `n` up to the next multiple of [`LANE`] (minimum one full lane
+/// block): the shared alignment rule for fused-im2col tile widths and the
+/// serve-layer micro-batcher's coalesced batch sizes, so the engine's
+/// inner loops run whole `[f32; LANE]` register blocks with no scalar
+/// tail.
+pub fn align_to_lane(n: usize) -> usize {
+    n.max(1).div_ceil(LANE) * LANE
+}
+
 /// A contiguous row range plus its cost (retained non-zeros), the unit of
 /// thread dispatch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -365,7 +374,7 @@ impl Engine {
     /// rounded up to a multiple of [`LANE`] so full register blocks
     /// dominate.
     pub fn with_tile_cols(mut self, tile: usize) -> Engine {
-        self.tile_cols = tile.max(LANE).div_ceil(LANE) * LANE;
+        self.tile_cols = align_to_lane(tile);
         self
     }
 
@@ -822,6 +831,15 @@ mod tests {
         // fused path over a zero-row / zero-column source
         let src = SlicePanels::new(&[], 8, 0);
         assert!(Engine::new(2).spmm_fused(&bcs, &src).is_empty());
+    }
+
+    #[test]
+    fn align_to_lane_rounds_up() {
+        assert_eq!(align_to_lane(0), LANE);
+        assert_eq!(align_to_lane(1), LANE);
+        assert_eq!(align_to_lane(LANE), LANE);
+        assert_eq!(align_to_lane(LANE + 1), 2 * LANE);
+        assert_eq!(align_to_lane(3 * LANE), 3 * LANE);
     }
 
     #[test]

@@ -11,8 +11,8 @@ pub mod reorder;
 pub use bcs::Bcs;
 pub use csr::Csr;
 pub use exec::{
-    pack_columns, unpack_column, DenseKernel, Engine, PanelSource, SlicePanels, SparseKernel,
-    WorkUnit, DEFAULT_TILE_COLS, LANE,
+    align_to_lane, pack_columns, unpack_column, DenseKernel, Engine, PanelSource, SlicePanels,
+    SparseKernel, WorkUnit, DEFAULT_TILE_COLS, LANE,
 };
 pub use reorder::{
     load_balance, permute_rows, reorder_rows, row_nnz_counts, stride_worker, LoadBalance,

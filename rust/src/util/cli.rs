@@ -112,6 +112,25 @@ impl Args {
     pub fn materialized(&self) -> bool {
         self.flag("materialized")
     }
+
+    /// Serve-session coalescing cap from `--max-batch N` (requests per
+    /// fused run; the session rounds it up to a SIMD-lane multiple).
+    pub fn max_batch(&self, default: usize) -> Result<usize> {
+        let b = self.get_usize("max-batch", default)?;
+        Ok(b.max(1))
+    }
+
+    /// Serve-session admission window from `--max-wait-ms F`: how long the
+    /// micro-batcher holds an under-full batch open for more requests.
+    /// Clamped to [0, 60s] — `Duration::from_secs_f32` panics on values it
+    /// cannot represent, and a multi-minute admission window is a typo.
+    pub fn max_wait(&self, default_ms: f32) -> Result<std::time::Duration> {
+        let ms = self.get_f32("max-wait-ms", default_ms)?;
+        if !ms.is_finite() {
+            return Err(anyhow!("--max-wait-ms expects a finite value, got '{ms}'"));
+        }
+        Ok(std::time::Duration::from_secs_f32(ms.clamp(0.0, 60_000.0) / 1e3))
+    }
 }
 
 /// Engine worker count for test binaries: `PRUNEMAP_TEST_THREADS` when
@@ -167,6 +186,26 @@ mod tests {
         let z = Args::parse(toks("--threads 0 --batch 0"));
         assert_eq!(z.engine_threads().unwrap(), 1);
         assert_eq!(z.batch_size(8).unwrap(), 1);
+    }
+
+    #[test]
+    fn serve_knobs() {
+        let a = Args::parse(toks("--max-batch 48 --max-wait-ms 2.5"));
+        assert_eq!(a.max_batch(32).unwrap(), 48);
+        assert_eq!(a.max_wait(1.0).unwrap(), std::time::Duration::from_micros(2500));
+        let d = Args::parse(toks(""));
+        assert_eq!(d.max_batch(32).unwrap(), 32);
+        assert_eq!(d.max_wait(2.0).unwrap(), std::time::Duration::from_millis(2));
+        // zero batch clamps to 1; negative wait clamps to zero
+        let z = Args::parse(toks("--max-batch 0 --max-wait-ms -3"));
+        assert_eq!(z.max_batch(32).unwrap(), 1);
+        assert_eq!(z.max_wait(2.0).unwrap(), std::time::Duration::ZERO);
+        // unrepresentable values error or clamp instead of panicking
+        assert!(Args::parse(toks("--max-wait-ms inf")).max_wait(2.0).is_err());
+        assert_eq!(
+            Args::parse(toks("--max-wait-ms 1e30")).max_wait(2.0).unwrap(),
+            std::time::Duration::from_secs(60)
+        );
     }
 
     #[test]

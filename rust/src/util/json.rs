@@ -63,6 +63,29 @@ impl Value {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    /// Unsigned 64-bit integer.  Accepts an integral number within f64's
+    /// exactly-representable range, or a decimal string — the encoding
+    /// writers should use for values (e.g. RNG seeds) that may exceed
+    /// 2^53, since every JSON number passes through f64.
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9_007_199_254_740_992.0 => {
+                Ok(*n as u64)
+            }
+            Value::Str(s) => s
+                .parse()
+                .map_err(|_| anyhow!("not a u64 string: '{s}'")),
+            _ => bail!("not a u64: {self:?}"),
+        }
+    }
+
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -426,6 +449,20 @@ mod tests {
             ("y", Value::arr(vec![Value::str("a"), Value::Bool(true)])),
         ]);
         assert_eq!(Value::parse(&v.pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn bool_and_u64_accessors() {
+        assert!(Value::parse("true").unwrap().as_bool().unwrap());
+        assert!(Value::parse("1").unwrap().as_bool().is_err());
+        assert_eq!(Value::parse("12").unwrap().as_u64().unwrap(), 12);
+        // strings round-trip the full u64 range, which f64 cannot
+        let big = u64::MAX;
+        let v = Value::str(big.to_string());
+        assert_eq!(Value::parse(&v.compact()).unwrap().as_u64().unwrap(), big);
+        assert!(Value::parse("-1").unwrap().as_u64().is_err());
+        assert!(Value::parse("1.5").unwrap().as_u64().is_err());
+        assert!(Value::parse("\"abc\"").unwrap().as_u64().is_err());
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Acceptance suite for the compile-once/serve-many session API
+//! (`prunemap::serve`):
+//!
+//! * concurrent `submit` from many threads returns outputs **bit-identical**
+//!   to serial `Session::infer` (and to a solo low-level `GraphExecutor`
+//!   run) at every thread/tile/fused combination;
+//! * the micro-batcher coalesces to **lane-aligned** batch sizes —
+//!   observable via `SessionStats` — and never exceeds the max-batch cap;
+//! * a `PreparedModel` save -> load -> infer round trip reproduces
+//!   identical logits.
+
+use std::time::Duration;
+
+use prunemap::accuracy::Assignment;
+use prunemap::models::zoo;
+use prunemap::pruning::Scheme;
+use prunemap::runtime::GraphExecutor;
+use prunemap::serve::{PreparedModel, Session, Ticket};
+use prunemap::sparse::LANE;
+use prunemap::util::cli::env_threads;
+
+/// A small pruned proxy artifact (explicit assignments: no latency-model
+/// build on the test path).
+fn prepared_proxy(seed: u64) -> PreparedModel {
+    let model = zoo::proxy_cnn();
+    let assigns: Vec<Assignment> = model
+        .layers
+        .iter()
+        .map(|l| {
+            if l.is_3x3_conv() {
+                Assignment { scheme: Scheme::BlockPunched { bf: 4, bc: 4 }, compression: 2.5 }
+            } else {
+                Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+            }
+        })
+        .collect();
+    PreparedModel::builder()
+        .model("proxy")
+        .assignments(assigns)
+        .seed(seed)
+        .build()
+        .expect("prepare proxy")
+}
+
+fn sample_input(len: usize, tag: usize) -> Vec<f32> {
+    (0..len).map(|j| (((tag * 7 + j) % 23) as f32) * 0.1 - 1.0).collect()
+}
+
+#[test]
+fn concurrent_submits_match_serial_infer_everywhere() {
+    let prepared = prepared_proxy(42);
+    let len = prepared.input_len();
+    let nreq = 12usize;
+    // anchor: the low-level executor running each sample alone
+    let solo: Vec<Vec<f32>> = (0..nreq)
+        .map(|tag| {
+            GraphExecutor::serial()
+                .run(prepared.net(), &sample_input(len, tag), 1)
+                .unwrap()
+        })
+        .collect();
+    for threads in [1usize, env_threads(4)] {
+        for tile in [8usize, 256] {
+            for fused in [true, false] {
+                let session = Session::builder(prepared.clone())
+                    .threads(threads)
+                    .tile_cols(tile)
+                    .fused(fused)
+                    .max_batch(16)
+                    .max_wait(Duration::from_millis(5))
+                    .build();
+                // serial: one request per infer call
+                let serial: Vec<Vec<f32>> = (0..nreq)
+                    .map(|tag| session.infer(sample_input(len, tag)).unwrap())
+                    .collect();
+                assert_eq!(
+                    serial, solo,
+                    "serial infer vs solo executor (threads={threads} tile={tile} fused={fused})"
+                );
+                // concurrent: every request from its own thread
+                let concurrent: Vec<Vec<f32>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..nreq)
+                        .map(|tag| {
+                            let session = &session;
+                            scope.spawn(move || session.infer(sample_input(len, tag)).unwrap())
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                assert_eq!(
+                    concurrent, serial,
+                    "concurrent submit vs serial (threads={threads} tile={tile} fused={fused})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn micro_batcher_coalesces_lane_aligned_and_respects_max_batch() {
+    let prepared = prepared_proxy(7);
+    let len = prepared.input_len();
+    let session = Session::builder(prepared)
+        .threads(env_threads(2))
+        .max_batch(16)
+        .max_wait(Duration::from_secs(2))
+        .build();
+    assert_eq!(session.max_batch(), 16);
+
+    // phase 1: exactly max-batch requests submitted up front -> the
+    // batcher waits for a full batch and serves all 16 in one run
+    // (inputs pre-built so the submission burst is as tight as possible)
+    let inputs: Vec<Vec<f32>> = (0..16).map(|tag| sample_input(len, tag)).collect();
+    let tickets: Vec<Ticket> = inputs.into_iter().map(|i| session.submit(i).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = session.stats();
+    assert_eq!(st.requests, 16);
+    assert_eq!(st.runs, 1, "a full batch must coalesce into one run: {st:?}");
+    assert_eq!(st.max_coalesced, 16);
+    assert_eq!(st.padded_lanes, 0);
+    assert_eq!(st.batch_runs.get(&16), Some(&1));
+
+    // phase 2: a burst larger than max-batch never exceeds the cap, and
+    // every executed batch stays lane-aligned
+    let tickets: Vec<Ticket> =
+        (0..48).map(|tag| session.submit(sample_input(len, tag)).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = session.stats();
+    assert_eq!(st.requests, 64);
+    assert!(st.runs >= 4, "48 extra requests at cap 16 need >= 3 more runs: {st:?}");
+    let mut accounted = 0usize;
+    for (&batch, &runs) in &st.batch_runs {
+        assert_eq!(batch % LANE, 0, "executed batch {batch} is not lane-aligned");
+        assert!(batch <= session.max_batch(), "batch {batch} exceeds the cap");
+        accounted += batch * runs;
+    }
+    assert_eq!(
+        accounted,
+        st.requests + st.padded_lanes,
+        "stats must account for every executed lane: {st:?}"
+    );
+}
+
+#[test]
+fn under_full_batches_are_padded_to_the_lane() {
+    let prepared = prepared_proxy(9);
+    let len = prepared.input_len();
+    let session = Session::builder(prepared)
+        .threads(1)
+        .max_batch(32)
+        .max_wait(Duration::from_millis(20))
+        .build();
+    // 5 requests can never fill a lane-aligned batch exactly, however the
+    // batcher splits them
+    let tickets: Vec<Ticket> =
+        (0..5).map(|tag| session.submit(sample_input(len, tag)).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = session.stats();
+    assert_eq!(st.requests, 5);
+    assert!(st.padded_lanes > 0, "5 requests require padding: {st:?}");
+    for &batch in st.batch_runs.keys() {
+        assert_eq!(batch % LANE, 0, "executed batch {batch} is not lane-aligned");
+    }
+}
+
+#[test]
+fn save_load_roundtrips_to_identical_logits() {
+    let prepared = prepared_proxy(0xFEED_5EED_0123_4567);
+    let path = std::env::temp_dir().join(format!(
+        "prunemap_prepared_{}_{:?}.json",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    prepared.save(&path).unwrap();
+    let loaded = PreparedModel::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(loaded.seed(), prepared.seed());
+    assert_eq!(loaded.model().layers, prepared.model().layers);
+    let len = prepared.input_len();
+    // low-level parity: identical logits from the recompiled artifact
+    let exec = GraphExecutor::serial();
+    for tag in 0..4 {
+        let input = sample_input(len, tag);
+        let a = exec.run(prepared.net(), &input, 1).unwrap();
+        let b = exec.run(loaded.net(), &input, 1).unwrap();
+        assert_eq!(a, b, "request {tag}");
+    }
+    // serving parity: a session over the loaded artifact answers
+    // identically too
+    let sa = Session::builder(prepared).threads(env_threads(2)).build();
+    let sb = Session::builder(loaded).threads(env_threads(2)).build();
+    for tag in 0..4 {
+        assert_eq!(
+            sa.infer(sample_input(len, tag)).unwrap(),
+            sb.infer(sample_input(len, tag)).unwrap(),
+            "request {tag}"
+        );
+    }
+}
+
+#[test]
+fn load_rejects_malformed_artifacts() {
+    let dir = std::env::temp_dir();
+    let missing = dir.join("prunemap_no_such_artifact.json");
+    assert!(PreparedModel::load(&missing).is_err());
+    let garbage = dir.join(format!("prunemap_garbage_{}.json", std::process::id()));
+    std::fs::write(&garbage, "{\"format\": \"wrong\"").unwrap();
+    assert!(PreparedModel::load(&garbage).is_err());
+    std::fs::write(&garbage, "{\"format\": \"wrong\"}").unwrap();
+    assert!(PreparedModel::load(&garbage).is_err());
+    let _ = std::fs::remove_file(&garbage);
+}
+
+#[test]
+fn submit_rejects_wrong_sample_length() {
+    let prepared = prepared_proxy(3);
+    let session = Session::builder(prepared.clone()).threads(1).build();
+    assert!(session.submit(vec![0.0; 7]).is_err());
+    assert!(session.submit(Vec::new()).is_err());
+    // and a well-formed request still succeeds afterwards
+    let y = session.infer(vec![0.5; prepared.input_len()]).unwrap();
+    assert_eq!(y.len(), prepared.output_len());
+}
