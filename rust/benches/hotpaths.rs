@@ -3,7 +3,11 @@
 //! multi-threaded sparse execution engine (serial-vs-threaded,
 //! spmv-vs-spmm, and the `spmm_simd_vs_scalar` /
 //! `fused_vs_materialized_im2col` acceptance pairs, each emitting a
-//! `BENCH {json}` record), whole-network end-to-end inference through the
+//! `BENCH {json}` record), the serving layer (the
+//! `serve_coalesced_vs_one_request_per_run` session burst and the
+//! multi-model front-door routing record
+//! `routed_two_models_vs_two_sessions`), whole-network end-to-end
+//! inference through the
 //! graph executor (VGG-16 / MobileNet-V1 CIFAR at several batch sizes,
 //! fused vs materialized im2col, with a measured-vs-modeled calibration
 //! JSON record per network), latency-model build, GA tuning, one RL search
@@ -24,7 +28,7 @@ use prunemap::pruning::{prune, PatternLibrary, Scheme};
 use prunemap::rng::Rng;
 use prunemap::runtime::graph::im2col::{im2col, Im2colPanels};
 use prunemap::runtime::{CompiledNet, GraphExecutor, KernelChoice};
-use prunemap::serve::{PreparedModel, Session};
+use prunemap::serve::{InferRequest, ModelRegistry, PreparedModel, Server, Session};
 use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::sparse::{permute_rows, reorder_rows, Bcs, Csr, Engine, SparseKernel};
 use prunemap::tensor::Tensor;
@@ -310,6 +314,69 @@ fn main() {
         "    coalesced/single speedup: {sp:.2}x ({} requests in {} runs, max coalesced {}, {} padded lanes)",
         st.requests, st.runs, st.max_coalesced, st.padded_lanes
     );
+
+    // --- serve front door: one routed process vs two isolated sessions -----
+    // baseline = "two processes": each model behind its own independent
+    // session, each serving its half of the burst; contender = one Server
+    // routing the same interleaved burst across a two-model registry.
+    // Same request count, same per-model batcher knobs — the delta is the
+    // routing layer plus whatever coalescing the interleave changes.
+    println!("\n## serve front door: two models, one process (threads = {threads})\n");
+    header();
+    let prepared_b = PreparedModel::builder()
+        .model("proxy")
+        .method("rule")
+        .seed(11)
+        .build()
+        .expect("prepare proxy");
+    let sample_b = prepared_b.input_len();
+    let mk_input_b = |tag: usize| -> Vec<f32> {
+        (0..sample_b).map(|j| (((tag * 13 + j) % 19) as f32) * 0.2 - 1.7).collect()
+    };
+    let half = nreq / 2;
+    let sess_a = Session::builder(prepared.clone())
+        .threads(threads)
+        .max_batch(16)
+        .max_wait(Duration::from_millis(5))
+        .build();
+    let sess_b = Session::builder(prepared_b.clone())
+        .threads(threads)
+        .max_batch(16)
+        .max_wait(Duration::from_millis(5))
+        .build();
+    let isolated = bench_n(&format!("serve_two_isolated_sessions_{nreq}req"), 3, || {
+        let ta: Vec<_> = (0..half).map(|tag| sess_a.submit(mk_input(tag)).unwrap()).collect();
+        let tb: Vec<_> = (0..half).map(|tag| sess_b.submit(mk_input_b(tag)).unwrap()).collect();
+        for t in ta.into_iter().chain(tb) {
+            black_box(t.wait().unwrap());
+        }
+    });
+    let registry = ModelRegistry::new();
+    registry.insert("mobilenetv1", prepared.clone());
+    registry.insert("proxy", prepared_b.clone());
+    let server = Server::builder(registry)
+        .threads(threads)
+        .max_batch(16)
+        .max_wait(Duration::from_millis(5))
+        .build();
+    let routed = bench_n(&format!("serve_routed_two_models_{nreq}req"), 3, || {
+        let tickets: Vec<_> = (0..nreq)
+            .map(|tag| {
+                let req = if tag % 2 == 0 {
+                    InferRequest::new("mobilenetv1", mk_input(tag))
+                } else {
+                    InferRequest::new("proxy", mk_input_b(tag))
+                };
+                server.submit(req).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+    });
+    let (rec, sp) = emit_comparison("routed_two_models_vs_two_sessions", &isolated, &routed);
+    records.push(rec);
+    println!("    routed/isolated speedup: {sp:.2}x (the cost of the routing layer if < 1)");
 
     // --- mapping machinery -------------------------------------------------
     println!();

@@ -1,0 +1,146 @@
+//! Multi-model serving front door, end to end over the wire protocol:
+//! one process compiles **two** different zoo models into a
+//! [`ModelRegistry`], opens a [`Server`] with per-model micro-batchers,
+//! serves concurrent remote clients over TCP line-JSON frames — and
+//! proves the outputs are **bit-identical** to per-model solo
+//! [`Session::infer`] runs, that priority/deadline admission produces
+//! typed errors, and that an unknown model is a routing error, not a
+//! crash.  Everything is fixed-seed; the assertions make this the CI
+//! smoke for the serving stack.
+//!
+//! ```sh
+//! cargo run --release --example multi_model_serve
+//! ```
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use prunemap::serve::{
+    wire, InferRequest, ModelRegistry, PreparedModel, Priority, ServeError, Server, Session,
+};
+
+fn mk_input(len: usize, tag: usize) -> Vec<f32> {
+    (0..len).map(|j| (((tag * 7 + j) % 23) as f32) * 0.1 - 1.0).collect()
+}
+
+fn main() -> prunemap::Result<()> {
+    // 1. compile each model once (fixed seeds -> deterministic weights)
+    //    and register both under routing names in one shared registry
+    let models: Vec<(&str, PreparedModel)> = vec![
+        (
+            "mobilenetv1",
+            PreparedModel::builder()
+                .model("mobilenetv1")
+                .dataset("cifar10")
+                .method("rule")
+                .seed(11)
+                .build()?,
+        ),
+        ("proxy", PreparedModel::builder().model("proxy").method("rule").seed(5).build()?),
+    ];
+    let registry = ModelRegistry::new();
+    for (name, prepared) in &models {
+        registry.insert(*name, prepared.clone());
+        println!(
+            "registered '{name}': {} ({}-mapped, seed {}, input {})",
+            prepared.name(),
+            prepared.method(),
+            prepared.seed(),
+            prepared.input_len()
+        );
+    }
+
+    // 2. ground truth: each request served alone by its own single-model
+    //    session (the PR-4 layer the front door must match bit for bit)
+    let nreq = 6usize;
+    let solo: Vec<Vec<Vec<f32>>> = models
+        .iter()
+        .map(|(_, prepared)| {
+            let session = Session::builder(prepared.clone()).build();
+            (0..nreq)
+                .map(|tag| session.infer(mk_input(prepared.input_len(), tag)).unwrap())
+                .collect()
+        })
+        .collect();
+
+    // 3. open the front door on an ephemeral TCP port
+    let server = Arc::new(Server::builder(registry.clone()).max_batch(16).build());
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let acceptor = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(2)))
+    };
+    println!("\nfront door listening on {addr} [{}]", registry.names().join(", "));
+
+    // 4. two remote clients, each pipelining interleaved requests to BOTH
+    //    models over one connection — the per-model batchers untangle them
+    let checks: Vec<std::thread::JoinHandle<std::io::Result<usize>>> = (0..2)
+        .map(|_| {
+            let models: Vec<(String, usize)> = models
+                .iter()
+                .map(|(name, p)| (name.to_string(), p.input_len()))
+                .collect();
+            let solo = solo.clone();
+            std::thread::spawn(move || -> std::io::Result<usize> {
+                let mut client = wire::Client::connect(addr)?;
+                let mut ids = Vec::new();
+                for tag in 0..nreq {
+                    for (m, (name, len)) in models.iter().enumerate() {
+                        let mut req = InferRequest::new(name.clone(), mk_input(*len, tag));
+                        if tag % 2 == 0 {
+                            req = req.priority(Priority::High);
+                        }
+                        ids.push((m, tag, client.send(&req)?));
+                    }
+                }
+                let mut matched = 0usize;
+                for (m, tag, id) in ids {
+                    let output = client.wait(id)?.expect("served output");
+                    assert_eq!(
+                        output, solo[m][tag],
+                        "wire output for model {m} tag {tag} must be bit-identical to solo"
+                    );
+                    matched += 1;
+                }
+                // typed admission errors over the same connection:
+                let ghost = client.infer(&InferRequest::new("ghost", vec![0.0; 4]))?;
+                assert!(
+                    matches!(ghost, Err(ServeError::UnknownModel(_))),
+                    "unknown model must be a typed routing error, got {ghost:?}"
+                );
+                let (name, len) = &models[0];
+                let late = InferRequest::new(name.clone(), mk_input(*len, 0));
+                let late = client.infer(&late.deadline(Duration::ZERO))?;
+                assert!(
+                    matches!(late, Err(ServeError::DeadlineExpired { .. })),
+                    "an already-expired deadline must be rejected, got {late:?}"
+                );
+                Ok(matched)
+            })
+        })
+        .collect();
+    let mut matched = 0usize;
+    for check in checks {
+        matched += check.join().expect("client thread")?;
+    }
+    acceptor.join().expect("acceptor thread")?;
+
+    // 5. the known-logit smoke CI greps: first logits of each model for
+    //    request 0, identical across solo, in-process, and wire serving
+    for (m, (name, _)) in models.iter().enumerate() {
+        println!("logit[0] of '{name}' request 0: {:.6}", solo[m][0][0]);
+    }
+    println!(
+        "\nOK: {matched} wire requests across {} models bit-identical to solo sessions",
+        models.len()
+    );
+    for (model, st) in server.stats() {
+        println!(
+            "  {model}: {} requests in {} runs (high/normal {}/{}, {} expired)",
+            st.requests, st.runs, st.served_by_priority[0], st.served_by_priority[1], st.expired
+        );
+    }
+    Ok(())
+}

@@ -16,8 +16,17 @@
 //! model) are AOT-lowered to HLO text and executed over PJRT when built
 //! with `--cfg pjrt` — Python is never on the request path.
 //!
+//! [`serve`] is the deployment surface on top: a multi-model [`Server`]
+//! front door (named-artifact registry, typed requests, priority lanes,
+//! deadline admission, a line-JSON wire protocol over TCP/stdio) layered
+//! over the compile-once/serve-many [`Session`] micro-batcher, with
+//! outputs bit-identical to solo runs.
+//!
 //! Start at [`mapping`] for the paper's headline contribution, or run
 //! `cargo run --release -- table4` to regenerate the paper's main table.
+//!
+//! [`Server`]: serve::Server
+//! [`Session`]: serve::Session
 
 pub mod accuracy;
 pub mod compiler;

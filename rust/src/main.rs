@@ -15,16 +15,25 @@
 //!         [--materialized] [--json-out F]
 //!                          native end-to-end inference through the graph
 //!                          executor: per-layer scheme + measured latency
-//!   serve --requests N [--clients N] [--max-batch N] [--max-wait-ms F]
-//!         [--workers N] [--save F | --load F]
-//!                          compile once, serve N concurrent requests
-//!                          through the micro-batching session API
+//!   serve [--models M1,M2 | --model M] [--listen ADDR|stdio] [--conns N]
+//!         [--requests N] [--clients N] [--deadline-ms F] [--max-batch N]
+//!         [--max-wait-ms F] [--workers N] [--save F | --load [name=]F]
+//!                          multi-model serving front door: compile each
+//!                          model once, route typed requests by name with
+//!                          priority lanes + deadline admission.  With
+//!                          --listen, speak the line-JSON wire protocol
+//!                          over TCP or stdio; otherwise run an in-process
+//!                          burst of --requests from --clients threads.
+//!                          Serve diagnostics go to stderr (stdout belongs
+//!                          to the wire in stdio mode).
 //!   e2e [--steps N]        live pipeline on the proxy CNN (needs artifacts)
 //! ```
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use prunemap::experiments as exp;
 use prunemap::latmodel::LatencyModel;
@@ -32,7 +41,10 @@ use prunemap::mapping::{self, MappingMethod};
 use prunemap::models::{zoo, Dataset, ModelSpec};
 #[cfg(pjrt)]
 use prunemap::runtime::Runtime;
-use prunemap::serve::{PreparedModel, Session, Ticket};
+use prunemap::serve::session::wait_bucket_labels;
+use prunemap::serve::{
+    wire, InferRequest, ModelRegistry, PreparedModel, Priority, ServeError, Server, Session, Ticket,
+};
 use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::util::cli::Args;
 
@@ -75,18 +87,23 @@ fn cmd_map(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build a [`PreparedModel`] from the shared CLI surface (`--model`,
-/// `--dataset`, `--device`, `--method`/`--iterations`/`--search-seed`,
+/// Build a [`PreparedModel`] for one zoo name from the shared CLI surface
+/// (`--dataset`, `--device`, `--method`/`--iterations`/`--search-seed`,
 /// `--seed`) — the one resolution path `infer` and `serve` share.
-fn prepared_from_args(args: &Args) -> Result<PreparedModel> {
+fn prepared_named(args: &Args, model: &str) -> Result<PreparedModel> {
     let method = MappingMethod::from_args(args, 30, args.get_u64("search-seed", 0xC0FFEE)?)?;
     PreparedModel::builder()
-        .model(args.get_or("model", "mobilenetv1"))
+        .model(model)
         .dataset(args.get_or("dataset", "cifar10"))
         .device(args.get_or("device", "s10"))
         .mapping(method)
         .seed(args.get_u64("seed", 7)?)
         .build()
+}
+
+/// `infer`'s single-model resolution: `--model` (default mobilenetv1).
+fn prepared_from_args(args: &Args) -> Result<PreparedModel> {
+    prepared_named(args, args.get_or("model", "mobilenetv1"))
 }
 
 /// Map a zoo model, seal it into a [`PreparedModel`], and run it end to
@@ -159,89 +176,210 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Compile once, then serve a burst of concurrent requests through the
-/// micro-batching [`Session`]: the serving-throughput counterpart of
-/// `infer`'s single diagnostic run.
+/// Build the serving registry from the CLI: either one `--load
+/// [name=]recipe.json` artifact (registered under `name`, defaulting to
+/// the lowercased spec name), or every `--models`/`--model` zoo name,
+/// each sealed with the shared dataset/device/method/seed surface.
+fn registry_from_args(args: &Args) -> Result<ModelRegistry> {
+    let registry = ModelRegistry::new();
+    if let Some(spec) = args.get("load") {
+        let (name, path) = match spec.split_once('=') {
+            Some((name, path)) => (Some(name.to_string()), path),
+            None => (None, spec),
+        };
+        let prepared = PreparedModel::load(path)?;
+        let name = name.unwrap_or_else(|| prepared.name().to_lowercase());
+        eprintln!("loaded prepared artifact from {path} as '{name}'");
+        registry.insert(name, prepared);
+    } else {
+        for name in args.models("mobilenetv1") {
+            let prepared =
+                prepared_named(args, &name).with_context(|| format!("prepare model '{name}'"))?;
+            registry.insert(name, prepared);
+        }
+    }
+    Ok(registry)
+}
+
+/// Multi-model serving front door: seal every requested model into the
+/// registry, open a [`Server`] routing typed requests across them, then
+/// either speak the wire protocol (`--listen ADDR|stdio`) or drive an
+/// in-process concurrent burst.  All diagnostics go to stderr — in stdio
+/// wire mode stdout carries reply frames and nothing else.
 fn cmd_serve(args: &Args) -> Result<()> {
     let threads = args.engine_threads()?;
-    let requests = args.get_usize("requests", 64)?.max(1);
-    let clients = args.get_usize("clients", 8)?.max(1);
-    let prepared = match args.get("load") {
-        Some(path) => {
-            let p = PreparedModel::load(path)?;
-            println!("loaded prepared artifact from {path}");
-            p
-        }
-        None => prepared_from_args(args)?,
-    };
+    let registry = registry_from_args(args)?;
     if let Some(path) = args.get("save") {
-        prepared.save(path)?;
-        println!("saved prepared artifact to {path}");
+        let names = registry.names();
+        let [name] = names.as_slice() else {
+            return Err(anyhow!(
+                "--save needs exactly one model to serialize, got {names:?}"
+            ));
+        };
+        registry.get(name).expect("registered above").save(path)?;
+        eprintln!("saved prepared artifact to {path}");
     }
-    let session = Session::builder(prepared.clone())
-        .threads(threads)
-        .tile_cols(args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?)
-        .fused(!args.materialized())
-        .max_batch(args.max_batch(32)?)
-        .max_wait(args.max_wait(2.0)?)
-        .workers(args.get_usize("workers", 1)?)
-        .build();
-    println!(
-        "{} ({}-mapped, seed {}) | {} engine threads | max batch {} | max wait {:?} | {} worker(s)",
-        prepared.name(),
-        prepared.method(),
-        prepared.seed(),
-        session.threads(),
-        session.max_batch(),
-        session.max_wait(),
-        session.workers()
+    let max_batch = args.max_batch(32)?;
+    let max_wait = args.max_wait(2.0)?;
+    let workers = args.get_usize("workers", 1)?;
+    let server = Arc::new(
+        Server::builder(registry.clone())
+            .threads(threads)
+            .tile_cols(args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?)
+            .fused(!args.materialized())
+            .max_batch(max_batch)
+            .max_wait(max_wait)
+            .workers(workers)
+            .build(),
+    );
+    eprintln!(
+        "front door: [{}] | {threads} engine threads | max batch {max_batch} | max wait {max_wait:?} | {workers} worker(s) per model",
+        registry.names().join(", ")
     );
 
-    let sample = prepared.input_len();
+    match args.listen() {
+        Some("stdio") => {
+            let stdin = std::io::stdin();
+            // Stdout (not StdoutLock) because the reply writer runs on its
+            // own thread; frames are flushed per line either way
+            let stats = wire::serve_connection(&server, stdin.lock(), std::io::stdout())?;
+            eprintln!(
+                "stdio connection closed: {} served, {} error frame(s)",
+                stats.served, stats.errors
+            );
+        }
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)
+                .with_context(|| format!("bind wire listener on {addr}"))?;
+            eprintln!("listening on {}", listener.local_addr()?);
+            let conns = args.get_usize("conns", 0)?;
+            wire::serve_tcp(&server, listener, (conns > 0).then_some(conns))?;
+        }
+        None => serve_burst(args, &server)?,
+    }
+    for (model, st) in server.stats() {
+        print_session_stats(&model, &st);
+    }
+    Ok(())
+}
+
+/// The in-process load generator behind plain `prunemap serve`:
+/// `--clients` threads pipeline `--requests` typed submissions round-robin
+/// across the registered models (every fourth request rides the high lane;
+/// `--deadline-ms` arms deadline admission).  Ticket failures are
+/// propagated as errors naming the request index — except deadline
+/// rejections, which the burst counts as the admission working as
+/// configured.
+fn serve_burst(args: &Args, server: &Server) -> Result<()> {
+    let requests = args.get_usize("requests", 64)?.max(1);
+    let clients = args.get_usize("clients", 8)?.max(1);
+    let deadline = args.deadline_ms()?;
+    let models: Vec<(String, usize)> = server
+        .registry()
+        .names()
+        .into_iter()
+        .map(|name| {
+            let len = server.registry().get(&name).expect("registered").input_len();
+            (name, len)
+        })
+        .collect();
     let per_client = requests.div_ceil(clients);
     let total = per_client * clients;
+    let expired = AtomicUsize::new(0);
     let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for client in 0..clients {
-            let session = &session;
-            scope.spawn(move || {
-                // each client keeps a small submission pipeline open so
-                // concurrent requests exist for the batcher to coalesce
-                let mut pending: Vec<Ticket> = Vec::new();
-                for r in 0..per_client {
-                    let tag = client * per_client + r;
-                    let input: Vec<f32> = (0..sample)
-                        .map(|j| (((tag + j) % 17) as f32) * 0.25 - 2.0)
-                        .collect();
-                    pending.push(session.submit(input).expect("submit"));
-                    if pending.len() >= 4 {
-                        pending.remove(0).wait().expect("serve request");
+    std::thread::scope(|scope| -> Result<()> {
+        let handles: Vec<_> = (0..clients)
+            .map(|client| {
+                let (server, models, expired) = (&server, &models, &expired);
+                scope.spawn(move || -> Result<()> {
+                    let finish = |(tag, ticket): (usize, Ticket)| -> Result<()> {
+                        match ticket.wait() {
+                            Ok(_) => Ok(()),
+                            Err(ServeError::DeadlineExpired { .. }) => {
+                                expired.fetch_add(1, Ordering::Relaxed);
+                                Ok(())
+                            }
+                            Err(e) => {
+                                Err(anyhow!(e).context(format!("serve request {tag} failed")))
+                            }
+                        }
+                    };
+                    // each client keeps a small submission pipeline open
+                    // so concurrent requests exist for the per-model
+                    // batchers to coalesce
+                    let mut pending: Vec<(usize, Ticket)> = Vec::new();
+                    for r in 0..per_client {
+                        let tag = client * per_client + r;
+                        let (model, sample) = &models[tag % models.len()];
+                        let input: Vec<f32> = (0..*sample)
+                            .map(|j| (((tag + j) % 17) as f32) * 0.25 - 2.0)
+                            .collect();
+                        let mut req = InferRequest::new(model.clone(), input);
+                        if tag % 4 == 0 {
+                            req = req.priority(Priority::High);
+                        }
+                        if let Some(d) = deadline {
+                            req = req.deadline(d);
+                        }
+                        let ticket = server
+                            .submit(req)
+                            .map_err(|e| anyhow!(e).context(format!("submit request {tag}")))?;
+                        pending.push((tag, ticket));
+                        if pending.len() >= 4 {
+                            finish(pending.remove(0))?;
+                        }
                     }
-                }
-                for t in pending {
-                    t.wait().expect("serve request");
-                }
-            });
+                    pending.into_iter().try_for_each(finish)
+                })
+            })
+            .collect();
+        for handle in handles {
+            handle.join().map_err(|_| anyhow!("serve client panicked"))??;
         }
-    });
+        Ok(())
+    })?;
     let elapsed = t0.elapsed();
-    let st = session.stats();
-    println!(
-        "\nserved {total} requests from {clients} client(s) in {:.1}ms -> {:.0} req/s",
+    let expired = expired.load(Ordering::Relaxed);
+    eprintln!(
+        "\nserved {} of {total} requests from {clients} client(s) across {} model(s) in {:.1}ms -> {:.0} req/s ({expired} deadline-expired)",
+        total - expired,
+        models.len(),
         elapsed.as_secs_f64() * 1e3,
         total as f64 / elapsed.as_secs_f64().max(1e-9)
     );
-    println!(
-        "{} runs | max coalesced {} | {:.2} requests/run | {} padded lanes",
+    Ok(())
+}
+
+/// Print one model's admission counters (the `Server::stats` snapshot):
+/// throughput shape, queue pressure, and wait-time distribution.
+fn print_session_stats(model: &str, st: &prunemap::serve::SessionStats) {
+    eprintln!(
+        "model {model}: {} request(s) in {} run(s) | max coalesced {} | {:.2} requests/run | {} padded lanes | queue depth hwm {} | high/normal {}/{} | {} expired",
+        st.requests,
         st.runs,
         st.max_coalesced,
         st.requests as f64 / st.runs.max(1) as f64,
-        st.padded_lanes
+        st.padded_lanes,
+        st.queue_depth_hwm,
+        st.served_by_priority[0],
+        st.served_by_priority[1],
+        st.expired
     );
     for (batch, runs) in &st.batch_runs {
-        println!("  batch {batch:>4}: {runs} run(s)");
+        eprintln!("  executed batch {batch:>4}: {runs} run(s)");
     }
-    Ok(())
+    for (occupancy, runs) in &st.batch_occupancy {
+        eprintln!("  occupancy {occupancy:>4}: {runs} run(s)");
+    }
+    let waits: Vec<String> = wait_bucket_labels()
+        .iter()
+        .zip(st.wait_buckets.iter())
+        .filter(|(_, &n)| n > 0)
+        .map(|(label, n)| format!("{label}={n}"))
+        .collect();
+    if !waits.is_empty() {
+        eprintln!("  wait: {}", waits.join(" "));
+    }
 }
 
 #[cfg(pjrt)]
@@ -336,7 +474,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|serve|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--max-batch N] [--max-wait-ms F]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|serve|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--deadline-ms F]"
             );
         }
     }

@@ -1,13 +1,22 @@
 //! Compile-once / serve-many inference: the crate's front-door API.
 //!
-//! The lower layers expose the pipeline as loose stages — run a mapping
-//! method, [`NetWeights::synthesize`](crate::runtime::NetWeights::synthesize),
-//! [`CompiledNet::compile`](crate::runtime::CompiledNet::compile), then
-//! drive a [`GraphExecutor`](crate::runtime::GraphExecutor) with a
-//! caller-chosen batch.  That is the right surface for benchmarks and
-//! parity tests, but a serving process wants one object that owns the
-//! compiled artifact and one that owns admission.  This module provides
-//! both:
+//! The serving stack is three layers, each public, each the documented
+//! floor for the one above:
+//!
+//! ```text
+//! Server            multi-model front door: ModelRegistry routing,
+//!   |               typed InferRequest envelopes, priority lanes,
+//!   |               deadline admission, per-model stats; spoken over
+//!   |               the line-JSON wire protocol (serve::wire) by
+//!   |               `prunemap serve --listen` (TCP or stdio)
+//!   v
+//! Session           one model's admission loop: persistent engine
+//!   |               pool, per-worker arena, dynamic micro-batcher
+//!   |               coalescing submits into lane-aligned batches
+//!   v
+//! GraphExecutor     the low-level executor: explicit batches,
+//!                   per-step timings, arena control
+//! ```
 //!
 //! * [`PreparedModel`] — `(ModelSpec, assignments, NetWeights,
 //!   CompiledNet)` sealed into a single immutable artifact behind an
@@ -33,15 +42,187 @@
 //!   fixed non-zero order and all other kernels are elementwise, a
 //!   request's output is **bit-identical** whether it ran alone or rode a
 //!   coalesced batch — the executor's determinism guarantee lifted to the
-//!   serving layer (locked by `tests/serve_api.rs`).
+//!   serving layer (locked by `tests/serve_api.rs`).  Requests carry a
+//!   [`Priority`] lane and an optional deadline
+//!   ([`Session::submit_with`]): the batcher drains the high lane before
+//!   the normal lane, and a request whose deadline has passed when its
+//!   batch is assembled is rejected with
+//!   [`ServeError::DeadlineExpired`] instead of silently served late.
+//! * [`ModelRegistry`] + [`Server`] — the process-level front door.  The
+//!   registry holds many named `PreparedModel` artifacts
+//!   (insert / load-recipe / evict; `Clone` shares the same store); the
+//!   server routes a typed [`InferRequest`]` { model, input, priority,
+//!   deadline }` to that model's session (created lazily, one micro-batcher
+//!   per model) and surfaces every admission failure as a typed
+//!   [`ServeError`].  [`Server::stats`] exposes each model's
+//!   [`SessionStats`].
+//! * [`wire`] — the line-delimited JSON protocol over the `Server`:
+//!   request / response / error frames tagged with caller-chosen ids,
+//!   served over TCP or stdio by `prunemap serve --listen`, plus the
+//!   [`wire::Client`] helper the examples and benches drive it with.
 //!
 //! [`GraphExecutor`](crate::runtime::GraphExecutor) remains public as the
 //! low-level layer underneath: reach for it when you need explicit
-//! batches, per-step timings, or arena control; reach for this module when
-//! you need a front door.
+//! batches, per-step timings, or arena control; reach for [`Session`]
+//! when you serve one model in-process; reach for [`Server`] when one
+//! process serves several models or remote clients.
+
+use std::fmt;
+use std::time::Duration;
 
 pub mod prepared;
+pub mod registry;
+pub mod server;
 pub mod session;
+pub mod wire;
 
 pub use prepared::{PreparedModel, PreparedModelBuilder};
-pub use session::{Session, SessionBuilder, SessionStats, Ticket};
+pub use registry::ModelRegistry;
+pub use server::{InferRequest, Server, ServerBuilder};
+pub use session::{
+    wait_bucket_labels, Outcome, Session, SessionBuilder, SessionStats, Ticket,
+    WAIT_BUCKET_BOUNDS_US,
+};
+
+/// Admission lane for a request.  The micro-batcher always drains the
+/// [`Priority::High`] lane before the [`Priority::Normal`] lane when it
+/// assembles a batch, so under saturation high-priority requests ride the
+/// earlier runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Best-effort lane (the default).
+    #[default]
+    Normal,
+    /// Drained first by every batch assembly.
+    High,
+}
+
+impl Priority {
+    /// Stable wire / display name (`"normal"` | `"high"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a wire name; `None` for anything but `"normal"` / `"high"`.
+    pub fn by_name(name: &str) -> Option<Priority> {
+        match name {
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    /// Queue-lane index: high = 0 (drained first), normal = 1.
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+        }
+    }
+}
+
+/// Why the serving layer refused or failed a request — every admission
+/// outcome a caller can observe, as a typed error instead of a panic or a
+/// stringly anyhow chain.  [`ServeError::kind`] is the stable tag the
+/// [`wire`] protocol carries in error frames.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request named a model the registry does not hold.
+    UnknownModel(String),
+    /// The input payload length does not match the model's sample length.
+    BadInput { expected: usize, got: usize },
+    /// The request's deadline had already passed when its batch was
+    /// assembled (or when it was submitted); it was never executed.
+    DeadlineExpired { missed_by: Duration },
+    /// The session/server shut down before the request was served.
+    Closed,
+    /// The executor failed the batch this request rode.
+    Execution(String),
+    /// A wire frame could not be decoded.
+    Malformed(String),
+}
+
+impl ServeError {
+    /// Stable machine-readable tag, used as the `kind` field of wire
+    /// error frames.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::UnknownModel(_) => "unknown_model",
+            ServeError::BadInput { .. } => "bad_input",
+            ServeError::DeadlineExpired { .. } => "deadline_expired",
+            ServeError::Closed => "closed",
+            ServeError::Execution(_) => "execution",
+            ServeError::Malformed(_) => "malformed",
+        }
+    }
+
+    /// Rebuild from a wire `(kind, message)` pair.  Structured fields
+    /// (expected/got lengths, missed-by duration) do not survive the trip
+    /// — the message keeps them human-readable — so unknown or structured
+    /// kinds map to the closest variant.
+    pub fn from_wire(kind: &str, message: &str) -> ServeError {
+        match kind {
+            "unknown_model" => ServeError::UnknownModel(message.to_string()),
+            "bad_input" => ServeError::BadInput { expected: 0, got: 0 },
+            "deadline_expired" => ServeError::DeadlineExpired { missed_by: Duration::ZERO },
+            "closed" => ServeError::Closed,
+            "malformed" => ServeError::Malformed(message.to_string()),
+            _ => ServeError::Execution(message.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            ServeError::BadInput { expected, got } => {
+                write!(f, "input must be {expected} elements, got {got}")
+            }
+            ServeError::DeadlineExpired { missed_by } => {
+                write!(f, "deadline expired {missed_by:?} before the batch was assembled")
+            }
+            ServeError::Closed => write!(f, "session shut down before the request was served"),
+            ServeError::Execution(msg) => write!(f, "execution failed: {msg}"),
+            ServeError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_names_roundtrip() {
+        for p in [Priority::Normal, Priority::High] {
+            assert_eq!(Priority::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Priority::by_name("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert!(Priority::High.lane() < Priority::Normal.lane());
+    }
+
+    #[test]
+    fn serve_error_kinds_roundtrip() {
+        let cases = [
+            ServeError::UnknownModel("m".into()),
+            ServeError::BadInput { expected: 4, got: 2 },
+            ServeError::DeadlineExpired { missed_by: Duration::from_millis(3) },
+            ServeError::Closed,
+            ServeError::Execution("boom".into()),
+            ServeError::Malformed("not json".into()),
+        ];
+        for e in &cases {
+            let back = ServeError::from_wire(e.kind(), &e.to_string());
+            assert_eq!(back.kind(), e.kind(), "{e}");
+        }
+        // unknown kinds degrade to Execution, not a panic
+        assert_eq!(ServeError::from_wire("??", "m").kind(), "execution");
+    }
+}

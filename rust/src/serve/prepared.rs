@@ -137,6 +137,14 @@ impl PreparedModel {
         Session::builder(self.clone())
     }
 
+    /// Whether `self` and `other` are the same sealed artifact (the same
+    /// `Arc`), not merely equal recipes — how the
+    /// [`Server`](super::Server) detects that a registry name was rebound
+    /// to a new artifact.
+    pub fn same_artifact(&self, other: &PreparedModel) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
     /// The artifact recipe as a JSON value (see [`PreparedModel::save`]).
     pub fn to_json(&self) -> Value {
         let assigns = self

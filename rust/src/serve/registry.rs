@@ -1,0 +1,144 @@
+//! [`ModelRegistry`]: the named store of sealed [`PreparedModel`]
+//! artifacts a [`Server`](super::Server) routes requests across.
+//!
+//! The registry is deliberately dumb: a concurrent name -> artifact map.
+//! Artifacts are `Arc`-shared ([`PreparedModel`] clones are refcount
+//! bumps), so handing one to a session, a bench, and the registry costs
+//! nothing, and evicting a name never invalidates in-flight requests — a
+//! session serving the artifact keeps its own reference until it drops.
+//! `Clone` on the registry itself shares the *store* (the server and the
+//! CLI see the same models), not a snapshot.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use super::PreparedModel;
+
+/// A shared, concurrent map of model name -> sealed artifact.  See the
+/// [module docs](self).
+#[derive(Clone, Default)]
+pub struct ModelRegistry {
+    models: Arc<RwLock<BTreeMap<String, PreparedModel>>>,
+}
+
+impl ModelRegistry {
+    /// An empty registry.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register `prepared` under `name`, replacing any previous artifact
+    /// with that name (returned, so callers can tell an insert from an
+    /// update).  The serving name is the caller's routing key and need not
+    /// match the zoo spec name — one process can hold `"resnet50-eu"` and
+    /// `"resnet50-us"` variants of the same spec.
+    pub fn insert(
+        &self,
+        name: impl Into<String>,
+        prepared: PreparedModel,
+    ) -> Option<PreparedModel> {
+        self.models.write().unwrap().insert(name.into(), prepared)
+    }
+
+    /// [`PreparedModel::load`] a saved recipe and register it under
+    /// `name`: weights re-synthesize deterministically from the recipe
+    /// seed, so a mapping computed once (e.g. by the RL search) is
+    /// registered and served without re-running search.
+    pub fn load_recipe(&self, name: impl Into<String>, path: impl AsRef<Path>) -> Result<()> {
+        let prepared = PreparedModel::load(path)?;
+        self.insert(name, prepared);
+        Ok(())
+    }
+
+    /// Remove `name` from the registry; returns the artifact if it was
+    /// held.  In-flight requests already routed keep serving — eviction
+    /// only stops *new* routing.
+    pub fn evict(&self, name: &str) -> Option<PreparedModel> {
+        self.models.write().unwrap().remove(name)
+    }
+
+    /// The artifact registered under `name` (a cheap `Arc` clone).
+    pub fn get(&self, name: &str) -> Option<PreparedModel> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Whether `name` is registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.models.read().unwrap().contains_key(name)
+    }
+
+    /// Registered names, sorted (the map is ordered).
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    /// Whether the registry holds no models.
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::Assignment;
+
+    fn proxy(seed: u64) -> PreparedModel {
+        PreparedModel::builder()
+            .model("proxy")
+            .assignments(
+                crate::models::zoo::proxy_cnn()
+                    .layers
+                    .iter()
+                    .map(|_| Assignment::dense())
+                    .collect(),
+            )
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn insert_get_evict_share_one_store() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert!(reg.insert("a", proxy(1)).is_none());
+        let alias = reg.clone();
+        alias.insert("b", proxy(2));
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.contains("b"));
+        // get is the same sealed artifact, not a copy
+        let got = reg.get("a").unwrap();
+        assert!(std::ptr::eq(got.net(), reg.get("a").unwrap().net()));
+        // replacing returns the old artifact; evicting removes it
+        assert!(reg.insert("a", proxy(3)).is_some());
+        assert_eq!(reg.get("a").unwrap().seed(), 3);
+        assert!(reg.evict("a").is_some());
+        assert!(reg.evict("a").is_none());
+        assert!(!alias.contains("a"));
+    }
+
+    #[test]
+    fn load_recipe_registers_a_saved_artifact() {
+        let reg = ModelRegistry::new();
+        let path = std::env::temp_dir().join(format!(
+            "prunemap_registry_recipe_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        proxy(9).save(&path).unwrap();
+        reg.load_recipe("served", &path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(reg.get("served").unwrap().seed(), 9);
+        assert!(reg.load_recipe("nope", "/no/such/recipe.json").is_err());
+    }
+}

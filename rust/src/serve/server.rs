@@ -1,0 +1,348 @@
+//! [`Server`]: the multi-model serving front door.
+//!
+//! One process, many models: the server routes a typed [`InferRequest`]
+//! to the [`Session`] of the model it names, creating that session
+//! lazily (one micro-batcher per model, all sharing the server's session
+//! knobs) from the [`ModelRegistry`].  Admission failures — unknown
+//! model, wrong payload length, expired deadline, executor fault — all
+//! surface as typed [`ServeError`]s, so callers (and the
+//! [`wire`](super::wire) protocol) can tell a routing mistake from a
+//! missed deadline without parsing strings.
+//!
+//! The per-model micro-batchers keep the session layer's guarantee: a
+//! request's output is bit-identical whether it ran alone in a dedicated
+//! process or rode a coalesced batch behind the front door
+//! (`tests/front_door.rs` locks this across two models and interleaved
+//! clients).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use crate::sparse::DEFAULT_TILE_COLS;
+
+use super::session::SessionStats;
+use super::{ModelRegistry, Priority, ServeError, Session, Ticket};
+
+/// The typed request envelope the front door accepts: which model, one
+/// input sample, and the admission metadata the batcher honors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    /// Registry name of the model to route to.
+    pub model: String,
+    /// One NCHW-flattened `[C*H*W]` sample.
+    pub input: Vec<f32>,
+    /// Admission lane; [`Priority::High`] drains first under saturation.
+    pub priority: Priority,
+    /// Latest acceptable service start, relative to submission.  A
+    /// request still queued past this budget is rejected with
+    /// [`ServeError::DeadlineExpired`], never silently served late.
+    pub deadline: Option<Duration>,
+}
+
+impl InferRequest {
+    /// A normal-priority request with no deadline.
+    pub fn new(model: impl Into<String>, input: Vec<f32>) -> InferRequest {
+        InferRequest { model: model.into(), input, priority: Priority::Normal, deadline: None }
+    }
+
+    /// Set the admission lane.
+    pub fn priority(mut self, priority: Priority) -> InferRequest {
+        self.priority = priority;
+        self
+    }
+
+    /// Shorthand for the high-priority lane.
+    pub fn high(self) -> InferRequest {
+        self.priority(Priority::High)
+    }
+
+    /// Set the service deadline (relative to submission).
+    pub fn deadline(mut self, deadline: Duration) -> InferRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Session knobs every per-model session shares; see the
+/// [`SessionBuilder`](super::SessionBuilder) setters with the same names.
+struct SessionKnobs {
+    threads: usize,
+    tile_cols: usize,
+    fused: bool,
+    max_batch: usize,
+    max_wait: Duration,
+    workers: usize,
+}
+
+/// Configuration for a [`Server`]; build with [`Server::builder`].
+pub struct ServerBuilder {
+    registry: ModelRegistry,
+    knobs: SessionKnobs,
+}
+
+impl ServerBuilder {
+    fn new(registry: ModelRegistry) -> ServerBuilder {
+        ServerBuilder {
+            registry,
+            knobs: SessionKnobs {
+                threads: rayon::current_num_threads(),
+                tile_cols: DEFAULT_TILE_COLS,
+                fused: true,
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+                workers: 1,
+            },
+        }
+    }
+
+    /// Engine worker threads per executor run, for every model's session.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.knobs.threads = threads.max(1);
+        self
+    }
+
+    /// Fused-im2col tile width (GEMM columns per panel).
+    pub fn tile_cols(mut self, tile: usize) -> Self {
+        self.knobs.tile_cols = tile.max(1);
+        self
+    }
+
+    /// `false` routes convs through the materialized-X im2col baseline.
+    pub fn fused(mut self, fused: bool) -> Self {
+        self.knobs.fused = fused;
+        self
+    }
+
+    /// Per-model coalescing cap (rounded up to a lane multiple).
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.knobs.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// Per-model micro-batcher admission window.
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.knobs.max_wait = max_wait;
+        self
+    }
+
+    /// Batcher workers per model.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.knobs.workers = workers.max(1);
+        self
+    }
+
+    /// Open the front door.  Sessions spin up lazily on each model's
+    /// first request; nothing is compiled here.
+    pub fn build(self) -> Server {
+        Server {
+            registry: self.registry,
+            knobs: self.knobs,
+            sessions: RwLock::new(BTreeMap::new()),
+        }
+    }
+}
+
+/// The process-level serving front door; see the [module docs](self).
+pub struct Server {
+    registry: ModelRegistry,
+    knobs: SessionKnobs,
+    sessions: RwLock<BTreeMap<String, Arc<Session>>>,
+}
+
+impl Server {
+    /// Start configuring a server over `registry` (the registry is
+    /// `Clone`-shared: models inserted after the server is built are
+    /// routable immediately).
+    pub fn builder(registry: ModelRegistry) -> ServerBuilder {
+        ServerBuilder::new(registry)
+    }
+
+    /// A server over `registry` with default session knobs.
+    pub fn new(registry: ModelRegistry) -> Server {
+        Server::builder(registry).build()
+    }
+
+    /// The shared registry this server routes across.
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    /// The live session for `name`, creating it from the registry
+    /// artifact on first use.  If the registry artifact was replaced
+    /// since the session was built (`ModelRegistry::insert` over an
+    /// existing name), the session is rebuilt around the new artifact —
+    /// requests already queued on the old session still drain against
+    /// the artifact they were admitted to.
+    pub fn session(&self, name: &str) -> Result<Arc<Session>, ServeError> {
+        {
+            let artifact = self
+                .registry
+                .get(name)
+                .ok_or_else(|| ServeError::UnknownModel(name.to_string()))?;
+            if let Some(session) = self.sessions.read().unwrap().get(name) {
+                if session.prepared().same_artifact(&artifact) {
+                    return Ok(Arc::clone(session));
+                }
+            }
+        }
+        let mut sessions = self.sessions.write().unwrap();
+        // re-resolve the artifact under the write lock — the registry may
+        // have been rebound or evicted since the fast path looked, and a
+        // stale snapshot here would let a lagging thread overwrite a
+        // newer session with one built from the old artifact
+        let artifact = self
+            .registry
+            .get(name)
+            .ok_or_else(|| ServeError::UnknownModel(name.to_string()))?;
+        if let Some(session) = sessions.get(name) {
+            if session.prepared().same_artifact(&artifact) {
+                return Ok(Arc::clone(session));
+            }
+        }
+        let session = Arc::new(
+            Session::builder(artifact)
+                .threads(self.knobs.threads)
+                .tile_cols(self.knobs.tile_cols)
+                .fused(self.knobs.fused)
+                .max_batch(self.knobs.max_batch)
+                .max_wait(self.knobs.max_wait)
+                .workers(self.knobs.workers)
+                .build(),
+        );
+        let replaced = sessions.insert(name.to_string(), Arc::clone(&session));
+        // release the map lock before the replaced session can drop —
+        // Session::drop drains its queue and joins workers, and doing
+        // that under the write lock would stall routing for every model
+        drop(sessions);
+        drop(replaced);
+        Ok(session)
+    }
+
+    /// Route `req` to its model's session and enqueue it; the [`Ticket`]
+    /// resolves to the output or a typed admission/execution error.
+    pub fn submit(&self, req: InferRequest) -> Result<Ticket, ServeError> {
+        let session = self.session(&req.model)?;
+        session.submit_with(req.input, req.priority, req.deadline)
+    }
+
+    /// Blocking convenience: [`Server::submit`] + [`Ticket::wait`].
+    pub fn infer(&self, req: InferRequest) -> Result<Vec<f32>, ServeError> {
+        self.submit(req)?.wait()
+    }
+
+    /// Drop `name` everywhere: the registry entry and the live session
+    /// (whose queued requests drain before its workers exit).  Returns
+    /// whether anything was removed.  The registry entry goes first so a
+    /// concurrent submit cannot re-resolve the name and resurrect a
+    /// session in the gap.
+    pub fn evict(&self, name: &str) -> bool {
+        let had_model = self.registry.evict(name).is_some();
+        // bind the removed session so it outlives (and thus drops after)
+        // the statement's write guard: its drop drains the queue and
+        // joins workers, which must not happen under the map lock
+        let removed = self.sessions.write().unwrap().remove(name);
+        had_model || removed.is_some()
+    }
+
+    /// Admission counters per model, for every session spun up so far
+    /// (a registered model nobody has routed to yet has no stats).
+    pub fn stats(&self) -> BTreeMap<String, SessionStats> {
+        self.sessions
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, session)| (name.clone(), session.stats()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::Assignment;
+    use crate::serve::PreparedModel;
+
+    fn proxy(seed: u64) -> PreparedModel {
+        PreparedModel::builder()
+            .model("proxy")
+            .assignments(
+                crate::models::zoo::proxy_cnn()
+                    .layers
+                    .iter()
+                    .map(|_| Assignment::dense())
+                    .collect(),
+            )
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    fn server_with(models: &[(&str, u64)]) -> Server {
+        let registry = ModelRegistry::new();
+        for &(name, seed) in models {
+            registry.insert(name, proxy(seed));
+        }
+        Server::builder(registry).threads(1).build()
+    }
+
+    #[test]
+    fn unknown_model_is_a_typed_error() {
+        let server = server_with(&[("a", 1)]);
+        match server.infer(InferRequest::new("b", vec![0.0; 3072])) {
+            Err(ServeError::UnknownModel(name)) => assert_eq!(name, "b"),
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        assert!(server.stats().is_empty(), "no session for a failed route");
+    }
+
+    #[test]
+    fn routes_by_name_and_reports_stats_per_model() {
+        let server = server_with(&[("a", 1), ("b", 2)]);
+        let input = vec![0.25; 3072];
+        let ya = server.infer(InferRequest::new("a", input.clone())).unwrap();
+        let yb = server.infer(InferRequest::new("b", input.clone())).unwrap();
+        // different seeds -> different weights -> different logits
+        assert_ne!(ya, yb);
+        let yb2 = server.infer(InferRequest::new("b", input)).unwrap();
+        assert_eq!(yb, yb2, "same model + input must be deterministic");
+        let stats = server.stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats["a"].requests, 1);
+        assert_eq!(stats["b"].requests, 2);
+    }
+
+    #[test]
+    fn replacing_a_registry_artifact_rebuilds_the_session() {
+        let server = server_with(&[("m", 1)]);
+        let input = vec![0.5; 3072];
+        let y1 = server.infer(InferRequest::new("m", input.clone())).unwrap();
+        server.registry().insert("m", proxy(2));
+        let y2 = server.infer(InferRequest::new("m", input)).unwrap();
+        assert_ne!(y1, y2, "new artifact must actually serve");
+        assert_eq!(server.stats()["m"].requests, 1, "fresh session, fresh stats");
+    }
+
+    #[test]
+    fn evict_stops_routing() {
+        let server = server_with(&[("m", 1)]);
+        server.infer(InferRequest::new("m", vec![0.1; 3072])).unwrap();
+        assert!(server.evict("m"));
+        assert!(!server.evict("m"));
+        assert!(matches!(
+            server.infer(InferRequest::new("m", vec![0.1; 3072])),
+            Err(ServeError::UnknownModel(_))
+        ));
+    }
+
+    #[test]
+    fn bad_input_and_deadline_flow_through_the_envelope() {
+        let server = server_with(&[("m", 1)]);
+        assert!(matches!(
+            server.infer(InferRequest::new("m", vec![0.1; 5])),
+            Err(ServeError::BadInput { expected: 3072, got: 5 })
+        ));
+        let req = InferRequest::new("m", vec![0.1; 3072]).high().deadline(Duration::ZERO);
+        assert!(matches!(server.infer(req), Err(ServeError::DeadlineExpired { .. })));
+    }
+}

@@ -1,7 +1,7 @@
 //! [`Session`]: request admission + dynamic micro-batching over a
 //! [`PreparedModel`].
 //!
-//! A session owns everything mutable about serving: the
+//! A session owns everything mutable about serving one model: the
 //! [`GraphExecutor`]s (whose engines share one persistent rayon pool), a
 //! per-worker [`Arena`] that makes steady-state runs allocation-free, and
 //! the request queue.  Callers [`Session::submit`] one sample at a time
@@ -13,6 +13,14 @@
 //! output back through its ticket.  Per-request outputs are bit-identical
 //! to a solo run — the engine accumulates every output element in the
 //! same order at any batch width, and padding lanes are never read back.
+//!
+//! Admission is priority- and deadline-aware ([`Session::submit_with`]):
+//! the queue is two lanes, and every batch assembly drains the
+//! [`Priority::High`] lane before the [`Priority::Normal`] lane, so under
+//! saturation high-priority requests ride the earlier runs.  A request
+//! whose deadline has passed when its batch is assembled is rejected with
+//! [`ServeError::DeadlineExpired`] instead of silently served late; it
+//! never occupies a batch slot.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -20,27 +28,69 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
-
 use crate::runtime::graph::StepTiming;
 use crate::runtime::{Arena, GraphExecutor};
 use crate::sparse::{align_to_lane, DEFAULT_TILE_COLS};
 
-use super::PreparedModel;
+use super::{PreparedModel, Priority, ServeError};
 
-/// What a batcher worker sends back per request (errors as strings so one
-/// failed run can fan out to every rider of the batch).
-type Served = std::result::Result<Vec<f32>, String>;
+/// What a batcher worker sends back per request (typed errors so one
+/// failed run can fan out to every rider of the batch, and admission
+/// rejections stay distinguishable from executor faults).
+type Served = std::result::Result<Outcome, ServeError>;
 
-/// A pending request: one sample plus its reply channel.
+/// One served request's output plus its admission trace — what
+/// [`Ticket::wait_detail`] returns when the caller wants to observe *how*
+/// a request was served, not just its logits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Outcome {
+    /// The request's `[out_features]` output.
+    pub output: Vec<f32>,
+    /// 1-based sequence number of the executor run that served it
+    /// (assigned under the stats lock, so with one batcher worker it is
+    /// exactly the execution order).
+    pub run: u64,
+    /// Real requests coalesced into that run.
+    pub coalesced: usize,
+    /// Queue wait from submit to batch assembly (what the wait-time
+    /// buckets aggregate).
+    pub waited: Duration,
+}
+
+/// A pending request: one sample, its reply channel, and its admission
+/// metadata.
 struct Request {
     input: Vec<f32>,
     tx: mpsc::Sender<Served>,
+    priority: Priority,
+    deadline: Option<Instant>,
+    submitted: Instant,
 }
 
-/// Admission counters, observable via [`Session::stats`].  The batch
-/// histogram keys are *executed* batch widths (real requests + padding
-/// lanes), so lane alignment and the max-batch cap are directly testable.
+/// Upper bounds (exclusive, µs) of the first [`SessionStats::wait_buckets`]
+/// entries; the last bucket is the overflow.
+pub const WAIT_BUCKET_BOUNDS_US: [u64; 4] = [100, 1_000, 10_000, 100_000];
+
+/// Human labels for the wait-time buckets, index-aligned with
+/// [`SessionStats::wait_buckets`].
+pub fn wait_bucket_labels() -> [&'static str; 5] {
+    ["<100µs", "<1ms", "<10ms", "<100ms", "≥100ms"]
+}
+
+fn wait_bucket(wait: Duration) -> usize {
+    let us = wait.as_micros().min(u128::from(u64::MAX)) as u64;
+    WAIT_BUCKET_BOUNDS_US
+        .iter()
+        .position(|&bound| us < bound)
+        .unwrap_or(WAIT_BUCKET_BOUNDS_US.len())
+}
+
+/// Admission counters, observable via [`Session::stats`] (and per model
+/// via [`Server::stats`](super::Server::stats)).  The batch-runs histogram
+/// keys are *executed* batch widths (real requests + padding lanes), so
+/// lane alignment and the max-batch cap are directly testable; the
+/// occupancy histogram keys are *real* requests per run, so coalescing
+/// quality is too.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SessionStats {
     /// Requests served (not counting padding lanes).
@@ -53,10 +103,67 @@ pub struct SessionStats {
     pub max_coalesced: usize,
     /// Executed batch width -> number of runs at that width.
     pub batch_runs: BTreeMap<usize, usize>,
+    /// Real requests per run -> number of runs at that occupancy.
+    pub batch_occupancy: BTreeMap<usize, usize>,
+    /// Most requests ever queued at once (sampled at submit time).
+    pub queue_depth_hwm: usize,
+    /// Served requests by queue wait (submit -> batch assembly), bucketed
+    /// by [`WAIT_BUCKET_BOUNDS_US`] with a final overflow bucket.
+    pub wait_buckets: [usize; 5],
+    /// Served requests per priority lane, indexed by `Priority::lane()`
+    /// (0 = high, 1 = normal).
+    pub served_by_priority: [usize; 2],
+    /// Requests rejected because their deadline passed before assembly.
+    pub expired: usize,
+}
+
+/// The two admission lanes; index by [`Priority::lane`] (high first).
+struct Queues {
+    lanes: [VecDeque<Request>; 2],
+}
+
+impl Queues {
+    fn len(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.lanes.iter().all(VecDeque::is_empty)
+    }
+
+    /// The earliest deadline among queued requests, if any carries one —
+    /// what caps the batcher's hold-open window so coalescing never turns
+    /// a servable request into a deadline rejection.
+    fn earliest_deadline(&self) -> Option<Instant> {
+        self.lanes.iter().flatten().filter_map(|r| r.deadline).min()
+    }
+}
+
+/// Pull up to `max_batch` live requests out of the lanes — high lane
+/// first, FIFO within a lane — dropping every already-expired request
+/// encountered on the way (returned with how late it was, so the caller
+/// can reject it without it ever occupying a batch slot).
+fn assemble(
+    lanes: &mut Queues,
+    max_batch: usize,
+    now: Instant,
+) -> (Vec<Request>, Vec<(Request, Duration)>) {
+    let mut batch = Vec::new();
+    let mut expired = Vec::new();
+    for lane in lanes.lanes.iter_mut() {
+        while batch.len() < max_batch {
+            let Some(r) = lane.pop_front() else { break };
+            match r.deadline {
+                Some(d) if now >= d => expired.push((r, now - d)),
+                _ => batch.push(r),
+            }
+        }
+    }
+    (batch, expired)
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<Request>>,
+    queue: Mutex<Queues>,
     cv: Condvar,
     closed: AtomicBool,
     stats: Mutex<SessionStats>,
@@ -67,18 +174,24 @@ struct Shared {
 }
 
 /// A handle to one submitted request; [`Ticket::wait`] blocks until its
-/// batch has run.
+/// batch has run (or its admission was rejected).
 pub struct Ticket {
     rx: mpsc::Receiver<Served>,
 }
 
 impl Ticket {
     /// Block for this request's output (`[out_features]` for the sample).
-    pub fn wait(self) -> Result<Vec<f32>> {
+    pub fn wait(self) -> Result<Vec<f32>, ServeError> {
+        self.wait_detail().map(|outcome| outcome.output)
+    }
+
+    /// Block for the full [`Outcome`]: the output plus which run served
+    /// the request, how many riders it shared the batch with, and how
+    /// long it queued.
+    pub fn wait_detail(self) -> Result<Outcome, ServeError> {
         match self.rx.recv() {
-            Ok(Ok(y)) => Ok(y),
-            Ok(Err(msg)) => Err(anyhow!(msg)),
-            Err(_) => Err(anyhow!("session shut down before the request was served")),
+            Ok(served) => served,
+            Err(_) => Err(ServeError::Closed),
         }
     }
 }
@@ -162,7 +275,7 @@ impl SessionBuilder {
             }
         };
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(Queues { lanes: [VecDeque::new(), VecDeque::new()] }),
             cv: Condvar::new(),
             closed: AtomicBool::new(false),
             stats: Mutex::new(SessionStats::default()),
@@ -238,33 +351,68 @@ impl Session {
         self.shared.stats.lock().unwrap().clone()
     }
 
-    /// Enqueue one sample (NCHW-flattened `[C*H*W]`) and return a
-    /// [`Ticket`] for its output.  Concurrent submissions coalesce into
-    /// lane-aligned batches; the call itself never blocks on execution.
-    pub fn submit(&self, input: Vec<f32>) -> Result<Ticket> {
+    /// Enqueue one sample (NCHW-flattened `[C*H*W]`) on the normal lane
+    /// with no deadline and return a [`Ticket`] for its output.
+    /// Concurrent submissions coalesce into lane-aligned batches; the call
+    /// itself never blocks on execution.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Ticket, ServeError> {
+        self.submit_with(input, Priority::Normal, None)
+    }
+
+    /// [`Session::submit`] with explicit admission metadata: the priority
+    /// lane, and an optional deadline relative to now.  A request whose
+    /// deadline passes before its batch is assembled is rejected with
+    /// [`ServeError::DeadlineExpired`] through its ticket — it is never
+    /// executed late.
+    pub fn submit_with(
+        &self,
+        input: Vec<f32>,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, ServeError> {
         if input.len() != self.shared.sample_len {
-            let (c, h, w) = self.prepared.input_shape();
-            bail!(
-                "input must be one [{c}, {h}, {w}] sample = {} elements, got {}",
-                self.shared.sample_len,
-                input.len()
-            );
+            return Err(ServeError::BadInput {
+                expected: self.shared.sample_len,
+                got: input.len(),
+            });
         }
+        let now = Instant::now();
         let (tx, rx) = mpsc::channel();
-        self.shared.queue.lock().unwrap().push_back(Request { input, tx });
+        let req = Request {
+            input,
+            tx,
+            priority,
+            // a budget too large for Instant arithmetic saturates to "no
+            // deadline" instead of panicking mid-submit
+            deadline: deadline.and_then(|d| now.checked_add(d)),
+            submitted: now,
+        };
+        let depth = {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.lanes[priority.lane()].push_back(req);
+            q.len()
+        };
         self.shared.cv.notify_all();
+        {
+            let mut st = self.shared.stats.lock().unwrap();
+            st.queue_depth_hwm = st.queue_depth_hwm.max(depth);
+        }
         Ok(Ticket { rx })
     }
 
     /// Blocking convenience: [`Session::submit`] + [`Ticket::wait`].
-    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, ServeError> {
         self.submit(input)?.wait()
     }
 
     /// Diagnostic direct run (bypasses the micro-batcher): one warmed
     /// batched inference with per-step timings, as `prunemap infer`
     /// reports.  `input` is `[batch, C, H, W]` row-major.
-    pub fn run_timed(&self, input: &[f32], batch: usize) -> Result<(Vec<f32>, Vec<StepTiming>)> {
+    pub fn run_timed(
+        &self,
+        input: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<StepTiming>)> {
         let mut arena = Arena::new();
         let _warmup = self.exec.run_with_arena(self.prepared.net(), input, batch, &mut arena)?;
         self.exec.run_timed_with_arena(self.prepared.net(), input, batch, &mut arena)
@@ -289,8 +437,9 @@ impl Drop for Session {
 }
 
 /// One batcher worker: wait for requests, coalesce up to `max_batch`
-/// within `max_wait`, pad the batch to a lane multiple, run once, scatter.
-/// On close the queue is drained — pending tickets are served, not
+/// within `max_wait` (high lane first), reject expired requests, pad the
+/// batch to a lane multiple, run once, scatter.  On close the queue is
+/// drained — pending tickets are served (or deadline-rejected), not
 /// dropped.
 fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) {
     let net = prepared.net();
@@ -312,25 +461,36 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
             q = shared.cv.wait(q).unwrap();
         }
         // phase 2: hold the batch open for up to `max_wait` hoping to fill
-        // it to `max_batch` (skipped when closing: drain immediately)
-        let deadline = Instant::now() + shared.max_wait;
+        // it to `max_batch` (skipped when closing: drain immediately).  If
+        // any queued request's deadline falls inside the hold window,
+        // dispatch immediately instead — a lone request whose budget is
+        // shorter than `max_wait` must be served right away on an idle
+        // server, not held open until its deadline has passed.
+        let hold_until = Instant::now() + shared.max_wait;
         while q.len() < shared.max_batch && !shared.closed.load(Ordering::Acquire) {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= hold_until || q.earliest_deadline().is_some_and(|d| d <= hold_until) {
                 break;
             }
-            let (guard, timeout) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+            let (guard, timeout) = shared.cv.wait_timeout(q, hold_until - now).unwrap();
             q = guard;
             if timeout.timed_out() {
                 break;
             }
         }
-        let take = q.len().min(shared.max_batch);
-        let reqs: Vec<Request> = q.drain(..take).collect();
+        let assembled_at = Instant::now();
+        let (reqs, rejected) = assemble(&mut q, shared.max_batch, assembled_at);
         drop(q);
+        if !rejected.is_empty() {
+            let mut st = shared.stats.lock().unwrap();
+            st.expired += rejected.len();
+        }
+        for (r, missed_by) in rejected {
+            let _ = r.tx.send(Err(ServeError::DeadlineExpired { missed_by }));
+        }
         if reqs.is_empty() {
             // another worker drained the queue while we held the batch
-            // open; go back to waiting
+            // open (or everything queued had expired); go back to waiting
             continue;
         }
 
@@ -344,24 +504,36 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
             input[i * sample..(i + 1) * sample].copy_from_slice(&r.input);
         }
         let result = exec.run_with_arena(net, &input, batch, &mut arena);
-        {
+        let run = {
             let mut st = shared.stats.lock().unwrap();
             st.requests += reqs.len();
             st.runs += 1;
             st.padded_lanes += batch - reqs.len();
             st.max_coalesced = st.max_coalesced.max(reqs.len());
             *st.batch_runs.entry(batch).or_insert(0) += 1;
-        }
+            *st.batch_occupancy.entry(reqs.len()).or_insert(0) += 1;
+            for r in &reqs {
+                st.served_by_priority[r.priority.lane()] += 1;
+                let wait = assembled_at.saturating_duration_since(r.submitted);
+                st.wait_buckets[wait_bucket(wait)] += 1;
+            }
+            st.runs as u64
+        };
         match result {
             Ok(y) => {
                 for (i, r) in reqs.iter().enumerate() {
-                    let _ = r.tx.send(Ok(y[i * out_len..(i + 1) * out_len].to_vec()));
+                    let _ = r.tx.send(Ok(Outcome {
+                        output: y[i * out_len..(i + 1) * out_len].to_vec(),
+                        run,
+                        coalesced: reqs.len(),
+                        waited: assembled_at.saturating_duration_since(r.submitted),
+                    }));
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
                 for r in &reqs {
-                    let _ = r.tx.send(Err(msg.clone()));
+                    let _ = r.tx.send(Err(ServeError::Execution(msg.clone())));
                 }
             }
         }
@@ -393,10 +565,83 @@ mod tests {
             .build()
     }
 
+    fn queued(reqs: Vec<Request>) -> Queues {
+        let mut q = Queues { lanes: [VecDeque::new(), VecDeque::new()] };
+        for r in reqs {
+            q.lanes[r.priority.lane()].push_back(r);
+        }
+        q
+    }
+
+    fn request(tag: f32, priority: Priority, deadline: Option<Instant>) -> Request {
+        // the receiver is dropped: these pure tests only inspect queues,
+        // they never reply
+        let (tx, _rx) = mpsc::channel();
+        Request { input: vec![tag], tx, priority, deadline, submitted: Instant::now() }
+    }
+
+    #[test]
+    fn assemble_drains_the_high_lane_first() {
+        let now = Instant::now();
+        let mut q = queued(vec![
+            request(0.0, Priority::Normal, None),
+            request(1.0, Priority::Normal, None),
+            request(2.0, Priority::High, None),
+            request(3.0, Priority::High, None),
+        ]);
+        let (batch, expired) = assemble(&mut q, 3, now);
+        assert!(expired.is_empty());
+        // both high requests first (FIFO within the lane), then the oldest
+        // normal request; the cap leaves the last normal queued
+        let tags: Vec<f32> = batch.iter().map(|r| r.input[0]).collect();
+        assert_eq!(tags, vec![2.0, 3.0, 0.0]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.lanes[Priority::Normal.lane()][0].input[0], 1.0);
+    }
+
+    #[test]
+    fn assemble_rejects_expired_without_consuming_slots() {
+        let now = Instant::now();
+        let past = now - Duration::from_millis(5);
+        let future = now + Duration::from_secs(60);
+        let mut q = queued(vec![
+            request(0.0, Priority::High, Some(past)),
+            request(1.0, Priority::High, Some(future)),
+            request(2.0, Priority::Normal, Some(past)),
+            request(3.0, Priority::Normal, None),
+        ]);
+        let (batch, expired) = assemble(&mut q, 2, now);
+        let tags: Vec<f32> = batch.iter().map(|r| r.input[0]).collect();
+        assert_eq!(tags, vec![1.0, 3.0], "expired requests must not occupy batch slots");
+        assert_eq!(expired.len(), 2);
+        for (r, missed_by) in &expired {
+            assert!(r.deadline.is_some());
+            assert!(*missed_by >= Duration::from_millis(5), "missed_by {missed_by:?}");
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn wait_buckets_cover_all_durations() {
+        assert_eq!(wait_bucket(Duration::ZERO), 0);
+        assert_eq!(wait_bucket(Duration::from_micros(99)), 0);
+        assert_eq!(wait_bucket(Duration::from_micros(100)), 1);
+        assert_eq!(wait_bucket(Duration::from_millis(5)), 2);
+        assert_eq!(wait_bucket(Duration::from_millis(50)), 3);
+        assert_eq!(wait_bucket(Duration::from_secs(10)), 4);
+        assert_eq!(wait_bucket_labels().len(), SessionStats::default().wait_buckets.len());
+    }
+
     #[test]
     fn submit_validates_sample_length() {
         let s = proxy_session(8, Duration::ZERO);
-        assert!(s.submit(vec![0.0; 5]).is_err());
+        match s.submit(vec![0.0; 5]) {
+            Err(ServeError::BadInput { expected, got }) => {
+                assert_eq!(expected, s.prepared().input_len());
+                assert_eq!(got, 5);
+            }
+            other => panic!("expected BadInput, got {other:?}"),
+        }
         let y = s.infer(vec![0.1; s.prepared().input_len()]).unwrap();
         assert_eq!(y.len(), 10);
     }
@@ -420,5 +665,43 @@ mod tests {
             let y = t.wait().expect("pending requests are drained on close");
             assert_eq!(y.len(), 10);
         }
+    }
+
+    #[test]
+    fn short_deadline_dispatches_early_instead_of_expiring_in_the_hold_window() {
+        // max_wait far longer than the request's budget: the batcher must
+        // dispatch immediately rather than hold the batch open past the
+        // deadline (the request is alone on an idle session)
+        let s = proxy_session(32, Duration::from_secs(5));
+        let n = s.prepared().input_len();
+        let t = s
+            .submit_with(vec![0.4; n], Priority::Normal, Some(Duration::from_millis(500)))
+            .unwrap();
+        let y = t.wait().expect("a servable short-deadline request must not be held to death");
+        assert_eq!(y.len(), 10);
+        assert_eq!(s.stats().expired, 0);
+    }
+
+    #[test]
+    fn expired_deadline_is_rejected_not_served() {
+        let s = proxy_session(8, Duration::ZERO);
+        let n = s.prepared().input_len();
+        // a deadline equal to the submit instant has always passed by the
+        // time the batch is assembled
+        let t = s.submit_with(vec![0.2; n], Priority::High, Some(Duration::ZERO)).unwrap();
+        match t.wait() {
+            Err(ServeError::DeadlineExpired { .. }) => {}
+            other => panic!("expected DeadlineExpired, got {other:?}"),
+        }
+        // a served request after the rejection still works, and the stats
+        // account for both
+        let y = s.infer(vec![0.3; n]).unwrap();
+        assert_eq!(y.len(), 10);
+        let st = s.stats();
+        assert_eq!(st.expired, 1);
+        assert_eq!(st.requests, 1);
+        assert_eq!(st.served_by_priority, [0, 1]);
+        assert_eq!(st.wait_buckets.iter().sum::<usize>(), 1);
+        assert!(st.queue_depth_hwm >= 1);
     }
 }

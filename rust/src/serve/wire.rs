@@ -1,0 +1,523 @@
+//! Line-delimited JSON wire protocol over the [`Server`] front door.
+//!
+//! One frame per line, every frame a JSON object, every request tagged
+//! with a caller-chosen `id` the reply echoes — so replies may be read
+//! out of order and requests pipelined (which is exactly what lets the
+//! per-model micro-batchers coalesce remote traffic):
+//!
+//! ```text
+//! -> {"id":1,"model":"mobilenetv1","input":[0.1,...],"priority":"high","deadline_ms":5.0}
+//! <- {"id":1,"output":[...]}
+//! -> {"id":2,"model":"nope","input":[...]}
+//! <- {"id":2,"error":{"kind":"unknown_model","message":"unknown model 'nope'"}}
+//! ```
+//!
+//! `priority` (default `"normal"`) and `deadline_ms` (default none) are
+//! optional.  A line that cannot be decoded is answered with a
+//! `"malformed"` error frame — `id` echoed when it can be recovered,
+//! `null` otherwise — and the connection stays up.  Blank lines are
+//! ignored (netcat-friendly).
+//!
+//! [`serve_connection`] drives one duplex byte stream (any
+//! `BufRead` + `Write` pair: a TCP socket, stdio, or in-memory buffers in
+//! tests); [`serve_tcp`] accepts connections and serves each on its own
+//! thread; [`Client`] is the matching caller side with pipelined
+//! [`Client::send`] / [`Client::wait`].  `prunemap serve --listen
+//! <addr|stdio>` wires these to the CLI.
+//!
+//! Numbers are carried as JSON numbers (shortest-roundtrip `f64`, which
+//! `f32` payloads survive exactly), so a wire round trip preserves the
+//! serving layer's bit-identity guarantee for finite values; NaN and
+//! infinity are not representable in JSON and are rejected as malformed.
+//! Ids ride the same number representation, so they must stay below
+//! 2^53 (f64's exact-integer range) — [`Client`] assigns sequential ids
+//! from 1 and can never reach the bound; hand-rolled callers using
+//! hash-derived ids would see them silently rounded by any JSON stack.
+
+use std::collections::BTreeMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::util::json::Value;
+
+use super::{InferRequest, Priority, ServeError, Server, Ticket};
+
+/// Wire deadlines above this are clamped (mirrors the CLI's `--max-wait-ms`
+/// bound): `Duration::from_secs_f64` panics on values it cannot represent,
+/// and a multi-minute service deadline is a typo.
+const MAX_DEADLINE_MS: f64 = 60_000.0;
+
+/// A decoded request frame: the caller's id plus the typed envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub request: InferRequest,
+}
+
+/// A decoded reply frame: an output or a typed error (whose `id` is
+/// `None` when the server could not recover the offending request's id).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseFrame {
+    Output { id: u64, output: Vec<f32> },
+    Error { id: Option<u64>, error: ServeError },
+}
+
+fn malformed(e: anyhow::Error) -> ServeError {
+    ServeError::Malformed(format!("{e:#}"))
+}
+
+fn f32s_to_json(xs: &[f32]) -> Value {
+    Value::arr(xs.iter().map(|&x| Value::num(f64::from(x))).collect())
+}
+
+fn f32s_from_json(v: &Value) -> Result<Vec<f32>, ServeError> {
+    v.as_arr()
+        .map_err(malformed)?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as f32))
+        .collect::<anyhow::Result<Vec<f32>>>()
+        .map_err(malformed)
+}
+
+/// Encode one request frame (a single line, no trailing newline).
+pub fn encode_request(id: u64, req: &InferRequest) -> String {
+    let mut fields = vec![
+        ("id", Value::num(id as f64)),
+        ("model", Value::str(req.model.clone())),
+        ("input", f32s_to_json(&req.input)),
+        ("priority", Value::str(req.priority.name())),
+    ];
+    if let Some(d) = req.deadline {
+        fields.push(("deadline_ms", Value::num(d.as_secs_f64() * 1e3)));
+    }
+    Value::obj(fields).compact()
+}
+
+/// Decode one request line; any structural problem is a
+/// [`ServeError::Malformed`].
+pub fn decode_request(line: &str) -> Result<RequestFrame, ServeError> {
+    let v = Value::parse(line).map_err(malformed)?;
+    let id = v.get("id").map_err(malformed)?.as_u64().map_err(malformed)?;
+    // ids ride JSON numbers (f64) in replies; a string-encoded id above
+    // 2^53 would be accepted here but corrupted on echo, so reject it
+    if id > (1 << 53) {
+        return Err(ServeError::Malformed(format!("id {id} exceeds 2^53")));
+    }
+    let model = v.get("model").map_err(malformed)?.as_str().map_err(malformed)?.to_string();
+    let input = f32s_from_json(v.get("input").map_err(malformed)?)?;
+    if input.iter().any(|x| !x.is_finite()) {
+        return Err(ServeError::Malformed("non-finite input element".to_string()));
+    }
+    let priority = match v.opt("priority") {
+        None => Priority::Normal,
+        Some(p) => {
+            let name = p.as_str().map_err(malformed)?;
+            match Priority::by_name(name) {
+                Some(priority) => priority,
+                None => return Err(ServeError::Malformed(format!("unknown priority '{name}'"))),
+            }
+        }
+    };
+    let deadline = match v.opt("deadline_ms") {
+        None => None,
+        Some(d) => {
+            let ms = d.as_f64().map_err(malformed)?;
+            if !ms.is_finite() || ms < 0.0 {
+                return Err(ServeError::Malformed(format!("bad deadline_ms {ms}")));
+            }
+            Some(Duration::from_secs_f64(ms.min(MAX_DEADLINE_MS) / 1e3))
+        }
+    };
+    Ok(RequestFrame { id, request: InferRequest { model, input, priority, deadline } })
+}
+
+/// Encode one output frame.
+pub fn encode_output(id: u64, output: &[f32]) -> String {
+    Value::obj(vec![("id", Value::num(id as f64)), ("output", f32s_to_json(output))]).compact()
+}
+
+/// Encode one error frame (`id` is `null` when unrecoverable).
+pub fn encode_error(id: Option<u64>, error: &ServeError) -> String {
+    let id = match id {
+        Some(id) => Value::num(id as f64),
+        None => Value::Null,
+    };
+    Value::obj(vec![
+        ("id", id),
+        (
+            "error",
+            Value::obj(vec![
+                ("kind", Value::str(error.kind())),
+                ("message", Value::str(error.to_string())),
+            ]),
+        ),
+    ])
+    .compact()
+}
+
+/// Decode one reply line (output or error frame).
+pub fn decode_response(line: &str) -> Result<ResponseFrame, ServeError> {
+    let v = Value::parse(line).map_err(malformed)?;
+    if let Some(err) = v.opt("error") {
+        let id = match v.opt("id") {
+            None | Some(Value::Null) => None,
+            Some(x) => Some(x.as_u64().map_err(malformed)?),
+        };
+        let kind = err.get("kind").map_err(malformed)?.as_str().map_err(malformed)?;
+        let message = err.get("message").map_err(malformed)?.as_str().map_err(malformed)?;
+        return Ok(ResponseFrame::Error { id, error: ServeError::from_wire(kind, message) });
+    }
+    let id = v.get("id").map_err(malformed)?.as_u64().map_err(malformed)?;
+    let output = f32s_from_json(v.get("output").map_err(malformed)?)?;
+    Ok(ResponseFrame::Output { id, output })
+}
+
+/// Best-effort id recovery from a line that failed [`decode_request`], so
+/// the error frame can still be correlated by the caller.
+fn recover_id(line: &str) -> Option<u64> {
+    Value::parse(line).ok().and_then(|v| v.opt("id").and_then(|x| x.as_u64().ok()))
+}
+
+/// What one connection did, as counted by the reply writer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ConnStats {
+    /// Output frames written.
+    pub served: usize,
+    /// Error frames written (admission rejections, executor faults, and
+    /// malformed lines alike).
+    pub errors: usize,
+}
+
+/// A reply the writer thread still has to resolve and encode.
+enum Pending {
+    Ok(u64, Ticket),
+    Err(Option<u64>, ServeError),
+}
+
+/// Serve one duplex stream until the reader hits EOF (or the writer's
+/// peer goes away): decode each line, submit it to the server, and write
+/// the reply frame as soon as its ticket resolves.  Requests are
+/// submitted as they arrive — not one-at-a-time — so pipelined frames
+/// coalesce in the per-model micro-batchers exactly like in-process
+/// submits; replies are written in request order (ids still echo, so
+/// clients need not rely on that).
+///
+/// The writer-death flag is only checked between lines: a peer that
+/// closes its read half but keeps its write half open *silently* parks
+/// this call in `read_line` until it sends something or disconnects
+/// (read-half shutdown on writer death is a ROADMAP follow-up alongside
+/// wire backpressure).
+pub fn serve_connection<R: BufRead, W: Write + Send>(
+    server: &Server,
+    mut reader: R,
+    writer: W,
+) -> io::Result<ConnStats> {
+    let (tx, rx) = mpsc::channel::<Pending>();
+    let dead = AtomicBool::new(false);
+    let dead_ref = &dead;
+    std::thread::scope(|scope| {
+        let writer_handle = scope.spawn(move || -> io::Result<ConnStats> {
+            let mut writer = writer;
+            let mut stats = ConnStats::default();
+            for pending in rx {
+                let (id, served) = match pending {
+                    Pending::Ok(id, ticket) => (Some(id), ticket.wait()),
+                    Pending::Err(id, e) => (id, Err(e)),
+                };
+                let line = match (&served, id) {
+                    (Ok(y), Some(id)) => {
+                        stats.served += 1;
+                        encode_output(id, y)
+                    }
+                    (Ok(_), None) => unreachable!("outputs always carry the request id"),
+                    (Err(e), id) => {
+                        stats.errors += 1;
+                        encode_error(id, e)
+                    }
+                };
+                if let Err(e) = writeln!(writer, "{line}").and_then(|()| writer.flush()) {
+                    dead_ref.store(true, Ordering::Release);
+                    return Err(e);
+                }
+            }
+            Ok(stats)
+        });
+        let mut line = String::new();
+        let reader_result: io::Result<()> = loop {
+            if dead.load(Ordering::Acquire) {
+                break Ok(());
+            }
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => break Ok(()),
+                Ok(_) => {}
+                Err(e) => break Err(e),
+            }
+            let frame = line.trim();
+            if frame.is_empty() {
+                continue;
+            }
+            let pending = match decode_request(frame) {
+                Ok(f) => match server.submit(f.request) {
+                    Ok(ticket) => Pending::Ok(f.id, ticket),
+                    Err(e) => Pending::Err(Some(f.id), e),
+                },
+                Err(e) => Pending::Err(recover_id(frame), e),
+            };
+            if tx.send(pending).is_err() {
+                break Ok(()); // writer bailed; its error is reported below
+            }
+        };
+        drop(tx);
+        let written = writer_handle
+            .join()
+            .map_err(|_| io::Error::other("wire writer thread panicked"))?;
+        reader_result?;
+        written
+    })
+}
+
+/// Accept TCP connections and serve each on its own thread.
+/// `max_conns` bounds how many connections are accepted before returning
+/// (joining the spawned threads) — `None` serves forever.  Bind the
+/// listener yourself so `127.0.0.1:0` tests can read the chosen port.
+pub fn serve_tcp(
+    server: &Arc<Server>,
+    listener: TcpListener,
+    max_conns: Option<usize>,
+) -> io::Result<()> {
+    if max_conns == Some(0) {
+        return Ok(());
+    }
+    let mut accepted = 0usize;
+    let mut handles = Vec::new();
+    for conn in listener.incoming() {
+        let stream = conn?;
+        let server = Arc::clone(server);
+        let handle = std::thread::Builder::new()
+            .name("prunemap-wire-conn".to_string())
+            .spawn(move || {
+                let reader = match stream.try_clone() {
+                    Ok(read_half) => BufReader::new(read_half),
+                    Err(_) => return,
+                };
+                let _ = serve_connection(&server, reader, stream);
+            })?;
+        if max_conns.is_some() {
+            handles.push(handle);
+        }
+        accepted += 1;
+        if Some(accepted) == max_conns {
+            break;
+        }
+    }
+    for handle in handles {
+        let _ = handle.join();
+    }
+    Ok(())
+}
+
+/// The caller side of the protocol over TCP: assigns ids, pipelines
+/// requests ([`Client::send`]), and matches replies back by id
+/// ([`Client::wait`] stashes out-of-order arrivals).  Used by the
+/// `multi_model_serve` example and the `hotpaths` bench.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+    stashed: BTreeMap<u64, Result<Vec<f32>, ServeError>>,
+}
+
+impl Client {
+    /// Connect to a `serve_tcp` endpoint.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let writer = TcpStream::connect(addr)?;
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(Client { reader, writer, next_id: 1, stashed: BTreeMap::new() })
+    }
+
+    /// Write one request frame without waiting; returns the assigned id.
+    pub fn send(&mut self, req: &InferRequest) -> io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        writeln!(self.writer, "{}", encode_request(id, req))?;
+        self.writer.flush()?;
+        Ok(id)
+    }
+
+    /// Read the next reply frame off the wire.
+    pub fn recv(&mut self) -> io::Result<(Option<u64>, Result<Vec<f32>, ServeError>)> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(io::ErrorKind::UnexpectedEof.into());
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            return match decode_response(line.trim()) {
+                Ok(ResponseFrame::Output { id, output }) => Ok((Some(id), Ok(output))),
+                Ok(ResponseFrame::Error { id, error }) => Ok((id, Err(error))),
+                Err(e) => Err(io::Error::new(io::ErrorKind::InvalidData, e.to_string())),
+            };
+        }
+    }
+
+    /// Block for the reply to `id`, stashing any other replies that
+    /// arrive first (they resolve later `wait` calls without re-reading
+    /// the wire).
+    pub fn wait(&mut self, id: u64) -> io::Result<Result<Vec<f32>, ServeError>> {
+        if let Some(served) = self.stashed.remove(&id) {
+            return Ok(served);
+        }
+        loop {
+            let (got, served) = self.recv()?;
+            let Some(got) = got else {
+                // an id-less error frame means the peer could not even
+                // attribute the failure; nothing further on this
+                // connection can be matched reliably
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    served.err().map(|e| e.to_string()).unwrap_or_default(),
+                ));
+            };
+            if got == id {
+                return Ok(served);
+            }
+            self.stashed.insert(got, served);
+        }
+    }
+
+    /// Blocking convenience: [`Client::send`] + [`Client::wait`].
+    pub fn infer(&mut self, req: &InferRequest) -> io::Result<Result<Vec<f32>, ServeError>> {
+        let id = self.send(req)?;
+        self.wait(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::Assignment;
+    use crate::serve::{ModelRegistry, PreparedModel};
+    use std::io::Cursor;
+
+    #[test]
+    fn request_frames_roundtrip() {
+        let req = InferRequest::new("m", vec![0.25, -1.5, 3.0])
+            .high()
+            .deadline(Duration::from_millis(5));
+        let line = encode_request(7, &req);
+        let back = decode_request(&line).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.request, req);
+        // optional fields default
+        let bare = decode_request(r#"{"id":1,"model":"m","input":[1]}"#).unwrap();
+        assert_eq!(bare.request.priority, Priority::Normal);
+        assert_eq!(bare.request.deadline, None);
+    }
+
+    #[test]
+    fn response_frames_roundtrip() {
+        let out = encode_output(3, &[0.5, -2.25]);
+        assert_eq!(
+            decode_response(&out).unwrap(),
+            ResponseFrame::Output { id: 3, output: vec![0.5, -2.25] }
+        );
+        let err = encode_error(Some(4), &ServeError::UnknownModel("x".into()));
+        match decode_response(&err).unwrap() {
+            ResponseFrame::Error { id: Some(4), error } => {
+                assert_eq!(error.kind(), "unknown_model")
+            }
+            other => panic!("bad decode: {other:?}"),
+        }
+        let anon = encode_error(None, &ServeError::Malformed("junk".into()));
+        assert!(matches!(
+            decode_response(&anon).unwrap(),
+            ResponseFrame::Error { id: None, error: ServeError::Malformed(_) }
+        ));
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_errors() {
+        for bad in [
+            "not json",
+            "{}",
+            r#"{"id":1}"#,
+            r#"{"id":1,"model":"m"}"#,
+            r#"{"id":1,"model":"m","input":"xs"}"#,
+            r#"{"id":1,"model":"m","input":[1],"priority":"urgent"}"#,
+            r#"{"id":1,"model":"m","input":[1],"deadline_ms":-2}"#,
+            r#"{"id":-1,"model":"m","input":[1]}"#,
+            // string-encoded ids above 2^53 would corrupt on echo
+            r#"{"id":"18446744073709551615","model":"m","input":[1]}"#,
+        ] {
+            match decode_request(bad) {
+                Err(ServeError::Malformed(_)) => {}
+                other => panic!("'{bad}' should be malformed, got {other:?}"),
+            }
+        }
+        assert_eq!(recover_id(r#"{"id":9,"model":3}"#), Some(9));
+        assert_eq!(recover_id("not json"), None);
+    }
+
+    #[test]
+    fn serve_connection_answers_frames_in_memory() {
+        let registry = ModelRegistry::new();
+        let prepared = PreparedModel::builder()
+            .model("proxy")
+            .assignments(
+                crate::models::zoo::proxy_cnn()
+                    .layers
+                    .iter()
+                    .map(|_| Assignment::dense())
+                    .collect(),
+            )
+            .seed(5)
+            .build()
+            .unwrap();
+        let n = prepared.input_len();
+        registry.insert("proxy", prepared.clone());
+        let server = Server::builder(registry).threads(1).build();
+
+        let good = InferRequest::new("proxy", vec![0.1; n]);
+        let unknown = InferRequest::new("ghost", vec![0.1; n]);
+        let frames = format!(
+            "{}\n\n{}\nnot json\n{}\n",
+            encode_request(1, &good),
+            encode_request(2, &unknown),
+            encode_request(3, &good),
+        );
+        let mut replies: Vec<u8> = Vec::new();
+        let stats =
+            serve_connection(&server, Cursor::new(frames.as_bytes()), &mut replies).unwrap();
+        assert_eq!(stats, ConnStats { served: 2, errors: 2 });
+
+        let text = String::from_utf8(replies).unwrap();
+        let decoded: Vec<ResponseFrame> =
+            text.lines().map(|l| decode_response(l).unwrap()).collect();
+        assert_eq!(decoded.len(), 4);
+        // in-process truth for the same input
+        let expect = prepared.session().threads(1).build().infer(vec![0.1; n]).unwrap();
+        match &decoded[0] {
+            ResponseFrame::Output { id: 1, output } => assert_eq!(output, &expect),
+            other => panic!("frame 1: {other:?}"),
+        }
+        assert!(matches!(
+            &decoded[1],
+            ResponseFrame::Error { id: Some(2), error: ServeError::UnknownModel(_) }
+        ));
+        assert!(matches!(
+            &decoded[2],
+            ResponseFrame::Error { id: None, error: ServeError::Malformed(_) }
+        ));
+        match &decoded[3] {
+            ResponseFrame::Output { id: 3, output } => assert_eq!(output, &expect),
+            other => panic!("frame 3: {other:?}"),
+        }
+    }
+}

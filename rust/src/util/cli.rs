@@ -125,11 +125,54 @@ impl Args {
     /// Clamped to [0, 60s] — `Duration::from_secs_f32` panics on values it
     /// cannot represent, and a multi-minute admission window is a typo.
     pub fn max_wait(&self, default_ms: f32) -> Result<std::time::Duration> {
-        let ms = self.get_f32("max-wait-ms", default_ms)?;
+        self.millis("max-wait-ms", Some(default_ms)).map(|d| d.unwrap_or_default())
+    }
+
+    /// Optional request deadline from `--deadline-ms F` (`None` when the
+    /// flag is absent): the serve burst's admission budget per request.
+    pub fn deadline_ms(&self) -> Result<Option<std::time::Duration>> {
+        self.millis("deadline-ms", None)
+    }
+
+    /// A millisecond duration option shared by the serve knobs, clamped to
+    /// [0, 60s] like `max_wait` always was.
+    fn millis(&self, name: &str, default_ms: Option<f32>) -> Result<Option<std::time::Duration>> {
+        let ms = match (self.get(name), default_ms) {
+            (None, None) => return Ok(None),
+            (None, Some(d)) => d,
+            (Some(_), _) => self.get_f32(name, 0.0)?,
+        };
         if !ms.is_finite() {
-            return Err(anyhow!("--max-wait-ms expects a finite value, got '{ms}'"));
+            return Err(anyhow!("--{name} expects a finite value, got '{ms}'"));
         }
-        Ok(std::time::Duration::from_secs_f32(ms.clamp(0.0, 60_000.0) / 1e3))
+        Ok(Some(std::time::Duration::from_secs_f32(ms.clamp(0.0, 60_000.0) / 1e3)))
+    }
+
+    /// The model list for the multi-model serve front door: `--models
+    /// a,b,c` (comma-separated registry names), falling back to `--model
+    /// M`, falling back to `default`.  Always non-empty.
+    pub fn models(&self, default: &str) -> Vec<String> {
+        let names: Vec<String> = match self.get("models") {
+            Some(list) => list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect(),
+            None => Vec::new(),
+        };
+        if names.is_empty() {
+            vec![self.get_or("model", default).to_string()]
+        } else {
+            names
+        }
+    }
+
+    /// Wire-protocol endpoint from `--listen ADDR` — a TCP bind address
+    /// like `127.0.0.1:7077`, or the literal `stdio` to speak frames over
+    /// stdin/stdout.  `None` keeps `serve` in in-process burst mode.
+    pub fn listen(&self) -> Option<&str> {
+        self.get("listen")
     }
 }
 
@@ -206,6 +249,26 @@ mod tests {
             Args::parse(toks("--max-wait-ms 1e30")).max_wait(2.0).unwrap(),
             std::time::Duration::from_secs(60)
         );
+    }
+
+    #[test]
+    fn front_door_knobs() {
+        let a = Args::parse(toks("--models vgg16,,mobilenetv1,proxy --deadline-ms 4"));
+        assert_eq!(a.models("x"), vec!["vgg16", "mobilenetv1", "proxy"]);
+        assert_eq!(
+            a.deadline_ms().unwrap(),
+            Some(std::time::Duration::from_millis(4))
+        );
+        assert_eq!(a.listen(), None);
+        let single = Args::parse(toks("--model resnet18 --listen 127.0.0.1:7077"));
+        assert_eq!(single.models("x"), vec!["resnet18"]);
+        assert_eq!(single.listen(), Some("127.0.0.1:7077"));
+        let defaults = Args::parse(toks(""));
+        assert_eq!(defaults.models("mobilenetv1"), vec!["mobilenetv1"]);
+        assert_eq!(defaults.deadline_ms().unwrap(), None);
+        // a degenerate --models list falls back rather than serving nothing
+        assert_eq!(Args::parse(toks("--models ,")).models("proxy"), vec!["proxy"]);
+        assert!(Args::parse(toks("--deadline-ms nan")).deadline_ms().is_err());
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Acceptance suite for the multi-model serving front door
+//! (`prunemap::serve::{ModelRegistry, Server, wire}`):
+//!
+//! * routing: an unknown model is a typed [`ServeError::UnknownModel`],
+//!   never a panic;
+//! * a two-model registry serving interleaved concurrent clients returns
+//!   outputs **bit-identical** to per-model solo `Session::infer` runs;
+//! * under a saturated batcher, high-priority requests ride earlier runs
+//!   than normal-priority ones (observed through `Ticket::wait_detail`);
+//! * an expired deadline is rejected with
+//!   [`ServeError::DeadlineExpired`] instead of being served late;
+//! * the wire protocol round-trips encode -> decode -> serve -> decode
+//!   over real TCP, including malformed-frame error frames, and preserves
+//!   bit identity.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use prunemap::accuracy::Assignment;
+use prunemap::models::{zoo, Dataset, ModelSpec};
+use prunemap::serve::{
+    wire, InferRequest, ModelRegistry, PreparedModel, ServeError, Server, Session,
+};
+use prunemap::util::cli::env_threads;
+
+fn dense_prepared(spec: ModelSpec, seed: u64) -> PreparedModel {
+    let assigns: Vec<Assignment> = spec.layers.iter().map(|_| Assignment::dense()).collect();
+    PreparedModel::builder()
+        .model_spec(spec)
+        .assignments(assigns)
+        .seed(seed)
+        .build()
+        .expect("prepare model")
+}
+
+/// Two genuinely different zoo architectures, cheap enough for debug-mode
+/// test runs: the proxy CNN and a width-0.25 MobileNet-V1.
+fn two_model_registry() -> ModelRegistry {
+    let registry = ModelRegistry::new();
+    registry.insert("alpha", dense_prepared(zoo::proxy_cnn(), 21));
+    registry.insert(
+        "beta",
+        dense_prepared(zoo::mobilenet_v1_scaled(Dataset::Cifar10, 0.25), 22),
+    );
+    registry
+}
+
+fn sample(len: usize, tag: usize) -> Vec<f32> {
+    (0..len).map(|j| (((tag * 7 + j) % 23) as f32) * 0.1 - 1.0).collect()
+}
+
+/// A solo single-model session's answers — the PR-4 layer the front door
+/// must match bit for bit.
+fn solo_answers(prepared: &PreparedModel, nreq: usize) -> Vec<Vec<f32>> {
+    let session = Session::builder(prepared.clone()).threads(1).build();
+    (0..nreq).map(|tag| session.infer(sample(prepared.input_len(), tag)).unwrap()).collect()
+}
+
+#[test]
+fn unknown_model_is_a_typed_routing_error() {
+    let server = Server::builder(two_model_registry()).threads(1).build();
+    match server.infer(InferRequest::new("gamma", vec![0.0; 16])) {
+        Err(ServeError::UnknownModel(name)) => assert_eq!(name, "gamma"),
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    assert!(server.stats().is_empty(), "failed routing must not spin up sessions");
+}
+
+#[test]
+fn interleaved_clients_on_two_models_match_solo_sessions() {
+    let registry = two_model_registry();
+    let server = Server::builder(registry.clone())
+        .threads(env_threads(2))
+        .max_batch(16)
+        .max_wait(Duration::from_millis(5))
+        .build();
+    let nreq = 6usize;
+    let clients = 3usize;
+    let truth: Vec<(String, PreparedModel, Vec<Vec<f32>>)> = ["alpha", "beta"]
+        .into_iter()
+        .map(|name| {
+            let prepared = registry.get(name).unwrap();
+            let answers = solo_answers(&prepared, nreq);
+            (name.to_string(), prepared, answers)
+        })
+        .collect();
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            let (server, truth) = (&server, &truth);
+            scope.spawn(move || {
+                // pipeline every (model, tag) pair interleaved across both
+                // models, then check the answers against the solo truths
+                let tickets: Vec<_> = (0..nreq)
+                    .flat_map(|tag| {
+                        truth.iter().map(move |(name, prepared, _)| {
+                            let input = sample(prepared.input_len(), tag);
+                            (name.clone(), tag, input)
+                        })
+                    })
+                    .map(|(name, tag, input)| {
+                        (tag, server.submit(InferRequest::new(name, input)).unwrap())
+                    })
+                    .collect();
+                for (i, (tag, ticket)) in tickets.into_iter().enumerate() {
+                    let (name, _, answers) = &truth[i % 2];
+                    assert_eq!(
+                        ticket.wait().unwrap(),
+                        answers[tag],
+                        "front-door output for model '{name}' tag {tag} diverged from solo"
+                    );
+                }
+            });
+        }
+    });
+    let stats = server.stats();
+    assert_eq!(stats["alpha"].requests, clients * nreq);
+    assert_eq!(stats["beta"].requests, clients * nreq);
+    for st in stats.values() {
+        assert!(st.queue_depth_hwm >= 1);
+        assert_eq!(st.wait_buckets.iter().sum::<usize>(), clients * nreq);
+        let occupancy: usize = st.batch_occupancy.iter().map(|(occ, runs)| occ * runs).sum();
+        assert_eq!(occupancy, clients * nreq, "occupancy must account for every request");
+    }
+}
+
+#[test]
+fn high_priority_rides_earlier_runs_under_saturation() {
+    let registry = two_model_registry();
+    let server = Server::builder(registry.clone())
+        .threads(1)
+        .workers(1)
+        .max_batch(8)
+        .max_wait(Duration::ZERO)
+        .build();
+    let n = registry.get("alpha").unwrap().input_len();
+    // a plug request occupies the single batcher worker so the burst
+    // below queues up behind it; every high-priority request is submitted
+    // before every normal one, so whatever the interleaving, no normal
+    // request may be served by an earlier run than any high request
+    let plug = server.submit(InferRequest::new("alpha", sample(n, 99))).unwrap();
+    let high: Vec<_> = (0..8)
+        .map(|tag| server.submit(InferRequest::new("alpha", sample(n, tag)).high()).unwrap())
+        .collect();
+    let normal: Vec<_> = (0..8)
+        .map(|tag| server.submit(InferRequest::new("alpha", sample(n, tag))).unwrap())
+        .collect();
+    plug.wait().unwrap();
+    let high_runs: Vec<u64> = high.into_iter().map(|t| t.wait_detail().unwrap().run).collect();
+    let normal_runs: Vec<u64> = normal.into_iter().map(|t| t.wait_detail().unwrap().run).collect();
+    assert!(
+        high_runs.iter().max() <= normal_runs.iter().min(),
+        "a normal-priority request was batched before a high-priority one: high {high_runs:?} vs normal {normal_runs:?}"
+    );
+    let stats = server.stats();
+    let st = &stats["alpha"];
+    assert_eq!(st.served_by_priority, [8, 9], "8 high + (plug + 8) normal");
+    assert!(st.runs >= 3, "17 requests at cap 8 need >= 3 runs: {st:?}");
+    assert!(st.batch_runs.keys().all(|&b| b <= 8), "cap exceeded: {st:?}");
+}
+
+#[test]
+fn expired_deadline_is_rejected_not_served_late() {
+    let registry = two_model_registry();
+    let server = Server::builder(registry.clone()).threads(1).build();
+    let prepared = registry.get("alpha").unwrap();
+    let n = prepared.input_len();
+    // a deadline equal to the submit instant has always passed by
+    // assembly time
+    let late = InferRequest::new("alpha", sample(n, 0)).high().deadline(Duration::ZERO);
+    match server.infer(late) {
+        Err(ServeError::DeadlineExpired { .. }) => {}
+        other => panic!("expected DeadlineExpired, got {other:?}"),
+    }
+    // a generous deadline is served normally, bit-identical to solo
+    let ok = InferRequest::new("alpha", sample(n, 0)).deadline(Duration::from_secs(30));
+    assert_eq!(server.infer(ok).unwrap(), solo_answers(&prepared, 1)[0]);
+    let stats = server.stats();
+    let st = &stats["alpha"];
+    assert_eq!((st.expired, st.requests), (1, 1));
+}
+
+#[test]
+fn wire_tcp_round_trip_including_malformed_frames() {
+    let registry = two_model_registry();
+    let server = Arc::new(Server::builder(registry.clone()).threads(env_threads(2)).build());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let acceptor = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(2)))
+    };
+    let alpha = registry.get("alpha").unwrap();
+    let beta = registry.get("beta").unwrap();
+
+    // connection 1: the typed client, both models pipelined on one
+    // socket, replies claimed out of submission order (exercises the
+    // stash), plus a typed admission error over the wire
+    {
+        let mut client = wire::Client::connect(addr).unwrap();
+        let ida =
+            client.send(&InferRequest::new("alpha", sample(alpha.input_len(), 1)).high()).unwrap();
+        let idb = client.send(&InferRequest::new("beta", sample(beta.input_len(), 2))).unwrap();
+        let yb = client.wait(idb).unwrap().unwrap();
+        let ya = client.wait(ida).unwrap().unwrap();
+        assert_eq!(ya, solo_answers(&alpha, 2)[1], "alpha over the wire diverged from solo");
+        assert_eq!(yb, solo_answers(&beta, 3)[2], "beta over the wire diverged from solo");
+        let bad = client.infer(&InferRequest::new("alpha", vec![0.0; 3])).unwrap();
+        assert!(
+            matches!(bad, Err(ServeError::BadInput { .. })),
+            "wrong payload length must come back as bad_input, got {bad:?}"
+        );
+    }
+
+    // connection 2: a raw socket sends a malformed line then a valid
+    // frame; the server answers an id-less malformed error frame, keeps
+    // the connection up, and still serves the valid frame
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        let beta_req = InferRequest::new("beta", sample(beta.input_len(), 3));
+        let frame = wire::encode_request(7, &beta_req);
+        write!(raw, "this is not json\n{frame}\n").unwrap();
+        raw.shutdown(std::net::Shutdown::Write).unwrap();
+        let reader = BufReader::new(raw);
+        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 2, "one error frame + one output frame: {lines:?}");
+        match wire::decode_response(&lines[0]).unwrap() {
+            wire::ResponseFrame::Error { id: None, error: ServeError::Malformed(_) } => {}
+            other => panic!("expected id-less malformed error frame, got {other:?}"),
+        }
+        match wire::decode_response(&lines[1]).unwrap() {
+            wire::ResponseFrame::Output { id: 7, output } => {
+                assert_eq!(output, solo_answers(&beta, 4)[3], "wire output diverged from solo")
+            }
+            other => panic!("expected output frame for id 7, got {other:?}"),
+        }
+    }
+    acceptor.join().expect("acceptor").unwrap();
+}
