@@ -21,6 +21,7 @@
 use std::time::Duration;
 
 use prunemap::accuracy::Assignment;
+use prunemap::bench::records::ValueSink;
 use prunemap::latmodel::LatencyModel;
 use prunemap::mapping::{map_rule_based, map_search_based, RuleConfig, SearchConfig};
 use prunemap::models::{zoo, Dataset, LayerSpec};
@@ -32,9 +33,10 @@ use prunemap::serve::{InferRequest, ModelRegistry, PreparedModel, Server, Sessio
 use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
 use prunemap::sparse::{permute_rows, reorder_rows, Bcs, Csr, Engine, SparseKernel};
 use prunemap::tensor::Tensor;
-use prunemap::util::bench::{bench, bench_n, black_box, emit_comparison, header, BenchStats};
+use prunemap::util::bench::{
+    bench, bench_n, black_box, emit_comparison, fmt_speedup, header, BenchStats,
+};
 use prunemap::util::cli::Args;
-use prunemap::util::json::Value;
 
 /// Masked + reordered GEMM view for one pruning layout.
 fn layout(
@@ -126,7 +128,9 @@ fn main() {
     let tile = args
         .tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)
         .expect("--tile expects an integer");
-    let mut records: Vec<Value> = Vec::new();
+    // flushed to --json-out after EVERY comparison (not once at the end)
+    // so a panic or Ctrl-C mid-run keeps the records collected so far
+    let mut records = ValueSink::new(args.get("json-out").map(std::path::PathBuf::from));
     println!("\n## execution engine (threads = {threads}, tile = {tile})\n");
     header();
     let serial = Engine::serial();
@@ -186,8 +190,8 @@ fn main() {
         black_box(kernel.spmm_scalar(&xb, 32));
     });
     let (rec, sp) = emit_comparison("spmm_simd_vs_scalar_1024x1024_b32", &scalar, &s);
-    records.push(rec);
-    println!("    simd/scalar speedup: {sp:.2}x (serial, batch 32)");
+    records.push(rec).expect("flush bench record");
+    println!("    simd/scalar speedup: {} (serial, batch 32)", fmt_speedup(sp));
 
     // --- acceptance pair: fused tile-order im2col vs materialized X --------
     // conv 128->128 3x3 SAME on 32x32, batch 8: the whole lowering cost,
@@ -212,8 +216,8 @@ fn main() {
         black_box(threaded.spmm_fused(&conv_kernel, &panels));
     });
     let (rec, sp) = emit_comparison("fused_vs_materialized_im2col_conv128_b8", &mat, &fus);
-    records.push(rec);
-    println!("    fused/materialized speedup: {sp:.2}x");
+    records.push(rec).expect("flush bench record");
+    println!("    fused/materialized speedup: {}", fmt_speedup(sp));
 
     // --- whole-network graph executor (im2col conv + fused epilogues) ------
     println!("\n## graph executor: end-to-end pruned networks (threads = {threads})\n");
@@ -254,8 +258,8 @@ fn main() {
                 });
                 let (rec, sp) =
                     emit_comparison(&format!("fused_vs_materialized_{name}_b8"), &m, &t);
-                records.push(rec);
-                println!("    fused/materialized speedup: {sp:.2}x");
+                records.push(rec).expect("flush bench record");
+                println!("    fused/materialized speedup: {}", fmt_speedup(sp));
             }
         }
         // measured-vs-modeled calibration record (JSON via util::json) so
@@ -308,11 +312,15 @@ fn main() {
     });
     let (rec, sp) =
         emit_comparison("serve_coalesced_vs_one_request_per_run", &one_per_run, &coalesced);
-    records.push(rec);
+    records.push(rec).expect("flush bench record");
     let st = coalescing.stats();
     println!(
-        "    coalesced/single speedup: {sp:.2}x ({} requests in {} runs, max coalesced {}, {} padded lanes)",
-        st.requests, st.runs, st.max_coalesced, st.padded_lanes
+        "    coalesced/single speedup: {} ({} requests in {} runs, max coalesced {}, {} padded lanes)",
+        fmt_speedup(sp),
+        st.requests,
+        st.runs,
+        st.max_coalesced,
+        st.padded_lanes
     );
 
     // --- serve front door: one routed process vs two isolated sessions -----
@@ -375,8 +383,11 @@ fn main() {
         }
     });
     let (rec, sp) = emit_comparison("routed_two_models_vs_two_sessions", &isolated, &routed);
-    records.push(rec);
-    println!("    routed/isolated speedup: {sp:.2}x (the cost of the routing layer if < 1)");
+    records.push(rec).expect("flush bench record");
+    println!(
+        "    routed/isolated speedup: {} (the cost of the routing layer if < 1)",
+        fmt_speedup(sp)
+    );
 
     // --- mapping machinery -------------------------------------------------
     println!();
@@ -427,11 +438,11 @@ fn main() {
     // --- PJRT execution (needs --cfg pjrt + `make artifacts`) --------------
     pjrt_bench();
 
-    // collected BENCH comparison records (regenerate with
-    // `cargo bench --bench hotpaths -- --json-out benches/records/hotpaths.json`)
+    // BENCH comparison records were flushed to --json-out after each
+    // comparison; the definitions-as-data successor to this binary is
+    // `prunemap bench` over benches/defs/ (see benches/records/README.md)
     if let Some(path) = args.get("json-out") {
-        std::fs::write(path, Value::Arr(records).pretty()).expect("write bench records");
-        println!("\nwrote {path}");
+        println!("\nwrote {} record(s) to {path} (flushed incrementally)", records.len());
     }
 }
 

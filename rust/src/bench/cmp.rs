@@ -1,0 +1,339 @@
+//! The comparison reporter: diff two record sets, flag regressions.
+//!
+//! [`compare`] pairs baseline and contender measurements by full id
+//! (`name::engine`) and classifies each pair against a noise threshold;
+//! the CLI (`prunemap bench cmp A.json B.json`) renders the report and
+//! exits nonzero when [`CmpReport::failed`] — any benchmark regressed
+//! beyond the threshold or its output checksum drifted.  Benchmarks
+//! present in only one record set are reported (so a silently-dropped
+//! benchmark is visible) but are not failures.
+//!
+//! [`rank`] orders the engine variants of each workload within a single
+//! record set — the "which engine wins this workload" view.
+
+use std::collections::BTreeMap;
+
+use super::records::{Measurement, RecordSet};
+
+/// How one benchmark pair compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpStatus {
+    /// Contender faster than baseline beyond the noise threshold.
+    Improved,
+    /// Within the noise threshold either way.
+    Within,
+    /// Contender slower beyond the noise threshold — a failure.
+    Regressed,
+    /// Output checksums differ — a correctness failure, timing moot.
+    ChecksumDrift,
+    /// Measured in the baseline set only.
+    BaselineOnly,
+    /// Measured in the contender set only.
+    ContenderOnly,
+}
+
+impl CmpStatus {
+    pub fn label(self) -> &'static str {
+        match self {
+            CmpStatus::Improved => "improved",
+            CmpStatus::Within => "ok",
+            CmpStatus::Regressed => "REGRESSED",
+            CmpStatus::ChecksumDrift => "CHECKSUM DRIFT",
+            CmpStatus::BaselineOnly => "baseline only",
+            CmpStatus::ContenderOnly => "contender only",
+        }
+    }
+}
+
+/// One row of a comparison report.
+#[derive(Debug, Clone)]
+pub struct CmpRow {
+    /// Full benchmark id (`name::engine`).
+    pub id: String,
+    /// Baseline mean, ns (absent for contender-only rows).
+    pub base_mean_ns: Option<f64>,
+    /// Contender mean, ns (absent for baseline-only rows).
+    pub cont_mean_ns: Option<f64>,
+    /// `baseline / contender` mean ratio (>1 = contender faster);
+    /// `None` when either side is missing or degenerate (a zero/
+    /// non-finite mean must not poison the report with inf/NaN).
+    pub speedup: Option<f64>,
+    pub status: CmpStatus,
+}
+
+/// The full comparison of two record sets.
+#[derive(Debug, Clone)]
+pub struct CmpReport {
+    pub rows: Vec<CmpRow>,
+    /// Fraction of slowdown tolerated as noise (e.g. 0.10).
+    pub threshold: f64,
+}
+
+impl CmpReport {
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.status == CmpStatus::Regressed).count()
+    }
+
+    pub fn drifted(&self) -> usize {
+        self.rows.iter().filter(|r| r.status == CmpStatus::ChecksumDrift).count()
+    }
+
+    /// Whether the CLI should exit nonzero.
+    pub fn failed(&self) -> bool {
+        self.regressions() > 0 || self.drifted() > 0
+    }
+
+    /// Plain-text table, worst rows first.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let wid = self.rows.iter().map(|r| r.id.len()).max().unwrap_or(4).max(4);
+        out.push_str(&format!(
+            "{:<wid$}  {:>12}  {:>12}  {:>8}  status\n",
+            "id", "base ns", "cont ns", "speedup"
+        ));
+        for row in &self.rows {
+            out.push_str(&format!(
+                "{:<wid$}  {:>12}  {:>12}  {:>8}  {}\n",
+                row.id,
+                fmt_ns(row.base_mean_ns),
+                fmt_ns(row.cont_mean_ns),
+                match row.speedup {
+                    Some(s) => format!("{s:.2}x"),
+                    None => "n/a".to_string(),
+                },
+                row.status.label(),
+            ));
+        }
+        out.push_str(&format!(
+            "{} compared, {} regressed, {} drifted (noise threshold {:.0}%)\n",
+            self.rows.len(),
+            self.regressions(),
+            self.drifted(),
+            self.threshold * 100.0
+        ));
+        out
+    }
+}
+
+fn fmt_ns(x: Option<f64>) -> String {
+    match x {
+        Some(v) => format!("{v:.0}"),
+        None => "-".to_string(),
+    }
+}
+
+fn speedup_of(base: f64, cont: f64) -> Option<f64> {
+    if !base.is_finite() || !cont.is_finite() || base <= 0.0 || cont <= 0.0 {
+        return None;
+    }
+    Some(base / cont)
+}
+
+fn severity(s: CmpStatus) -> usize {
+    match s {
+        CmpStatus::ChecksumDrift => 0,
+        CmpStatus::Regressed => 1,
+        CmpStatus::BaselineOnly => 2,
+        CmpStatus::ContenderOnly => 3,
+        CmpStatus::Within => 4,
+        CmpStatus::Improved => 5,
+    }
+}
+
+/// Pair `baseline` and `contender` by benchmark id and classify each
+/// pair against `threshold` (fraction of tolerated slowdown; see
+/// [`super::NOISE_THRESHOLD`]).  Rows come back worst-first.
+pub fn compare(baseline: &RecordSet, contender: &RecordSet, threshold: f64) -> CmpReport {
+    let mut rows = Vec::new();
+    for base in &baseline.records {
+        let id = base.id();
+        match contender.find(&id) {
+            None => rows.push(CmpRow {
+                id,
+                base_mean_ns: Some(base.mean_ns),
+                cont_mean_ns: None,
+                speedup: None,
+                status: CmpStatus::BaselineOnly,
+            }),
+            Some(cont) => {
+                let speedup = speedup_of(base.mean_ns, cont.mean_ns);
+                // an empty checksum means "not recorded" (e.g. a
+                // placeholder baseline) — only two KNOWN checksums can
+                // drift apart
+                let drift = !base.checksum.is_empty()
+                    && !cont.checksum.is_empty()
+                    && base.checksum != cont.checksum;
+                let status = if drift {
+                    CmpStatus::ChecksumDrift
+                } else {
+                    match speedup {
+                        Some(s) if s < 1.0 / (1.0 + threshold) => CmpStatus::Regressed,
+                        Some(s) if s > 1.0 + threshold => CmpStatus::Improved,
+                        _ => CmpStatus::Within,
+                    }
+                };
+                rows.push(CmpRow {
+                    id,
+                    base_mean_ns: Some(base.mean_ns),
+                    cont_mean_ns: Some(cont.mean_ns),
+                    speedup,
+                    status,
+                });
+            }
+        }
+    }
+    for cont in &contender.records {
+        if baseline.find(&cont.id()).is_none() {
+            rows.push(CmpRow {
+                id: cont.id(),
+                base_mean_ns: None,
+                cont_mean_ns: Some(cont.mean_ns),
+                speedup: None,
+                status: CmpStatus::ContenderOnly,
+            });
+        }
+    }
+    rows.sort_by(|a, b| severity(a.status).cmp(&severity(b.status)).then(a.id.cmp(&b.id)));
+    CmpReport { rows, threshold }
+}
+
+/// Rank the engine variants of each workload within one record set,
+/// fastest first, with the ratio vs the fastest variant.  Returns the
+/// rendered table.
+pub fn rank(set: &RecordSet) -> String {
+    let mut groups: BTreeMap<&str, Vec<&Measurement>> = BTreeMap::new();
+    for m in &set.records {
+        groups.entry(&m.name).or_default().push(m);
+    }
+    let mut out = String::new();
+    for (name, mut variants) in groups {
+        variants.sort_by(|a, b| a.mean_ns.total_cmp(&b.mean_ns));
+        let best = variants[0].mean_ns;
+        out.push_str(&format!("{name}\n"));
+        for m in variants {
+            let ratio = match speedup_of(m.mean_ns, best) {
+                Some(r) => format!("{r:.2}x"),
+                None => "n/a".to_string(),
+            };
+            out.push_str(&format!(
+                "  {:<14} {:>12.0} ns/run  {:>8}  ({} iters)\n",
+                m.engine, m.mean_ns, ratio, m.iters
+            ));
+        }
+    }
+    if out.is_empty() {
+        out.push_str("no records\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    fn m(name: &str, engine: &str, mean: f64, checksum: &str) -> Measurement {
+        Measurement {
+            name: name.to_string(),
+            engine: engine.to_string(),
+            config: Value::Null,
+            iters: 10,
+            mean_ns: mean,
+            stddev_ns: 1.0,
+            min_ns: mean,
+            checksum: checksum.to_string(),
+            rev: "test".to_string(),
+        }
+    }
+
+    fn set(records: Vec<Measurement>) -> RecordSet {
+        RecordSet { records }
+    }
+
+    #[test]
+    fn classifies_win_regression_and_noise() {
+        let base = set(vec![
+            m("a", "simd", 1000.0, "c1"),
+            m("b", "simd", 1000.0, "c2"),
+            m("c", "simd", 1000.0, "c3"),
+        ]);
+        let cont = set(vec![
+            m("a", "simd", 500.0, "c1"),  // 2x win
+            m("b", "simd", 1200.0, "c2"), // 20% slower: regression at 10%
+            m("c", "simd", 1050.0, "c3"), // 5% slower: within noise
+        ]);
+        let report = compare(&base, &cont, 0.10);
+        let by_id = |id: &str| report.rows.iter().find(|r| r.id == format!("{id}::simd")).unwrap();
+        assert_eq!(by_id("a").status, CmpStatus::Improved);
+        assert_eq!(by_id("a").speedup, Some(2.0));
+        assert_eq!(by_id("b").status, CmpStatus::Regressed);
+        assert_eq!(by_id("c").status, CmpStatus::Within);
+        assert_eq!(report.regressions(), 1);
+        assert!(report.failed());
+        // worst first: the regression leads the rendered table
+        assert_eq!(report.rows[0].id, "b::simd");
+    }
+
+    #[test]
+    fn checksum_drift_fails_even_when_faster() {
+        let base = set(vec![m("a", "simd", 1000.0, "good")]);
+        let cont = set(vec![m("a", "simd", 100.0, "evil")]);
+        let report = compare(&base, &cont, 0.10);
+        assert_eq!(report.rows[0].status, CmpStatus::ChecksumDrift);
+        assert!(report.failed(), "a wrong answer is never a speedup");
+    }
+
+    #[test]
+    fn unknown_checksums_do_not_count_as_drift() {
+        // a placeholder baseline (checksum not recorded) must not flag
+        // drift against a real run
+        let base = set(vec![m("a", "simd", 1000.0, "")]);
+        let cont = set(vec![m("a", "simd", 1000.0, "9c0f")]);
+        let report = compare(&base, &cont, 0.10);
+        assert_eq!(report.rows[0].status, CmpStatus::Within);
+        assert!(!report.failed());
+    }
+
+    #[test]
+    fn one_sided_benchmarks_are_visible_but_not_failures() {
+        let base = set(vec![m("old", "simd", 1000.0, "c")]);
+        let cont = set(vec![m("new", "simd", 1000.0, "c")]);
+        let report = compare(&base, &cont, 0.10);
+        assert_eq!(report.rows.len(), 2);
+        assert!(report
+            .rows
+            .iter()
+            .any(|r| r.id == "old::simd" && r.status == CmpStatus::BaselineOnly));
+        assert!(report
+            .rows
+            .iter()
+            .any(|r| r.id == "new::simd" && r.status == CmpStatus::ContenderOnly));
+        assert!(!report.failed());
+    }
+
+    #[test]
+    fn degenerate_means_yield_no_speedup_not_inf() {
+        let base = set(vec![m("a", "simd", 0.0, "c")]);
+        let cont = set(vec![m("a", "simd", 1000.0, "c")]);
+        let report = compare(&base, &cont, 0.10);
+        assert_eq!(report.rows[0].speedup, None);
+        assert_eq!(report.rows[0].status, CmpStatus::Within, "no ratio -> no flag");
+        let rendered = report.render();
+        assert!(rendered.contains("n/a"), "degenerate ratio renders as n/a: {rendered}");
+    }
+
+    #[test]
+    fn rank_orders_variants_fastest_first() {
+        let s = set(vec![
+            m("spmm/x", "scalar", 4000.0, "c"),
+            m("spmm/x", "simd", 1000.0, "c"),
+            m("conv/y", "fused", 500.0, "d"),
+        ]);
+        let out = rank(&s);
+        let simd = out.find("simd").unwrap();
+        let scalar = out.find("scalar").unwrap();
+        assert!(simd < scalar, "fastest variant listed first:\n{out}");
+        assert!(out.contains("4.00x"), "scalar is 4x the fastest:\n{out}");
+        assert!(out.contains("conv/y"));
+    }
+}

@@ -1,0 +1,452 @@
+//! Benchmark definitions as data.
+//!
+//! A definition file is JSON (parsed with [`crate::util::json`] — the
+//! offline environment has no TOML parser) of the form:
+//!
+//! ```json
+//! {
+//!   "format": "prunemap.benchdefs.v1",
+//!   "benchmarks": [
+//!     {
+//!       "name": "spmm/block1024/b32",
+//!       "engine": "simd",
+//!       "kind": "spmm",
+//!       "rows": 1024, "cols": 1024,
+//!       "scheme": "block8x8", "compression": 10.0,
+//!       "batch": 32, "threads": 1, "seed": 1,
+//!       "warmup": 1, "samples": 10,
+//!       "checksum": "9c0f..."
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `name` identifies the *workload*; `engine` names the variant under
+//! measurement (`scalar` vs `simd`, `materialized` vs `fused`, ...), so
+//! the [`cmp`](super::cmp) reporter can pair records across record sets
+//! by the full id `name::engine` and [`rank`](super::cmp::rank) can
+//! order variants of one workload within a record set.  `checksum` is
+//! the expected output checksum ([`super::checksum_f32s`]); it is
+//! optional while a definition is being authored and pinned by
+//! `prunemap bench --check --update-checksums` on a machine with a
+//! toolchain (unpinned definitions fail `--check --strict`).
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::pruning::Scheme;
+use crate::sparse::DEFAULT_TILE_COLS;
+use crate::util::json::Value;
+
+/// Definition-file format tag.
+pub const FORMAT: &str = "prunemap.benchdefs.v1";
+
+/// One benchmark definition: a workload × engine variant plus the
+/// measurement protocol (warmup/samples) and the expected checksum.
+#[derive(Debug, Clone)]
+pub struct BenchDef {
+    /// Workload id, e.g. `"spmm/block1024/b32"`.
+    pub name: String,
+    /// Engine variant under measurement, e.g. `"simd"`.
+    pub engine: String,
+    /// What to run (and its workload-specific parameters).
+    pub workload: Workload,
+    /// Engine worker threads (1 = serial dispatch).
+    pub threads: usize,
+    /// Batch width (samples per run for spmm/conv/infer).
+    pub batch: usize,
+    /// Fused-im2col tile width.
+    pub tile: usize,
+    /// Untimed runs before sampling (>= 1: the first run also computes
+    /// the output checksum).
+    pub warmup: usize,
+    /// Timed samples per measurement.
+    pub samples: usize,
+    /// Deterministic seed for weights and inputs.
+    pub seed: u64,
+    /// Expected output checksum; `None` until pinned.
+    pub checksum: Option<String>,
+    /// The definition file this came from (set by [`load_defs`]) — how
+    /// the harness tells a child process which file to re-read.
+    pub source: Option<PathBuf>,
+}
+
+impl BenchDef {
+    /// The full benchmark id records and reporters key on.
+    pub fn id(&self) -> String {
+        format!("{}::{}", self.name, self.engine)
+    }
+
+    /// The engine-config echo carried into measurement records.
+    pub fn config_json(&self) -> Value {
+        Value::obj(vec![
+            ("threads", Value::num(self.threads as f64)),
+            ("batch", Value::num(self.batch as f64)),
+            ("tile", Value::num(self.tile as f64)),
+            ("seed", Value::str(self.seed.to_string())),
+        ])
+    }
+}
+
+/// The workload families a definition can name, with their parameters.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Batched sparse GEMM on one pruned, row-reordered matrix.
+    /// Engines: `scalar` (the locked reference loop) | `simd`.
+    Spmm { rows: usize, cols: usize, scheme: Scheme, compression: f32 },
+    /// One 3×3 SAME conv lowered through im2col.
+    /// Engines: `materialized` | `fused`.
+    Conv { in_ch: usize, out_ch: usize, hw: usize, scheme: Scheme, compression: f32 },
+    /// Whole-network inference through the graph executor.
+    /// Engines: `serial` | `fused` | `materialized`.
+    Infer { model: String, dataset: String, method: String },
+    /// A burst of single-sample requests through one serving session.
+    /// Engines: `one_per_run` | `coalesced`.
+    Serve { model: String, dataset: String, requests: usize, max_batch: usize, max_wait_ms: f64 },
+    /// An interleaved burst across several models: isolated per-model
+    /// sessions vs one routing front door.
+    /// Engines: `isolated` | `routed`.
+    Routed { models: Vec<String>, requests: usize, max_batch: usize, max_wait_ms: f64 },
+}
+
+impl Workload {
+    /// Engine variants this workload accepts.
+    pub fn engines(&self) -> &'static [&'static str] {
+        match self {
+            Workload::Spmm { .. } => &["scalar", "simd"],
+            Workload::Conv { .. } => &["materialized", "fused"],
+            Workload::Infer { .. } => &["serial", "fused", "materialized"],
+            Workload::Serve { .. } => &["one_per_run", "coalesced"],
+            Workload::Routed { .. } => &["isolated", "routed"],
+        }
+    }
+}
+
+/// Parse a compact scheme name: `dense` (no pruning), `unstructured`,
+/// `pattern`, `blockPxQ` (FC block pruning, e.g. `block8x8`), or
+/// `punchedFxC` (conv block-punched, e.g. `punched8x16`).
+pub fn parse_scheme(s: &str) -> Result<Scheme> {
+    fn pair(body: &str, what: &str) -> Result<(usize, usize)> {
+        let (a, b) = body
+            .split_once('x')
+            .ok_or_else(|| anyhow!("{what} scheme needs 'AxB' sizes, got '{body}'"))?;
+        Ok((
+            a.parse().map_err(|_| anyhow!("bad {what} size '{a}'"))?,
+            b.parse().map_err(|_| anyhow!("bad {what} size '{b}'"))?,
+        ))
+    }
+    match s {
+        "dense" | "none" => Ok(Scheme::None),
+        "unstructured" => Ok(Scheme::Unstructured),
+        "pattern" => Ok(Scheme::Pattern),
+        _ => {
+            if let Some(body) = s.strip_prefix("block") {
+                let (bp, bq) = pair(body, "block")?;
+                Ok(Scheme::Block { bp, bq })
+            } else if let Some(body) = s.strip_prefix("punched") {
+                let (bf, bc) = pair(body, "punched")?;
+                Ok(Scheme::BlockPunched { bf, bc })
+            } else {
+                bail!("unknown scheme '{s}' (dense|unstructured|pattern|blockPxQ|punchedFxC)")
+            }
+        }
+    }
+}
+
+fn opt_usize(v: &Value, key: &str, default: usize) -> Result<usize> {
+    match v.opt(key) {
+        Some(x) => x.as_usize().with_context(|| format!("field '{key}'")),
+        None => Ok(default),
+    }
+}
+
+fn opt_f64(v: &Value, key: &str, default: f64) -> Result<f64> {
+    match v.opt(key) {
+        Some(x) => x.as_f64().with_context(|| format!("field '{key}'")),
+        None => Ok(default),
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    Ok(v.get(key)?.as_str().with_context(|| format!("field '{key}'"))?.to_string())
+}
+
+fn opt_str(v: &Value, key: &str, default: &str) -> Result<String> {
+    match v.opt(key) {
+        Some(x) => Ok(x.as_str().with_context(|| format!("field '{key}'"))?.to_string()),
+        None => Ok(default.to_string()),
+    }
+}
+
+/// Parse one benchmark definition object.
+pub fn def_from_json(v: &Value) -> Result<BenchDef> {
+    let name = req_str(v, "name")?;
+    let engine = req_str(v, "engine")?;
+    let kind = req_str(v, "kind")?;
+    let workload = match kind.as_str() {
+        "spmm" => {
+            let scheme = parse_scheme(&opt_str(v, "scheme", "block8x8")?)?;
+            if !matches!(scheme, Scheme::None | Scheme::Unstructured | Scheme::Block { .. }) {
+                bail!("spmm workloads prune a 2-D matrix: scheme must be dense|unstructured|blockPxQ");
+            }
+            Workload::Spmm {
+                rows: opt_usize(v, "rows", 1024)?,
+                cols: opt_usize(v, "cols", 1024)?,
+                scheme,
+                compression: opt_f64(v, "compression", 8.0)? as f32,
+            }
+        }
+        "conv" => {
+            let scheme = parse_scheme(&opt_str(v, "scheme", "punched8x16")?)?;
+            if !matches!(scheme, Scheme::BlockPunched { .. } | Scheme::Pattern) {
+                bail!("conv workloads prune a 4-D kernel: scheme must be punchedFxC|pattern");
+            }
+            Workload::Conv {
+                in_ch: opt_usize(v, "in_ch", 128)?,
+                out_ch: opt_usize(v, "out_ch", 128)?,
+                hw: opt_usize(v, "hw", 32)?,
+                scheme,
+                compression: opt_f64(v, "compression", 8.0)? as f32,
+            }
+        }
+        "infer" => Workload::Infer {
+            model: req_str(v, "model")?,
+            dataset: opt_str(v, "dataset", "cifar10")?,
+            method: opt_str(v, "method", "rule")?,
+        },
+        "serve" => Workload::Serve {
+            model: req_str(v, "model")?,
+            dataset: opt_str(v, "dataset", "cifar10")?,
+            requests: opt_usize(v, "requests", 48)?,
+            max_batch: opt_usize(v, "max_batch", 32)?,
+            max_wait_ms: opt_f64(v, "max_wait_ms", 5.0)?,
+        },
+        "routed" => {
+            let models = v.get("models")?.str_vec().context("field 'models'")?;
+            if models.len() < 2 {
+                bail!("routed workloads need >= 2 models, got {models:?}");
+            }
+            Workload::Routed {
+                models,
+                requests: opt_usize(v, "requests", 48)?,
+                max_batch: opt_usize(v, "max_batch", 16)?,
+                max_wait_ms: opt_f64(v, "max_wait_ms", 5.0)?,
+            }
+        }
+        other => bail!("unknown workload kind '{other}' (spmm|conv|infer|serve|routed)"),
+    };
+    if !workload.engines().contains(&engine.as_str()) {
+        bail!(
+            "benchmark '{name}': engine '{engine}' is not a {kind} variant (expected one of {:?})",
+            workload.engines()
+        );
+    }
+    let checksum = match v.opt("checksum") {
+        Some(Value::Null) | None => None,
+        Some(x) => Some(x.as_str().context("field 'checksum'")?.to_string()),
+    };
+    let def = BenchDef {
+        name,
+        engine,
+        workload,
+        threads: opt_usize(v, "threads", 1)?,
+        batch: opt_usize(v, "batch", 1)?,
+        tile: opt_usize(v, "tile", DEFAULT_TILE_COLS)?,
+        warmup: opt_usize(v, "warmup", 1)?.max(1),
+        samples: opt_usize(v, "samples", 10)?.max(1),
+        seed: match v.opt("seed") {
+            Some(x) => x.as_u64().context("field 'seed'")?,
+            None => 1,
+        },
+        checksum,
+        source: None,
+    };
+    Ok(def)
+}
+
+/// Parse a whole definition file's text.
+pub fn defs_from_str(text: &str) -> Result<Vec<BenchDef>> {
+    let v = Value::parse(text)?;
+    let format = v.get("format")?.as_str()?;
+    if format != FORMAT {
+        bail!("unsupported definition format '{format}' (expected '{FORMAT}')");
+    }
+    v.get("benchmarks")?
+        .as_arr()?
+        .iter()
+        .map(def_from_json)
+        .collect()
+}
+
+/// Load definitions from one `.json` file, or every `*.json` file
+/// (sorted by name) in a directory.  Ids must be unique across the set.
+pub fn load_defs(path: impl AsRef<Path>) -> Result<Vec<BenchDef>> {
+    let path = path.as_ref();
+    let files: Vec<PathBuf> = if path.is_dir() {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(path)
+            .with_context(|| format!("read definition dir {}", path.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|e| e == "json"))
+            .collect();
+        files.sort();
+        files
+    } else {
+        vec![path.to_path_buf()]
+    };
+    if files.is_empty() {
+        bail!("no .json definition files under {}", path.display());
+    }
+    let mut defs = Vec::new();
+    for file in files {
+        let text = std::fs::read_to_string(&file)
+            .with_context(|| format!("read definitions from {}", file.display()))?;
+        let mut file_defs = defs_from_str(&text)
+            .with_context(|| format!("parse definitions in {}", file.display()))?;
+        for def in &mut file_defs {
+            def.source = Some(file.clone());
+        }
+        defs.append(&mut file_defs);
+    }
+    let mut seen = BTreeSet::new();
+    for def in &defs {
+        if !seen.insert(def.id()) {
+            bail!("duplicate benchmark id '{}'", def.id());
+        }
+    }
+    Ok(defs)
+}
+
+/// Write `checksum` into the definition named by `id` inside its source
+/// file (the `--update-checksums` pinning flow).  Returns whether the
+/// file changed.
+pub fn pin_checksum(file: &Path, id: &str, checksum: &str) -> Result<bool> {
+    let text = std::fs::read_to_string(file)
+        .with_context(|| format!("read definitions from {}", file.display()))?;
+    let mut v = Value::parse(&text)?;
+    let mut changed = false;
+    if let Value::Obj(top) = &mut v {
+        if let Some(Value::Arr(benchmarks)) = top.get_mut("benchmarks") {
+            for b in benchmarks {
+                let matches_id = match (b.opt("name"), b.opt("engine")) {
+                    (Some(Value::Str(n)), Some(Value::Str(e))) => format!("{n}::{e}") == id,
+                    _ => false,
+                };
+                if !matches_id {
+                    continue;
+                }
+                let prev = b.opt("checksum").cloned();
+                if let Value::Obj(obj) = b {
+                    obj.insert("checksum".to_string(), Value::str(checksum));
+                }
+                changed |= prev != Some(Value::str(checksum));
+            }
+        }
+    }
+    if changed {
+        std::fs::write(file, v.pretty())
+            .with_context(|| format!("rewrite definitions in {}", file.display()))?;
+    }
+    Ok(changed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ONE: &str = r#"{
+      "format": "prunemap.benchdefs.v1",
+      "benchmarks": [
+        {"name": "spmm/tiny/b8", "engine": "simd", "kind": "spmm",
+         "rows": 64, "cols": 64, "scheme": "block4x4", "compression": 4.0,
+         "batch": 8, "samples": 3, "checksum": "abc"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_a_minimal_file() {
+        let defs = defs_from_str(ONE).unwrap();
+        assert_eq!(defs.len(), 1);
+        let d = &defs[0];
+        assert_eq!(d.id(), "spmm/tiny/b8::simd");
+        assert_eq!((d.batch, d.samples, d.warmup, d.threads), (8, 3, 1, 1));
+        assert_eq!(d.checksum.as_deref(), Some("abc"));
+        match &d.workload {
+            Workload::Spmm { rows, cols, scheme, compression } => {
+                assert_eq!((*rows, *cols), (64, 64));
+                assert_eq!(*scheme, Scheme::Block { bp: 4, bq: 4 });
+                assert_eq!(*compression, 4.0);
+            }
+            other => panic!("expected spmm, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scheme_names_parse() {
+        assert_eq!(parse_scheme("dense").unwrap(), Scheme::None);
+        assert_eq!(parse_scheme("unstructured").unwrap(), Scheme::Unstructured);
+        assert_eq!(parse_scheme("pattern").unwrap(), Scheme::Pattern);
+        assert_eq!(parse_scheme("block8x16").unwrap(), Scheme::Block { bp: 8, bq: 16 });
+        assert_eq!(
+            parse_scheme("punched8x16").unwrap(),
+            Scheme::BlockPunched { bf: 8, bc: 16 }
+        );
+        assert!(parse_scheme("blocky").is_err());
+        assert!(parse_scheme("block8").is_err());
+        assert!(parse_scheme("magic").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_definitions() {
+        // wrong format tag
+        assert!(defs_from_str(r#"{"format": "v0", "benchmarks": []}"#).is_err());
+        // engine not a variant of the kind
+        let bad_engine = ONE.replace("\"simd\"", "\"fused\"");
+        assert!(defs_from_str(&bad_engine).is_err());
+        // conv cannot take an FC block scheme
+        let mixed = r#"{
+          "format": "prunemap.benchdefs.v1",
+          "benchmarks": [
+            {"name": "x", "engine": "fused", "kind": "conv", "scheme": "block8x8"}
+          ]
+        }"#;
+        assert!(defs_from_str(mixed).is_err());
+        // routed needs two models
+        let routed = r#"{
+          "format": "prunemap.benchdefs.v1",
+          "benchmarks": [
+            {"name": "x", "engine": "routed", "kind": "routed", "models": ["a"]}
+          ]
+        }"#;
+        assert!(defs_from_str(routed).is_err());
+    }
+
+    #[test]
+    fn checked_in_definition_files_stay_valid() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/defs");
+        let defs = load_defs(dir).expect("checked-in defs must parse");
+        assert!(defs.len() >= 8, "expected the ported hotpaths set, got {}", defs.len());
+        for def in &defs {
+            assert!(def.source.is_some());
+        }
+    }
+
+    #[test]
+    fn pin_checksum_rewrites_the_file() {
+        let path = std::env::temp_dir().join(format!(
+            "prunemap_pin_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::write(&path, ONE).unwrap();
+        assert!(pin_checksum(&path, "spmm/tiny/b8::simd", "0123456789abcdef").unwrap());
+        let defs = load_defs(&path).unwrap();
+        assert_eq!(defs[0].checksum.as_deref(), Some("0123456789abcdef"));
+        // idempotent: same value -> no change
+        assert!(!pin_checksum(&path, "spmm/tiny/b8::simd", "0123456789abcdef").unwrap());
+        // unknown id -> untouched
+        assert!(!pin_checksum(&path, "nope::simd", "ffff").unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,82 @@
+//! The benchmark barometer: definitions-as-data, a measurement harness,
+//! and a regression-flagging comparison reporter (modeled on rebar's
+//! methodology).
+//!
+//! The subsystem turns the repo's perf story from prose into reviewable
+//! data, in four pieces:
+//!
+//! * [`defs`] — benchmark **definitions as data**: checked-in JSON files
+//!   under `benches/defs/` name a workload (spmm / conv-im2col / whole-
+//!   network infer / serve burst / routed front door) × engine variant ×
+//!   batch × threads × tile, each with warmup/sample counts and an
+//!   expected-output **checksum**, so every benchmark is also a
+//!   correctness test.
+//! * [`runner`] — runs one definition (workload construction, warmup,
+//!   timed samples, checksum) and orchestrates a definition set, by
+//!   default **one child process per measurement** so no benchmark warms
+//!   caches or pools for the next.  `prunemap bench --check` verifies
+//!   every definition's checksum without timing anything.
+//! * [`records`] — the normalized measurement record set (`name`,
+//!   `engine`, engine config, `iters`, `mean_ns`/`stddev_ns`/`min_ns`,
+//!   `checksum`, git rev), written to stdout and `--json-out`, with an
+//!   incremental [`records::RecordSink`] so an aborted run keeps every
+//!   completed record.
+//! * [`cmp`] — the reporter: `prunemap bench cmp A.json B.json` pairs two
+//!   record sets by benchmark id, prints per-benchmark speedup ratios,
+//!   and exits nonzero when any benchmark regresses beyond the noise
+//!   threshold (or its output checksum drifted); `prunemap bench rank
+//!   A.json` ranks engine variants of the same workload within one
+//!   record set.
+//!
+//! The workflow across PRs: define → `prunemap bench --json-out` →
+//! commit the records under `benches/records/` → the next PR's run is
+//! `cmp`-ed against them, so one benchmark getting slower while another
+//! speeds up is finally visible (see `benches/records/README.md`).
+
+pub mod cmp;
+pub mod defs;
+pub mod records;
+pub mod runner;
+
+pub use cmp::{compare, rank, CmpReport, CmpRow, CmpStatus};
+pub use defs::{load_defs, BenchDef, Workload};
+pub use records::{Measurement, RecordSet, RecordSink};
+pub use runner::{check_defs, measure, CheckOutcome, CheckReport};
+
+/// Default noise threshold for [`cmp::compare`]: a benchmark counts as a
+/// regression only when the contender's mean is more than this fraction
+/// slower than the baseline's (10% — micro-benchmarks on shared CI
+/// hardware jitter; see `benches/records/README.md` for the policy).
+pub const NOISE_THRESHOLD: f64 = 0.10;
+
+/// FNV-1a over the little-endian bit patterns of `xs` — the expected-
+/// output checksum carried by definitions and measurement records.  The
+/// engine is bit-identical across thread counts, batch coalescing, and
+/// the fused/materialized im2col paths, so one checksum pins every
+/// engine variant of a workload.
+pub fn checksum_f32s(xs: &[f32]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_stable_and_bit_sensitive() {
+        let a = checksum_f32s(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, checksum_f32s(&[1.0, 2.0, 3.0]), "deterministic");
+        assert_eq!(a.len(), 16, "fixed-width hex");
+        assert_ne!(a, checksum_f32s(&[1.0, 2.0, 3.0000002]), "bit-sensitive");
+        // distinguishes payloads float equality cannot (0.0 vs -0.0)
+        assert_ne!(checksum_f32s(&[0.0]), checksum_f32s(&[-0.0]));
+        assert_ne!(checksum_f32s(&[]), checksum_f32s(&[0.0]));
+    }
+}

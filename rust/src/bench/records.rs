@@ -1,0 +1,321 @@
+//! Normalized measurement records (`prunemap.benchrecords.v1`).
+//!
+//! Every measurement the harness takes — whatever the workload — is
+//! flattened to the same shape, so record sets from different PRs,
+//! machines, or definition files can be diffed by the
+//! [`cmp`](super::cmp) reporter:
+//!
+//! ```json
+//! {
+//!   "format": "prunemap.benchrecords.v1",
+//!   "records": [
+//!     {"name": "spmm/block1024/b32", "engine": "simd",
+//!      "config": {"threads": 1, "batch": 32, "tile": 64, "seed": "1"},
+//!      "iters": 10, "mean_ns": 812345.0, "stddev_ns": 9123.0,
+//!      "min_ns": 798000.0, "checksum": "9c0f...", "rev": "28a1842"}
+//!   ]
+//! }
+//! ```
+//!
+//! [`RecordSink`] persists records **incrementally** — the output file
+//! is rewritten after every push, so a panic or Ctrl-C mid-run keeps
+//! every completed measurement instead of silently losing the lot.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Record-set format tag.
+pub const FORMAT: &str = "prunemap.benchrecords.v1";
+
+/// One normalized measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    /// Workload id from the definition.
+    pub name: String,
+    /// Engine variant measured.
+    pub engine: String,
+    /// Engine-config echo (threads/batch/tile/seed) from the definition.
+    pub config: Value,
+    /// Timed samples taken.
+    pub iters: usize,
+    /// Sample mean, nanoseconds per run.
+    pub mean_ns: f64,
+    /// Sample standard deviation, nanoseconds.
+    pub stddev_ns: f64,
+    /// Fastest sample, nanoseconds.
+    pub min_ns: f64,
+    /// Output checksum observed on the warmup run; empty = not recorded
+    /// (a placeholder baseline), which the cmp reporter treats as
+    /// "cannot drift".
+    pub checksum: String,
+    /// `git rev-parse --short HEAD` at measurement time ("unknown"
+    /// outside a work tree).
+    pub rev: String,
+}
+
+impl Measurement {
+    /// The id records and reporters pair on.
+    pub fn id(&self) -> String {
+        format!("{}::{}", self.name, self.engine)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(&self.name)),
+            ("engine", Value::str(&self.engine)),
+            ("config", self.config.clone()),
+            ("iters", Value::num(self.iters as f64)),
+            ("mean_ns", Value::num(self.mean_ns)),
+            ("stddev_ns", Value::num(self.stddev_ns)),
+            ("min_ns", Value::num(self.min_ns)),
+            ("checksum", Value::str(&self.checksum)),
+            ("rev", Value::str(&self.rev)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Measurement> {
+        Ok(Measurement {
+            name: v.get("name")?.as_str()?.to_string(),
+            engine: v.get("engine")?.as_str()?.to_string(),
+            config: v.opt("config").cloned().unwrap_or(Value::Null),
+            iters: v.get("iters")?.as_usize()?,
+            mean_ns: v.get("mean_ns")?.as_f64()?,
+            stddev_ns: v.get("stddev_ns")?.as_f64()?,
+            min_ns: v.get("min_ns")?.as_f64()?,
+            checksum: v.get("checksum")?.as_str()?.to_string(),
+            rev: match v.opt("rev") {
+                Some(Value::Str(s)) => s.clone(),
+                _ => "unknown".to_string(),
+            },
+        })
+    }
+}
+
+/// A set of measurements, as read from / written to a records file.
+#[derive(Debug, Clone, Default)]
+pub struct RecordSet {
+    pub records: Vec<Measurement>,
+}
+
+impl RecordSet {
+    pub fn parse(text: &str) -> Result<RecordSet> {
+        let v = Value::parse(text)?;
+        let format = v.get("format")?.as_str()?;
+        if format != FORMAT {
+            bail!("unsupported record format '{format}' (expected '{FORMAT}')");
+        }
+        let records = v
+            .get("records")?
+            .as_arr()?
+            .iter()
+            .map(Measurement::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RecordSet { records })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RecordSet> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read records from {}", path.display()))?;
+        RecordSet::parse(&text).with_context(|| format!("parse records in {}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("format", Value::str(FORMAT)),
+            ("records", Value::arr(self.records.iter().map(Measurement::to_json).collect())),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("write records to {}", path.display()))
+    }
+
+    /// Look up a measurement by full id (`name::engine`).
+    pub fn find(&self, id: &str) -> Option<&Measurement> {
+        self.records.iter().find(|m| m.id() == id)
+    }
+}
+
+/// Incremental record writer: collects measurements and, when given a
+/// path, rewrites the whole output file after **every** push, so an
+/// interrupted run keeps everything measured so far.
+#[derive(Debug)]
+pub struct RecordSink {
+    path: Option<PathBuf>,
+    set: RecordSet,
+}
+
+impl RecordSink {
+    /// A sink that persists to `path` after each push; `None` collects
+    /// in memory only.
+    pub fn new(path: Option<PathBuf>) -> RecordSink {
+        RecordSink { path, set: RecordSet::default() }
+    }
+
+    /// Append one measurement and flush the file (if any).
+    pub fn push(&mut self, m: Measurement) -> Result<()> {
+        self.set.records.push(m);
+        if let Some(path) = &self.path {
+            self.set.save(path)?;
+        }
+        Ok(())
+    }
+
+    pub fn records(&self) -> &[Measurement] {
+        &self.set.records
+    }
+
+    pub fn into_set(self) -> RecordSet {
+        self.set
+    }
+}
+
+/// Incremental writer for ad-hoc [`Value`] record arrays — the legacy
+/// `BENCH {json}` comparison records `benches/hotpaths.rs` collects.
+/// Like [`RecordSink`], the output file is rewritten (as a JSON array)
+/// after every push, so a panic or Ctrl-C mid-run keeps every record
+/// collected so far instead of silently losing the lot.
+#[derive(Debug)]
+pub struct ValueSink {
+    path: Option<PathBuf>,
+    vals: Vec<Value>,
+}
+
+impl ValueSink {
+    /// A sink that persists to `path` after each push; `None` collects
+    /// in memory only.
+    pub fn new(path: Option<PathBuf>) -> ValueSink {
+        ValueSink { path, vals: Vec::new() }
+    }
+
+    /// Append one record and flush the file (if any).
+    pub fn push(&mut self, v: Value) -> Result<()> {
+        self.vals.push(v);
+        if let Some(path) = &self.path {
+            let mut text = Value::Arr(self.vals.clone()).pretty();
+            text.push('\n');
+            std::fs::write(path, text)
+                .with_context(|| format!("write bench records to {}", path.display()))?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+}
+
+/// `git rev-parse --short HEAD`, or "unknown" when git or a work tree
+/// is unavailable — records must never fail over provenance.
+pub fn git_rev() -> String {
+    Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(name: &str, engine: &str, mean: f64) -> Measurement {
+        Measurement {
+            name: name.to_string(),
+            engine: engine.to_string(),
+            config: Value::obj(vec![("threads", Value::num(1.0))]),
+            iters: 10,
+            mean_ns: mean,
+            stddev_ns: mean * 0.01,
+            min_ns: mean * 0.97,
+            checksum: "00ff".to_string(),
+            rev: "abc1234".to_string(),
+        }
+    }
+
+    #[test]
+    fn record_set_roundtrips_through_json() {
+        let set = RecordSet { records: vec![m("spmm/x", "simd", 1000.0), m("spmm/x", "scalar", 4000.0)] };
+        let text = set.to_json().pretty();
+        let back = RecordSet::parse(&text).unwrap();
+        assert_eq!(back.records, set.records);
+        assert_eq!(back.find("spmm/x::scalar").unwrap().mean_ns, 4000.0);
+        assert!(back.find("spmm/x::fused").is_none());
+    }
+
+    #[test]
+    fn wrong_format_tag_is_rejected() {
+        assert!(RecordSet::parse(r#"{"format": "v0", "records": []}"#).is_err());
+        assert!(RecordSet::parse(r#"{"records": []}"#).is_err());
+    }
+
+    #[test]
+    fn sink_flushes_after_every_push() {
+        let path = std::env::temp_dir().join(format!(
+            "prunemap_sink_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut sink = RecordSink::new(Some(path.clone()));
+        sink.push(m("a", "simd", 100.0)).unwrap();
+        // the file is already valid and complete after the FIRST push —
+        // this is the crash-durability property hotpaths was missing
+        let after_one = RecordSet::load(&path).unwrap();
+        assert_eq!(after_one.records.len(), 1);
+        sink.push(m("b", "simd", 200.0)).unwrap();
+        let after_two = RecordSet::load(&path).unwrap();
+        assert_eq!(after_two.records.len(), 2);
+        assert_eq!(sink.into_set().records.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn value_sink_is_valid_json_after_every_push() {
+        let path = std::env::temp_dir().join(format!(
+            "prunemap_vsink_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut sink = ValueSink::new(Some(path.clone()));
+        sink.push(Value::obj(vec![("bench", Value::str("a"))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Value::parse(&text).expect("valid JSON after one push");
+        assert_eq!(v.as_arr().unwrap().len(), 1);
+        sink.push(Value::obj(vec![("bench", Value::str("b"))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Value::parse(&text).unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(sink.len(), 2);
+        assert!(!sink.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn memory_only_sink_collects() {
+        let mut sink = RecordSink::new(None);
+        sink.push(m("a", "simd", 100.0)).unwrap();
+        assert_eq!(sink.records().len(), 1);
+    }
+
+    #[test]
+    fn git_rev_never_fails() {
+        let rev = git_rev();
+        assert!(!rev.is_empty());
+    }
+}

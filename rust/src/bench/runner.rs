@@ -1,0 +1,452 @@
+//! The measurement harness: run one [`BenchDef`] and produce one
+//! [`Measurement`].
+//!
+//! Every workload family from [`Workload`] compiles down to a closure
+//! returning the output vector, so timing and checksumming are uniform:
+//! warmup runs first (the first one checksums the output), then
+//! `samples` timed runs, then mean/stddev/min in nanoseconds.
+//!
+//! [`check_defs`] is the correctness half — run each definition once
+//! and compare the observed checksum against the pinned one, no timing.
+//! [`measure_in_child`] is the isolation half — re-exec the current
+//! binary (`prunemap bench --child`) so one measurement per process and
+//! no benchmark warms allocator pools, thread pools, or caches for the
+//! next; the child speaks a one-line `RECORD {json}` stdout protocol.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::checksum_f32s;
+use super::defs::{BenchDef, Workload};
+use super::records::{git_rev, Measurement};
+use crate::pruning::{prune, PatternLibrary, Scheme};
+use crate::rng::Rng;
+use crate::runtime::graph::im2col::{im2col, Im2colPanels};
+use crate::runtime::GraphExecutor;
+use crate::serve::{InferRequest, ModelRegistry, PreparedModel, Server, Session};
+use crate::sparse::{permute_rows, reorder_rows, Bcs, Engine, SparseKernel};
+use crate::tensor::Tensor;
+use crate::util::bench::black_box;
+
+/// Prune-and-mask a weight tensor (identity for `Scheme::None`).
+fn masked(w: &Tensor, scheme: &Scheme, compression: f32, lib: &PatternLibrary) -> Tensor {
+    match scheme {
+        Scheme::None => w.clone(),
+        _ => {
+            let r = prune(w, scheme, compression, lib);
+            w.hadamard(&r.mask)
+        }
+    }
+}
+
+fn prepared_for(model: &str, dataset: &str, method: &str, seed: u64) -> Result<PreparedModel> {
+    PreparedModel::builder()
+        .model(model)
+        .dataset(dataset)
+        .method(method)
+        .seed(seed)
+        .build()
+        .with_context(|| format!("prepare model '{model}' on '{dataset}'"))
+}
+
+/// Compile a definition to a run-once closure returning the output the
+/// checksum pins.  All expensive setup (pruning, compilation, session
+/// spin-up) happens here, outside the timed region — the closure is the
+/// steady-state hot path only.
+fn build_runner(def: &BenchDef) -> Result<Box<dyn FnMut() -> Vec<f32>>> {
+    let lib = PatternLibrary::default8();
+    let mut rng = Rng::new(def.seed);
+    let engine = Engine::new(def.threads).with_tile_cols(def.tile);
+    match &def.workload {
+        Workload::Spmm { rows, cols, scheme, compression } => {
+            let w = Tensor::he_normal(&[*rows, *cols], *cols, &mut rng);
+            let t = masked(&w, scheme, *compression, &lib);
+            let t = permute_rows(&t, &reorder_rows(&t));
+            let kernel = Bcs::from_dense(&t);
+            let batch = def.batch;
+            let x: Vec<f32> = (0..cols * batch).map(|i| (i as f32 * 0.11).sin()).collect();
+            let scalar = def.engine == "scalar";
+            Ok(Box::new(move || {
+                if scalar {
+                    kernel.spmm_scalar(&x, batch)
+                } else {
+                    engine.spmm(&kernel, &x, batch)
+                }
+            }))
+        }
+        Workload::Conv { in_ch, out_ch, hw, scheme, compression } => {
+            let w = Tensor::he_normal(&[*out_ch, *in_ch, 3, 3], in_ch * 9, &mut rng);
+            let convw = masked(&w, scheme, *compression, &lib).conv_to_gemm().transpose2();
+            let kernel = Bcs::from_dense(&convw);
+            let (c, s, batch) = (*in_ch, *hw, def.batch);
+            let act: Vec<f32> =
+                (0..c * batch * s * s).map(|i| ((i % 13) as f32) * 0.3 - 1.8).collect();
+            let fused = def.engine == "fused";
+            let mut xmat = Vec::new();
+            Ok(Box::new(move || {
+                if fused {
+                    // the panel view is a lazy re-index over `act`;
+                    // rebuilding it per run costs nothing and keeps the
+                    // closure self-contained
+                    let panels = Im2colPanels::new(&act, c, s, s, batch, 3, 3, 1);
+                    engine.spmm_fused(&kernel, &panels)
+                } else {
+                    let (oh, ow) = im2col(&act, c, s, s, batch, 3, 3, 1, &mut xmat);
+                    engine.spmm(&kernel, &xmat, batch * oh * ow)
+                }
+            }))
+        }
+        Workload::Infer { model, dataset, method } => {
+            let prepared = prepared_for(model, dataset, method, def.seed)?;
+            let exec = match def.engine.as_str() {
+                "serial" => GraphExecutor::serial().with_tile_cols(def.tile),
+                "materialized" => GraphExecutor::new(def.threads).materialized(),
+                _ => GraphExecutor::new(def.threads).with_tile_cols(def.tile),
+            };
+            let (c, h, w) = prepared.input_shape();
+            let batch = def.batch;
+            let input: Vec<f32> =
+                (0..batch * c * h * w).map(|i| ((i % 19) as f32) * 0.21 - 1.9).collect();
+            Ok(Box::new(move || {
+                exec.run(prepared.net(), &input, batch).expect("infer run")
+            }))
+        }
+        Workload::Serve { model, dataset, requests, max_batch, max_wait_ms } => {
+            let prepared = prepared_for(model, dataset, "rule", def.seed)?;
+            let n = prepared.input_len();
+            let coalesced = def.engine == "coalesced";
+            let (mb, mw) = if coalesced {
+                (*max_batch, Duration::from_secs_f64(max_wait_ms / 1e3))
+            } else {
+                (1, Duration::ZERO)
+            };
+            let session = Session::builder(prepared)
+                .threads(def.threads)
+                .max_batch(mb)
+                .max_wait(mw)
+                .build();
+            let nreq = *requests;
+            let mk = move |tag: usize| -> Vec<f32> {
+                (0..n).map(|j| (((tag * 31 + j) % 17) as f32) * 0.25 - 2.0).collect()
+            };
+            Ok(Box::new(move || {
+                let mut out = Vec::new();
+                if coalesced {
+                    let tickets: Vec<_> =
+                        (0..nreq).map(|tag| session.submit(mk(tag)).expect("submit")).collect();
+                    for t in tickets {
+                        out.extend(t.wait().expect("serve wait"));
+                    }
+                } else {
+                    for tag in 0..nreq {
+                        out.extend(session.infer(mk(tag)).expect("serve infer"));
+                    }
+                }
+                out
+            }))
+        }
+        Workload::Routed { models, requests, max_batch, max_wait_ms } => {
+            let routed = def.engine == "routed";
+            let wait = Duration::from_secs_f64(max_wait_ms / 1e3);
+            let prepared: Vec<(String, PreparedModel)> = models
+                .iter()
+                .map(|name| Ok((name.clone(), prepared_for(name, "cifar10", "rule", def.seed)?)))
+                .collect::<Result<_>>()?;
+            // one deterministic input stream per (model, tag) pair so
+            // both engines serve byte-identical request sequences
+            let lens: Vec<usize> = prepared.iter().map(|(_, p)| p.input_len()).collect();
+            let mk = move |m: usize, tag: usize, len: usize| -> Vec<f32> {
+                (0..len).map(|j| (((tag * 31 + j + m * 97) % 17) as f32) * 0.25 - 2.0).collect()
+            };
+            let nreq = *requests;
+            let nmodels = prepared.len();
+            if routed {
+                let registry = ModelRegistry::new();
+                for (name, p) in &prepared {
+                    registry.insert(name, p.clone());
+                }
+                let names: Vec<String> = prepared.iter().map(|(n, _)| n.clone()).collect();
+                let server = Server::builder(registry)
+                    .threads(def.threads)
+                    .max_batch(*max_batch)
+                    .max_wait(wait)
+                    .build();
+                Ok(Box::new(move || {
+                    let tickets: Vec<_> = (0..nreq)
+                        .map(|tag| {
+                            let m = tag % nmodels;
+                            let req = InferRequest::new(&names[m], mk(m, tag, lens[m]));
+                            server.submit(req).expect("routed submit")
+                        })
+                        .collect();
+                    let mut out = Vec::new();
+                    for t in tickets {
+                        out.extend(t.wait().expect("routed wait"));
+                    }
+                    out
+                }))
+            } else {
+                let sessions: Vec<Session> = prepared
+                    .iter()
+                    .map(|(_, p)| {
+                        Session::builder(p.clone())
+                            .threads(def.threads)
+                            .max_batch(*max_batch)
+                            .max_wait(wait)
+                            .build()
+                    })
+                    .collect();
+                Ok(Box::new(move || {
+                    let tickets: Vec<_> = (0..nreq)
+                        .map(|tag| {
+                            let m = tag % nmodels;
+                            sessions[m].submit(mk(m, tag, lens[m])).expect("isolated submit")
+                        })
+                        .collect();
+                    let mut out = Vec::new();
+                    for t in tickets {
+                        out.extend(t.wait().expect("isolated wait"));
+                    }
+                    out
+                }))
+            }
+        }
+    }
+}
+
+/// Run one definition in-process: warmup (checksumming the first run),
+/// then `samples` timed runs.  `samples`/`warmup` override the
+/// definition's counts when given (the CI reduced-iteration knob).
+pub fn measure(
+    def: &BenchDef,
+    samples: Option<usize>,
+    warmup: Option<usize>,
+) -> Result<Measurement> {
+    let mut run = build_runner(def)?;
+    let warmup = warmup.unwrap_or(def.warmup).max(1);
+    let samples = samples.unwrap_or(def.samples).max(1);
+    let mut checksum = String::new();
+    for i in 0..warmup {
+        let out = black_box(run());
+        if i == 0 {
+            checksum = checksum_f32s(&out);
+        }
+    }
+    let mut ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        black_box(run());
+        ns.push(t.elapsed().as_nanos() as f64);
+    }
+    let mean = ns.iter().sum::<f64>() / ns.len() as f64;
+    let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / ns.len() as f64;
+    let min = ns.iter().cloned().fold(f64::INFINITY, f64::min);
+    Ok(Measurement {
+        name: def.name.clone(),
+        engine: def.engine.clone(),
+        config: def.config_json(),
+        iters: samples,
+        mean_ns: mean,
+        stddev_ns: var.sqrt(),
+        min_ns: min,
+        checksum,
+        rev: git_rev(),
+    })
+}
+
+/// Run one definition in a **child process** (re-exec the current
+/// binary with `bench --child`) so nothing leaks between measurements.
+/// The child prints `RECORD {json}` on stdout; everything else it says
+/// is passed through.
+pub fn measure_in_child(
+    def: &BenchDef,
+    samples: Option<usize>,
+    warmup: Option<usize>,
+) -> Result<Measurement> {
+    let source = def
+        .source
+        .as_ref()
+        .ok_or_else(|| anyhow!("definition '{}' has no source file to re-load", def.id()))?;
+    let exe = std::env::current_exe().context("locate current executable")?;
+    let mut cmd = std::process::Command::new(exe);
+    cmd.arg("bench").arg("--defs").arg(source).arg("--only").arg(def.id());
+    if let Some(s) = samples {
+        cmd.arg("--samples").arg(s.to_string());
+    }
+    if let Some(w) = warmup {
+        cmd.arg("--warmup").arg(w.to_string());
+    }
+    cmd.arg("--child");
+    let out = cmd.output().with_context(|| format!("spawn child for '{}'", def.id()))?;
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    if !out.status.success() {
+        bail!(
+            "child measurement of '{}' failed ({}):\n{}{}",
+            def.id(),
+            out.status,
+            stdout,
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    let line = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("RECORD "))
+        .ok_or_else(|| anyhow!("child for '{}' printed no RECORD line:\n{stdout}", def.id()))?;
+    Measurement::from_json(&crate::util::json::Value::parse(line)?)
+        .with_context(|| format!("parse child record for '{}'", def.id()))
+}
+
+/// One definition's `--check` verdict.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckOutcome {
+    /// Observed checksum equals the pinned one.
+    Matched,
+    /// Observed checksum differs — the benchmark's output is wrong (or
+    /// the pin is stale).  Always a failure.
+    Mismatched { expected: String, actual: String },
+    /// The definition has no pinned checksum yet; a failure only under
+    /// `--strict`.
+    Unpinned { actual: String },
+}
+
+/// `--check` over a definition set.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    /// `(benchmark id, source file, outcome)` per definition, in input
+    /// order.
+    pub rows: Vec<(String, Option<std::path::PathBuf>, CheckOutcome)>,
+}
+
+impl CheckReport {
+    pub fn mismatched(&self) -> usize {
+        self.rows.iter().filter(|(_, _, o)| matches!(o, CheckOutcome::Mismatched { .. })).count()
+    }
+
+    pub fn unpinned(&self) -> usize {
+        self.rows.iter().filter(|(_, _, o)| matches!(o, CheckOutcome::Unpinned { .. })).count()
+    }
+
+    /// Nonzero-exit decision: mismatches always fail; unpinned
+    /// definitions fail only under `strict`.
+    pub fn failed(&self, strict: bool) -> bool {
+        self.mismatched() > 0 || (strict && self.unpinned() > 0)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (id, _, outcome) in &self.rows {
+            match outcome {
+                CheckOutcome::Matched => out.push_str(&format!("ok        {id}\n")),
+                CheckOutcome::Unpinned { actual } => {
+                    out.push_str(&format!("unpinned  {id} (observed {actual})\n"))
+                }
+                CheckOutcome::Mismatched { expected, actual } => out.push_str(&format!(
+                    "MISMATCH  {id}: pinned {expected}, observed {actual}\n"
+                )),
+            }
+        }
+        out.push_str(&format!(
+            "{} checked, {} mismatched, {} unpinned\n",
+            self.rows.len(),
+            self.mismatched(),
+            self.unpinned()
+        ));
+        out
+    }
+}
+
+/// Run every definition **once** (no timing) and compare observed
+/// output checksums against the pinned ones.
+pub fn check_defs(defs: &[BenchDef]) -> Result<CheckReport> {
+    let mut rows = Vec::new();
+    for def in defs {
+        let mut run = build_runner(def)?;
+        let actual = checksum_f32s(&run());
+        let outcome = match &def.checksum {
+            None => CheckOutcome::Unpinned { actual },
+            Some(expected) if *expected == actual => CheckOutcome::Matched,
+            Some(expected) => {
+                CheckOutcome::Mismatched { expected: expected.clone(), actual }
+            }
+        };
+        rows.push((def.id(), def.source.clone(), outcome));
+    }
+    Ok(CheckReport { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::defs::defs_from_str;
+
+    const TINY: &str = r#"{
+      "format": "prunemap.benchdefs.v1",
+      "benchmarks": [
+        {"name": "spmm/tiny", "engine": "scalar", "kind": "spmm",
+         "rows": 64, "cols": 64, "scheme": "block4x4", "compression": 4.0,
+         "batch": 4, "samples": 2},
+        {"name": "spmm/tiny", "engine": "simd", "kind": "spmm",
+         "rows": 64, "cols": 64, "scheme": "block4x4", "compression": 4.0,
+         "batch": 4, "samples": 2}
+      ]
+    }"#;
+
+    #[test]
+    fn measure_times_a_tiny_spmm_def() {
+        let defs = defs_from_str(TINY).unwrap();
+        let m = measure(&defs[0], Some(3), Some(1)).unwrap();
+        assert_eq!(m.id(), "spmm/tiny::scalar");
+        assert_eq!(m.iters, 3);
+        assert!(m.mean_ns > 0.0 && m.min_ns > 0.0);
+        assert!(m.min_ns <= m.mean_ns);
+        assert_eq!(m.checksum.len(), 16);
+        // the record round-trips through its own JSON
+        let back = Measurement::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.checksum, m.checksum);
+    }
+
+    #[test]
+    fn engine_variants_of_one_workload_share_a_checksum() {
+        // the barometer's core correctness premise: scalar and SIMD
+        // paths are bit-identical, so one pinned checksum covers both
+        let defs = defs_from_str(TINY).unwrap();
+        let scalar = measure(&defs[0], Some(1), Some(1)).unwrap();
+        let simd = measure(&defs[1], Some(1), Some(1)).unwrap();
+        assert_eq!(scalar.checksum, simd.checksum, "scalar vs simd outputs diverged");
+    }
+
+    #[test]
+    fn check_flags_a_wrong_pin_and_reports_unpinned() {
+        let mut defs = defs_from_str(TINY).unwrap();
+        defs[0].checksum = Some("0000000000000000".to_string()); // wrong on purpose
+        let report = check_defs(&defs).unwrap();
+        assert_eq!(report.mismatched(), 1);
+        assert_eq!(report.unpinned(), 1);
+        assert!(report.failed(false), "a mismatch fails even without --strict");
+        assert!(matches!(
+            &report.rows[0].2,
+            CheckOutcome::Mismatched { expected, .. } if expected == "0000000000000000"
+        ));
+        // pin the observed value -> clean strict pass
+        let CheckOutcome::Mismatched { actual, .. } = report.rows[0].2.clone() else {
+            unreachable!()
+        };
+        let CheckOutcome::Unpinned { actual: actual1 } = report.rows[1].2.clone() else {
+            unreachable!()
+        };
+        defs[0].checksum = Some(actual);
+        defs[1].checksum = Some(actual1);
+        let clean = check_defs(&defs).unwrap();
+        assert!(!clean.failed(true));
+        assert_eq!(clean.mismatched() + clean.unpinned(), 0);
+    }
+
+    #[test]
+    fn checksums_are_deterministic_across_measure_calls() {
+        let defs = defs_from_str(TINY).unwrap();
+        let a = measure(&defs[1], Some(1), Some(2)).unwrap();
+        let b = measure(&defs[1], Some(1), Some(1)).unwrap();
+        assert_eq!(a.checksum, b.checksum);
+    }
+}

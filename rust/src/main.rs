@@ -26,6 +26,21 @@
 //!                          burst of --requests from --clients threads.
 //!                          Serve diagnostics go to stderr (stdout belongs
 //!                          to the wire in stdio mode).
+//!   bench [--defs PATH] [--only SUBSTR] [--samples N] [--warmup N]
+//!         [--json-out F] [--no-fork] [--check] [--strict]
+//!         [--update-checksums]
+//!                          the benchmark barometer: run the checked-in
+//!                          definitions under benches/defs/ (one child
+//!                          process per measurement), print normalized
+//!                          RECORD lines, and verify each definition's
+//!                          pinned output checksum.  --check verifies
+//!                          checksums without timing; --update-checksums
+//!                          pins observed values back into the files.
+//!   bench cmp BASE.json CONT.json [--threshold F] [--report-only]
+//!                          diff two record sets: per-benchmark speedup
+//!                          ratios, nonzero exit on a regression beyond
+//!                          the noise threshold or a checksum drift
+//!   bench rank SET.json    rank engine variants per workload
 //!   e2e [--steps N]        live pipeline on the proxy CNN (needs artifacts)
 //! ```
 
@@ -35,6 +50,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use prunemap::bench::{self, runner, CheckOutcome, RecordSet, RecordSink};
 use prunemap::experiments as exp;
 use prunemap::latmodel::LatencyModel;
 use prunemap::mapping::{self, MappingMethod};
@@ -382,6 +398,133 @@ fn print_session_stats(model: &str, st: &prunemap::serve::SessionStats) {
     }
 }
 
+/// `prunemap bench ...`: the barometer front end.  Sub-commands `cmp`
+/// and `rank` are reporters over record files; everything else runs the
+/// definition set.
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("cmp") => cmd_bench_cmp(args),
+        Some("rank") => {
+            let path = args.positional.get(2).ok_or_else(|| {
+                anyhow!("usage: prunemap bench rank <records.json>")
+            })?;
+            print!("{}", bench::rank(&RecordSet::load(path)?));
+            Ok(())
+        }
+        _ => cmd_bench_run(args),
+    }
+}
+
+/// `prunemap bench cmp BASE CONT`: pair the two record sets, print the
+/// per-benchmark table, and fail on regressions/drift unless
+/// `--report-only`.
+fn cmd_bench_cmp(args: &Args) -> Result<()> {
+    let usage = "usage: prunemap bench cmp <baseline.json> <contender.json> [--threshold F] [--report-only]";
+    let base = args.positional.get(2).ok_or_else(|| anyhow!(usage))?;
+    let cont = args.positional.get(3).ok_or_else(|| anyhow!(usage))?;
+    let threshold = f64::from(args.get_f32("threshold", bench::NOISE_THRESHOLD as f32)?);
+    let report = bench::compare(&RecordSet::load(base)?, &RecordSet::load(cont)?, threshold);
+    print!("{}", report.render());
+    if report.failed() && !args.flag("report-only") {
+        return Err(anyhow!(
+            "{} benchmark(s) regressed beyond the {:.0}% noise threshold, {} checksum drift(s)",
+            report.regressions(),
+            threshold * 100.0,
+            report.drifted()
+        ));
+    }
+    Ok(())
+}
+
+/// The measurement / `--check` path over a definition set.
+fn cmd_bench_run(args: &Args) -> Result<()> {
+    let defs_path = args.get_or("defs", "benches/defs");
+    let mut defs = bench::load_defs(defs_path)?;
+    let child = args.flag("child");
+    if let Some(filter) = args.get("only") {
+        // the child re-exec names one exact id; interactive use filters
+        // by substring
+        if child {
+            defs.retain(|d| d.id() == filter);
+        } else {
+            defs.retain(|d| d.id().contains(filter));
+        }
+        if defs.is_empty() {
+            return Err(anyhow!("--only '{filter}' matched no definition in {defs_path}"));
+        }
+    }
+    let samples = args.get_opt_usize("samples")?;
+    let warmup = args.get_opt_usize("warmup")?;
+
+    if args.flag("check") || args.flag("update-checksums") {
+        let report = runner::check_defs(&defs)?;
+        print!("{}", report.render());
+        if args.flag("update-checksums") {
+            for (id, source, outcome) in &report.rows {
+                let actual = match outcome {
+                    CheckOutcome::Matched => continue,
+                    CheckOutcome::Mismatched { actual, .. } => actual,
+                    CheckOutcome::Unpinned { actual } => actual,
+                };
+                let source = source
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("'{id}' has no source file to pin into"))?;
+                if prunemap::bench::defs::pin_checksum(source, id, actual)? {
+                    println!("pinned {id} = {actual} in {}", source.display());
+                }
+            }
+            return Ok(());
+        }
+        if report.failed(args.flag("strict")) {
+            return Err(anyhow!(
+                "{} checksum mismatch(es), {} unpinned definition(s)",
+                report.mismatched(),
+                report.unpinned()
+            ));
+        }
+        return Ok(());
+    }
+
+    // measurement run: by default one child process per definition so no
+    // benchmark warms pools or caches for the next; --no-fork (and the
+    // child itself) measures in-process
+    let mut sink = RecordSink::new(args.get("json-out").map(std::path::PathBuf::from));
+    let mut drifted = Vec::new();
+    for def in &defs {
+        let m = if child || args.flag("no-fork") {
+            runner::measure(def, samples, warmup)?
+        } else {
+            runner::measure_in_child(def, samples, warmup)?
+        };
+        println!("RECORD {}", m.to_json().compact());
+        if !child {
+            println!(
+                "{:<48} mean {:>12.0}ns  stddev {:>10.0}ns  min {:>12.0}ns  ({} iters)",
+                m.id(),
+                m.mean_ns,
+                m.stddev_ns,
+                m.min_ns,
+                m.iters
+            );
+        }
+        if let Some(expected) = &def.checksum {
+            if *expected != m.checksum {
+                drifted.push(format!("{}: pinned {expected}, observed {}", def.id(), m.checksum));
+            }
+        }
+        sink.push(m)?;
+    }
+    if let Some(path) = args.get("json-out") {
+        if !child {
+            println!("wrote {} record(s) to {path}", sink.records().len());
+        }
+    }
+    if !drifted.is_empty() {
+        return Err(anyhow!("output checksum drift:\n  {}", drifted.join("\n  ")));
+    }
+    Ok(())
+}
+
 #[cfg(pjrt)]
 fn cmd_e2e(args: &Args) -> Result<()> {
     let rt = Runtime::open(Runtime::default_dir())?;
@@ -464,6 +607,7 @@ fn run() -> Result<()> {
         "map" => cmd_map(&args)?,
         "infer" => cmd_infer(&args)?,
         "serve" => cmd_serve(&args)?,
+        "bench" => cmd_bench(&args)?,
         #[cfg(pjrt)]
         "e2e" => cmd_e2e(&args)?,
         #[cfg(not(pjrt))]
@@ -474,7 +618,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|serve|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--deadline-ms F]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--deadline-ms F]"
             );
         }
     }

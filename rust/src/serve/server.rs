@@ -173,13 +173,17 @@ impl Server {
     /// since the session was built (`ModelRegistry::insert` over an
     /// existing name), the session is rebuilt around the new artifact —
     /// requests already queued on the old session still drain against
-    /// the artifact they were admitted to.
+    /// the artifact they were admitted to.  If the registry no longer
+    /// has the name at all (`ModelRegistry::evict` through the shared
+    /// handle), the cached session is dropped here, not just routed
+    /// around: otherwise its batcher workers idle forever and
+    /// [`Server::stats`] keeps reporting a model the registry disowned.
     pub fn session(&self, name: &str) -> Result<Arc<Session>, ServeError> {
         {
-            let artifact = self
-                .registry
-                .get(name)
-                .ok_or_else(|| ServeError::UnknownModel(name.to_string()))?;
+            let Some(artifact) = self.registry.get(name) else {
+                self.purge(name);
+                return Err(ServeError::UnknownModel(name.to_string()));
+            };
             if let Some(session) = self.sessions.read().unwrap().get(name) {
                 if session.prepared().same_artifact(&artifact) {
                     return Ok(Arc::clone(session));
@@ -191,10 +195,14 @@ impl Server {
         // have been rebound or evicted since the fast path looked, and a
         // stale snapshot here would let a lagging thread overwrite a
         // newer session with one built from the old artifact
-        let artifact = self
-            .registry
-            .get(name)
-            .ok_or_else(|| ServeError::UnknownModel(name.to_string()))?;
+        let Some(artifact) = self.registry.get(name) else {
+            let stale = sessions.remove(name);
+            // release the map lock before the stale session can drop —
+            // its drop drains the queue and joins workers
+            drop(sessions);
+            drop(stale);
+            return Err(ServeError::UnknownModel(name.to_string()));
+        };
         if let Some(session) = sessions.get(name) {
             if session.prepared().same_artifact(&artifact) {
                 return Ok(Arc::clone(session));
@@ -229,6 +237,15 @@ impl Server {
     /// Blocking convenience: [`Server::submit`] + [`Ticket::wait`].
     pub fn infer(&self, req: InferRequest) -> Result<Vec<f32>, ServeError> {
         self.submit(req)?.wait()
+    }
+
+    /// Drop any cached session for `name` whose registry entry is gone.
+    /// The temporary write guard is released at the end of the `remove`
+    /// statement; the session itself (queue drain + worker join) drops
+    /// after it.
+    fn purge(&self, name: &str) {
+        let stale = self.sessions.write().unwrap().remove(name);
+        drop(stale);
     }
 
     /// Drop `name` everywhere: the registry entry and the live session
@@ -333,6 +350,26 @@ mod tests {
             server.infer(InferRequest::new("m", vec![0.1; 3072])),
             Err(ServeError::UnknownModel(_))
         ));
+    }
+
+    #[test]
+    fn registry_evict_drops_the_cached_session() {
+        // evicting through the SHARED registry handle (not Server::evict)
+        // used to leave the lazily-built session cached forever: routing
+        // already failed, but the session's workers idled on and stats()
+        // kept reporting the evicted model
+        let server = server_with(&[("m", 1)]);
+        server.infer(InferRequest::new("m", vec![0.1; 3072])).unwrap();
+        assert_eq!(server.stats().len(), 1, "session cached after first request");
+        assert!(server.registry().evict("m").is_some());
+        assert!(matches!(
+            server.infer(InferRequest::new("m", vec![0.1; 3072])),
+            Err(ServeError::UnknownModel(_))
+        ));
+        assert!(
+            server.stats().is_empty(),
+            "the cached session must be dropped once the registry disowns the name"
+        );
     }
 
     #[test]

@@ -130,29 +130,47 @@ pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchStats {
 }
 
 /// Build a baseline-vs-contender comparison record and the median
-/// speedup, without printing.
+/// speedup, without printing.  The speedup is `None` (and the JSON field
+/// `null`) when either median is degenerate — a zero/sub-resolution
+/// timing must not put `inf`/`NaN` into the BENCH record, which
+/// downstream JSON parsers reject.
 pub fn comparison_record(
     name: &str,
     baseline: &BenchStats,
     contender: &BenchStats,
-) -> (Value, f64) {
-    let speedup = baseline.median.as_secs_f64() / contender.median.as_secs_f64().max(1e-12);
+) -> (Value, Option<f64>) {
+    let (b, c) = (baseline.median.as_secs_f64(), contender.median.as_secs_f64());
+    let speedup = if b > 0.0 && c > 0.0 { Some(b / c) } else { None };
     let rec = Value::obj(vec![
         ("bench", Value::str(name.to_string())),
         ("baseline", baseline.to_json()),
         ("contender", contender.to_json()),
-        ("speedup", Value::num(speedup)),
+        ("speedup", speedup.map_or(Value::Null, Value::num)),
     ]);
     (rec, speedup)
 }
 
 /// Print one machine-readable `BENCH {json}` comparison line — the record
 /// BENCH trajectories grep out of bench logs across PRs — and return the
-/// record plus the baseline/contender median speedup.
-pub fn emit_comparison(name: &str, baseline: &BenchStats, contender: &BenchStats) -> (Value, f64) {
+/// record plus the baseline/contender median speedup (see
+/// [`comparison_record`] for the degenerate-timing `None`).
+pub fn emit_comparison(
+    name: &str,
+    baseline: &BenchStats,
+    contender: &BenchStats,
+) -> (Value, Option<f64>) {
     let (rec, speedup) = comparison_record(name, baseline, contender);
     println!("BENCH {}", rec.compact());
     (rec, speedup)
+}
+
+/// Render a speedup for human-facing log lines: "4.00x", or "n/a" when
+/// the ratio was degenerate.
+pub fn fmt_speedup(speedup: Option<f64>) -> String {
+    match speedup {
+        Some(s) => format!("{s:.2}x"),
+        None => "n/a".to_string(),
+    }
 }
 
 #[cfg(test)]
@@ -181,11 +199,35 @@ mod tests {
         let base = mk("scalar", 40);
         let cont = mk("simd", 10);
         let (rec, speedup) = emit_comparison("spmm", &base, &cont);
-        assert!((speedup - 4.0).abs() < 1e-9);
+        assert!((speedup.unwrap() - 4.0).abs() < 1e-9);
         assert_eq!(rec.get("bench").unwrap().as_str().unwrap(), "spmm");
         let j = base.to_json();
         assert_eq!(j.get("name").unwrap().as_str().unwrap(), "scalar");
         assert!((j.get("median_ms").unwrap().as_f64().unwrap() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_median_yields_null_speedup_and_valid_json() {
+        let mk = |name: &str, ms: u64| BenchStats {
+            name: name.to_string(),
+            iters: 3,
+            mean: Duration::from_millis(ms),
+            median: Duration::from_millis(ms),
+            p95: Duration::from_millis(ms),
+            min: Duration::from_millis(ms),
+        };
+        // a zero-duration contender used to divide-by-~0 into an inf
+        // speedup, which serialized as `inf` — not JSON
+        let (rec, speedup) = comparison_record("degen", &mk("base", 40), &mk("cont", 0));
+        assert_eq!(speedup, None);
+        assert_eq!(rec.get("speedup").unwrap(), &Value::Null);
+        let text = rec.compact();
+        Value::parse(&text).expect("BENCH record must stay parseable JSON");
+        assert_eq!(fmt_speedup(speedup), "n/a");
+        assert_eq!(fmt_speedup(Some(4.0)), "4.00x");
+        // zero baseline is equally degenerate
+        let (_, s2) = comparison_record("degen2", &mk("base", 0), &mk("cont", 40));
+        assert_eq!(s2, None);
     }
 
     #[test]

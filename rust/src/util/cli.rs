@@ -77,6 +77,18 @@ impl Args {
         }
     }
 
+    /// Optional integer override: `Some(n)` only when `--name N` was
+    /// given (the bench harness distinguishes "use the definition's
+    /// count" from "override it").
+    pub fn get_opt_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| anyhow!("--{name} expects an integer, got '{s}'"))
+            })
+            .transpose()
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -279,5 +291,8 @@ mod tests {
         assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
         let bad = Args::parse(toks("--n abc"));
         assert!(bad.get_usize("n", 0).is_err());
+        assert_eq!(a.get_opt_usize("n").unwrap(), Some(12));
+        assert_eq!(a.get_opt_usize("missing").unwrap(), None);
+        assert!(bad.get_opt_usize("n").is_err());
     }
 }

@@ -164,7 +164,11 @@ impl Value {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN literal; `null` keeps the
+                    // document parseable for downstream readers
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -463,6 +467,18 @@ mod tests {
         assert!(Value::parse("-1").unwrap().as_u64().is_err());
         assert!(Value::parse("1.5").unwrap().as_u64().is_err());
         assert!(Value::parse("\"abc\"").unwrap().as_u64().is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // JSON has no inf/NaN literal — a raw `{n}` would emit invalid
+        // JSON that no parser (including this one) can read back
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let v = Value::obj(vec![("speedup", Value::num(bad))]);
+            let text = v.compact();
+            assert_eq!(text, r#"{"speedup":null}"#);
+            assert_eq!(Value::parse(&text).unwrap().get("speedup").unwrap(), &Value::Null);
+        }
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Acceptance suite for the benchmark barometer (`prunemap bench`):
+//!
+//! * the harness runs a definition file end to end in its default
+//!   child-process-per-measurement mode, prints normalized `RECORD`
+//!   lines, and writes a loadable `--json-out` record set;
+//! * `--update-checksums` pins observed output checksums into the
+//!   definition file, after which `--check --strict` passes — and a
+//!   corrupted pin makes `--check` fail loudly (every benchmark is also
+//!   a correctness test);
+//! * `bench cmp` exits zero on a clean pair, nonzero on an injected
+//!   regression beyond the noise threshold, and zero again under
+//!   `--report-only`;
+//! * `bench rank` orders engine variants of one workload.
+//!
+//! Reporter classification details (win / regression / within-noise /
+//! one-sided / drift) are unit-tested in `src/bench/cmp.rs`; this suite
+//! drives the real binary.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+use prunemap::bench::RecordSet;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_prunemap"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("prunemap_barometer_{}_{name}", std::process::id()))
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// A two-variant spmm workload, small enough for debug-mode children.
+const TINY_DEFS: &str = r#"{
+  "format": "prunemap.benchdefs.v1",
+  "benchmarks": [
+    {"name": "it/spmm64/b4", "engine": "scalar", "kind": "spmm",
+     "rows": 64, "cols": 64, "scheme": "block4x4", "compression": 4.0,
+     "batch": 4, "threads": 1, "seed": 1, "warmup": 1, "samples": 2,
+     "checksum": null},
+    {"name": "it/spmm64/b4", "engine": "simd", "kind": "spmm",
+     "rows": 64, "cols": 64, "scheme": "block4x4", "compression": 4.0,
+     "batch": 4, "threads": 1, "seed": 1, "warmup": 1, "samples": 2,
+     "checksum": null}
+  ]
+}"#;
+
+#[test]
+fn harness_runs_defs_in_child_processes_and_writes_records() {
+    let defs = tmp("run_defs.json");
+    let out_path = tmp("run_records.json");
+    std::fs::write(&defs, TINY_DEFS).unwrap();
+    let out = bin()
+        .arg("bench")
+        .arg("--defs")
+        .arg(&defs)
+        .arg("--json-out")
+        .arg(&out_path)
+        .output()
+        .expect("run prunemap bench");
+    assert!(out.status.success(), "bench run failed:\n{}{}", stdout(&out), stderr(&out));
+    let text = stdout(&out);
+    let record_lines: Vec<&str> =
+        text.lines().filter(|l| l.starts_with("RECORD ")).collect();
+    assert_eq!(record_lines.len(), 2, "one RECORD line per definition:\n{text}");
+
+    let set = RecordSet::load(&out_path).expect("load --json-out records");
+    assert_eq!(set.records.len(), 2);
+    let scalar = set.find("it/spmm64/b4::scalar").expect("scalar record");
+    let simd = set.find("it/spmm64/b4::simd").expect("simd record");
+    assert!(scalar.mean_ns > 0.0 && simd.mean_ns > 0.0);
+    assert_eq!(scalar.iters, 2);
+    assert_eq!(
+        scalar.checksum, simd.checksum,
+        "engine variants of one workload must be bit-identical"
+    );
+    assert_eq!(scalar.checksum.len(), 16);
+    let _ = std::fs::remove_file(&defs);
+    let _ = std::fs::remove_file(&out_path);
+}
+
+#[test]
+fn check_pins_verifies_and_fails_on_a_corrupted_pin() {
+    let defs = tmp("check_defs.json");
+    std::fs::write(&defs, TINY_DEFS).unwrap();
+
+    // strict check over unpinned definitions fails (nothing to verify)
+    let unpinned = bin()
+        .args(["bench", "--defs"])
+        .arg(&defs)
+        .args(["--check", "--strict"])
+        .output()
+        .unwrap();
+    assert!(!unpinned.status.success(), "--strict must fail on unpinned defs");
+
+    // pin the observed checksums into the file
+    let pin = bin()
+        .args(["bench", "--defs"])
+        .arg(&defs)
+        .arg("--update-checksums")
+        .output()
+        .unwrap();
+    assert!(pin.status.success(), "pinning failed:\n{}{}", stdout(&pin), stderr(&pin));
+    assert!(stdout(&pin).contains("pinned it/spmm64/b4::scalar"), "{}", stdout(&pin));
+    let pinned_text = std::fs::read_to_string(&defs).unwrap();
+    assert!(!pinned_text.contains("null"), "checksums pinned in-place:\n{pinned_text}");
+
+    // now a strict check passes
+    let check = bin()
+        .args(["bench", "--defs"])
+        .arg(&defs)
+        .args(["--check", "--strict"])
+        .output()
+        .unwrap();
+    assert!(check.status.success(), "check failed:\n{}{}", stdout(&check), stderr(&check));
+    assert!(stdout(&check).contains("2 checked, 0 mismatched, 0 unpinned"));
+
+    // corrupt the pins -> the checksum test fails loudly
+    let scalar_sum = RecordSetProbe::checksum_in(&pinned_text);
+    let corrupted = pinned_text.replace(&scalar_sum, "0000000000000000");
+    std::fs::write(&defs, corrupted).unwrap();
+    let bad = bin().args(["bench", "--defs"]).arg(&defs).arg("--check").output().unwrap();
+    assert!(!bad.status.success(), "a wrong pin must fail --check");
+    assert!(stdout(&bad).contains("MISMATCH"), "{}", stdout(&bad));
+    let _ = std::fs::remove_file(&defs);
+}
+
+/// Pull the pinned 16-hex-digit checksum out of a definition file.
+struct RecordSetProbe;
+impl RecordSetProbe {
+    fn checksum_in(text: &str) -> String {
+        text.split("\"checksum\": \"")
+            .nth(1)
+            .and_then(|rest| rest.split('"').next())
+            .expect("a pinned checksum in the defs file")
+            .to_string()
+    }
+}
+
+fn record(name: &str, engine: &str, mean: f64, checksum: &str) -> String {
+    format!(
+        r#"{{"name": "{name}", "engine": "{engine}", "config": null, "iters": 5,
+            "mean_ns": {mean}, "stddev_ns": 1.0, "min_ns": {mean},
+            "checksum": "{checksum}", "rev": "test"}}"#
+    )
+}
+
+fn record_set(records: &[String]) -> String {
+    format!(
+        r#"{{"format": "prunemap.benchrecords.v1", "records": [{}]}}"#,
+        records.join(",")
+    )
+}
+
+#[test]
+fn cmp_exits_nonzero_on_regression_and_zero_in_report_only() {
+    let base_path = tmp("cmp_base.json");
+    let cont_path = tmp("cmp_cont.json");
+    std::fs::write(
+        &base_path,
+        record_set(&[record("a", "simd", 1000.0, "c1"), record("b", "simd", 1000.0, "c2")]),
+    )
+    .unwrap();
+
+    // clean pair: a 2x win and a within-noise wobble -> exit 0
+    std::fs::write(
+        &cont_path,
+        record_set(&[record("a", "simd", 500.0, "c1"), record("b", "simd", 1050.0, "c2")]),
+    )
+    .unwrap();
+    let clean = bin().args(["bench", "cmp"]).arg(&base_path).arg(&cont_path).output().unwrap();
+    assert!(clean.status.success(), "clean cmp failed:\n{}{}", stdout(&clean), stderr(&clean));
+    assert!(stdout(&clean).contains("2.00x"), "{}", stdout(&clean));
+    assert!(stdout(&clean).contains("0 regressed"), "{}", stdout(&clean));
+
+    // injected regression beyond the 10% noise threshold -> nonzero exit
+    std::fs::write(
+        &cont_path,
+        record_set(&[record("a", "simd", 1300.0, "c1"), record("b", "simd", 1000.0, "c2")]),
+    )
+    .unwrap();
+    let reg = bin().args(["bench", "cmp"]).arg(&base_path).arg(&cont_path).output().unwrap();
+    assert!(!reg.status.success(), "a regression must exit nonzero:\n{}", stdout(&reg));
+    assert!(stdout(&reg).contains("REGRESSED"), "{}", stdout(&reg));
+
+    // same pair in report-only mode -> exit 0, regression still printed
+    let report = bin()
+        .args(["bench", "cmp"])
+        .arg(&base_path)
+        .arg(&cont_path)
+        .arg("--report-only")
+        .output()
+        .unwrap();
+    assert!(report.status.success(), "--report-only must never fail the build");
+    assert!(stdout(&report).contains("REGRESSED"), "{}", stdout(&report));
+
+    // a wider threshold waves the same slowdown through
+    let wide = bin()
+        .args(["bench", "cmp"])
+        .arg(&base_path)
+        .arg(&cont_path)
+        .args(["--threshold", "0.5"])
+        .output()
+        .unwrap();
+    assert!(wide.status.success(), "30% slower is within a 50% threshold");
+    let _ = std::fs::remove_file(&base_path);
+    let _ = std::fs::remove_file(&cont_path);
+}
+
+#[test]
+fn rank_orders_engine_variants_within_one_record_set() {
+    let path = tmp("rank.json");
+    std::fs::write(
+        &path,
+        record_set(&[
+            record("w", "scalar", 4000.0, "c"),
+            record("w", "simd", 1000.0, "c"),
+        ]),
+    )
+    .unwrap();
+    let out = bin().args(["bench", "rank"]).arg(&path).output().unwrap();
+    assert!(out.status.success(), "rank failed:\n{}{}", stdout(&out), stderr(&out));
+    let text = stdout(&out);
+    let simd = text.find("simd").expect("simd row");
+    let scalar = text.find("scalar").expect("scalar row");
+    assert!(simd < scalar, "fastest variant first:\n{text}");
+    assert!(text.contains("4.00x"), "{text}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checked_in_baseline_records_load_and_pair_with_defs() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let set = RecordSet::load(manifest.join("benches/records/baseline.json"))
+        .expect("checked-in baseline must parse");
+    assert!(set.records.len() >= 10);
+    let defs = prunemap::bench::load_defs(manifest.join("benches/defs"))
+        .expect("checked-in defs must parse");
+    for def in &defs {
+        assert!(
+            set.find(&def.id()).is_some(),
+            "definition '{}' has no baseline record to cmp against",
+            def.id()
+        );
+    }
+}

@@ -182,6 +182,45 @@ fn expired_deadline_is_rejected_not_served_late() {
 }
 
 #[test]
+fn evicted_model_is_unknown_on_the_wire_not_stale() {
+    // Regression: evicting a model through the shared registry handle
+    // after its session was lazily cached must surface as a typed
+    // UnknownModel over the wire — never a stale answer from the cached
+    // session — and must actually drop that session.
+    let registry = two_model_registry();
+    let server = Arc::new(Server::builder(registry.clone()).threads(1).build());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let acceptor = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(1)))
+    };
+    let alpha = registry.get("alpha").unwrap();
+    let n = alpha.input_len();
+    let mut client = wire::Client::connect(addr).unwrap();
+    // first request builds and caches alpha's session
+    let ok = client.infer(&InferRequest::new("alpha", sample(n, 0))).unwrap();
+    assert_eq!(ok.unwrap(), solo_answers(&alpha, 1)[0]);
+    assert!(server.stats().contains_key("alpha"), "session cached after first request");
+    // evict through the registry handle the server shares
+    assert!(registry.evict("alpha").is_some());
+    match client.infer(&InferRequest::new("alpha", sample(n, 0))).unwrap() {
+        Err(ServeError::UnknownModel(name)) => assert_eq!(name, "alpha"),
+        other => panic!("expected UnknownModel after evict, got {other:?}"),
+    }
+    assert!(
+        !server.stats().contains_key("alpha"),
+        "the evicted model's cached session must be dropped, not kept warm"
+    );
+    // the untouched model still serves on the same connection
+    let beta = registry.get("beta").unwrap();
+    let yb = client.infer(&InferRequest::new("beta", sample(beta.input_len(), 1))).unwrap();
+    assert_eq!(yb.unwrap(), solo_answers(&beta, 2)[1]);
+    drop(client);
+    acceptor.join().expect("acceptor").unwrap();
+}
+
+#[test]
 fn wire_tcp_round_trip_including_malformed_frames() {
     let registry = two_model_registry();
     let server = Arc::new(Server::builder(registry.clone()).threads(env_threads(2)).build());
