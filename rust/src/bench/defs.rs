@@ -100,7 +100,9 @@ pub enum Workload {
     /// Engines: `materialized` | `fused`.
     Conv { in_ch: usize, out_ch: usize, hw: usize, scheme: Scheme, compression: f32 },
     /// Whole-network inference through the graph executor.
-    /// Engines: `serial` | `fused` | `materialized`.
+    /// Engines: `serial` | `fused` | `materialized` | `traced` (fused
+    /// with an attached [`crate::telemetry::TraceRing`] — the overhead
+    /// barometer for always-on span recording).
     Infer { model: String, dataset: String, method: String },
     /// A burst of single-sample requests through one serving session.
     /// Engines: `one_per_run` | `coalesced`.
@@ -117,7 +119,7 @@ impl Workload {
         match self {
             Workload::Spmm { .. } => &["scalar", "simd"],
             Workload::Conv { .. } => &["materialized", "fused"],
-            Workload::Infer { .. } => &["serial", "fused", "materialized"],
+            Workload::Infer { .. } => &["serial", "fused", "materialized", "traced"],
             Workload::Serve { .. } => &["one_per_run", "coalesced"],
             Workload::Routed { .. } => &["isolated", "routed"],
         }

@@ -26,6 +26,7 @@ use crate::runtime::graph::im2col::{im2col, Im2colPanels};
 use crate::runtime::GraphExecutor;
 use crate::serve::{InferRequest, ModelRegistry, PreparedModel, Server, Session};
 use crate::sparse::{permute_rows, reorder_rows, Bcs, Engine, SparseKernel};
+use crate::telemetry::TraceRing;
 use crate::tensor::Tensor;
 use crate::util::bench::black_box;
 
@@ -102,6 +103,11 @@ fn build_runner(def: &BenchDef) -> Result<Box<dyn FnMut() -> Vec<f32>>> {
             let exec = match def.engine.as_str() {
                 "serial" => GraphExecutor::serial().with_tile_cols(def.tile),
                 "materialized" => GraphExecutor::new(def.threads).materialized(),
+                // the tracing-overhead contender: identical to `fused`
+                // except every run records spans into a live ring
+                "traced" => GraphExecutor::new(def.threads)
+                    .with_tile_cols(def.tile)
+                    .with_trace(TraceRing::new(4096)),
                 _ => GraphExecutor::new(def.threads).with_tile_cols(def.tile),
             };
             let (c, h, w) = prepared.input_shape();

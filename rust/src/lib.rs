@@ -44,6 +44,7 @@ pub mod runtime;
 pub mod serve;
 pub mod simulator;
 pub mod sparse;
+pub mod telemetry;
 pub mod tensor;
 pub mod train;
 

@@ -15,17 +15,27 @@
 //!         [--materialized] [--json-out F]
 //!                          native end-to-end inference through the graph
 //!                          executor: per-layer scheme + measured latency
+//!   profile --model M [--reps N] [--warmup N] [--batch N] [--threads N]
+//!           [--json-out F] [--trace-out F]
+//!                          run N traced inferences, aggregate the
+//!                          recorded spans into a per-layer time table,
+//!                          and emit the trace-fed calibration record
+//!                          (plus a Chrome trace-event JSON dump)
 //!   serve [--models M1,M2 | --model M] [--listen ADDR|stdio] [--conns N]
 //!         [--requests N] [--clients N] [--deadline-ms F] [--max-batch N]
 //!         [--max-wait-ms F] [--workers N] [--save F | --load [name=]F]
+//!         [--metrics ADDR] [--trace-out F]
 //!                          multi-model serving front door: compile each
 //!                          model once, route typed requests by name with
 //!                          priority lanes + deadline admission.  With
 //!                          --listen, speak the line-JSON wire protocol
 //!                          over TCP or stdio; otherwise run an in-process
 //!                          burst of --requests from --clients threads.
-//!                          Serve diagnostics go to stderr (stdout belongs
-//!                          to the wire in stdio mode).
+//!                          --metrics serves the Prometheus exposition
+//!                          document to HTTP scrapers; --trace-out dumps
+//!                          every recorded span as Chrome trace JSON when
+//!                          serving ends.  Serve diagnostics go to stderr
+//!                          (stdout belongs to the wire in stdio mode).
 //!   bench [--defs PATH] [--only SUBSTR] [--samples N] [--warmup N]
 //!         [--json-out F] [--no-fork] [--check] [--strict]
 //!         [--update-checksums]
@@ -57,11 +67,12 @@ use prunemap::mapping::{self, MappingMethod};
 use prunemap::models::{zoo, Dataset, ModelSpec};
 #[cfg(pjrt)]
 use prunemap::runtime::Runtime;
-use prunemap::serve::session::wait_bucket_labels;
+use prunemap::runtime::{Arena, GraphExecutor};
 use prunemap::serve::{
     wire, InferRequest, ModelRegistry, PreparedModel, Priority, ServeError, Server, Session, Ticket,
 };
-use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile};
+use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile, PerLayerCalibration};
+use prunemap::telemetry::{self, trace, TraceRing};
 use prunemap::util::cli::Args;
 
 fn model_by_name(name: &str, ds: Dataset) -> Result<ModelSpec> {
@@ -192,6 +203,131 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `prunemap profile`: run `--reps` traced inferences through the graph
+/// executor, aggregate the recorded step spans into a per-layer time
+/// table, and join the measured means against the analytic cost model —
+/// the trace-fed calibration record [`PerLayerCalibration`] feeds
+/// `simulator::cost` tuning.  `--trace-out` additionally dumps every
+/// span as Chrome trace-event JSON (load it in `chrome://tracing` or
+/// Perfetto).
+fn cmd_profile(args: &Args) -> Result<()> {
+    let dev = device(args)?;
+    let threads = args.engine_threads()?;
+    let batch = args.batch_size(1)?;
+    let reps = args.get_usize("reps", 10)?.max(1);
+    let warmup = args.get_usize("warmup", 1)?;
+    let prepared = prepared_from_args(args)?;
+    let net = prepared.net();
+
+    // sized so a full profile run never evicts: every step can emit a
+    // step span plus up to three op spans, and each run adds a root +
+    // batch-assembly slack
+    let ring = TraceRing::new(reps * (net.steps.len() * 4 + 2) + 16);
+    let mut executor = GraphExecutor::new(threads)
+        .with_tile_cols(args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?)
+        .with_trace(Arc::clone(&ring));
+    if args.materialized() {
+        executor = executor.materialized();
+    }
+
+    let (c, h, w) = prepared.input_shape();
+    let input: Vec<f32> = (0..batch * c * h * w)
+        .map(|i| ((i % 17) as f32) * 0.25 - 2.0)
+        .collect();
+    let mut arena = Arena::new();
+    for _ in 0..warmup {
+        executor.run_with_arena(net, &input, batch, &mut arena)?;
+    }
+    ring.clear();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        executor.run_with_arena(net, &input, batch, &mut arena)?;
+    }
+    let elapsed = t0.elapsed();
+    let spans = ring.snapshot();
+
+    // aggregate step spans by name in first-seen (execution) order; the
+    // mean over reps is the per-layer measurement the table and the
+    // calibration record share
+    let mut order: Vec<String> = Vec::new();
+    let mut total_ns: std::collections::HashMap<String, u64> = std::collections::HashMap::new();
+    for s in spans.iter().filter(|s| s.cat == trace::CAT_STEP) {
+        if !total_ns.contains_key(&s.name) {
+            order.push(s.name.clone());
+        }
+        *total_ns.entry(s.name.clone()).or_insert(0) += s.dur_ns;
+    }
+    let measured: Vec<(String, f64)> = order
+        .iter()
+        .map(|name| (name.clone(), total_ns[name] as f64 / 1e6 / reps as f64))
+        .collect();
+
+    println!(
+        "{} ({} layers, {} steps) | input {c}x{h}x{w} | batch {batch} | {threads} threads | {reps} rep(s) | {} im2col\n",
+        prepared.name(),
+        net.layers.len(),
+        net.steps.len(),
+        if args.materialized() { "materialized" } else { "fused" }
+    );
+    println!(
+        "{:<16} {:>14} {:>6} {:>8} {:>12} {:>10}",
+        "layer", "scheme", "comp", "backend", "nnz", "mean ms"
+    );
+    let summaries: std::collections::HashMap<String, prunemap::runtime::graph::LayerSummary> =
+        net.summaries().into_iter().map(|s| (s.name.clone(), s)).collect();
+    let mut total_ms = 0.0;
+    for (name, ms) in &measured {
+        total_ms += *ms;
+        match summaries.get(name) {
+            Some(s) => println!(
+                "{:<16} {:>14} {:>5.1}x {:>8} {:>12} {:>9.3}ms",
+                s.name, s.scheme, s.compression, s.backend, s.nnz, ms
+            ),
+            None => println!(
+                "{:<16} {:>14} {:>6} {:>8} {:>12} {:>9.3}ms",
+                name, "-", "-", "-", "-", ms
+            ),
+        }
+    }
+    println!(
+        "\ntotal {total_ms:.3}ms mean per run | {:.1}ms wall over {reps} rep(s) | {} span(s) recorded, {} dropped",
+        elapsed.as_secs_f64() * 1e3,
+        spans.len(),
+        ring.dropped()
+    );
+
+    let cal = PerLayerCalibration::new(
+        prepared.model(),
+        prepared.assigns(),
+        &dev,
+        &measured,
+        threads,
+        batch,
+        reps,
+    )?;
+    println!("\nper-layer measured-vs-modeled ({}):", dev.name);
+    for l in &cal.layers {
+        println!(
+            "  {:<16} modeled {:>8.3}ms  measured {:>8.3}ms  ratio {:>5.2}x",
+            l.name,
+            l.modeled_ms,
+            l.measured_ms,
+            l.ratio()
+        );
+    }
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, cal.to_json().pretty())
+            .with_context(|| format!("write calibration record to {path}"))?;
+        println!("wrote calibration record to {path}");
+    }
+    if let Some(path) = args.trace_out() {
+        std::fs::write(path, telemetry::chrome_trace_json(&spans).pretty())
+            .with_context(|| format!("write trace to {path}"))?;
+        println!("wrote {} trace span(s) to {path}", spans.len());
+    }
+    Ok(())
+}
+
 /// Build the serving registry from the CLI: either one `--load
 /// [name=]recipe.json` artifact (registered under `name`, defaulting to
 /// the lowercased spec name), or every `--models`/`--model` zoo name,
@@ -238,20 +374,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.max_batch(32)?;
     let max_wait = args.max_wait(2.0)?;
     let workers = args.get_usize("workers", 1)?;
-    let server = Arc::new(
-        Server::builder(registry.clone())
-            .threads(threads)
-            .tile_cols(args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?)
-            .fused(!args.materialized())
-            .max_batch(max_batch)
-            .max_wait(max_wait)
-            .workers(workers)
-            .build(),
-    );
+    // the ring exists only when someone will read it (--trace-out), so
+    // the default serve path stays allocation- and lock-free on spans
+    let ring = args.trace_out().map(|_| TraceRing::new(65_536));
+    let mut builder = Server::builder(registry.clone())
+        .threads(threads)
+        .tile_cols(args.tile_cols(prunemap::sparse::DEFAULT_TILE_COLS)?)
+        .fused(!args.materialized())
+        .max_batch(max_batch)
+        .max_wait(max_wait)
+        .workers(workers);
+    if let Some(ring) = &ring {
+        builder = builder.trace(Arc::clone(ring));
+    }
+    let server = Arc::new(builder.build());
     eprintln!(
         "front door: [{}] | {threads} engine threads | max batch {max_batch} | max wait {max_wait:?} | {workers} worker(s) per model",
         registry.names().join(", ")
     );
+    if let Some(addr) = args.metrics_addr() {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("bind metrics listener on {addr}"))?;
+        eprintln!("metrics on http://{}/metrics", listener.local_addr()?);
+        let scraped = Arc::clone(&server);
+        // the scrape loop runs until the process exits; each GET renders
+        // a fresh snapshot of every session's counters
+        std::thread::Builder::new()
+            .name("prunemap-metrics".into())
+            .spawn(move || {
+                if let Err(e) = telemetry::serve_text(listener, None, move || scraped.metrics_text())
+                {
+                    eprintln!("metrics listener failed: {e}");
+                }
+            })
+            .context("spawn metrics listener thread")?;
+    }
 
     match args.listen() {
         Some("stdio") => {
@@ -275,6 +432,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     for (model, st) in server.stats() {
         print_session_stats(&model, &st);
+    }
+    if let (Some(path), Some(ring)) = (args.trace_out(), &ring) {
+        std::fs::write(path, telemetry::chrome_trace_json(&ring.snapshot()).pretty())
+            .with_context(|| format!("write trace to {path}"))?;
+        eprintln!("wrote {} trace span(s) to {path} ({} dropped)", ring.len(), ring.dropped());
     }
     Ok(())
 }
@@ -367,35 +529,12 @@ fn serve_burst(args: &Args, server: &Server) -> Result<()> {
 }
 
 /// Print one model's admission counters (the `Server::stats` snapshot):
-/// throughput shape, queue pressure, and wait-time distribution.
+/// throughput shape, queue pressure, and wait-time distribution.  The
+/// text itself is rendered by [`telemetry::render_session_stats`] — the
+/// same renderer the exporter tests pin — so CLI output and exporter
+/// cannot drift apart.
 fn print_session_stats(model: &str, st: &prunemap::serve::SessionStats) {
-    eprintln!(
-        "model {model}: {} request(s) in {} run(s) | max coalesced {} | {:.2} requests/run | {} padded lanes | queue depth hwm {} | high/normal {}/{} | {} expired",
-        st.requests,
-        st.runs,
-        st.max_coalesced,
-        st.requests as f64 / st.runs.max(1) as f64,
-        st.padded_lanes,
-        st.queue_depth_hwm,
-        st.served_by_priority[0],
-        st.served_by_priority[1],
-        st.expired
-    );
-    for (batch, runs) in &st.batch_runs {
-        eprintln!("  executed batch {batch:>4}: {runs} run(s)");
-    }
-    for (occupancy, runs) in &st.batch_occupancy {
-        eprintln!("  occupancy {occupancy:>4}: {runs} run(s)");
-    }
-    let waits: Vec<String> = wait_bucket_labels()
-        .iter()
-        .zip(st.wait_buckets.iter())
-        .filter(|(_, &n)| n > 0)
-        .map(|(label, n)| format!("{label}={n}"))
-        .collect();
-    if !waits.is_empty() {
-        eprintln!("  wait: {}", waits.join(" "));
-    }
+    eprint!("{}", telemetry::render_session_stats(model, st));
 }
 
 /// `prunemap bench ...`: the barometer front end.  Sub-commands `cmp`
@@ -606,6 +745,7 @@ fn run() -> Result<()> {
         }
         "map" => cmd_map(&args)?,
         "infer" => cmd_infer(&args)?,
+        "profile" => cmd_profile(&args)?,
         "serve" => cmd_serve(&args)?,
         "bench" => cmd_bench(&args)?,
         #[cfg(pjrt)]
@@ -618,7 +758,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--deadline-ms F]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|profile|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--deadline-ms F] [--metrics ADDR] [--trace-out F]"
             );
         }
     }

@@ -45,10 +45,13 @@ pub use lower::{
 pub use ops::{BnParams, EpiOp};
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::sparse::Engine;
+use crate::telemetry::trace::{self, TraceRing};
+use crate::telemetry::Span;
 
 use self::im2col::Im2colPanels;
 use super::native::NativeEngine;
@@ -149,19 +152,20 @@ impl Arena {
 pub struct GraphExecutor {
     engine: NativeEngine,
     fused: bool,
+    trace: Option<Arc<TraceRing>>,
 }
 
 impl GraphExecutor {
     pub fn new(threads: usize) -> GraphExecutor {
-        GraphExecutor { engine: NativeEngine::new(threads), fused: true }
+        GraphExecutor { engine: NativeEngine::new(threads), fused: true, trace: None }
     }
 
     pub fn serial() -> GraphExecutor {
-        GraphExecutor { engine: NativeEngine::serial(), fused: true }
+        GraphExecutor { engine: NativeEngine::serial(), fused: true, trace: None }
     }
 
     pub fn with_engine(engine: NativeEngine) -> GraphExecutor {
-        GraphExecutor { engine, fused: true }
+        GraphExecutor { engine, fused: true, trace: None }
     }
 
     /// Run convs through the materialized-X im2col path instead of the
@@ -176,6 +180,21 @@ impl GraphExecutor {
     pub fn with_tile_cols(mut self, tile: usize) -> GraphExecutor {
         self.engine = self.engine.with_tile_cols(tile);
         self
+    }
+
+    /// Record trace spans into `ring` on every run: one `run` span per
+    /// invocation, a `step` span per lowered graph step (parented to
+    /// the run), and `op` spans for the im2col / spmm / epilogue work
+    /// inside each GEMM step.  Without a ring attached the hot path
+    /// only ever takes an untaken `None` branch.
+    pub fn with_trace(mut self, ring: Arc<TraceRing>) -> GraphExecutor {
+        self.trace = Some(ring);
+        self
+    }
+
+    /// The attached span ring, if any.
+    pub fn trace_ring(&self) -> Option<&Arc<TraceRing>> {
+        self.trace.as_ref()
     }
 
     pub fn threads(&self) -> usize {
@@ -264,9 +283,14 @@ impl GraphExecutor {
         im2col::nchw_to_act_into(input, batch, ic, ih * iw, &mut inp);
         slots[net.input_slot] = inp;
 
+        // span ids are reserved before the work they cover so children
+        // can name their parent while it is still open
+        let tr = self.trace.as_deref();
+        let run_span = tr.map(|r| (r.next_id(), trace::now_ns()));
         let engine = self.engine.engine();
         for step in &net.steps {
             let t0 = std::time::Instant::now();
+            let step_span = tr.map(|r| (r.next_id(), trace::now_ns()));
             let (c, h, w) = step.in_shape;
             // the allocator guarantees dst != src (and dst != any residual
             // slot), so replacing dst's buffer never aliases a read; the
@@ -279,6 +303,7 @@ impl GraphExecutor {
             match &step.op {
                 StepOp::Gemm { layer, epilogue } => {
                     let lay = &net.layers[*layer];
+                    let gemm_trace = tr.zip(step_span.map(|(id, _)| id));
                     run_gemm(
                         engine,
                         lay,
@@ -286,16 +311,24 @@ impl GraphExecutor {
                         (c, h, w),
                         batch,
                         self.fused,
+                        gemm_trace,
                         arena,
                         &mut out,
                     )?;
                     let cols = batch * oh * ow;
                     debug_assert_eq!(out.len(), oc * cols);
+                    let epi_start = tr.map(|_| trace::now_ns());
                     for e in epilogue {
                         match e {
                             EpiOp::BatchNorm(p) => p.apply(&mut out, cols),
                             EpiOp::Relu => ops::relu(&mut out),
                             EpiOp::Add { slot } => ops::add_assign(&mut out, &slots[*slot]),
+                        }
+                    }
+                    if let (Some((r, parent)), Some(t)) = (gemm_trace, epi_start) {
+                        if !epilogue.is_empty() {
+                            let name = format!("{}/epilogue", step.name);
+                            r.record(Span::until_now(name, trace::CAT_OP, t).parent(parent));
                         }
                     }
                 }
@@ -323,6 +356,12 @@ impl GraphExecutor {
             }
             debug_assert_eq!(out.len(), oc * oh * ow * batch, "step '{}'", step.name);
             slots[step.dst] = out;
+            if let (Some(r), Some((id, start))) = (tr, step_span) {
+                let mut span = Span::until_now(step.name.clone(), trace::CAT_STEP, start);
+                span.id = id;
+                span.parent = run_span.map_or(0, |(rid, _)| rid);
+                r.record(span);
+            }
             if timed {
                 timings.push(StepTiming {
                     name: step.name.clone(),
@@ -336,6 +375,11 @@ impl GraphExecutor {
         for s in slots {
             arena.release(s);
         }
+        if let (Some(r), Some((id, start))) = (tr, run_span) {
+            let mut span = Span::until_now(format!("net[b{batch}]"), trace::CAT_RUN, start);
+            span.id = id;
+            r.record(span);
+        }
         Ok(y)
     }
 }
@@ -347,7 +391,9 @@ fn copy_into(out: &mut Vec<f32>, src: &[f32]) {
     out.extend_from_slice(src);
 }
 
-/// Execute one prunable layer's GEMM over the engine, into `y`.
+/// Execute one prunable layer's GEMM over the engine, into `y`.  `tr`
+/// carries the span ring plus the enclosing step span's id; when set,
+/// the im2col / spmm halves record their own `op` spans.
 #[allow(clippy::too_many_arguments)]
 fn run_gemm(
     engine: &Engine,
@@ -356,9 +402,16 @@ fn run_gemm(
     in_shape: (usize, usize, usize),
     batch: usize,
     fused: bool,
+    tr: Option<(&TraceRing, u64)>,
     arena: &mut Arena,
     y: &mut Vec<f32>,
 ) -> Result<()> {
+    let op_span = |start: Option<u64>, suffix: &str| {
+        if let (Some((r, parent)), Some(t)) = (tr, start) {
+            let name = format!("{}/{suffix}", lay.name);
+            r.record(Span::until_now(name, trace::CAT_OP, t).parent(parent));
+        }
+    };
     let (c, h, w) = in_shape;
     match lay.kind {
         GemmKind::Conv | GemmKind::Depthwise => {
@@ -366,15 +419,21 @@ fn run_gemm(
             if fused {
                 // tile-order im2col fused into the spmm consumer: the
                 // materialized X never exists
+                let t0 = tr.map(|_| trace::now_ns());
                 let src = Im2colPanels::new(act, c, h, w, batch, kh, kw, stride);
                 engine.spmm_fused_into(lay.sparse.kernel(), &src, y);
+                op_span(t0, "spmm_fused");
             } else {
                 // materialized baseline: X lives in an arena-recycled
                 // scratch for exactly this GEMM
                 let ohw = lay.spec.out_hw();
+                let t0 = tr.map(|_| trace::now_ns());
                 let mut scratch = arena.take(c * kh * kw * batch * ohw * ohw);
                 let (oh, ow) = im2col::im2col(act, c, h, w, batch, kh, kw, stride, &mut scratch);
+                op_span(t0, "im2col");
+                let t1 = tr.map(|_| trace::now_ns());
                 engine.spmm_into(lay.sparse.kernel(), &scratch, batch * oh * ow, y);
+                op_span(t1, "spmm");
                 arena.release(scratch);
             }
         }
@@ -388,7 +447,9 @@ fn run_gemm(
                     act.len()
                 );
             }
+            let t0 = tr.map(|_| trace::now_ns());
             engine.spmm_into(lay.sparse.kernel(), act, batch, y);
+            op_span(t0, "spmm");
         }
     }
     Ok(())
@@ -461,6 +522,49 @@ mod tests {
         let s = arena.stats();
         assert_eq!(s.allocs, 0, "warm arena still allocated: {s:?}");
         assert!(s.reuses > 0);
+    }
+
+    #[test]
+    fn traced_run_records_nested_spans_without_changing_outputs() {
+        let m = zoo::proxy_cnn();
+        let assigns: Vec<Assignment> = m.layers.iter().map(|_| Assignment::dense()).collect();
+        let net = CompiledNet::compile(&m, &assigns, 9, KernelChoice::Auto).unwrap();
+        let input: Vec<f32> = (0..3 * 32 * 32).map(|i| ((i % 11) as f32) * 0.2 - 1.0).collect();
+        let plain = GraphExecutor::serial().run(&net, &input, 1).unwrap();
+
+        let ring = TraceRing::new(1024);
+        let exec = GraphExecutor::serial().with_trace(Arc::clone(&ring));
+        let traced = exec.run(&net, &input, 1).unwrap();
+        assert_eq!(plain, traced, "tracing must not perturb the computation");
+
+        let spans = ring.snapshot();
+        let runs: Vec<_> = spans.iter().filter(|s| s.cat == trace::CAT_RUN).collect();
+        let steps: Vec<_> = spans.iter().filter(|s| s.cat == trace::CAT_STEP).collect();
+        let ops: Vec<_> = spans.iter().filter(|s| s.cat == trace::CAT_OP).collect();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(steps.len(), net.steps.len(), "one step span per lowered step");
+        assert!(!ops.is_empty(), "GEMM steps record im2col/spmm/epilogue sub-spans");
+        let run_id = runs[0].id;
+        let run_end = runs[0].start_ns + runs[0].dur_ns;
+        for s in &steps {
+            assert_eq!(s.parent, run_id, "step '{}' parents to the run span", s.name);
+            assert!(s.start_ns >= runs[0].start_ns && s.start_ns + s.dur_ns <= run_end);
+        }
+        let step_ids: Vec<u64> = steps.iter().map(|s| s.id).collect();
+        for o in &ops {
+            assert!(step_ids.contains(&o.parent), "op '{}' parents to a step", o.name);
+            assert!(o.name.contains('/'), "op names are layer/kind: {}", o.name);
+        }
+        // the fused conv path names its span accordingly
+        assert!(ops.iter().any(|o| o.name.ends_with("/spmm_fused")), "{ops:?}");
+
+        // a second run on the same ring appends another full span set
+        exec.run(&net, &input, 1).unwrap();
+        let again = ring.snapshot();
+        assert_eq!(
+            again.iter().filter(|s| s.cat == trace::CAT_STEP).count(),
+            2 * net.steps.len()
+        );
     }
 
     #[test]

@@ -60,6 +60,11 @@
 //!   request / response / error frames tagged with caller-chosen ids,
 //!   served over TCP or stdio by `prunemap serve --listen`, plus the
 //!   [`wire::Client`] helper the examples and benches drive it with.
+//!   In-band [`wire::AdminCmd`] frames (`stats` / `metrics`) let clients
+//!   fetch per-model [`SessionStats`] and the Prometheus exposition
+//!   document over the same connection; `prunemap serve --metrics ADDR`
+//!   additionally serves the document to HTTP scrapers (see
+//!   [`crate::telemetry`]).
 //!
 //! [`GraphExecutor`](crate::runtime::GraphExecutor) remains public as the
 //! low-level layer underneath: reach for it when you need explicit

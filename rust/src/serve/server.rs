@@ -20,6 +20,8 @@ use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
 use crate::sparse::DEFAULT_TILE_COLS;
+use crate::telemetry::trace::TraceRing;
+use crate::telemetry::{render_server_metrics, WireCounters};
 
 use super::session::SessionStats;
 use super::{ModelRegistry, Priority, ServeError, Session, Ticket};
@@ -79,6 +81,7 @@ struct SessionKnobs {
 pub struct ServerBuilder {
     registry: ModelRegistry,
     knobs: SessionKnobs,
+    trace: Option<Arc<TraceRing>>,
 }
 
 impl ServerBuilder {
@@ -93,6 +96,7 @@ impl ServerBuilder {
                 max_wait: Duration::from_millis(2),
                 workers: 1,
             },
+            trace: None,
         }
     }
 
@@ -132,13 +136,22 @@ impl ServerBuilder {
         self
     }
 
+    /// Attach one shared [`TraceRing`]: every session this server spins
+    /// up records queue/batch/run/step/op spans into it.  Default: none.
+    pub fn trace(mut self, ring: Arc<TraceRing>) -> Self {
+        self.trace = Some(ring);
+        self
+    }
+
     /// Open the front door.  Sessions spin up lazily on each model's
     /// first request; nothing is compiled here.
     pub fn build(self) -> Server {
         Server {
             registry: self.registry,
             knobs: self.knobs,
+            trace: self.trace,
             sessions: RwLock::new(BTreeMap::new()),
+            wire: Arc::new(WireCounters::default()),
         }
     }
 }
@@ -147,7 +160,9 @@ impl ServerBuilder {
 pub struct Server {
     registry: ModelRegistry,
     knobs: SessionKnobs,
+    trace: Option<Arc<TraceRing>>,
     sessions: RwLock<BTreeMap<String, Arc<Session>>>,
+    wire: Arc<WireCounters>,
 }
 
 impl Server {
@@ -208,16 +223,17 @@ impl Server {
                 return Ok(Arc::clone(session));
             }
         }
-        let session = Arc::new(
-            Session::builder(artifact)
-                .threads(self.knobs.threads)
-                .tile_cols(self.knobs.tile_cols)
-                .fused(self.knobs.fused)
-                .max_batch(self.knobs.max_batch)
-                .max_wait(self.knobs.max_wait)
-                .workers(self.knobs.workers)
-                .build(),
-        );
+        let mut builder = Session::builder(artifact)
+            .threads(self.knobs.threads)
+            .tile_cols(self.knobs.tile_cols)
+            .fused(self.knobs.fused)
+            .max_batch(self.knobs.max_batch)
+            .max_wait(self.knobs.max_wait)
+            .workers(self.knobs.workers);
+        if let Some(ring) = &self.trace {
+            builder = builder.trace(Arc::clone(ring));
+        }
+        let session = Arc::new(builder.build());
         let replaced = sessions.insert(name.to_string(), Arc::clone(&session));
         // release the map lock before the replaced session can drop —
         // Session::drop drains its queue and joins workers, and doing
@@ -271,6 +287,25 @@ impl Server {
             .iter()
             .map(|(name, session)| (name.clone(), session.stats()))
             .collect()
+    }
+
+    /// The wire-layer counters ([`wire`](super::wire) increments them
+    /// per connection/frame; the exporter renders them).
+    pub fn wire_counters(&self) -> &Arc<WireCounters> {
+        &self.wire
+    }
+
+    /// The span ring shared by every session, if one was attached.
+    pub fn trace_ring(&self) -> Option<&Arc<TraceRing>> {
+        self.trace.as_ref()
+    }
+
+    /// The full Prometheus text exposition document for this server:
+    /// every per-model family from [`Server::stats`] plus the wire-layer
+    /// counters.  What the `metrics` admin frame and the `--metrics`
+    /// scrape listener both serve.
+    pub fn metrics_text(&self) -> String {
+        render_server_metrics(&self.stats(), &self.wire.snapshot())
     }
 }
 
@@ -370,6 +405,17 @@ mod tests {
             server.stats().is_empty(),
             "the cached session must be dropped once the registry disowns the name"
         );
+    }
+
+    #[test]
+    fn metrics_text_renders_per_model_and_wire_families() {
+        let server = server_with(&[("a", 1)]);
+        server.infer(InferRequest::new("a", vec![0.25; 3072])).unwrap();
+        server.wire_counters().connections.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let fams = crate::telemetry::parse_exposition(&server.metrics_text()).unwrap();
+        let reqs = &fams["prunemap_requests_total"];
+        assert!(reqs.samples.iter().any(|s| s.label("model") == Some("a")));
+        assert_eq!(fams["prunemap_wire_connections_total"].samples[0].value, 1.0);
     }
 
     #[test]

@@ -31,6 +31,9 @@ use std::time::{Duration, Instant};
 use crate::runtime::graph::StepTiming;
 use crate::runtime::{Arena, GraphExecutor};
 use crate::sparse::{align_to_lane, DEFAULT_TILE_COLS};
+use crate::telemetry::trace::{self, TraceRing};
+use crate::telemetry::Span;
+use crate::util::json::Value;
 
 use super::{PreparedModel, Priority, ServeError};
 
@@ -110,11 +113,45 @@ pub struct SessionStats {
     /// Served requests by queue wait (submit -> batch assembly), bucketed
     /// by [`WAIT_BUCKET_BOUNDS_US`] with a final overflow bucket.
     pub wait_buckets: [usize; 5],
+    /// Total queue wait across all served requests, microseconds — with
+    /// the bucket counts this gives exporters a histogram `_sum`.
+    pub wait_total_us: u64,
     /// Served requests per priority lane, indexed by `Priority::lane()`
     /// (0 = high, 1 = normal).
     pub served_by_priority: [usize; 2],
     /// Requests rejected because their deadline passed before assembly.
     pub expired: usize,
+}
+
+impl SessionStats {
+    /// The counters as a JSON object — what the wire protocol's `stats`
+    /// admin frame returns per model.  Histogram maps keep their integer
+    /// keys as object keys; `served_by_priority` is keyed by lane name.
+    pub fn to_json(&self) -> Value {
+        let hist = |m: &BTreeMap<usize, usize>| {
+            Value::Obj(m.iter().map(|(k, v)| (k.to_string(), Value::num(*v as f64))).collect())
+        };
+        let buckets = self.wait_buckets.iter().map(|&n| Value::num(n as f64)).collect();
+        Value::obj(vec![
+            ("requests", Value::num(self.requests as f64)),
+            ("runs", Value::num(self.runs as f64)),
+            ("padded_lanes", Value::num(self.padded_lanes as f64)),
+            ("max_coalesced", Value::num(self.max_coalesced as f64)),
+            ("batch_runs", hist(&self.batch_runs)),
+            ("batch_occupancy", hist(&self.batch_occupancy)),
+            ("queue_depth_hwm", Value::num(self.queue_depth_hwm as f64)),
+            ("wait_buckets", Value::arr(buckets)),
+            ("wait_total_us", Value::num(self.wait_total_us as f64)),
+            (
+                "served_by_priority",
+                Value::obj(vec![
+                    ("high", Value::num(self.served_by_priority[0] as f64)),
+                    ("normal", Value::num(self.served_by_priority[1] as f64)),
+                ]),
+            ),
+            ("expired", Value::num(self.expired as f64)),
+        ])
+    }
 }
 
 /// The two admission lanes; index by [`Priority::lane`] (high first).
@@ -171,6 +208,7 @@ struct Shared {
     max_wait: Duration,
     sample_len: usize,
     out_len: usize,
+    trace: Option<Arc<TraceRing>>,
 }
 
 /// A handle to one submitted request; [`Ticket::wait`] blocks until its
@@ -206,6 +244,7 @@ pub struct SessionBuilder {
     max_batch: usize,
     max_wait: Duration,
     workers: usize,
+    trace: Option<Arc<TraceRing>>,
 }
 
 impl SessionBuilder {
@@ -218,6 +257,7 @@ impl SessionBuilder {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
             workers: 1,
+            trace: None,
         }
     }
 
@@ -264,14 +304,22 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach a shared [`TraceRing`]: the batcher workers record
+    /// per-request queue-wait and batch-assembly spans into it, and the
+    /// executors record run/step/op spans.  Default: no tracing.
+    pub fn trace(mut self, ring: Arc<TraceRing>) -> Self {
+        self.trace = Some(ring);
+        self
+    }
+
     /// Spawn the batcher workers and open the session for requests.
     pub fn build(self) -> Session {
         let exec = {
             let e = GraphExecutor::new(self.threads).with_tile_cols(self.tile_cols);
-            if self.fused {
-                e
-            } else {
-                e.materialized()
+            let e = if self.fused { e } else { e.materialized() };
+            match &self.trace {
+                Some(ring) => e.with_trace(Arc::clone(ring)),
+                None => e,
             }
         };
         let shared = Arc::new(Shared {
@@ -283,6 +331,7 @@ impl SessionBuilder {
             max_wait: self.max_wait,
             sample_len: self.prepared.input_len(),
             out_len: self.prepared.output_len(),
+            trace: self.trace,
         });
         let workers = (0..self.workers)
             .map(|i| {
@@ -349,6 +398,11 @@ impl Session {
     /// A snapshot of the admission counters.
     pub fn stats(&self) -> SessionStats {
         self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// The span ring this session records into, if one was attached.
+    pub fn trace_ring(&self) -> Option<&Arc<TraceRing>> {
+        self.shared.trace.as_ref()
     }
 
     /// Enqueue one sample (NCHW-flattened `[C*H*W]`) on the normal lane
@@ -466,6 +520,7 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
         // dispatch immediately instead — a lone request whose budget is
         // shorter than `max_wait` must be served right away on an idle
         // server, not held open until its deadline has passed.
+        let hold_start = shared.trace.as_ref().map(|_| trace::now_ns());
         let hold_until = Instant::now() + shared.max_wait;
         while q.len() < shared.max_batch && !shared.closed.load(Ordering::Acquire) {
             let now = Instant::now();
@@ -493,6 +548,26 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
             // open (or everything queued had expired); go back to waiting
             continue;
         }
+        if let Some(ring) = shared.trace.as_deref() {
+            for r in &reqs {
+                let waited = assembled_at.saturating_duration_since(r.submitted);
+                // queue waits overlap arbitrarily, so they live on a
+                // synthetic track (tid 0) as async events in the export
+                ring.record(
+                    Span::new(
+                        "queue_wait",
+                        trace::CAT_QUEUE,
+                        trace::ns_since_epoch(r.submitted),
+                        waited.as_nanos().min(u128::from(u64::MAX)) as u64,
+                    )
+                    .tid(0),
+                );
+            }
+            if let Some(t) = hold_start {
+                let name = format!("assemble x{}", reqs.len());
+                ring.record(Span::until_now(name, trace::CAT_BATCH, t));
+            }
+        }
 
         // pad to the lane-aligned width (<= max_batch, which is itself
         // lane-aligned); padding lanes are zero samples whose outputs are
@@ -516,6 +591,7 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
                 st.served_by_priority[r.priority.lane()] += 1;
                 let wait = assembled_at.saturating_duration_since(r.submitted);
                 st.wait_buckets[wait_bucket(wait)] += 1;
+                st.wait_total_us += wait.as_micros().min(u128::from(u64::MAX)) as u64;
             }
             st.runs as u64
         };
@@ -545,8 +621,8 @@ mod tests {
     use super::*;
     use crate::accuracy::Assignment;
 
-    fn proxy_session(max_batch: usize, max_wait: Duration) -> Session {
-        let prepared = PreparedModel::builder()
+    fn proxy_prepared() -> PreparedModel {
+        PreparedModel::builder()
             .model("proxy")
             .assignments(
                 crate::models::zoo::proxy_cnn()
@@ -557,8 +633,11 @@ mod tests {
             )
             .seed(5)
             .build()
-            .unwrap();
-        Session::builder(prepared)
+            .unwrap()
+    }
+
+    fn proxy_session(max_batch: usize, max_wait: Duration) -> Session {
+        Session::builder(proxy_prepared())
             .threads(1)
             .max_batch(max_batch)
             .max_wait(max_wait)
@@ -630,6 +709,73 @@ mod tests {
         assert_eq!(wait_bucket(Duration::from_millis(50)), 3);
         assert_eq!(wait_bucket(Duration::from_secs(10)), 4);
         assert_eq!(wait_bucket_labels().len(), SessionStats::default().wait_buckets.len());
+    }
+
+    #[test]
+    fn wait_bucket_boundaries_are_exclusive() {
+        // each bound is an *exclusive* upper limit: a wait exactly at the
+        // bound belongs to the next bucket, one microsecond under stays
+        for (i, &bound) in WAIT_BUCKET_BOUNDS_US.iter().enumerate() {
+            assert_eq!(wait_bucket(Duration::from_micros(bound - 1)), i, "just under {bound}us");
+            assert_eq!(wait_bucket(Duration::from_micros(bound)), i + 1, "exactly {bound}us");
+        }
+    }
+
+    #[test]
+    fn stats_to_json_carries_every_counter() {
+        let mut st = SessionStats {
+            requests: 3,
+            runs: 2,
+            padded_lanes: 5,
+            max_coalesced: 2,
+            queue_depth_hwm: 4,
+            wait_buckets: [1, 2, 0, 0, 0],
+            wait_total_us: 750,
+            served_by_priority: [1, 2],
+            expired: 1,
+            ..SessionStats::default()
+        };
+        st.batch_runs.insert(8, 2);
+        st.batch_occupancy.insert(1, 1);
+        st.batch_occupancy.insert(2, 1);
+        let j = st.to_json();
+        // round-trip through the serializer: the admin frame sends text
+        let j = Value::parse(&j.compact()).unwrap();
+        assert_eq!(j.get("requests").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("wait_total_us").unwrap().as_f64().unwrap(), 750.0);
+        assert_eq!(j.get("batch_runs").unwrap().get("8").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("batch_occupancy").unwrap().get("2").unwrap().as_f64().unwrap(), 1.0);
+        let lanes = j.get("served_by_priority").unwrap();
+        assert_eq!(lanes.get("high").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(lanes.get("normal").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("wait_buckets").unwrap().as_arr().unwrap().len(), 5);
+        assert_eq!(j.get("expired").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn attached_trace_ring_records_queue_batch_and_run_spans() {
+        let ring = TraceRing::new(1024);
+        let s = Session::builder(proxy_prepared())
+            .threads(1)
+            .max_wait(Duration::ZERO)
+            .trace(Arc::clone(&ring))
+            .build();
+        assert!(s.trace_ring().is_some());
+        let y = s.infer(vec![0.1; s.prepared().input_len()]).unwrap();
+        assert_eq!(y.len(), 10);
+        let spans = ring.snapshot();
+        let count = |c: &str| spans.iter().filter(|s| s.cat == c).count();
+        assert_eq!(count(trace::CAT_QUEUE), 1, "one request, one queue-wait span");
+        assert_eq!(count(trace::CAT_BATCH), 1, "one assembled batch");
+        assert_eq!(count(trace::CAT_RUN), 1, "one executor run");
+        assert!(count(trace::CAT_OP) > 0, "executor records per-op spans");
+        let q = spans.iter().find(|s| s.cat == trace::CAT_QUEUE).unwrap();
+        assert_eq!(q.name, "queue_wait");
+        assert_eq!(q.tid, 0, "queue waits live on the synthetic track");
+        let b = spans.iter().find(|s| s.cat == trace::CAT_BATCH).unwrap();
+        assert_eq!(b.name, "assemble x1");
+        let st = s.stats();
+        assert_eq!(st.wait_buckets.iter().sum::<usize>(), 1);
     }
 
     #[test]

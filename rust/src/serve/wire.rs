@@ -18,6 +18,14 @@
 //! `null` otherwise — and the connection stays up.  Blank lines are
 //! ignored (netcat-friendly).
 //!
+//! Two **admin frames** ([`AdminCmd`]) share the connection with
+//! inference traffic: `{"id":N,"admin":"stats"}` is answered with the
+//! per-model session counters as JSON, and `{"id":N,"admin":"metrics"}`
+//! with the Prometheus text exposition document in a `"metrics"` string
+//! field.  Admin replies are rendered when the reply writer reaches
+//! them, so a `stats` frame pipelined behind an inference observes that
+//! inference in its counters.
+//!
 //! [`serve_connection`] drives one duplex byte stream (any
 //! `BufRead` + `Write` pair: a TCP socket, stdio, or in-memory buffers in
 //! tests); [`serve_tcp`] accepts connections and serves each on its own
@@ -43,6 +51,7 @@ use std::time::Duration;
 
 use crate::util::json::Value;
 
+use super::session::SessionStats;
 use super::{InferRequest, Priority, ServeError, Server, Ticket};
 
 /// Wire deadlines above this are clamped (mirrors the CLI's `--max-wait-ms`
@@ -63,6 +72,43 @@ pub struct RequestFrame {
 pub enum ResponseFrame {
     Output { id: u64, output: Vec<f32> },
     Error { id: Option<u64>, error: ServeError },
+}
+
+/// In-band admin commands: observability frames that ride the same
+/// connection as inference traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdminCmd {
+    /// Per-model [`SessionStats`] as a JSON object.
+    Stats,
+    /// The full Prometheus text exposition document.
+    Metrics,
+}
+
+impl AdminCmd {
+    /// The stable wire name (`"stats"` / `"metrics"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            AdminCmd::Stats => "stats",
+            AdminCmd::Metrics => "metrics",
+        }
+    }
+
+    /// Inverse of [`AdminCmd::name`].
+    pub fn by_name(name: &str) -> Option<AdminCmd> {
+        match name {
+            "stats" => Some(AdminCmd::Stats),
+            "metrics" => Some(AdminCmd::Metrics),
+            _ => None,
+        }
+    }
+}
+
+/// Any decoded request-side frame: an inference request or an admin
+/// command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Infer(RequestFrame),
+    Admin { id: u64, cmd: AdminCmd },
 }
 
 fn malformed(e: anyhow::Error) -> ServeError {
@@ -134,6 +180,42 @@ pub fn decode_request(line: &str) -> Result<RequestFrame, ServeError> {
     Ok(RequestFrame { id, request: InferRequest { model, input, priority, deadline } })
 }
 
+/// Decode one request-side line: an object with an `"admin"` key is an
+/// admin frame, anything else must be an inference request.
+pub fn decode_frame(line: &str) -> Result<Frame, ServeError> {
+    let v = Value::parse(line).map_err(malformed)?;
+    let Some(cmd) = v.opt("admin") else {
+        return decode_request(line).map(Frame::Infer);
+    };
+    let id = v.get("id").map_err(malformed)?.as_u64().map_err(malformed)?;
+    if id > (1 << 53) {
+        return Err(ServeError::Malformed(format!("id {id} exceeds 2^53")));
+    }
+    let name = cmd.as_str().map_err(malformed)?;
+    match AdminCmd::by_name(name) {
+        Some(cmd) => Ok(Frame::Admin { id, cmd }),
+        None => Err(ServeError::Malformed(format!("unknown admin command '{name}'"))),
+    }
+}
+
+/// Encode one admin request frame.
+pub fn encode_admin(id: u64, cmd: AdminCmd) -> String {
+    Value::obj(vec![("id", Value::num(id as f64)), ("admin", Value::str(cmd.name()))]).compact()
+}
+
+/// Encode the reply to an [`AdminCmd::Stats`] frame: the per-model
+/// counters keyed by registry name.
+pub fn encode_stats(id: u64, stats: &BTreeMap<String, SessionStats>) -> String {
+    let models = Value::Obj(stats.iter().map(|(name, st)| (name.clone(), st.to_json())).collect());
+    Value::obj(vec![("id", Value::num(id as f64)), ("stats", models)]).compact()
+}
+
+/// Encode the reply to an [`AdminCmd::Metrics`] frame: the exposition
+/// document as one JSON string (newlines escape cleanly).
+pub fn encode_metrics(id: u64, text: &str) -> String {
+    Value::obj(vec![("id", Value::num(id as f64)), ("metrics", Value::str(text))]).compact()
+}
+
 /// Encode one output frame.
 pub fn encode_output(id: u64, output: &[f32]) -> String {
     Value::obj(vec![("id", Value::num(id as f64)), ("output", f32s_to_json(output))]).compact()
@@ -189,12 +271,19 @@ pub struct ConnStats {
     /// Error frames written (admission rejections, executor faults, and
     /// malformed lines alike).
     pub errors: usize,
+    /// Admin (`stats`/`metrics`) replies written.
+    pub admin: usize,
 }
 
-/// A reply the writer thread still has to resolve and encode.
+/// A reply the writer thread still has to resolve and encode.  Admin
+/// replies are rendered at *dequeue* time, not when the frame is read:
+/// the writer has already resolved every earlier reply on the
+/// connection, so a pipelined `stats` frame observes the inferences that
+/// preceded it.
 enum Pending {
     Ok(u64, Ticket),
     Err(Option<u64>, ServeError),
+    Admin(u64, AdminCmd),
 }
 
 /// Serve one duplex stream until the reader hits EOF (or the writer's
@@ -215,27 +304,42 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
     mut reader: R,
     writer: W,
 ) -> io::Result<ConnStats> {
+    let wire = server.wire_counters();
+    wire.connections.fetch_add(1, Ordering::Relaxed);
+    wire.active.fetch_add(1, Ordering::Relaxed);
     let (tx, rx) = mpsc::channel::<Pending>();
     let dead = AtomicBool::new(false);
     let dead_ref = &dead;
-    std::thread::scope(|scope| {
+    let result = std::thread::scope(|scope| {
         let writer_handle = scope.spawn(move || -> io::Result<ConnStats> {
             let mut writer = writer;
             let mut stats = ConnStats::default();
             for pending in rx {
-                let (id, served) = match pending {
-                    Pending::Ok(id, ticket) => (Some(id), ticket.wait()),
-                    Pending::Err(id, e) => (id, Err(e)),
-                };
-                let line = match (&served, id) {
-                    (Ok(y), Some(id)) => {
-                        stats.served += 1;
-                        encode_output(id, y)
+                let line = match pending {
+                    Pending::Admin(id, cmd) => {
+                        stats.admin += 1;
+                        wire.admin.fetch_add(1, Ordering::Relaxed);
+                        match cmd {
+                            AdminCmd::Stats => encode_stats(id, &server.stats()),
+                            AdminCmd::Metrics => encode_metrics(id, &server.metrics_text()),
+                        }
                     }
-                    (Ok(_), None) => unreachable!("outputs always carry the request id"),
-                    (Err(e), id) => {
+                    Pending::Ok(id, ticket) => match ticket.wait() {
+                        Ok(y) => {
+                            stats.served += 1;
+                            wire.served.fetch_add(1, Ordering::Relaxed);
+                            encode_output(id, &y)
+                        }
+                        Err(e) => {
+                            stats.errors += 1;
+                            wire.record_error(e.kind());
+                            encode_error(Some(id), &e)
+                        }
+                    },
+                    Pending::Err(id, e) => {
                         stats.errors += 1;
-                        encode_error(id, e)
+                        wire.record_error(e.kind());
+                        encode_error(id, &e)
                     }
                 };
                 if let Err(e) = writeln!(writer, "{line}").and_then(|()| writer.flush()) {
@@ -260,12 +364,17 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
             if frame.is_empty() {
                 continue;
             }
-            let pending = match decode_request(frame) {
-                Ok(f) => match server.submit(f.request) {
+            wire.frames.fetch_add(1, Ordering::Relaxed);
+            let pending = match decode_frame(frame) {
+                Ok(Frame::Admin { id, cmd }) => Pending::Admin(id, cmd),
+                Ok(Frame::Infer(f)) => match server.submit(f.request) {
                     Ok(ticket) => Pending::Ok(f.id, ticket),
                     Err(e) => Pending::Err(Some(f.id), e),
                 },
-                Err(e) => Pending::Err(recover_id(frame), e),
+                Err(e) => {
+                    wire.malformed.fetch_add(1, Ordering::Relaxed);
+                    Pending::Err(recover_id(frame), e)
+                }
             };
             if tx.send(pending).is_err() {
                 break Ok(()); // writer bailed; its error is reported below
@@ -277,7 +386,9 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
             .map_err(|_| io::Error::other("wire writer thread panicked"))?;
         reader_result?;
         written
-    })
+    });
+    wire.active.fetch_sub(1, Ordering::Relaxed);
+    result
 }
 
 /// Accept TCP connections and serve each on its own thread.
@@ -397,6 +508,62 @@ impl Client {
         let id = self.send(req)?;
         self.wait(id)
     }
+
+    /// Issue an admin frame and block for its reply object, stashing any
+    /// inference replies that arrive first (they resolve later
+    /// [`Client::wait`] calls without re-reading the wire).
+    pub fn admin(&mut self, cmd: AdminCmd) -> io::Result<Value> {
+        let id = self.next_id;
+        self.next_id += 1;
+        writeln!(self.writer, "{}", encode_admin(id, cmd))?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(io::ErrorKind::UnexpectedEof.into());
+            }
+            let frame = line.trim();
+            if frame.is_empty() {
+                continue;
+            }
+            let v = Value::parse(frame).map_err(invalid_data)?;
+            if v.opt("id").and_then(|x| x.as_u64().ok()) == Some(id) {
+                return Ok(v);
+            }
+            match decode_response(frame) {
+                Ok(ResponseFrame::Output { id, output }) => {
+                    self.stashed.insert(id, Ok(output));
+                }
+                Ok(ResponseFrame::Error { id: Some(id), error }) => {
+                    self.stashed.insert(id, Err(error));
+                }
+                _ => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "unmatchable reply while waiting for an admin frame",
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Fetch the per-model stats object (`{"<model>": {counters...}}`).
+    pub fn stats(&mut self) -> io::Result<Value> {
+        let v = self.admin(AdminCmd::Stats)?;
+        v.get("stats").map(Value::clone).map_err(invalid_data)
+    }
+
+    /// Fetch the Prometheus text exposition document over the wire.
+    pub fn metrics_text(&mut self) -> io::Result<String> {
+        let v = self.admin(AdminCmd::Metrics)?;
+        let text = v.get("metrics").and_then(Value::as_str).map_err(invalid_data)?;
+        Ok(text.to_string())
+    }
+}
+
+fn invalid_data(e: anyhow::Error) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("{e:#}"))
 }
 
 #[cfg(test)]
@@ -495,7 +662,7 @@ mod tests {
         let mut replies: Vec<u8> = Vec::new();
         let stats =
             serve_connection(&server, Cursor::new(frames.as_bytes()), &mut replies).unwrap();
-        assert_eq!(stats, ConnStats { served: 2, errors: 2 });
+        assert_eq!(stats, ConnStats { served: 2, errors: 2, admin: 0 });
 
         let text = String::from_utf8(replies).unwrap();
         let decoded: Vec<ResponseFrame> =
@@ -519,5 +686,98 @@ mod tests {
             ResponseFrame::Output { id: 3, output } => assert_eq!(output, &expect),
             other => panic!("frame 3: {other:?}"),
         }
+    }
+
+    #[test]
+    fn admin_frames_decode_and_roundtrip() {
+        assert_eq!(
+            decode_frame(r#"{"id":2,"admin":"stats"}"#).unwrap(),
+            Frame::Admin { id: 2, cmd: AdminCmd::Stats }
+        );
+        assert_eq!(
+            decode_frame(&encode_admin(9, AdminCmd::Metrics)).unwrap(),
+            Frame::Admin { id: 9, cmd: AdminCmd::Metrics }
+        );
+        // an inference line still decodes as an inference frame
+        let line = encode_request(1, &InferRequest::new("m", vec![0.5]));
+        assert!(matches!(decode_frame(&line).unwrap(), Frame::Infer(f) if f.id == 1));
+        // unknown commands and missing ids are malformed, not panics
+        for bad in [r#"{"id":4,"admin":"reboot"}"#, r#"{"admin":"stats"}"#] {
+            match decode_frame(bad) {
+                Err(ServeError::Malformed(_)) => {}
+                other => panic!("'{bad}' should be malformed, got {other:?}"),
+            }
+        }
+        for (cmd, name) in [(AdminCmd::Stats, "stats"), (AdminCmd::Metrics, "metrics")] {
+            assert_eq!(cmd.name(), name);
+            assert_eq!(AdminCmd::by_name(name), Some(cmd));
+        }
+        assert_eq!(AdminCmd::by_name("reboot"), None);
+    }
+
+    #[test]
+    fn admin_frames_share_the_connection_and_see_prior_replies() {
+        let registry = ModelRegistry::new();
+        let prepared = PreparedModel::builder()
+            .model("proxy")
+            .assignments(
+                crate::models::zoo::proxy_cnn()
+                    .layers
+                    .iter()
+                    .map(|_| Assignment::dense())
+                    .collect(),
+            )
+            .seed(5)
+            .build()
+            .unwrap();
+        let n = prepared.input_len();
+        registry.insert("proxy", prepared);
+        let server = Server::builder(registry).threads(1).build();
+
+        let frames = format!(
+            "{}\n{}\n{}\n{}\n",
+            encode_request(1, &InferRequest::new("proxy", vec![0.1; n])),
+            encode_admin(2, AdminCmd::Stats),
+            encode_admin(3, AdminCmd::Metrics),
+            r#"{"id":4,"admin":"reboot"}"#,
+        );
+        let mut replies: Vec<u8> = Vec::new();
+        let stats =
+            serve_connection(&server, Cursor::new(frames.as_bytes()), &mut replies).unwrap();
+        assert_eq!(stats, ConnStats { served: 1, errors: 1, admin: 2 });
+
+        let text = String::from_utf8(replies).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(matches!(
+            decode_response(lines[0]).unwrap(),
+            ResponseFrame::Output { id: 1, .. }
+        ));
+        // stats render at dequeue time, so the inference above is visible
+        let stats_frame = Value::parse(lines[1]).unwrap();
+        assert_eq!(stats_frame.get("id").unwrap().as_u64().unwrap(), 2);
+        let proxy = stats_frame.get("stats").unwrap().get("proxy").unwrap();
+        assert_eq!(proxy.get("requests").unwrap().as_f64().unwrap(), 1.0);
+        // the metrics reply carries a parseable Prometheus document
+        let metrics_frame = Value::parse(lines[2]).unwrap();
+        assert_eq!(metrics_frame.get("id").unwrap().as_u64().unwrap(), 3);
+        let doc = metrics_frame.get("metrics").unwrap().as_str().unwrap();
+        let fams = crate::telemetry::parse_exposition(doc).unwrap();
+        assert!(fams.contains_key("prunemap_requests_total"), "{doc}");
+        assert!(fams.contains_key("prunemap_wire_frames_total"), "{doc}");
+        // an unknown admin command is malformed with the id echoed
+        assert!(matches!(
+            decode_response(lines[3]).unwrap(),
+            ResponseFrame::Error { id: Some(4), error: ServeError::Malformed(_) }
+        ));
+        // the shared wire counters saw the whole connection
+        let w = server.wire_counters().snapshot();
+        assert_eq!(w.connections, 1);
+        assert_eq!(w.active, 0, "active connections settle back to zero");
+        assert_eq!(w.frames, 4);
+        assert_eq!(w.served, 1);
+        assert_eq!(w.admin, 2);
+        assert_eq!(w.malformed, 1);
+        assert_eq!(w.errors, 1);
     }
 }

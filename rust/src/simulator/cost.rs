@@ -433,6 +433,116 @@ pub fn measured_vs_modeled_network(
     })
 }
 
+// ---------------------------------------------------------------------
+// Per-layer trace calibration
+// ---------------------------------------------------------------------
+
+/// One layer's cost-model prediction next to its traced measurement.
+#[derive(Debug, Clone)]
+pub struct LayerCalibration {
+    pub name: String,
+    /// Cost-model prediction (mobile GPU, batch 1), ms.
+    pub modeled_ms: f64,
+    /// Measured per-layer step time (host CPU, whole batch), ms.
+    pub measured_ms: f64,
+}
+
+impl LayerCalibration {
+    /// measured / modeled — a per-layer drift signal, not an expectation
+    /// of equality (the model prices a mobile GPU, the trace a host CPU).
+    pub fn ratio(&self) -> f64 {
+        self.measured_ms / self.modeled_ms.max(1e-12)
+    }
+}
+
+/// Per-layer calibration record built from trace spans: each prunable
+/// layer's measured step time (`prunemap profile` aggregates the
+/// executor's per-step spans) matched by name against the cost model's
+/// prediction for the same layer under its assigned scheme.  This is the
+/// record that closes the loop between [`crate::telemetry::trace`]
+/// measurements and this module's analytic model.
+#[derive(Debug, Clone)]
+pub struct PerLayerCalibration {
+    pub model: String,
+    pub threads: usize,
+    pub batch: usize,
+    /// Timed runs averaged into each measurement.
+    pub reps: usize,
+    /// One entry per prunable layer with a matching measurement.
+    pub layers: Vec<LayerCalibration>,
+}
+
+impl PerLayerCalibration {
+    /// Match `measured` `(step name, ms)` pairs against the model's
+    /// prunable layers (non-layer steps — pools, flatten — simply don't
+    /// match) and price each matched layer with the cost model.  Errors
+    /// if nothing matches: an all-miss join means the caller fed spans
+    /// from a different model.
+    pub fn new(
+        model: &ModelSpec,
+        assigns: &[Assignment],
+        dev: &DeviceProfile,
+        measured: &[(String, f64)],
+        threads: usize,
+        batch: usize,
+        reps: usize,
+    ) -> crate::Result<PerLayerCalibration> {
+        if model.layers.len() != assigns.len() {
+            anyhow::bail!(
+                "{} layers but {} assignments for {}",
+                model.layers.len(),
+                assigns.len(),
+                model.name
+            );
+        }
+        let layers: Vec<LayerCalibration> = model
+            .layers
+            .iter()
+            .zip(assigns)
+            .filter_map(|(l, a)| {
+                let (_, ms) = measured.iter().find(|(name, _)| *name == l.name)?;
+                let cfg = ExecConfig::new(a.scheme, a.compression, dev);
+                Some(LayerCalibration {
+                    name: l.name.clone(),
+                    modeled_ms: layer_latency_ms(l, &cfg, dev),
+                    measured_ms: *ms,
+                })
+            })
+            .collect();
+        if layers.is_empty() {
+            anyhow::bail!("no measured step names match {}'s prunable layers", model.name);
+        }
+        Ok(PerLayerCalibration { model: model.name.clone(), threads, batch, reps, layers })
+    }
+
+    /// JSON calibration record, format-tagged so downstream readers can
+    /// evolve: `{"format":"prunemap.calibration.v1","model",...,"layers":
+    /// [{"name","modeled_ms","measured_ms","ratio"}]}`.
+    pub fn to_json(&self) -> Value {
+        let layers = Value::arr(
+            self.layers
+                .iter()
+                .map(|l| {
+                    Value::obj(vec![
+                        ("name", Value::str(l.name.clone())),
+                        ("modeled_ms", Value::num(l.modeled_ms)),
+                        ("measured_ms", Value::num(l.measured_ms)),
+                        ("ratio", Value::num(l.ratio())),
+                    ])
+                })
+                .collect(),
+        );
+        Value::obj(vec![
+            ("format", Value::str("prunemap.calibration.v1")),
+            ("model", Value::str(self.model.clone())),
+            ("threads", Value::num(self.threads as f64)),
+            ("batch", Value::num(self.batch as f64)),
+            ("reps", Value::num(self.reps as f64)),
+            ("layers", layers),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -649,6 +759,35 @@ mod tests {
         let round = Value::parse(&j.compact()).unwrap();
         assert_eq!(round.get("batch").unwrap().as_usize().unwrap(), 2);
         assert_eq!(round.get("threads").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn per_layer_calibration_joins_measured_steps_by_name() {
+        use crate::models::zoo;
+        let d = dev();
+        let m = zoo::proxy_cnn();
+        let assigns: Vec<Assignment> = m
+            .layers
+            .iter()
+            .map(|_| Assignment { scheme: Scheme::Unstructured, compression: 2.0 })
+            .collect();
+        let measured = vec![
+            (m.layers[0].name.clone(), 0.5),
+            // a non-prunable step (pool) simply doesn't join
+            ("pool_step".to_string(), 0.1),
+        ];
+        let cal = PerLayerCalibration::new(&m, &assigns, &d, &measured, 2, 4, 3).unwrap();
+        assert_eq!(cal.layers.len(), 1);
+        assert_eq!(cal.layers[0].name, m.layers[0].name);
+        assert_eq!(cal.layers[0].measured_ms, 0.5);
+        assert!(cal.layers[0].modeled_ms > 0.0 && cal.layers[0].ratio() > 0.0);
+        let j = Value::parse(&cal.to_json().compact()).unwrap();
+        assert_eq!(j.get("format").unwrap().as_str().unwrap(), "prunemap.calibration.v1");
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "ProxyCNN");
+        assert_eq!(j.get("layers").unwrap().as_arr().unwrap().len(), 1);
+        // an all-miss join is an error, not an empty record
+        let miss = vec![("zzz".to_string(), 1.0)];
+        assert!(PerLayerCalibration::new(&m, &assigns, &d, &miss, 1, 1, 1).is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod device;
 
 pub use cost::{
     kernel_for_scheme, layer_latency_ms, measured_vs_modeled, measured_vs_modeled_network,
-    model_latency_ms, ExecConfig, LatencyComparison, NetworkLatencyComparison, TileParams,
+    model_latency_ms, ExecConfig, LatencyComparison, LayerCalibration, NetworkLatencyComparison,
+    PerLayerCalibration, TileParams,
 };
 pub use device::DeviceProfile;

@@ -1,0 +1,328 @@
+//! Render serving-stack state for humans and scrapers.
+//!
+//! [`render_server_metrics`] turns the per-model
+//! [`SessionStats`](crate::serve::SessionStats) snapshots plus the wire
+//! [`WireSnapshot`] into one Prometheus text document — the existing
+//! session counters are *re-exported* through here, never duplicated
+//! into a second accounting path.  [`render_session_stats`] is the one
+//! text renderer for a session's counters, shared by the `serve` CLI
+//! summary and anything else that wants the human-readable block (it
+//! used to live as a private formatter in `main.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::serve::session::{wait_bucket_labels, SessionStats, WAIT_BUCKET_BOUNDS_US};
+use crate::telemetry::metrics::{PromWriter, WireSnapshot, WIRE_ERROR_KINDS};
+
+/// Names of the per-model metric families [`render_server_metrics`]
+/// always emits — CI and tests assert against this list rather than
+/// re-typing family names.
+pub const MODEL_FAMILIES: [&str; 9] = [
+    "prunemap_requests_total",
+    "prunemap_runs_total",
+    "prunemap_padded_lanes_total",
+    "prunemap_expired_total",
+    "prunemap_queue_depth_hwm",
+    "prunemap_max_coalesced",
+    "prunemap_queue_wait_seconds",
+    "prunemap_batch_width_runs_total",
+    "prunemap_batch_occupancy_runs_total",
+];
+
+/// Names of the wire-layer families [`render_server_metrics`] always
+/// emits.
+pub const WIRE_FAMILIES: [&str; 7] = [
+    "prunemap_wire_connections_total",
+    "prunemap_wire_active_connections",
+    "prunemap_wire_frames_total",
+    "prunemap_wire_served_frames_total",
+    "prunemap_wire_error_frames_total",
+    "prunemap_wire_admin_frames_total",
+    "prunemap_wire_malformed_lines_total",
+];
+
+/// Render every registered model's session counters plus the wire-layer
+/// counters as one Prometheus text exposition document.
+pub fn render_server_metrics(
+    stats: &BTreeMap<String, SessionStats>,
+    wire: &WireSnapshot,
+) -> String {
+    let mut w = PromWriter::new();
+
+    w.family(
+        "prunemap_requests_total",
+        "counter",
+        "Requests served, by model and priority lane.",
+    );
+    for (model, st) in stats {
+        for (lane, &n) in ["high", "normal"].iter().zip(st.served_by_priority.iter()) {
+            w.sample(
+                "prunemap_requests_total",
+                &[("model", model), ("priority", lane)],
+                n as f64,
+            );
+        }
+    }
+
+    w.family("prunemap_runs_total", "counter", "Executor batch runs, by model.");
+    w.family(
+        "prunemap_padded_lanes_total",
+        "counter",
+        "Batch lanes padded to reach lane alignment, by model.",
+    );
+    w.family(
+        "prunemap_expired_total",
+        "counter",
+        "Requests rejected by deadline admission, by model.",
+    );
+    w.family(
+        "prunemap_queue_depth_hwm",
+        "gauge",
+        "High-water mark of the submit queue depth, by model.",
+    );
+    w.family(
+        "prunemap_max_coalesced",
+        "gauge",
+        "Largest number of requests coalesced into one run, by model.",
+    );
+    for (model, st) in stats {
+        let labels = [("model", model.as_str())];
+        w.sample("prunemap_runs_total", &labels, st.runs as f64);
+        w.sample("prunemap_padded_lanes_total", &labels, st.padded_lanes as f64);
+        w.sample("prunemap_expired_total", &labels, st.expired as f64);
+        w.sample("prunemap_queue_depth_hwm", &labels, st.queue_depth_hwm as f64);
+        w.sample("prunemap_max_coalesced", &labels, st.max_coalesced as f64);
+    }
+
+    w.family(
+        "prunemap_queue_wait_seconds",
+        "histogram",
+        "Wait between request submit and batch assembly, by model.",
+    );
+    for (model, st) in stats {
+        let mut cumulative = 0usize;
+        for (&bound_us, &n) in WAIT_BUCKET_BOUNDS_US.iter().zip(st.wait_buckets.iter()) {
+            cumulative += n;
+            let le = (bound_us as f64 / 1e6).to_string();
+            w.sample(
+                "prunemap_queue_wait_seconds_bucket",
+                &[("model", model), ("le", &le)],
+                cumulative as f64,
+            );
+        }
+        let total: usize = st.wait_buckets.iter().sum();
+        w.sample(
+            "prunemap_queue_wait_seconds_bucket",
+            &[("model", model), ("le", "+Inf")],
+            total as f64,
+        );
+        w.sample("prunemap_queue_wait_seconds_count", &[("model", model)], total as f64);
+        w.sample(
+            "prunemap_queue_wait_seconds_sum",
+            &[("model", model)],
+            st.wait_total_us as f64 / 1e6,
+        );
+    }
+
+    w.family(
+        "prunemap_batch_width_runs_total",
+        "counter",
+        "Runs by executed (lane-aligned) batch width.",
+    );
+    for (model, st) in stats {
+        for (batch, runs) in &st.batch_runs {
+            let width = batch.to_string();
+            w.sample(
+                "prunemap_batch_width_runs_total",
+                &[("model", model), ("width", &width)],
+                *runs as f64,
+            );
+        }
+    }
+
+    w.family(
+        "prunemap_batch_occupancy_runs_total",
+        "counter",
+        "Runs by real request count before lane padding.",
+    );
+    for (model, st) in stats {
+        for (occupancy, runs) in &st.batch_occupancy {
+            let occ = occupancy.to_string();
+            w.sample(
+                "prunemap_batch_occupancy_runs_total",
+                &[("model", model), ("occupancy", &occ)],
+                *runs as f64,
+            );
+        }
+    }
+
+    w.family(
+        "prunemap_wire_connections_total",
+        "counter",
+        "Wire connections accepted since startup.",
+    );
+    w.sample("prunemap_wire_connections_total", &[], wire.connections as f64);
+    w.family("prunemap_wire_active_connections", "gauge", "Wire connections currently open.");
+    w.sample("prunemap_wire_active_connections", &[], wire.active as f64);
+    w.family("prunemap_wire_frames_total", "counter", "Non-blank request lines read.");
+    w.sample("prunemap_wire_frames_total", &[], wire.frames as f64);
+    w.family(
+        "prunemap_wire_served_frames_total",
+        "counter",
+        "Successful inference replies written.",
+    );
+    w.sample("prunemap_wire_served_frames_total", &[], wire.served as f64);
+    w.family(
+        "prunemap_wire_error_frames_total",
+        "counter",
+        "Error replies written, by stable error kind.",
+    );
+    for (kind, &n) in WIRE_ERROR_KINDS.iter().zip(wire.error_kinds.iter()) {
+        w.sample("prunemap_wire_error_frames_total", &[("kind", kind)], n as f64);
+    }
+    w.family(
+        "prunemap_wire_admin_frames_total",
+        "counter",
+        "Admin (stats/metrics) replies written.",
+    );
+    w.sample("prunemap_wire_admin_frames_total", &[], wire.admin as f64);
+    w.family(
+        "prunemap_wire_malformed_lines_total",
+        "counter",
+        "Request lines that failed frame decoding.",
+    );
+    w.sample("prunemap_wire_malformed_lines_total", &[], wire.malformed as f64);
+
+    w.finish()
+}
+
+/// One model's admission counters as the human-readable block the
+/// `serve` CLI prints: throughput shape, queue pressure, and wait-time
+/// distribution.
+pub fn render_session_stats(model: &str, st: &SessionStats) -> String {
+    let mut out = format!(
+        "model {model}: {} request(s) in {} run(s) | max coalesced {} | {:.2} requests/run | {} padded lanes | queue depth hwm {} | high/normal {}/{} | {} expired\n",
+        st.requests,
+        st.runs,
+        st.max_coalesced,
+        st.requests as f64 / st.runs.max(1) as f64,
+        st.padded_lanes,
+        st.queue_depth_hwm,
+        st.served_by_priority[0],
+        st.served_by_priority[1],
+        st.expired
+    );
+    for (batch, runs) in &st.batch_runs {
+        out.push_str(&format!("  executed batch {batch:>4}: {runs} run(s)\n"));
+    }
+    for (occupancy, runs) in &st.batch_occupancy {
+        out.push_str(&format!("  occupancy {occupancy:>4}: {runs} run(s)\n"));
+    }
+    let waits: Vec<String> = wait_bucket_labels()
+        .iter()
+        .zip(st.wait_buckets.iter())
+        .filter(|(_, &n)| n > 0)
+        .map(|(label, n)| format!("{label}={n}"))
+        .collect();
+    if !waits.is_empty() {
+        out.push_str(&format!("  wait: {}\n", waits.join(" ")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::metrics::parse_exposition;
+
+    fn sample_stats() -> SessionStats {
+        SessionStats {
+            requests: 7,
+            runs: 3,
+            padded_lanes: 5,
+            max_coalesced: 4,
+            batch_runs: [(8, 3)].into_iter().collect(),
+            batch_occupancy: [(1, 1), (2, 1), (4, 1)].into_iter().collect(),
+            queue_depth_hwm: 4,
+            wait_buckets: [3, 2, 1, 1, 0],
+            wait_total_us: 12_500,
+            served_by_priority: [2, 5],
+            expired: 1,
+        }
+    }
+
+    #[test]
+    fn exported_metrics_parse_and_cover_every_family() {
+        let stats: BTreeMap<String, SessionStats> =
+            [("proxy".to_string(), sample_stats())].into_iter().collect();
+        let mut wire = WireSnapshot { connections: 2, frames: 9, served: 7, ..Default::default() };
+        wire.error_kinds[1] = 2;
+        wire.errors = 2;
+        let text = render_server_metrics(&stats, &wire);
+        let fams = parse_exposition(&text).expect("exporter output is valid exposition text");
+        for name in MODEL_FAMILIES.iter().chain(WIRE_FAMILIES.iter()) {
+            let fam = fams.get(*name).unwrap_or_else(|| panic!("family '{name}' missing"));
+            assert!(!fam.help.is_empty() && !fam.kind.is_empty(), "family '{name}' headers");
+            assert!(!fam.samples.is_empty(), "family '{name}' has no samples");
+        }
+        assert_eq!(fams.len(), MODEL_FAMILIES.len() + WIRE_FAMILIES.len(), "no stray families");
+    }
+
+    #[test]
+    fn wait_histogram_buckets_are_cumulative_with_inf_equal_to_count() {
+        let stats: BTreeMap<String, SessionStats> =
+            [("proxy".to_string(), sample_stats())].into_iter().collect();
+        let text = render_server_metrics(&stats, &WireSnapshot::default());
+        let fams = parse_exposition(&text).unwrap();
+        let hist = &fams["prunemap_queue_wait_seconds"];
+        let bucket = |le: &str| -> f64 {
+            hist.samples
+                .iter()
+                .find(|s| s.name.ends_with("_bucket") && s.label("le") == Some(le))
+                .unwrap_or_else(|| panic!("bucket le={le}"))
+                .value
+        };
+        // wait_buckets [3,2,1,1,0] -> cumulative 3,5,6,7 and +Inf = 7
+        assert_eq!(bucket("0.0001"), 3.0);
+        assert_eq!(bucket("0.001"), 5.0);
+        assert_eq!(bucket("0.01"), 6.0);
+        assert_eq!(bucket("0.1"), 7.0);
+        assert_eq!(bucket("+Inf"), 7.0);
+        let count =
+            hist.samples.iter().find(|s| s.name.ends_with("_count")).expect("count sample");
+        assert_eq!(count.value, 7.0);
+        let sum = hist.samples.iter().find(|s| s.name.ends_with("_sum")).expect("sum sample");
+        assert!((sum.value - 0.0125).abs() < 1e-12, "sum from wait_total_us, got {}", sum.value);
+    }
+
+    #[test]
+    fn priority_lanes_export_per_model_request_counters() {
+        let stats: BTreeMap<String, SessionStats> =
+            [("a".to_string(), sample_stats()), ("b".to_string(), SessionStats::default())]
+                .into_iter()
+                .collect();
+        let text = render_server_metrics(&stats, &WireSnapshot::default());
+        let fams = parse_exposition(&text).unwrap();
+        let reqs = &fams["prunemap_requests_total"];
+        assert_eq!(reqs.samples.len(), 4, "2 models x 2 lanes");
+        let high_a = reqs
+            .samples
+            .iter()
+            .find(|s| s.label("model") == Some("a") && s.label("priority") == Some("high"))
+            .unwrap();
+        assert_eq!(high_a.value, 2.0);
+    }
+
+    #[test]
+    fn session_stats_text_block_names_every_counter() {
+        let text = render_session_stats("proxy", &sample_stats());
+        assert!(text.starts_with("model proxy: 7 request(s) in 3 run(s)"), "{text}");
+        assert!(text.contains("executed batch    8: 3 run(s)"), "{text}");
+        assert!(text.contains("occupancy    2: 1 run(s)"), "{text}");
+        assert!(text.contains("wait: <100µs=3 <1ms=2 <10ms=1 <100ms=1"), "{text}");
+        assert!(text.ends_with('\n'));
+        // an idle session renders just the header line
+        let idle = render_session_stats("idle", &SessionStats::default());
+        assert_eq!(idle.lines().count(), 1, "{idle}");
+    }
+}

@@ -1,0 +1,455 @@
+//! Prometheus text exposition: a small writer, a strict parser (used by
+//! tests to prove the exporter's output is well-formed), lock-free wire
+//! counters, and a minimal TCP scrape endpoint.
+//!
+//! The exposition format is the stable text form Prometheus scrapes:
+//! one `# HELP` and `# TYPE` line per metric family followed by its
+//! samples, label values quoted with `\\`/`\"`/`\n` escapes, histogram
+//! families expanded into cumulative `_bucket{le=...}` samples plus
+//! `_sum` and `_count`.  [`PromWriter`] emits it; [`parse_exposition`]
+//! validates it; [`serve_text`] answers `GET /metrics` scrapes with
+//! whatever a render closure produces, so the endpoint stays decoupled
+//! from the serving stack that feeds it.
+
+use std::collections::BTreeMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Incremental writer for the Prometheus text exposition format.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    /// Start a metric family: one `# HELP` + `# TYPE` header pair.
+    /// `kind` is `counter`, `gauge`, or `histogram`.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// One sample line.  `name` may carry a `_bucket`/`_sum`/`_count`
+    /// suffix for histogram families; labels are escaped here.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&format_value(value));
+        self.out.push('\n');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Escape a label value per the exposition format: backslash, quote,
+/// and newline.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Sample values print as integers when they are integral (counters),
+/// as `+Inf`/`-Inf`/`NaN` for the non-finite cases the format names.
+fn format_value(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 9e15 {
+        (v as i64).to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Full sample name (may carry a histogram suffix).
+    pub name: String,
+    /// Label pairs in source order, values unescaped.
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// Look up a label value by key.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// One parsed metric family: its declared type, help text, and samples.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Family {
+    pub kind: String,
+    pub help: String,
+    pub samples: Vec<Sample>,
+}
+
+/// Parse a text exposition document, enforcing that every family has
+/// both `# HELP` and `# TYPE` lines and every sample belongs to a
+/// declared family (histogram `_bucket`/`_sum`/`_count` suffixes
+/// resolve to their base family).
+pub fn parse_exposition(text: &str) -> Result<BTreeMap<String, Family>> {
+    let mut fams: BTreeMap<String, Family> = BTreeMap::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest.split_once(' ').unwrap_or((rest, ""));
+            fams.entry(name.to_string()).or_default().help = help.to_string();
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) =
+                rest.split_once(' ').ok_or_else(|| anyhow!("line {}: bare # TYPE", ln + 1))?;
+            ensure!(
+                matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                "line {}: unknown metric type '{kind}'",
+                ln + 1
+            );
+            fams.entry(name.to_string()).or_default().kind = kind.to_string();
+        } else if line.starts_with('#') {
+            continue; // free-form comment
+        } else {
+            let sample = parse_sample(line).map_err(|e| anyhow!("line {}: {e}", ln + 1))?;
+            let family = resolve_family(&sample.name, &fams).ok_or_else(|| {
+                anyhow!("line {}: sample '{}' has no declared family", ln + 1, sample.name)
+            })?;
+            fams.get_mut(&family).expect("resolved family exists").samples.push(sample);
+        }
+    }
+    for (name, f) in &fams {
+        ensure!(!f.kind.is_empty(), "family '{name}' has no # TYPE line");
+        ensure!(!f.help.is_empty(), "family '{name}' has no # HELP line");
+    }
+    Ok(fams)
+}
+
+/// Map a sample name onto its declared family, resolving histogram
+/// suffixes against families declared as histograms.
+fn resolve_family(name: &str, fams: &BTreeMap<String, Family>) -> Option<String> {
+    if fams.contains_key(name) {
+        return Some(name.to_string());
+    }
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if fams.get(base).is_some_and(|f| f.kind == "histogram") {
+                return Some(base.to_string());
+            }
+        }
+    }
+    None
+}
+
+fn parse_sample(line: &str) -> Result<Sample> {
+    let brace = line.find('{');
+    let space = line.find(' ');
+    let (name, labels, value_str) = match (brace, space) {
+        (Some(b), _) if space.is_none_or(|s| b < s) => {
+            let (labels, after) = parse_labels(&line[b + 1..])?;
+            (&line[..b], labels, after)
+        }
+        (_, Some(s)) => (&line[..s], Vec::new(), &line[s + 1..]),
+        _ => bail!("sample line '{line}' has no value"),
+    };
+    let name_ok = name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':');
+    ensure!(!name.is_empty() && name_ok, "bad metric name '{name}'");
+    Ok(Sample { name: name.to_string(), labels, value: parse_value(value_str.trim())? })
+}
+
+/// Parse `key="value",...}` starting just past the opening brace;
+/// returns the labels and the remainder after the closing brace.
+fn parse_labels(s: &str) -> Result<(Vec<(String, String)>, &str)> {
+    let mut out = Vec::new();
+    let mut rest = s.trim_start();
+    loop {
+        if let Some(after) = rest.strip_prefix('}') {
+            return Ok((out, after));
+        }
+        let eq = rest.find('=').ok_or_else(|| anyhow!("label without '=' in '{{{s}'"))?;
+        let key = rest[..eq].trim().to_string();
+        ensure!(!key.is_empty(), "empty label name in '{{{s}'");
+        let after_eq = rest[eq + 1..].trim_start();
+        let inner = after_eq
+            .strip_prefix('"')
+            .ok_or_else(|| anyhow!("label value must be double-quoted in '{{{s}'"))?;
+        let mut val = String::new();
+        let mut end = None;
+        let mut esc = false;
+        for (i, c) in inner.char_indices() {
+            if esc {
+                val.push(if c == 'n' { '\n' } else { c });
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                end = Some(i);
+                break;
+            } else {
+                val.push(c);
+            }
+        }
+        let end = end.ok_or_else(|| anyhow!("unterminated label value in '{{{s}'"))?;
+        out.push((key, val));
+        rest = inner[end + 1..].trim_start();
+        rest = rest.strip_prefix(',').unwrap_or(rest).trim_start();
+    }
+}
+
+fn parse_value(s: &str) -> Result<f64> {
+    match s {
+        "+Inf" | "Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        _ => s.parse().map_err(|_| anyhow!("bad sample value '{s}'")),
+    }
+}
+
+/// Stable wire error-kind tags, mirroring `ServeError::kind()`, plus a
+/// catch-all slot so an unknown tag never panics the counter path.
+pub const WIRE_ERROR_KINDS: [&str; 7] = [
+    "unknown_model",
+    "bad_input",
+    "deadline_expired",
+    "closed",
+    "execution",
+    "malformed",
+    "other",
+];
+
+/// Lock-free counters for the line-JSON wire layer, shared across all
+/// connections of one [`crate::serve::Server`].
+#[derive(Debug, Default)]
+pub struct WireCounters {
+    /// Connections accepted since startup.
+    pub connections: AtomicU64,
+    /// Connections currently open.
+    pub active: AtomicU64,
+    /// Non-blank request lines read.
+    pub frames: AtomicU64,
+    /// Successful inference replies written.
+    pub served: AtomicU64,
+    /// Error replies written (any kind).
+    pub errors: AtomicU64,
+    /// Admin (`stats`/`metrics`) replies written.
+    pub admin: AtomicU64,
+    /// Lines that failed frame decoding.
+    pub malformed: AtomicU64,
+    error_kinds: [AtomicU64; 7],
+}
+
+impl WireCounters {
+    /// Count one error reply, bucketing by its stable kind tag.
+    pub fn record_error(&self, kind: &str) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        let slot = WIRE_ERROR_KINDS
+            .iter()
+            .position(|k| *k == kind)
+            .unwrap_or(WIRE_ERROR_KINDS.len() - 1);
+        self.error_kinds[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough copy for rendering (individual loads are
+    /// relaxed; exact cross-counter consistency is not needed for
+    /// monotonic counters).
+    pub fn snapshot(&self) -> WireSnapshot {
+        let mut error_kinds = [0u64; 7];
+        for (slot, counter) in error_kinds.iter_mut().zip(&self.error_kinds) {
+            *slot = counter.load(Ordering::Relaxed);
+        }
+        WireSnapshot {
+            connections: self.connections.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            admin: self.admin.load(Ordering::Relaxed),
+            malformed: self.malformed.load(Ordering::Relaxed),
+            error_kinds,
+        }
+    }
+}
+
+/// Point-in-time copy of [`WireCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireSnapshot {
+    pub connections: u64,
+    pub active: u64,
+    pub frames: u64,
+    pub served: u64,
+    pub errors: u64,
+    pub admin: u64,
+    pub malformed: u64,
+    /// Indexed like [`WIRE_ERROR_KINDS`].
+    pub error_kinds: [u64; 7],
+}
+
+/// Answer scrapes on `listener` forever (or for `max_conns` accepts),
+/// rendering a fresh document per request.  Speaks just enough HTTP for
+/// Prometheus and `curl`: read the request head, answer `200 OK` with
+/// `text/plain`.  Per-connection failures never take the endpoint down.
+pub fn serve_text<F>(listener: TcpListener, max_conns: Option<usize>, render: F) -> io::Result<()>
+where
+    F: Fn() -> String,
+{
+    if max_conns == Some(0) {
+        return Ok(());
+    }
+    let mut accepted = 0usize;
+    for conn in listener.incoming() {
+        if let Ok(stream) = conn {
+            let _ = answer_scrape(stream, &render);
+        }
+        accepted += 1;
+        if Some(accepted) == max_conns {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn answer_scrape<F: Fn() -> String>(stream: TcpStream, render: &F) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    // consume the request line + headers up to the blank separator; the
+    // path is ignored (every path serves the one document)
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 || line.trim().is_empty() {
+            break;
+        }
+    }
+    let body = render();
+    let mut stream = stream;
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_output_roundtrips_through_the_parser() {
+        let mut w = PromWriter::new();
+        w.family("acme_requests_total", "counter", "Requests accepted.");
+        w.sample("acme_requests_total", &[("model", "mobilenetv1"), ("priority", "high")], 3.0);
+        w.sample("acme_requests_total", &[("model", "proxy"), ("priority", "normal")], 41.0);
+        w.family("acme_wait_seconds", "histogram", "Queue wait.");
+        w.sample("acme_wait_seconds_bucket", &[("le", "0.001")], 2.0);
+        w.sample("acme_wait_seconds_bucket", &[("le", "+Inf")], 5.0);
+        w.sample("acme_wait_seconds_count", &[], 5.0);
+        w.sample("acme_wait_seconds_sum", &[], 0.0123);
+        let text = w.finish();
+        let fams = parse_exposition(&text).expect("writer output parses");
+        assert_eq!(fams.len(), 2);
+        let reqs = &fams["acme_requests_total"];
+        assert_eq!(reqs.kind, "counter");
+        assert_eq!(reqs.help, "Requests accepted.");
+        assert_eq!(reqs.samples.len(), 2);
+        assert_eq!(reqs.samples[0].label("model"), Some("mobilenetv1"));
+        assert_eq!(reqs.samples[1].value, 41.0);
+        let wait = &fams["acme_wait_seconds"];
+        assert_eq!(wait.kind, "histogram");
+        assert_eq!(wait.samples.len(), 4, "suffixed samples fold into the base family");
+        let inf = wait
+            .samples
+            .iter()
+            .find(|s| s.label("le") == Some("+Inf"))
+            .expect("+Inf bucket");
+        assert_eq!(inf.value, 5.0);
+    }
+
+    #[test]
+    fn label_values_escape_and_unescape() {
+        let mut w = PromWriter::new();
+        w.family("x_total", "counter", "Escaping.");
+        w.sample("x_total", &[("name", "a\"b\\c\nd")], 1.0);
+        let text = w.finish();
+        assert!(text.contains(r#"name="a\"b\\c\nd""#), "{text}");
+        let fams = parse_exposition(&text).unwrap();
+        assert_eq!(fams["x_total"].samples[0].label("name"), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn values_format_as_integers_infinities_and_floats() {
+        assert_eq!(format_value(5.0), "5");
+        assert_eq!(format_value(0.25), "0.25");
+        assert_eq!(format_value(f64::INFINITY), "+Inf");
+        assert_eq!(format_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(format_value(f64::NAN), "NaN");
+        assert_eq!(parse_value("+Inf").unwrap(), f64::INFINITY);
+    }
+
+    #[test]
+    fn parser_rejects_undeclared_and_headerless_families() {
+        let orphan = "stray_total 3\n";
+        assert!(parse_exposition(orphan).is_err(), "sample without TYPE/HELP must fail");
+        let no_help = "# TYPE t_total counter\nt_total 1\n";
+        assert!(parse_exposition(no_help).is_err(), "family without HELP must fail");
+        let bad_value = "# HELP t_total h\n# TYPE t_total counter\nt_total abc\n";
+        assert!(parse_exposition(bad_value).is_err());
+        let bad_kind = "# HELP t_total h\n# TYPE t_total widget\n";
+        assert!(parse_exposition(bad_kind).is_err());
+    }
+
+    #[test]
+    fn wire_counters_bucket_error_kinds_with_a_catch_all() {
+        let c = WireCounters::default();
+        c.connections.fetch_add(2, Ordering::Relaxed);
+        c.record_error("bad_input");
+        c.record_error("bad_input");
+        c.record_error("not_a_real_kind");
+        let s = c.snapshot();
+        assert_eq!(s.connections, 2);
+        assert_eq!(s.errors, 3);
+        let bad = WIRE_ERROR_KINDS.iter().position(|k| *k == "bad_input").unwrap();
+        assert_eq!(s.error_kinds[bad], 2);
+        assert_eq!(s.error_kinds[WIRE_ERROR_KINDS.len() - 1], 1, "unknown kinds → other");
+    }
+
+    #[test]
+    fn scrape_endpoint_answers_http_with_the_rendered_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server =
+            std::thread::spawn(move || serve_text(listener, Some(1), || "m_total 7\n".to_string()));
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(conn, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut reply = String::new();
+        use std::io::Read;
+        conn.read_to_string(&mut reply).unwrap();
+        server.join().unwrap().unwrap();
+        assert!(reply.starts_with("HTTP/1.1 200 OK\r\n"), "{reply}");
+        assert!(reply.contains("Content-Type: text/plain; version=0.0.4"), "{reply}");
+        assert!(reply.ends_with("m_total 7\n"), "{reply}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Observability for the serving stack: metrics out, trace spans down.
+//!
+//! Two halves, deliberately decoupled from the code they observe:
+//!
+//! * **Metrics** ([`metrics`], [`export`]) — the per-model
+//!   [`SessionStats`](crate::serve::SessionStats) counters that already
+//!   exist, plus lock-free wire-layer counters ([`WireCounters`]),
+//!   rendered in Prometheus text exposition format.  The document is
+//!   reachable three ways: in-process via
+//!   [`Server::metrics_text`](crate::serve::Server::metrics_text), over
+//!   the line-JSON wire protocol as a `metrics` admin frame, and over a
+//!   dedicated scrape listener (`prunemap serve --metrics ADDR`, backed
+//!   by [`serve_text`]).
+//! * **Traces** ([`trace`]) — a bounded always-on span ring
+//!   ([`TraceRing`]) that the session workers and the graph executor
+//!   feed: queue-wait, batch assembly, whole runs, each lowered graph
+//!   step, and the im2col/spmm/epilogue sub-ops inside it.  Snapshots
+//!   export as Chrome trace-event JSON (`--trace-out`, `prunemap
+//!   profile`), and the per-layer means feed
+//!   [`simulator::cost`](crate::simulator::cost) calibration records.
+//!
+//! Everything here is pay-for-what-you-attach: with no ring attached
+//! the executor's hot path takes an untaken `None` branch, and the
+//! metrics renderers only run when something asks for the document.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{render_server_metrics, render_session_stats, MODEL_FAMILIES, WIRE_FAMILIES};
+pub use metrics::{parse_exposition, serve_text, PromWriter, WireCounters, WireSnapshot};
+pub use trace::{chrome_trace_json, Span, TraceRing};

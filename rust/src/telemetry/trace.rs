@@ -1,0 +1,320 @@
+//! Cheap always-on span recorder: nanosecond intervals in a bounded
+//! ring buffer, dumpable as Chrome trace-event JSON.
+//!
+//! A [`Span`] is one closed interval of work — queue wait, batch
+//! assembly, a whole network run, one lowered graph step, or a
+//! sub-operation inside a step (im2col, spmm, epilogue).  Spans are
+//! timestamped against a process-wide epoch so intervals recorded on
+//! different threads land on one timeline, and carry a `parent` id so
+//! consumers can rebuild the run → step → op hierarchy without relying
+//! on time containment alone.
+//!
+//! [`TraceRing`] is the bounded recorder: when full it drops the
+//! *oldest* spans (and counts them), so an always-attached ring costs a
+//! mutex push per span and a fixed amount of memory no matter how long
+//! the process serves.  [`chrome_trace_json`] renders a snapshot in the
+//! Chrome `chrome://tracing` / Perfetto trace-event format: worker-side
+//! spans as complete (`"X"`) events nested by time on their thread
+//! track, queue waits — which overlap arbitrarily — as async
+//! (`"b"`/`"e"`) pairs.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// Whole network run (one `GraphExecutor` invocation).
+pub const CAT_RUN: &str = "run";
+/// One lowered graph step (gemm layer, pool, flatten, ...).
+pub const CAT_STEP: &str = "step";
+/// A sub-operation inside a step: im2col, spmm, epilogue.
+pub const CAT_OP: &str = "op";
+/// Micro-batch assembly inside a serving session worker.
+pub const CAT_BATCH: &str = "batch";
+/// Per-request queue wait between submit and batch assembly.
+pub const CAT_QUEUE: &str = "queue";
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (pinned the first time any
+/// telemetry clock is touched).
+pub fn now_ns() -> u64 {
+    Instant::now().saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+/// Convert an [`Instant`] captured elsewhere (e.g. a request's submit
+/// time) to epoch nanoseconds.  Saturates to 0 for instants that
+/// predate the epoch.
+pub fn ns_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Small dense id for the current thread — `std::thread::ThreadId` has
+/// no stable integer form, and trace viewers want compact track ids.
+pub fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// One recorded interval of work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Human-readable label, e.g. a layer name or `"conv1/spmm"`.
+    pub name: String,
+    /// One of the `CAT_*` constants.
+    pub cat: &'static str,
+    /// Start, nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Ring-assigned span id; 0 until [`TraceRing::record`] assigns one.
+    pub id: u64,
+    /// Id of the enclosing span, 0 for roots.
+    pub parent: u64,
+    /// Dense thread id from [`current_tid`].
+    pub tid: u64,
+}
+
+impl Span {
+    /// A span with an explicit duration on the current thread's track.
+    pub fn new(name: impl Into<String>, cat: &'static str, start_ns: u64, dur_ns: u64) -> Span {
+        Span { name: name.into(), cat, start_ns, dur_ns, id: 0, parent: 0, tid: current_tid() }
+    }
+
+    /// A span closing now: duration is `now_ns() - start_ns`.
+    pub fn until_now(name: impl Into<String>, cat: &'static str, start_ns: u64) -> Span {
+        let dur = now_ns().saturating_sub(start_ns);
+        Span::new(name, cat, start_ns, dur)
+    }
+
+    /// Attach the enclosing span's id.
+    pub fn parent(mut self, parent: u64) -> Span {
+        self.parent = parent;
+        self
+    }
+
+    /// Override the thread track (queue waits belong to no worker).
+    pub fn tid(mut self, tid: u64) -> Span {
+        self.tid = tid;
+        self
+    }
+}
+
+/// Bounded, thread-safe span ring: a fixed-capacity recorder that drops
+/// the oldest spans when full and counts what it dropped.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    next_id: AtomicU64,
+    dropped: AtomicU64,
+    spans: Mutex<VecDeque<Span>>,
+}
+
+impl TraceRing {
+    /// A new ring holding at most `cap` spans, shared via `Arc` so one
+    /// ring can collect from a server, its sessions, and the executor.
+    pub fn new(cap: usize) -> Arc<TraceRing> {
+        let _ = epoch(); // pin the epoch before any span arithmetic
+        Arc::new(TraceRing {
+            cap: cap.max(1),
+            next_id: AtomicU64::new(1),
+            dropped: AtomicU64::new(0),
+            spans: Mutex::new(VecDeque::new()),
+        })
+    }
+
+    /// Reserve a span id up front (so children can name their parent
+    /// before the parent span itself is recorded).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record a span, assigning an id if the span has none; returns the
+    /// span's id.  Evicts the oldest span when the ring is full.
+    pub fn record(&self, mut span: Span) -> u64 {
+        if span.id == 0 {
+            span.id = self.next_id();
+        }
+        let id = span.id;
+        let mut q = self.spans.lock().unwrap();
+        if q.len() >= self.cap {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(span);
+        id
+    }
+
+    /// Copy out the current contents, ordered by start time.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut out: Vec<Span> = self.spans.lock().unwrap().iter().cloned().collect();
+        out.sort_by_key(|s| (s.start_ns, s.id));
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Spans evicted so far because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Discard all recorded spans (ids keep counting up).
+    pub fn clear(&self) {
+        self.spans.lock().unwrap().clear();
+    }
+}
+
+/// Render spans as a Chrome trace-event JSON document (loadable in
+/// `chrome://tracing` or Perfetto).  Timestamps and durations are in
+/// microseconds per the format; `args` carries the span/parent ids so
+/// the recorded hierarchy survives the export.
+pub fn chrome_trace_json(spans: &[Span]) -> Value {
+    let mut events = Vec::with_capacity(spans.len());
+    for s in spans {
+        let ts = s.start_ns as f64 / 1e3;
+        let dur = s.dur_ns as f64 / 1e3;
+        let args = Value::obj(vec![
+            ("span", Value::num(s.id as f64)),
+            ("parent", Value::num(s.parent as f64)),
+        ]);
+        if s.cat == CAT_QUEUE {
+            // queue waits overlap arbitrarily on one logical track;
+            // async begin/end pairs keyed by span id render cleanly
+            // where overlapping "X" events on one tid would not
+            for (ph, t) in [("b", ts), ("e", ts + dur)] {
+                events.push(Value::obj(vec![
+                    ("name", Value::str(&*s.name)),
+                    ("cat", Value::str(s.cat)),
+                    ("ph", Value::str(ph)),
+                    ("id", Value::num(s.id as f64)),
+                    ("ts", Value::num(t)),
+                    ("pid", Value::num(1.0)),
+                    ("tid", Value::num(s.tid as f64)),
+                    ("args", args.clone()),
+                ]));
+            }
+        } else {
+            events.push(Value::obj(vec![
+                ("name", Value::str(&*s.name)),
+                ("cat", Value::str(s.cat)),
+                ("ph", Value::str("X")),
+                ("ts", Value::num(ts)),
+                ("dur", Value::num(dur)),
+                ("pid", Value::num(1.0)),
+                ("tid", Value::num(s.tid as f64)),
+                ("args", args),
+            ]));
+        }
+    }
+    Value::obj(vec![
+        ("traceEvents", Value::arr(events)),
+        ("displayTimeUnit", Value::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_capacity_and_counts_drops() {
+        let ring = TraceRing::new(3);
+        for i in 0..5 {
+            ring.record(Span::new(format!("s{i}"), CAT_OP, i * 10, 5));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.capacity(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let names: Vec<String> = ring.snapshot().into_iter().map(|s| s.name).collect();
+        assert_eq!(names, ["s2", "s3", "s4"], "oldest spans evicted first");
+        ring.clear();
+        assert!(ring.is_empty());
+        assert_eq!(ring.dropped(), 2, "clear() does not forget the drop count");
+    }
+
+    #[test]
+    fn record_assigns_monotonic_ids_and_keeps_explicit_ones() {
+        let ring = TraceRing::new(8);
+        let a = ring.record(Span::new("a", CAT_OP, 0, 1));
+        let b = ring.record(Span::new("b", CAT_OP, 1, 1));
+        assert!(b > a, "auto ids are monotonic");
+        let reserved = ring.next_id();
+        let mut s = Span::new("c", CAT_STEP, 2, 1);
+        s.id = reserved;
+        assert_eq!(ring.record(s), reserved, "pre-reserved ids survive record()");
+    }
+
+    #[test]
+    fn until_now_measures_a_nonnegative_interval() {
+        let t0 = now_ns();
+        let s = Span::until_now("x", CAT_RUN, t0);
+        assert_eq!(s.start_ns, t0);
+        assert_eq!(s.tid, current_tid());
+        // an instant captured after the epoch maps monotonically
+        let i = std::time::Instant::now();
+        assert!(ns_since_epoch(i) >= t0);
+    }
+
+    #[test]
+    fn chrome_export_emits_x_events_and_async_pairs() {
+        let spans = vec![
+            Span { id: 1, parent: 0, ..Span::new("net", CAT_RUN, 1_000, 10_000) },
+            Span { id: 2, parent: 1, ..Span::new("conv1", CAT_STEP, 1_500, 4_000) },
+            Span { id: 3, parent: 0, tid: 0, ..Span::new("queue_wait", CAT_QUEUE, 500, 2_000) },
+        ];
+        let doc = chrome_trace_json(&spans);
+        // round-trip through the serializer to prove the document loads
+        let back = Value::parse(&doc.compact()).expect("chrome trace JSON parses");
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4, "2 X events + 1 b/e pair");
+        let phases: Vec<String> = events
+            .iter()
+            .map(|e| e.get("ph").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(phases.iter().filter(|p| *p == "X").count(), 2);
+        assert!(phases.contains(&"b".to_string()) && phases.contains(&"e".to_string()));
+        for e in events {
+            assert!(e.get("name").is_ok() && e.get("ts").is_ok() && e.get("pid").is_ok());
+            if e.get("ph").unwrap().as_str().unwrap() == "X" {
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
+        // timestamps are microseconds: 1_000 ns -> 1.0 µs
+        let net = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == "net")
+            .unwrap();
+        assert!((net.get("ts").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert!((net.get("dur").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distinct_threads_get_distinct_tids() {
+        let here = current_tid();
+        let there = std::thread::spawn(current_tid).join().unwrap();
+        assert_ne!(here, there);
+        assert_eq!(here, current_tid(), "tid is stable within a thread");
+    }
+}

@@ -186,6 +186,20 @@ impl Args {
     pub fn listen(&self) -> Option<&str> {
         self.get("listen")
     }
+
+    /// Metrics scrape endpoint from `--metrics ADDR` — a TCP bind address
+    /// the Prometheus text exposition document is served on.  `None`
+    /// leaves metrics reachable only in-band (`metrics` admin frames).
+    pub fn metrics_addr(&self) -> Option<&str> {
+        self.get("metrics")
+    }
+
+    /// Chrome trace output path from `--trace-out FILE`: attach a span
+    /// ring and dump it as trace-event JSON on exit.  `None` disables
+    /// tracing.
+    pub fn trace_out(&self) -> Option<&str> {
+        self.get("trace-out")
+    }
 }
 
 /// Engine worker count for test binaries: `PRUNEMAP_TEST_THREADS` when
@@ -275,6 +289,11 @@ mod tests {
         let single = Args::parse(toks("--model resnet18 --listen 127.0.0.1:7077"));
         assert_eq!(single.models("x"), vec!["resnet18"]);
         assert_eq!(single.listen(), Some("127.0.0.1:7077"));
+        let obs = Args::parse(toks("--metrics 127.0.0.1:9090 --trace-out trace.json"));
+        assert_eq!(obs.metrics_addr(), Some("127.0.0.1:9090"));
+        assert_eq!(obs.trace_out(), Some("trace.json"));
+        assert_eq!(single.metrics_addr(), None);
+        assert_eq!(single.trace_out(), None);
         let defaults = Args::parse(toks(""));
         assert_eq!(defaults.models("mobilenetv1"), vec!["mobilenetv1"]);
         assert_eq!(defaults.deadline_ms().unwrap(), None);

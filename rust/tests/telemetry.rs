@@ -1,0 +1,220 @@
+//! Acceptance suite for the telemetry layer
+//! (`prunemap::telemetry::{metrics, export, trace}`):
+//!
+//! * the metrics endpoint serves a valid Prometheus text exposition
+//!   document over live TCP covering every per-model and wire-layer
+//!   family the exporter promises ([`MODEL_FAMILIES`] /
+//!   [`WIRE_FAMILIES`]);
+//! * in-band `stats` / `metrics` admin frames on the wire protocol
+//!   return the same counters over the same connection the inference
+//!   frames ride;
+//! * a traced server records queue/batch/run/op spans that dump as
+//!   loadable Chrome trace-event JSON;
+//! * `prunemap profile` (the real binary) emits the per-layer time
+//!   table, a reparseable calibration record, and a trace dump.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use prunemap::accuracy::Assignment;
+use prunemap::models::zoo;
+use prunemap::serve::{wire, InferRequest, ModelRegistry, PreparedModel, Server};
+use prunemap::telemetry::{
+    self, parse_exposition, TraceRing, MODEL_FAMILIES, WIRE_FAMILIES,
+};
+use prunemap::util::cli::env_threads;
+use prunemap::util::json::Value;
+
+/// The proxy CNN sealed dense — the cheapest real artifact for
+/// debug-mode test runs.
+fn proxy_registry() -> ModelRegistry {
+    let spec = zoo::proxy_cnn();
+    let assigns: Vec<Assignment> = spec.layers.iter().map(|_| Assignment::dense()).collect();
+    let prepared = PreparedModel::builder()
+        .model_spec(spec)
+        .assignments(assigns)
+        .seed(9)
+        .build()
+        .expect("prepare proxy model");
+    let registry = ModelRegistry::new();
+    registry.insert("proxy", prepared);
+    registry
+}
+
+fn sample(len: usize, tag: usize) -> Vec<f32> {
+    (0..len).map(|j| (((tag * 7 + j) % 13) as f32) * 0.2 - 1.1).collect()
+}
+
+#[test]
+fn metrics_endpoint_serves_prometheus_text_over_live_tcp() {
+    let registry = proxy_registry();
+    let server = Arc::new(Server::builder(registry.clone()).threads(env_threads(1)).build());
+    let n = registry.get("proxy").unwrap().input_len();
+    // traffic first so every per-model family has samples to scrape:
+    // one normal-lane and one high-lane request
+    server.infer(InferRequest::new("proxy", sample(n, 0))).unwrap();
+    server.infer(InferRequest::new("proxy", sample(n, 1)).high()).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let exporter = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            telemetry::serve_text(listener, Some(1), move || server.metrics_text())
+        })
+    };
+    let mut sock = TcpStream::connect(addr).unwrap();
+    write!(sock, "GET /metrics HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+    let mut response = String::new();
+    sock.read_to_string(&mut response).unwrap();
+    exporter.join().expect("exporter thread").expect("scrape loop");
+
+    let (head, body) = response.split_once("\r\n\r\n").expect("an HTTP head/body split");
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+
+    let families = parse_exposition(body).expect("scrape body must parse as exposition text");
+    for name in MODEL_FAMILIES.iter().chain(WIRE_FAMILIES.iter()) {
+        assert!(families.contains_key(*name), "family '{name}' missing from scrape:\n{body}");
+    }
+
+    // the request counter splits by priority lane under the model label
+    let requests = &families["prunemap_requests_total"];
+    for lane in ["high", "normal"] {
+        let s = requests
+            .samples
+            .iter()
+            .find(|s| s.label("model") == Some("proxy") && s.label("priority") == Some(lane))
+            .unwrap_or_else(|| panic!("no {lane}-lane sample:\n{body}"));
+        assert_eq!(s.value, 1.0, "{lane} lane served exactly one request");
+    }
+    // the wait histogram is cumulative: the +Inf bucket and _count both
+    // account for every request
+    let wait = &families["prunemap_queue_wait_seconds"];
+    assert_eq!(wait.kind, "histogram");
+    let inf = wait
+        .samples
+        .iter()
+        .find(|s| s.name.ends_with("_bucket") && s.label("le") == Some("+Inf"))
+        .expect("+Inf bucket");
+    assert_eq!(inf.value, 2.0);
+    let count =
+        wait.samples.iter().find(|s| s.name.ends_with("_count")).expect("_count sample");
+    assert_eq!(count.value, 2.0);
+}
+
+#[test]
+fn wire_admin_frames_fetch_stats_and_metrics_over_tcp() {
+    let registry = proxy_registry();
+    let server = Arc::new(Server::builder(registry.clone()).threads(env_threads(1)).build());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let acceptor = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(1)))
+    };
+    let n = registry.get("proxy").unwrap().input_len();
+    let mut client = wire::Client::connect(addr).unwrap();
+    let y = client.infer(&InferRequest::new("proxy", sample(n, 2))).unwrap().unwrap();
+    assert!(!y.is_empty());
+
+    // the stats frame carries the same SessionStats JSON Server::stats
+    // snapshots in-process
+    let stats = client.stats().unwrap();
+    let proxy = stats.get("proxy").expect("per-model stats object");
+    assert_eq!(proxy.get("requests").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(proxy.get("runs").unwrap().as_u64().unwrap(), 1);
+
+    // the metrics frame carries the same exposition document the HTTP
+    // endpoint serves — and it sees this very connection's counters
+    let text = client.metrics_text().unwrap();
+    let families = parse_exposition(&text).expect("wire metrics frame must parse");
+    for name in WIRE_FAMILIES {
+        assert!(families.contains_key(name), "family '{name}' missing:\n{text}");
+    }
+    assert_eq!(families["prunemap_wire_served_frames_total"].samples[0].value, 1.0);
+    assert_eq!(families["prunemap_wire_active_connections"].samples[0].value, 1.0);
+
+    drop(client);
+    acceptor.join().expect("acceptor thread").unwrap();
+    let snap = server.wire_counters().snapshot();
+    assert_eq!(snap.connections, 1);
+    assert_eq!(snap.active, 0, "closed connection must release the active gauge");
+    assert_eq!(snap.frames, 3, "one infer + two admin frames");
+    assert_eq!(snap.served, 1);
+    assert_eq!(snap.admin, 2);
+    assert_eq!(snap.malformed, 0);
+}
+
+#[test]
+fn traced_server_emits_loadable_chrome_trace_json() {
+    let registry = proxy_registry();
+    let ring = TraceRing::new(4096);
+    let server = Server::builder(registry.clone())
+        .threads(env_threads(1))
+        .trace(Arc::clone(&ring))
+        .build();
+    let n = registry.get("proxy").unwrap().input_len();
+    for tag in 0..3 {
+        server.infer(InferRequest::new("proxy", sample(n, tag))).unwrap();
+    }
+    let spans = ring.snapshot();
+    assert!(!spans.is_empty(), "a traced server must record spans");
+    assert_eq!(ring.dropped(), 0, "4096 slots must hold three proxy runs");
+
+    let text = telemetry::chrome_trace_json(&spans).pretty();
+    let doc = Value::parse(&text).expect("chrome trace output must reparse");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        events.len() >= spans.len(),
+        "queue spans expand to b/e pairs, everything else maps 1:1"
+    );
+    for ev in events {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        assert!(matches!(ph, "X" | "b" | "e"), "unexpected phase '{ph}'");
+        assert!(ev.get("ts").unwrap().as_f64().is_ok(), "every event carries a timestamp");
+    }
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+}
+
+#[test]
+fn profile_subcommand_writes_calibration_and_trace_files() {
+    let pid = std::process::id();
+    let cal_path = std::env::temp_dir().join(format!("prunemap_profile_cal_{pid}.json"));
+    let trace_path = std::env::temp_dir().join(format!("prunemap_profile_trace_{pid}.json"));
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_prunemap"))
+        .args(["profile", "--model", "proxy", "--reps", "2", "--warmup", "1", "--threads", "1"])
+        .arg("--json-out")
+        .arg(&cal_path)
+        .arg("--trace-out")
+        .arg(&trace_path)
+        .output()
+        .expect("run prunemap profile");
+    assert!(
+        out.status.success(),
+        "profile failed:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mean ms"), "per-layer table header:\n{text}");
+    assert!(text.contains("measured-vs-modeled"), "calibration section:\n{text}");
+
+    let cal = Value::parse(&std::fs::read_to_string(&cal_path).unwrap())
+        .expect("calibration record must parse");
+    assert_eq!(cal.get("format").unwrap().as_str().unwrap(), "prunemap.calibration.v1");
+    assert_eq!(cal.get("reps").unwrap().as_u64().unwrap(), 2);
+    let layers = cal.get("layers").unwrap().as_arr().unwrap();
+    assert!(!layers.is_empty(), "calibration must join at least one layer");
+    for l in layers {
+        assert!(l.get("measured_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(l.get("modeled_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    let trace = Value::parse(&std::fs::read_to_string(&trace_path).unwrap())
+        .expect("trace dump must parse");
+    assert!(!trace.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    let _ = std::fs::remove_file(&cal_path);
+    let _ = std::fs::remove_file(&trace_path);
+}
