@@ -70,7 +70,7 @@ fn main() -> prunemap::Result<()> {
     let addr = listener.local_addr()?;
     let acceptor = {
         let server = Arc::clone(&server);
-        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(2)))
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(2), 8))
     };
     println!("\nfront door listening on {addr} [{}]", registry.names().join(", "));
 

@@ -23,8 +23,8 @@
 //!                          (plus a Chrome trace-event JSON dump)
 //!   serve [--models M1,M2 | --model M] [--listen ADDR|stdio] [--conns N]
 //!         [--requests N] [--clients N] [--deadline-ms F] [--max-batch N]
-//!         [--max-wait-ms F] [--workers N] [--save F | --load [name=]F]
-//!         [--metrics ADDR] [--trace-out F]
+//!         [--max-wait-ms F] [--max-queue N] [--max-conns N] [--workers N]
+//!         [--save F | --load [name=]F] [--metrics ADDR] [--trace-out F]
 //!                          multi-model serving front door: compile each
 //!                          model once, route typed requests by name with
 //!                          priority lanes + deadline admission.  With
@@ -373,6 +373,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let max_batch = args.max_batch(32)?;
     let max_wait = args.max_wait(2.0)?;
+    let max_queue = args.max_queue(prunemap::serve::DEFAULT_MAX_QUEUE)?;
     let workers = args.get_usize("workers", 1)?;
     // the ring exists only when someone will read it (--trace-out), so
     // the default serve path stays allocation- and lock-free on spans
@@ -383,13 +384,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .fused(!args.materialized())
         .max_batch(max_batch)
         .max_wait(max_wait)
+        .max_queue(max_queue)
         .workers(workers);
     if let Some(ring) = &ring {
         builder = builder.trace(Arc::clone(ring));
     }
     let server = Arc::new(builder.build());
     eprintln!(
-        "front door: [{}] | {threads} engine threads | max batch {max_batch} | max wait {max_wait:?} | {workers} worker(s) per model",
+        "front door: [{}] | {threads} engine threads | max batch {max_batch} | max wait {max_wait:?} | max queue {max_queue} | {workers} worker(s) per model",
         registry.names().join(", ")
     );
     if let Some(addr) = args.metrics_addr() {
@@ -426,7 +428,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .with_context(|| format!("bind wire listener on {addr}"))?;
             eprintln!("listening on {}", listener.local_addr()?);
             let conns = args.get_usize("conns", 0)?;
-            wire::serve_tcp(&server, listener, (conns > 0).then_some(conns))?;
+            let max_active = args.max_conns(256)?;
+            wire::serve_tcp(&server, listener, (conns > 0).then_some(conns), max_active)?;
         }
         None => serve_burst(args, &server)?,
     }
@@ -758,7 +761,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|profile|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--deadline-ms F] [--metrics ADDR] [--trace-out F]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|profile|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--max-queue N] [--max-conns N] [--deadline-ms F] [--metrics ADDR] [--trace-out F]"
             );
         }
     }

@@ -86,7 +86,7 @@ pub use registry::ModelRegistry;
 pub use server::{InferRequest, Server, ServerBuilder};
 pub use session::{
     wait_bucket_labels, Outcome, Session, SessionBuilder, SessionStats, Ticket,
-    WAIT_BUCKET_BOUNDS_US,
+    DEFAULT_MAX_QUEUE, WAIT_BUCKET_BOUNDS_US,
 };
 
 /// Admission lane for a request.  The micro-batcher always drains the
@@ -142,6 +142,12 @@ pub enum ServeError {
     /// The request's deadline had already passed when its batch was
     /// assembled (or when it was submitted); it was never executed.
     DeadlineExpired { missed_by: Duration },
+    /// The request was shed because the session's queue was already at
+    /// its high-water mark (`max_queue`), or the connection was shed
+    /// because the wire layer's pool was full — it was never queued.
+    /// `retry_after_ms` is a drain-time estimate the caller should back
+    /// off for before retrying.
+    Overloaded { retry_after_ms: u64 },
     /// The session/server shut down before the request was served.
     Closed,
     /// The executor failed the batch this request rode.
@@ -158,6 +164,7 @@ impl ServeError {
             ServeError::UnknownModel(_) => "unknown_model",
             ServeError::BadInput { .. } => "bad_input",
             ServeError::DeadlineExpired { .. } => "deadline_expired",
+            ServeError::Overloaded { .. } => "overloaded",
             ServeError::Closed => "closed",
             ServeError::Execution(_) => "execution",
             ServeError::Malformed(_) => "malformed",
@@ -167,17 +174,46 @@ impl ServeError {
     /// Rebuild from a wire `(kind, message)` pair.  Structured fields
     /// (expected/got lengths, missed-by duration) do not survive the trip
     /// — the message keeps them human-readable — so unknown or structured
-    /// kinds map to the closest variant.
+    /// kinds map to the closest variant.  The one exception is
+    /// `overloaded`: its retry-after budget is the whole point of the
+    /// rejection, so it is parsed back out of the message and the variant
+    /// round-trips losslessly.
     pub fn from_wire(kind: &str, message: &str) -> ServeError {
         match kind {
             "unknown_model" => ServeError::UnknownModel(message.to_string()),
             "bad_input" => ServeError::BadInput { expected: 0, got: 0 },
             "deadline_expired" => ServeError::DeadlineExpired { missed_by: Duration::ZERO },
+            "overloaded" => {
+                ServeError::Overloaded { retry_after_ms: parse_retry_after(message) }
+            }
             "closed" => ServeError::Closed,
             "malformed" => ServeError::Malformed(message.to_string()),
             _ => ServeError::Execution(message.to_string()),
         }
     }
+}
+
+/// Inverse of the `Overloaded` display format: the `N` out of
+/// `... retry after Nms`, `0` (retry immediately at the caller's own
+/// risk) when the message does not carry one.
+fn parse_retry_after(message: &str) -> u64 {
+    message
+        .rsplit("retry after ")
+        .next()
+        .and_then(|tail| tail.split("ms").next())
+        .and_then(|n| n.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Recover a possibly-poisoned lock guard.  A batcher or client thread
+/// that panicked while holding a serving lock poisons it; propagating
+/// that poison as a panic would turn one failed worker into a panic for
+/// every subsequent request on the lock.  The guarded state here is
+/// counters and queues that stay structurally valid across a panic
+/// (worst case: one increment lost), so the server degrades to serving
+/// instead of cascading.
+pub(crate) fn recover<G>(result: Result<G, std::sync::PoisonError<G>>) -> G {
+    result.unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 impl fmt::Display for ServeError {
@@ -189,6 +225,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::DeadlineExpired { missed_by } => {
                 write!(f, "deadline expired {missed_by:?} before the batch was assembled")
+            }
+            ServeError::Overloaded { retry_after_ms } => {
+                write!(f, "server overloaded: retry after {retry_after_ms}ms")
             }
             ServeError::Closed => write!(f, "session shut down before the request was served"),
             ServeError::Execution(msg) => write!(f, "execution failed: {msg}"),
@@ -219,6 +258,7 @@ mod tests {
             ServeError::UnknownModel("m".into()),
             ServeError::BadInput { expected: 4, got: 2 },
             ServeError::DeadlineExpired { missed_by: Duration::from_millis(3) },
+            ServeError::Overloaded { retry_after_ms: 12 },
             ServeError::Closed,
             ServeError::Execution("boom".into()),
             ServeError::Malformed("not json".into()),
@@ -229,5 +269,20 @@ mod tests {
         }
         // unknown kinds degrade to Execution, not a panic
         assert_eq!(ServeError::from_wire("??", "m").kind(), "execution");
+    }
+
+    #[test]
+    fn overloaded_retry_after_survives_the_wire() {
+        // the retry budget is the point of the rejection, so unlike the
+        // other structured fields it round-trips through the message
+        let e = ServeError::Overloaded { retry_after_ms: 250 };
+        assert_eq!(ServeError::from_wire(e.kind(), &e.to_string()), e);
+        // a mangled message degrades to "retry now", never a parse panic
+        assert_eq!(
+            ServeError::from_wire("overloaded", "free-form text"),
+            ServeError::Overloaded { retry_after_ms: 0 }
+        );
+        assert_eq!(parse_retry_after("server overloaded: retry after 7ms"), 7);
+        assert_eq!(parse_retry_after("retry after soonms"), 0);
     }
 }

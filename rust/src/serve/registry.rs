@@ -15,7 +15,7 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
-use super::PreparedModel;
+use super::{recover, PreparedModel};
 
 /// A shared, concurrent map of model name -> sealed artifact.  See the
 /// [module docs](self).
@@ -40,7 +40,7 @@ impl ModelRegistry {
         name: impl Into<String>,
         prepared: PreparedModel,
     ) -> Option<PreparedModel> {
-        self.models.write().unwrap().insert(name.into(), prepared)
+        recover(self.models.write()).insert(name.into(), prepared)
     }
 
     /// [`PreparedModel::load`] a saved recipe and register it under
@@ -57,32 +57,32 @@ impl ModelRegistry {
     /// held.  In-flight requests already routed keep serving — eviction
     /// only stops *new* routing.
     pub fn evict(&self, name: &str) -> Option<PreparedModel> {
-        self.models.write().unwrap().remove(name)
+        recover(self.models.write()).remove(name)
     }
 
     /// The artifact registered under `name` (a cheap `Arc` clone).
     pub fn get(&self, name: &str) -> Option<PreparedModel> {
-        self.models.read().unwrap().get(name).cloned()
+        recover(self.models.read()).get(name).cloned()
     }
 
     /// Whether `name` is registered.
     pub fn contains(&self, name: &str) -> bool {
-        self.models.read().unwrap().contains_key(name)
+        recover(self.models.read()).contains_key(name)
     }
 
     /// Registered names, sorted (the map is ordered).
     pub fn names(&self) -> Vec<String> {
-        self.models.read().unwrap().keys().cloned().collect()
+        recover(self.models.read()).keys().cloned().collect()
     }
 
     /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        recover(self.models.read()).len()
     }
 
     /// Whether the registry holds no models.
     pub fn is_empty(&self) -> bool {
-        self.models.read().unwrap().is_empty()
+        recover(self.models.read()).is_empty()
     }
 }
 

@@ -24,7 +24,7 @@ use crate::telemetry::trace::TraceRing;
 use crate::telemetry::{render_server_metrics, WireCounters};
 
 use super::session::SessionStats;
-use super::{ModelRegistry, Priority, ServeError, Session, Ticket};
+use super::{recover, ModelRegistry, Priority, ServeError, Session, Ticket};
 
 /// The typed request envelope the front door accepts: which model, one
 /// input sample, and the admission metadata the batcher honors.
@@ -74,6 +74,7 @@ struct SessionKnobs {
     fused: bool,
     max_batch: usize,
     max_wait: Duration,
+    max_queue: usize,
     workers: usize,
 }
 
@@ -94,6 +95,7 @@ impl ServerBuilder {
                 fused: true,
                 max_batch: 32,
                 max_wait: Duration::from_millis(2),
+                max_queue: super::DEFAULT_MAX_QUEUE,
                 workers: 1,
             },
             trace: None,
@@ -127,6 +129,13 @@ impl ServerBuilder {
     /// Per-model micro-batcher admission window.
     pub fn max_wait(mut self, max_wait: Duration) -> Self {
         self.knobs.max_wait = max_wait;
+        self
+    }
+
+    /// Per-model queue-depth high-water mark: submits past it are shed
+    /// with [`ServeError::Overloaded`] instead of queued.
+    pub fn max_queue(mut self, max_queue: usize) -> Self {
+        self.knobs.max_queue = max_queue.max(1);
         self
     }
 
@@ -199,13 +208,13 @@ impl Server {
                 self.purge(name);
                 return Err(ServeError::UnknownModel(name.to_string()));
             };
-            if let Some(session) = self.sessions.read().unwrap().get(name) {
+            if let Some(session) = recover(self.sessions.read()).get(name) {
                 if session.prepared().same_artifact(&artifact) {
                     return Ok(Arc::clone(session));
                 }
             }
         }
-        let mut sessions = self.sessions.write().unwrap();
+        let mut sessions = recover(self.sessions.write());
         // re-resolve the artifact under the write lock — the registry may
         // have been rebound or evicted since the fast path looked, and a
         // stale snapshot here would let a lagging thread overwrite a
@@ -229,6 +238,7 @@ impl Server {
             .fused(self.knobs.fused)
             .max_batch(self.knobs.max_batch)
             .max_wait(self.knobs.max_wait)
+            .max_queue(self.knobs.max_queue)
             .workers(self.knobs.workers);
         if let Some(ring) = &self.trace {
             builder = builder.trace(Arc::clone(ring));
@@ -260,7 +270,7 @@ impl Server {
     /// statement; the session itself (queue drain + worker join) drops
     /// after it.
     fn purge(&self, name: &str) {
-        let stale = self.sessions.write().unwrap().remove(name);
+        let stale = recover(self.sessions.write()).remove(name);
         drop(stale);
     }
 
@@ -274,16 +284,14 @@ impl Server {
         // bind the removed session so it outlives (and thus drops after)
         // the statement's write guard: its drop drains the queue and
         // joins workers, which must not happen under the map lock
-        let removed = self.sessions.write().unwrap().remove(name);
+        let removed = recover(self.sessions.write()).remove(name);
         had_model || removed.is_some()
     }
 
     /// Admission counters per model, for every session spun up so far
     /// (a registered model nobody has routed to yet has no stats).
     pub fn stats(&self) -> BTreeMap<String, SessionStats> {
-        self.sessions
-            .read()
-            .unwrap()
+        recover(self.sessions.read())
             .iter()
             .map(|(name, session)| (name.clone(), session.stats()))
             .collect()

@@ -21,6 +21,12 @@
 //! whose deadline has passed when its batch is assembled is rejected with
 //! [`ServeError::DeadlineExpired`] instead of silently served late; it
 //! never occupies a batch slot.
+//!
+//! Queueing is **bounded**: once the queue holds
+//! [`SessionBuilder::max_queue`] requests, further submits are shed with
+//! [`ServeError::Overloaded`] carrying a drain-time `retry_after_ms`
+//! estimate — overload is a typed, observable condition
+//! ([`SessionStats::shed_overload`]), never unbounded memory growth.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -35,7 +41,7 @@ use crate::telemetry::trace::{self, TraceRing};
 use crate::telemetry::Span;
 use crate::util::json::Value;
 
-use super::{PreparedModel, Priority, ServeError};
+use super::{recover, PreparedModel, Priority, ServeError};
 
 /// What a batcher worker sends back per request (typed errors so one
 /// failed run can fan out to every rider of the batch, and admission
@@ -121,6 +127,9 @@ pub struct SessionStats {
     pub served_by_priority: [usize; 2],
     /// Requests rejected because their deadline passed before assembly.
     pub expired: usize,
+    /// Requests shed at submit because the queue was at its
+    /// `max_queue` high-water mark (they were never queued).
+    pub shed_overload: usize,
 }
 
 impl SessionStats {
@@ -150,6 +159,7 @@ impl SessionStats {
                 ]),
             ),
             ("expired", Value::num(self.expired as f64)),
+            ("shed_overload", Value::num(self.shed_overload as f64)),
         ])
     }
 }
@@ -206,6 +216,7 @@ struct Shared {
     stats: Mutex<SessionStats>,
     max_batch: usize,
     max_wait: Duration,
+    max_queue: usize,
     sample_len: usize,
     out_len: usize,
     trace: Option<Arc<TraceRing>>,
@@ -243,9 +254,15 @@ pub struct SessionBuilder {
     fused: bool,
     max_batch: usize,
     max_wait: Duration,
+    max_queue: usize,
     workers: usize,
     trace: Option<Arc<TraceRing>>,
 }
+
+/// Default queue-depth high-water mark ([`SessionBuilder::max_queue`]):
+/// deep enough that a well-provisioned session never sheds, small enough
+/// that a runaway pipeliner cannot grow the queue without limit.
+pub const DEFAULT_MAX_QUEUE: usize = 1024;
 
 impl SessionBuilder {
     fn new(prepared: PreparedModel) -> SessionBuilder {
@@ -256,6 +273,7 @@ impl SessionBuilder {
             fused: true,
             max_batch: 32,
             max_wait: Duration::from_millis(2),
+            max_queue: DEFAULT_MAX_QUEUE,
             workers: 1,
             trace: None,
         }
@@ -297,6 +315,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Queue-depth high-water mark: a submit arriving while `max_queue`
+    /// requests are already queued is shed with
+    /// [`ServeError::Overloaded`] instead of queued — the bound that
+    /// keeps overload a typed condition rather than unbounded memory
+    /// growth.  Clamped to >= 1.  Default [`DEFAULT_MAX_QUEUE`].
+    pub fn max_queue(mut self, max_queue: usize) -> Self {
+        self.max_queue = max_queue.max(1);
+        self
+    }
+
     /// Batcher worker threads, each owning a persistent [`Arena`] (warm
     /// runs allocate nothing) and draining the shared queue.  Default 1.
     pub fn workers(mut self, workers: usize) -> Self {
@@ -329,6 +357,7 @@ impl SessionBuilder {
             stats: Mutex::new(SessionStats::default()),
             max_batch: align_to_lane(self.max_batch),
             max_wait: self.max_wait,
+            max_queue: self.max_queue,
             sample_len: self.prepared.input_len(),
             out_len: self.prepared.output_len(),
             trace: self.trace,
@@ -380,6 +409,12 @@ impl Session {
         self.shared.max_wait
     }
 
+    /// The queue-depth high-water mark; a submit past this is shed with
+    /// [`ServeError::Overloaded`].
+    pub fn max_queue(&self) -> usize {
+        self.shared.max_queue
+    }
+
     /// Engine worker threads per executor run.
     pub fn threads(&self) -> usize {
         self.exec.threads()
@@ -397,7 +432,7 @@ impl Session {
 
     /// A snapshot of the admission counters.
     pub fn stats(&self) -> SessionStats {
-        self.shared.stats.lock().unwrap().clone()
+        recover(self.shared.stats.lock()).clone()
     }
 
     /// The span ring this session records into, if one was attached.
@@ -417,7 +452,9 @@ impl Session {
     /// lane, and an optional deadline relative to now.  A request whose
     /// deadline passes before its batch is assembled is rejected with
     /// [`ServeError::DeadlineExpired`] through its ticket — it is never
-    /// executed late.
+    /// executed late.  A submit arriving while the queue already holds
+    /// `max_queue` requests is shed immediately with
+    /// [`ServeError::Overloaded`] — it never consumes queue memory.
     pub fn submit_with(
         &self,
         input: Vec<f32>,
@@ -442,16 +479,35 @@ impl Session {
             submitted: now,
         };
         let depth = {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = recover(self.shared.queue.lock());
+            if q.len() >= self.shared.max_queue {
+                // shed under the queue lock so the HWM check and the
+                // admit race cannot interleave past the bound
+                let retry_after_ms = self.retry_after_ms(q.len());
+                drop(q);
+                let mut st = recover(self.shared.stats.lock());
+                st.shed_overload += 1;
+                return Err(ServeError::Overloaded { retry_after_ms });
+            }
             q.lanes[priority.lane()].push_back(req);
             q.len()
         };
         self.shared.cv.notify_all();
         {
-            let mut st = self.shared.stats.lock().unwrap();
+            let mut st = recover(self.shared.stats.lock());
             st.queue_depth_hwm = st.queue_depth_hwm.max(depth);
         }
         Ok(Ticket { rx })
+    }
+
+    /// Drain-time estimate for a shed request: the backlog in batches
+    /// times the admission window (the floor of how long each batch is
+    /// held open), never reported as zero — "retry immediately" would
+    /// invite the very stampede the shed exists to stop.
+    fn retry_after_ms(&self, depth: usize) -> u64 {
+        let batches = depth.div_ceil(self.shared.max_batch).max(1) as u64;
+        let window_ms = (self.shared.max_wait.as_millis() as u64).max(1);
+        window_ms.saturating_mul(batches)
     }
 
     /// Blocking convenience: [`Session::submit`] + [`Ticket::wait`].
@@ -480,7 +536,7 @@ impl Drop for Session {
             // a worker between its `closed` check and `cv.wait` still
             // holds the lock, so the store+notify cannot slip into that
             // window and strand it (the classic lost wakeup)
-            let _queue = self.shared.queue.lock().unwrap();
+            let _queue = recover(self.shared.queue.lock());
             self.shared.closed.store(true, Ordering::Release);
             self.shared.cv.notify_all();
         }
@@ -502,7 +558,7 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
     let mut arena = Arena::new();
     let mut input: Vec<f32> = Vec::new();
     loop {
-        let mut q = shared.queue.lock().unwrap();
+        let mut q = recover(shared.queue.lock());
         // phase 1: block until there is at least one request (or shutdown
         // with an empty queue)
         loop {
@@ -512,7 +568,7 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
             if shared.closed.load(Ordering::Acquire) {
                 return;
             }
-            q = shared.cv.wait(q).unwrap();
+            q = recover(shared.cv.wait(q));
         }
         // phase 2: hold the batch open for up to `max_wait` hoping to fill
         // it to `max_batch` (skipped when closing: drain immediately).  If
@@ -527,7 +583,7 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
             if now >= hold_until || q.earliest_deadline().is_some_and(|d| d <= hold_until) {
                 break;
             }
-            let (guard, timeout) = shared.cv.wait_timeout(q, hold_until - now).unwrap();
+            let (guard, timeout) = recover(shared.cv.wait_timeout(q, hold_until - now));
             q = guard;
             if timeout.timed_out() {
                 break;
@@ -537,7 +593,7 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
         let (reqs, rejected) = assemble(&mut q, shared.max_batch, assembled_at);
         drop(q);
         if !rejected.is_empty() {
-            let mut st = shared.stats.lock().unwrap();
+            let mut st = recover(shared.stats.lock());
             st.expired += rejected.len();
         }
         for (r, missed_by) in rejected {
@@ -580,7 +636,7 @@ fn worker_loop(exec: &GraphExecutor, prepared: &PreparedModel, shared: &Shared) 
         }
         let result = exec.run_with_arena(net, &input, batch, &mut arena);
         let run = {
-            let mut st = shared.stats.lock().unwrap();
+            let mut st = recover(shared.stats.lock());
             st.requests += reqs.len();
             st.runs += 1;
             st.padded_lanes += batch - reqs.len();
@@ -733,6 +789,7 @@ mod tests {
             wait_total_us: 750,
             served_by_priority: [1, 2],
             expired: 1,
+            shed_overload: 2,
             ..SessionStats::default()
         };
         st.batch_runs.insert(8, 2);
@@ -750,6 +807,7 @@ mod tests {
         assert_eq!(lanes.get("normal").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(j.get("wait_buckets").unwrap().as_arr().unwrap().len(), 5);
         assert_eq!(j.get("expired").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("shed_overload").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]
@@ -826,6 +884,46 @@ mod tests {
         let y = t.wait().expect("a servable short-deadline request must not be held to death");
         assert_eq!(y.len(), 10);
         assert_eq!(s.stats().expired, 0);
+    }
+
+    #[test]
+    fn submits_past_the_queue_hwm_are_shed_with_retry_after() {
+        // a long hold window keeps the first submits parked in the queue
+        // while the batcher waits to fill its batch, so the depth check
+        // is deterministic; closing the session drains them immediately
+        let s = Session::builder(proxy_prepared())
+            .threads(1)
+            .max_batch(8)
+            .max_wait(Duration::from_secs(30))
+            .max_queue(2)
+            .build();
+        assert_eq!(s.max_queue(), 2);
+        let n = s.prepared().input_len();
+        let admitted: Vec<Ticket> =
+            (0..2).map(|i| s.submit(vec![0.1 * i as f32; n]).unwrap()).collect();
+        match s.submit(vec![0.9; n]) {
+            Err(ServeError::Overloaded { retry_after_ms }) => {
+                assert!(retry_after_ms >= 1, "retry-after must never invite an instant retry");
+            }
+            Err(other) => panic!("expected Overloaded at the HWM, got {other:?}"),
+            Ok(_) => panic!("expected Overloaded at the HWM, got an admitted ticket"),
+        }
+        let st = s.stats();
+        assert_eq!(st.shed_overload, 1);
+        assert_eq!(st.queue_depth_hwm, 2, "the shed request never entered the queue");
+        drop(s);
+        for t in admitted {
+            assert_eq!(t.wait().expect("admitted requests still serve").len(), 10);
+        }
+    }
+
+    #[test]
+    fn max_queue_clamps_to_at_least_one() {
+        let s = Session::builder(proxy_prepared()).threads(1).max_queue(0).build();
+        assert_eq!(s.max_queue(), 1);
+        // default is the documented constant
+        let d = proxy_session(8, Duration::ZERO);
+        assert_eq!(d.max_queue(), DEFAULT_MAX_QUEUE);
     }
 
     #[test]

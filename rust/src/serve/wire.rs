@@ -29,9 +29,20 @@
 //! [`serve_connection`] drives one duplex byte stream (any
 //! `BufRead` + `Write` pair: a TCP socket, stdio, or in-memory buffers in
 //! tests); [`serve_tcp`] accepts connections and serves each on its own
-//! thread; [`Client`] is the matching caller side with pipelined
-//! [`Client::send`] / [`Client::wait`].  `prunemap serve --listen
-//! <addr|stdio>` wires these to the CLI.
+//! thread, bounded by a `max_active` pool — excess accepts are shed with
+//! a single `overloaded` error frame and closed; [`Client`] is the
+//! matching caller side with pipelined [`Client::send`] /
+//! [`Client::wait`].  `prunemap serve --listen <addr|stdio>` wires these
+//! to the CLI.
+//!
+//! Overload is **bounded and typed** end to end: each connection's
+//! pending-reply channel holds at most [`PENDING_REPLY_CAP`] replies
+//! (a fast pipeliner blocks the reader, pushing backpressure into the
+//! peer's TCP window), each model's session sheds submits past its
+//! `max_queue` high-water mark with an `overloaded` error carrying
+//! `retry_after_ms`, and a writer whose peer vanished kills its own
+//! read half ([`ReadShutdown`]) so the connection thread exits instead
+//! of parking in `read_line` forever.
 //!
 //! Numbers are carried as JSON numbers (shortest-roundtrip `f64`, which
 //! `f32` payloads survive exactly), so a wire round trip preserves the
@@ -44,8 +55,8 @@
 
 use std::collections::BTreeMap;
 use std::io::{self, BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
@@ -58,6 +69,26 @@ use super::{InferRequest, Priority, ServeError, Server, Ticket};
 /// bound): `Duration::from_secs_f64` panics on values it cannot represent,
 /// and a multi-minute service deadline is a typo.
 const MAX_DEADLINE_MS: f64 = 60_000.0;
+
+/// Depth of a connection's pending-reply channel.  A pipelining client
+/// that outruns the reply writer fills it and then parks the connection
+/// *reader* in `send`, which stops `read_line` draining the socket,
+/// which fills the kernel receive buffer — backpressure all the way out
+/// to the peer's TCP window instead of unbounded server-side queueing.
+pub const PENDING_REPLY_CAP: usize = 128;
+
+/// `retry_after_ms` hint carried by the `overloaded` frame a connection
+/// shed at accept time (pool full) receives before the socket closes.
+pub const SHED_RETRY_MS: u64 = 50;
+
+/// Consecutive `accept` failures tolerated (with backoff) before
+/// [`serve_tcp`] gives up and returns the error.  Transient failures —
+/// EMFILE under fd pressure, ECONNABORTED races — clear the streak on
+/// the next successful accept.
+const ACCEPT_ERROR_LIMIT: u32 = 8;
+
+/// Base backoff between accept retries; scaled by the failure streak.
+const ACCEPT_RETRY_BACKOFF: Duration = Duration::from_millis(10);
 
 /// A decoded request frame: the caller's id plus the typed envelope.
 #[derive(Debug, Clone, PartialEq)]
@@ -286,6 +317,41 @@ enum Pending {
     Admin(u64, AdminCmd),
 }
 
+/// How the reply writer kills a connection's *read* half once its own
+/// write half is dead.  Without this, a peer that closed its read side
+/// but kept its write side open would park the connection thread in
+/// `read_line` forever — replies have nowhere to go, but the reader
+/// never learns that.  [`TcpStream`] shuts the socket's read half down;
+/// streams with no read half to kill (stdio, in-memory test buffers) use
+/// [`NoReadShutdown`] and rely on the dead-flag check between lines.
+pub trait ReadShutdown: Sync {
+    /// Best-effort: unblock the connection's parked reader.
+    fn shutdown_read(&self);
+}
+
+/// No-op [`ReadShutdown`] for streams without a kickable read half.
+pub struct NoReadShutdown;
+
+impl ReadShutdown for NoReadShutdown {
+    fn shutdown_read(&self) {}
+}
+
+impl ReadShutdown for TcpStream {
+    fn shutdown_read(&self) {
+        let _ = self.shutdown(Shutdown::Read);
+    }
+}
+
+/// [`serve_connection_with`] without a read half to kill: writer death
+/// is still detected, but only between lines ([`NoReadShutdown`]).
+pub fn serve_connection<R: BufRead, W: Write + Send>(
+    server: &Server,
+    reader: R,
+    writer: W,
+) -> io::Result<ConnStats> {
+    serve_connection_with(server, reader, writer, &NoReadShutdown)
+}
+
 /// Serve one duplex stream until the reader hits EOF (or the writer's
 /// peer goes away): decode each line, submit it to the server, and write
 /// the reply frame as soon as its ticket resolves.  Requests are
@@ -294,20 +360,24 @@ enum Pending {
 /// submits; replies are written in request order (ids still echo, so
 /// clients need not rely on that).
 ///
-/// The writer-death flag is only checked between lines: a peer that
-/// closes its read half but keeps its write half open *silently* parks
-/// this call in `read_line` until it sends something or disconnects
-/// (read-half shutdown on writer death is a ROADMAP follow-up alongside
-/// wire backpressure).
-pub fn serve_connection<R: BufRead, W: Write + Send>(
+/// The pending-reply channel is **bounded** ([`PENDING_REPLY_CAP`]): a
+/// pipeliner that outruns the writer parks the reader in `send` instead
+/// of growing an unbounded queue, and the stalled reader propagates
+/// backpressure to the peer's TCP window.  On writer death the writer
+/// thread raises the dead flag *and* calls
+/// [`ReadShutdown::shutdown_read`] on `read_shutdown`, so a reader
+/// parked in `read_line` unblocks immediately instead of waiting for
+/// the peer to send another line.
+pub fn serve_connection_with<R: BufRead, W: Write + Send, S: ReadShutdown + ?Sized>(
     server: &Server,
     mut reader: R,
     writer: W,
+    read_shutdown: &S,
 ) -> io::Result<ConnStats> {
     let wire = server.wire_counters();
     wire.connections.fetch_add(1, Ordering::Relaxed);
     wire.active.fetch_add(1, Ordering::Relaxed);
-    let (tx, rx) = mpsc::channel::<Pending>();
+    let (tx, rx) = mpsc::sync_channel::<Pending>(PENDING_REPLY_CAP);
     let dead = AtomicBool::new(false);
     let dead_ref = &dead;
     let result = std::thread::scope(|scope| {
@@ -344,6 +414,7 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
                 };
                 if let Err(e) = writeln!(writer, "{line}").and_then(|()| writer.flush()) {
                     dead_ref.store(true, Ordering::Release);
+                    read_shutdown.shutdown_read();
                     return Err(e);
                 }
             }
@@ -358,6 +429,9 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
             match reader.read_line(&mut line) {
                 Ok(0) => break Ok(()),
                 Ok(_) => {}
+                // a read failure after the writer killed our read half is
+                // the shutdown itself, not a peer error
+                Err(_) if dead.load(Ordering::Acquire) => break Ok(()),
                 Err(e) => break Err(e),
             }
             let frame = line.trim();
@@ -376,6 +450,7 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
                     Pending::Err(recover_id(frame), e)
                 }
             };
+            // blocks when the channel is full: this is the backpressure
             if tx.send(pending).is_err() {
                 break Ok(()); // writer bailed; its error is reported below
             }
@@ -391,36 +466,108 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
     result
 }
 
-/// Accept TCP connections and serve each on its own thread.
-/// `max_conns` bounds how many connections are accepted before returning
-/// (joining the spawned threads) — `None` serves forever.  Bind the
-/// listener yourself so `127.0.0.1:0` tests can read the chosen port.
+/// Decrements the shared active-connection count when a connection
+/// thread finishes (or its spawn fails), however it exits.
+struct ActiveGuard {
+    active: Arc<AtomicUsize>,
+}
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Accept TCP connections and serve each on its own thread, at most
+/// `max_active` of them live at once: an accept past that bound is
+/// **shed** — answered with a single id-less `overloaded` error frame
+/// (`retry_after_ms` = [`SHED_RETRY_MS`]) and closed — so the pool is
+/// bounded instead of thread-per-connection-unbounded.  Transient
+/// `accept` failures are retried with a short backoff (counted in
+/// `accept_retries`) rather than tearing down the listener; only
+/// [`ACCEPT_ERROR_LIMIT`] consecutive failures return the error.  A
+/// connection whose setup fails (`try_clone` / thread spawn) is counted
+/// in `conn_setup_failed`, never silently dropped.
+///
+/// `max_conns` bounds how many connections (served *or* shed) are
+/// accepted before returning (joining the spawned threads) — `None`
+/// serves forever.  Bind the listener yourself so `127.0.0.1:0` tests
+/// can read the chosen port.
 pub fn serve_tcp(
     server: &Arc<Server>,
     listener: TcpListener,
     max_conns: Option<usize>,
+    max_active: usize,
 ) -> io::Result<()> {
     if max_conns == Some(0) {
         return Ok(());
     }
+    let max_active = max_active.max(1);
+    let wire = Arc::clone(server.wire_counters());
+    let active = Arc::new(AtomicUsize::new(0));
     let mut accepted = 0usize;
+    let mut error_streak = 0u32;
     let mut handles = Vec::new();
     for conn in listener.incoming() {
-        let stream = conn?;
+        let mut stream = match conn {
+            Ok(stream) => {
+                error_streak = 0;
+                stream
+            }
+            Err(e) => {
+                error_streak += 1;
+                wire.accept_retries.fetch_add(1, Ordering::Relaxed);
+                if error_streak >= ACCEPT_ERROR_LIMIT {
+                    return Err(e);
+                }
+                std::thread::sleep(ACCEPT_RETRY_BACKOFF * error_streak);
+                continue;
+            }
+        };
+        accepted += 1;
+        if active.load(Ordering::Acquire) >= max_active {
+            wire.shed_conns.fetch_add(1, Ordering::Relaxed);
+            wire.record_error("overloaded");
+            let frame =
+                encode_error(None, &ServeError::Overloaded { retry_after_ms: SHED_RETRY_MS });
+            let _ = writeln!(stream, "{frame}").and_then(|()| stream.flush());
+            drop(stream); // closes: one frame, then EOF
+            if Some(accepted) == max_conns {
+                break;
+            }
+            continue;
+        }
+        // count before the thread is live so the *next* accept already
+        // sees this connection against the bound
+        active.fetch_add(1, Ordering::AcqRel);
+        let guard = ActiveGuard { active: Arc::clone(&active) };
         let server = Arc::clone(server);
-        let handle = std::thread::Builder::new()
+        let spawned = std::thread::Builder::new()
             .name("prunemap-wire-conn".to_string())
             .spawn(move || {
+                let _guard = guard;
                 let reader = match stream.try_clone() {
                     Ok(read_half) => BufReader::new(read_half),
-                    Err(_) => return,
+                    Err(_) => {
+                        server.wire_counters().conn_setup_failed.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
                 };
-                let _ = serve_connection(&server, reader, stream);
-            })?;
-        if max_conns.is_some() {
-            handles.push(handle);
+                // the stream is both the reply writer and the read-half
+                // kill switch for writer death
+                let _ = serve_connection_with(&server, reader, &stream, &stream);
+            });
+        match spawned {
+            Ok(handle) => {
+                if max_conns.is_some() {
+                    handles.push(handle);
+                }
+            }
+            // the unspawned closure just dropped, releasing the guard
+            Err(_) => {
+                wire.conn_setup_failed.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        accepted += 1;
         if Some(accepted) == max_conns {
             break;
         }

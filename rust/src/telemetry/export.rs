@@ -17,11 +17,12 @@ use crate::telemetry::metrics::{PromWriter, WireSnapshot, WIRE_ERROR_KINDS};
 /// Names of the per-model metric families [`render_server_metrics`]
 /// always emits — CI and tests assert against this list rather than
 /// re-typing family names.
-pub const MODEL_FAMILIES: [&str; 9] = [
+pub const MODEL_FAMILIES: [&str; 10] = [
     "prunemap_requests_total",
     "prunemap_runs_total",
     "prunemap_padded_lanes_total",
     "prunemap_expired_total",
+    "prunemap_shed_overload_total",
     "prunemap_queue_depth_hwm",
     "prunemap_max_coalesced",
     "prunemap_queue_wait_seconds",
@@ -31,7 +32,7 @@ pub const MODEL_FAMILIES: [&str; 9] = [
 
 /// Names of the wire-layer families [`render_server_metrics`] always
 /// emits.
-pub const WIRE_FAMILIES: [&str; 7] = [
+pub const WIRE_FAMILIES: [&str; 10] = [
     "prunemap_wire_connections_total",
     "prunemap_wire_active_connections",
     "prunemap_wire_frames_total",
@@ -39,6 +40,9 @@ pub const WIRE_FAMILIES: [&str; 7] = [
     "prunemap_wire_error_frames_total",
     "prunemap_wire_admin_frames_total",
     "prunemap_wire_malformed_lines_total",
+    "prunemap_wire_shed_total",
+    "prunemap_wire_conn_setup_failed_total",
+    "prunemap_wire_accept_retries_total",
 ];
 
 /// Render every registered model's session counters plus the wire-layer
@@ -76,6 +80,11 @@ pub fn render_server_metrics(
         "Requests rejected by deadline admission, by model.",
     );
     w.family(
+        "prunemap_shed_overload_total",
+        "counter",
+        "Submits shed at the queue-depth high-water mark, by model.",
+    );
+    w.family(
         "prunemap_queue_depth_hwm",
         "gauge",
         "High-water mark of the submit queue depth, by model.",
@@ -90,6 +99,7 @@ pub fn render_server_metrics(
         w.sample("prunemap_runs_total", &labels, st.runs as f64);
         w.sample("prunemap_padded_lanes_total", &labels, st.padded_lanes as f64);
         w.sample("prunemap_expired_total", &labels, st.expired as f64);
+        w.sample("prunemap_shed_overload_total", &labels, st.shed_overload as f64);
         w.sample("prunemap_queue_depth_hwm", &labels, st.queue_depth_hwm as f64);
         w.sample("prunemap_max_coalesced", &labels, st.max_coalesced as f64);
     }
@@ -192,6 +202,24 @@ pub fn render_server_metrics(
         "Request lines that failed frame decoding.",
     );
     w.sample("prunemap_wire_malformed_lines_total", &[], wire.malformed as f64);
+    w.family(
+        "prunemap_wire_shed_total",
+        "counter",
+        "Connections shed at accept time because the pool was full.",
+    );
+    w.sample("prunemap_wire_shed_total", &[], wire.shed_conns as f64);
+    w.family(
+        "prunemap_wire_conn_setup_failed_total",
+        "counter",
+        "Accepted connections dropped because setup failed.",
+    );
+    w.sample("prunemap_wire_conn_setup_failed_total", &[], wire.conn_setup_failed as f64);
+    w.family(
+        "prunemap_wire_accept_retries_total",
+        "counter",
+        "Transient accept failures retried with backoff.",
+    );
+    w.sample("prunemap_wire_accept_retries_total", &[], wire.accept_retries as f64);
 
     w.finish()
 }
@@ -201,7 +229,7 @@ pub fn render_server_metrics(
 /// distribution.
 pub fn render_session_stats(model: &str, st: &SessionStats) -> String {
     let mut out = format!(
-        "model {model}: {} request(s) in {} run(s) | max coalesced {} | {:.2} requests/run | {} padded lanes | queue depth hwm {} | high/normal {}/{} | {} expired\n",
+        "model {model}: {} request(s) in {} run(s) | max coalesced {} | {:.2} requests/run | {} padded lanes | queue depth hwm {} | high/normal {}/{} | {} expired | {} shed\n",
         st.requests,
         st.runs,
         st.max_coalesced,
@@ -210,7 +238,8 @@ pub fn render_session_stats(model: &str, st: &SessionStats) -> String {
         st.queue_depth_hwm,
         st.served_by_priority[0],
         st.served_by_priority[1],
-        st.expired
+        st.expired,
+        st.shed_overload
     );
     for (batch, runs) in &st.batch_runs {
         out.push_str(&format!("  executed batch {batch:>4}: {runs} run(s)\n"));
@@ -248,6 +277,7 @@ mod tests {
             wait_total_us: 12_500,
             served_by_priority: [2, 5],
             expired: 1,
+            shed_overload: 2,
         }
     }
 
@@ -317,6 +347,7 @@ mod tests {
     fn session_stats_text_block_names_every_counter() {
         let text = render_session_stats("proxy", &sample_stats());
         assert!(text.starts_with("model proxy: 7 request(s) in 3 run(s)"), "{text}");
+        assert!(text.contains("1 expired | 2 shed"), "{text}");
         assert!(text.contains("executed batch    8: 3 run(s)"), "{text}");
         assert!(text.contains("occupancy    2: 1 run(s)"), "{text}");
         assert!(text.contains("wait: <100µs=3 <1ms=2 <10ms=1 <100ms=1"), "{text}");

@@ -229,10 +229,11 @@ fn parse_value(s: &str) -> Result<f64> {
 
 /// Stable wire error-kind tags, mirroring `ServeError::kind()`, plus a
 /// catch-all slot so an unknown tag never panics the counter path.
-pub const WIRE_ERROR_KINDS: [&str; 7] = [
+pub const WIRE_ERROR_KINDS: [&str; 8] = [
     "unknown_model",
     "bad_input",
     "deadline_expired",
+    "overloaded",
     "closed",
     "execution",
     "malformed",
@@ -257,7 +258,16 @@ pub struct WireCounters {
     pub admin: AtomicU64,
     /// Lines that failed frame decoding.
     pub malformed: AtomicU64,
-    error_kinds: [AtomicU64; 7],
+    /// Connections shed at accept time because the pool was at
+    /// `max_active` (each got one `overloaded` frame and was closed).
+    pub shed_conns: AtomicU64,
+    /// Accepted connections dropped because setup failed
+    /// (`try_clone` / thread spawn), so they are never invisible.
+    pub conn_setup_failed: AtomicU64,
+    /// Transient `accept` failures retried instead of tearing the
+    /// listener down.
+    pub accept_retries: AtomicU64,
+    error_kinds: [AtomicU64; 8],
 }
 
 impl WireCounters {
@@ -275,7 +285,7 @@ impl WireCounters {
     /// relaxed; exact cross-counter consistency is not needed for
     /// monotonic counters).
     pub fn snapshot(&self) -> WireSnapshot {
-        let mut error_kinds = [0u64; 7];
+        let mut error_kinds = [0u64; 8];
         for (slot, counter) in error_kinds.iter_mut().zip(&self.error_kinds) {
             *slot = counter.load(Ordering::Relaxed);
         }
@@ -287,6 +297,9 @@ impl WireCounters {
             errors: self.errors.load(Ordering::Relaxed),
             admin: self.admin.load(Ordering::Relaxed),
             malformed: self.malformed.load(Ordering::Relaxed),
+            shed_conns: self.shed_conns.load(Ordering::Relaxed),
+            conn_setup_failed: self.conn_setup_failed.load(Ordering::Relaxed),
+            accept_retries: self.accept_retries.load(Ordering::Relaxed),
             error_kinds,
         }
     }
@@ -302,8 +315,11 @@ pub struct WireSnapshot {
     pub errors: u64,
     pub admin: u64,
     pub malformed: u64,
+    pub shed_conns: u64,
+    pub conn_setup_failed: u64,
+    pub accept_retries: u64,
     /// Indexed like [`WIRE_ERROR_KINDS`].
-    pub error_kinds: [u64; 7],
+    pub error_kinds: [u64; 8],
 }
 
 /// Answer scrapes on `listener` forever (or for `max_conns` accepts),
@@ -425,14 +441,23 @@ mod tests {
     fn wire_counters_bucket_error_kinds_with_a_catch_all() {
         let c = WireCounters::default();
         c.connections.fetch_add(2, Ordering::Relaxed);
+        c.shed_conns.fetch_add(1, Ordering::Relaxed);
+        c.conn_setup_failed.fetch_add(1, Ordering::Relaxed);
+        c.accept_retries.fetch_add(3, Ordering::Relaxed);
         c.record_error("bad_input");
         c.record_error("bad_input");
+        c.record_error("overloaded");
         c.record_error("not_a_real_kind");
         let s = c.snapshot();
         assert_eq!(s.connections, 2);
-        assert_eq!(s.errors, 3);
+        assert_eq!(s.errors, 4);
+        assert_eq!(s.shed_conns, 1);
+        assert_eq!(s.conn_setup_failed, 1);
+        assert_eq!(s.accept_retries, 3);
         let bad = WIRE_ERROR_KINDS.iter().position(|k| *k == "bad_input").unwrap();
         assert_eq!(s.error_kinds[bad], 2);
+        let shed = WIRE_ERROR_KINDS.iter().position(|k| *k == "overloaded").unwrap();
+        assert_eq!(s.error_kinds[shed], 1, "shed connections bucket under 'overloaded'");
         assert_eq!(s.error_kinds[WIRE_ERROR_KINDS.len() - 1], 1, "unknown kinds → other");
     }
 

@@ -140,6 +140,22 @@ impl Args {
         self.millis("max-wait-ms", Some(default_ms)).map(|d| d.unwrap_or_default())
     }
 
+    /// Per-model queue-depth high-water mark from `--max-queue N`
+    /// (clamped to >= 1): submits past it are shed with a typed
+    /// `overloaded` rejection instead of queueing without bound.
+    pub fn max_queue(&self, default: usize) -> Result<usize> {
+        let q = self.get_usize("max-queue", default)?;
+        Ok(q.max(1))
+    }
+
+    /// Concurrent-connection bound for the TCP front door from
+    /// `--max-conns N` (clamped to >= 1): accepts past it are shed with
+    /// a single `overloaded` error frame and closed.
+    pub fn max_conns(&self, default: usize) -> Result<usize> {
+        let c = self.get_usize("max-conns", default)?;
+        Ok(c.max(1))
+    }
+
     /// Optional request deadline from `--deadline-ms F` (`None` when the
     /// flag is absent): the serve burst's admission budget per request.
     pub fn deadline_ms(&self) -> Result<Option<std::time::Duration>> {
@@ -259,12 +275,21 @@ mod tests {
 
     #[test]
     fn serve_knobs() {
-        let a = Args::parse(toks("--max-batch 48 --max-wait-ms 2.5"));
+        let a = Args::parse(toks("--max-batch 48 --max-wait-ms 2.5 --max-queue 64 --max-conns 9"));
         assert_eq!(a.max_batch(32).unwrap(), 48);
         assert_eq!(a.max_wait(1.0).unwrap(), std::time::Duration::from_micros(2500));
+        assert_eq!(a.max_queue(1024).unwrap(), 64);
+        assert_eq!(a.max_conns(256).unwrap(), 9);
         let d = Args::parse(toks(""));
         assert_eq!(d.max_batch(32).unwrap(), 32);
         assert_eq!(d.max_wait(2.0).unwrap(), std::time::Duration::from_millis(2));
+        assert_eq!(d.max_queue(1024).unwrap(), 1024);
+        assert_eq!(d.max_conns(256).unwrap(), 256);
+        // zero overload bounds clamp to 1 (a zero-capacity server serves nothing)
+        let zb = Args::parse(toks("--max-queue 0 --max-conns 0"));
+        assert_eq!(zb.max_queue(1024).unwrap(), 1);
+        assert_eq!(zb.max_conns(256).unwrap(), 1);
+        assert!(Args::parse(toks("--max-queue abc")).max_queue(1024).is_err());
         // zero batch clamps to 1; negative wait clamps to zero
         let z = Args::parse(toks("--max-batch 0 --max-wait-ms -3"));
         assert_eq!(z.max_batch(32).unwrap(), 1);

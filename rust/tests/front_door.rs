@@ -11,12 +11,18 @@
 //!   [`ServeError::DeadlineExpired`] instead of being served late;
 //! * the wire protocol round-trips encode -> decode -> serve -> decode
 //!   over real TCP, including malformed-frame error frames, and preserves
-//!   bit identity.
+//!   bit identity;
+//! * overload is bounded and typed: submits past the session's
+//!   `max_queue` high-water mark come back as `overloaded` frames with a
+//!   retry-after budget, a pipeliner that outruns the reply writer is
+//!   blocked by the bounded pending channel instead of growing memory,
+//!   accepts past the connection pool are shed with one `overloaded`
+//!   frame, and writer death unparks a reader blocked mid-line.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Cursor, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use prunemap::accuracy::Assignment;
 use prunemap::models::{zoo, Dataset, ModelSpec};
@@ -193,7 +199,7 @@ fn evicted_model_is_unknown_on_the_wire_not_stale() {
     let addr = listener.local_addr().unwrap();
     let acceptor = {
         let server = Arc::clone(&server);
-        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(1)))
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(1), 4))
     };
     let alpha = registry.get("alpha").unwrap();
     let n = alpha.input_len();
@@ -228,7 +234,7 @@ fn wire_tcp_round_trip_including_malformed_frames() {
     let addr = listener.local_addr().unwrap();
     let acceptor = {
         let server = Arc::clone(&server);
-        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(2)))
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(2), 4))
     };
     let alpha = registry.get("alpha").unwrap();
     let beta = registry.get("beta").unwrap();
@@ -276,4 +282,218 @@ fn wire_tcp_round_trip_including_malformed_frames() {
         }
     }
     acceptor.join().expect("acceptor").unwrap();
+}
+
+/// A writer whose `write` parks until the gate opens — the "slow reply
+/// consumer" half of the backpressure test.
+struct GateWriter {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Write for GateWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn pipelining_past_the_bounded_channel_blocks_the_reader_not_memory() {
+    let server = Server::builder(ModelRegistry::new()).threads(1).build();
+    // unknown-model requests resolve instantly to error replies, so the
+    // only thing pacing the connection is the (gated-shut) writer
+    let total = wire::PENDING_REPLY_CAP * 3;
+    let mut lines = String::new();
+    for id in 0..total {
+        lines
+            .push_str(&wire::encode_request(id as u64 + 1, &InferRequest::new("ghost", vec![0.5])));
+        lines.push('\n');
+    }
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let stats = std::thread::scope(|scope| {
+        let handle = {
+            let writer = GateWriter { gate: Arc::clone(&gate) };
+            let server = &server;
+            let lines = lines.as_bytes();
+            scope.spawn(move || wire::serve_connection(server, Cursor::new(lines), writer))
+        };
+        // with the writer parked, the reader must stall at the channel
+        // bound: one reply stuck in `write`, PENDING_REPLY_CAP buffered,
+        // one more blocked in `send` (its frame already counted)
+        let bound = (wire::PENDING_REPLY_CAP + 2) as u64;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let frames = server.wire_counters().snapshot().frames;
+            assert!(frames <= bound, "reader ran past the bounded channel: {frames} > {bound}");
+            if frames == bound || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // it is a stall, not a pause: the count holds at the bound
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(server.wire_counters().snapshot().frames, bound, "pending replies kept growing");
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        handle.join().expect("serve_connection thread")
+    })
+    .expect("serve_connection");
+    assert_eq!(stats.errors, total, "every pipelined frame is answered once the writer drains");
+    assert_eq!(server.wire_counters().snapshot().frames, total as u64);
+}
+
+/// A reader that yields one frame, then parks until the shutdown hook
+/// releases it — standing in for a TCP read half blocked in `read_line`
+/// whose peer will never send another byte.
+struct ParkingReader {
+    line: Option<Vec<u8>>,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Read for ParkingReader {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if let Some(line) = self.line.take() {
+            buf[..line.len()].copy_from_slice(&line);
+            return Ok(line.len());
+        }
+        let (lock, cv) = &*self.gate;
+        let mut released = lock.lock().unwrap();
+        while !*released {
+            released = cv.wait(released).unwrap();
+        }
+        Ok(0)
+    }
+}
+
+/// The read-half kill switch the writer fires on death: releases the
+/// parked reader, as `TcpStream::shutdown(Shutdown::Read)` would.
+struct GateShutdown {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl wire::ReadShutdown for GateShutdown {
+    fn shutdown_read(&self) {
+        let (lock, cv) = &*self.gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+}
+
+/// A writer whose peer is gone: every write fails.
+struct DeadWriter;
+
+impl Write for DeadWriter {
+    fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+        Err(io::Error::new(io::ErrorKind::BrokenPipe, "peer closed"))
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn writer_death_unparks_a_reader_blocked_mid_line() {
+    let server = Server::builder(ModelRegistry::new()).threads(1).build();
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let line = format!("{}\n", wire::encode_request(1, &InferRequest::new("ghost", vec![0.5])));
+    let reader =
+        BufReader::new(ParkingReader { line: Some(line.into_bytes()), gate: Arc::clone(&gate) });
+    let hook = GateShutdown { gate: Arc::clone(&gate) };
+    let started = Instant::now();
+    // without the hook this call parks forever: the reader waits for a
+    // line that will never come while the writer's error goes unreported
+    let result = wire::serve_connection_with(&server, reader, DeadWriter, &hook);
+    assert!(result.is_err(), "the writer's BrokenPipe must surface, got {result:?}");
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "reader stayed parked long after writer death"
+    );
+    assert!(*gate.0.lock().unwrap(), "writer death must fire the read-half shutdown hook");
+}
+
+#[test]
+fn queue_hwm_shed_is_a_typed_overloaded_frame_on_the_wire() {
+    let registry = two_model_registry();
+    let server = Server::builder(registry.clone())
+        .threads(1)
+        .max_batch(8)
+        .max_wait(Duration::from_secs(30))
+        .max_queue(2)
+        .build();
+    let alpha = registry.get("alpha").unwrap();
+    let n = alpha.input_len();
+    // park two requests in the long hold window so the queue sits at its
+    // high-water mark while the wire frame below arrives
+    let parked: Vec<_> = (0..2)
+        .map(|tag| server.submit(InferRequest::new("alpha", sample(n, tag))).unwrap())
+        .collect();
+    let frame = format!("{}\n", wire::encode_request(9, &InferRequest::new("alpha", sample(n, 2))));
+    let mut replies: Vec<u8> = Vec::new();
+    let stats =
+        wire::serve_connection(&server, Cursor::new(frame.as_bytes()), &mut replies).unwrap();
+    assert_eq!((stats.served, stats.errors), (0, 1));
+    let text = String::from_utf8(replies).unwrap();
+    match wire::decode_response(text.trim()).unwrap() {
+        wire::ResponseFrame::Error {
+            id: Some(9),
+            error: ServeError::Overloaded { retry_after_ms },
+        } => {
+            assert!(retry_after_ms >= 1, "drain estimate must not invite an instant retry");
+        }
+        other => panic!("expected an overloaded frame for id 9, got {other:?}"),
+    }
+    assert_eq!(server.stats()["alpha"].shed_overload, 1);
+    assert_eq!(server.wire_counters().snapshot().errors, 1);
+    // closing the server drains the admitted requests; only the shed one
+    // was refused
+    drop(server);
+    for t in parked {
+        assert_eq!(t.wait().expect("parked requests drain on close").len(), 10);
+    }
+}
+
+#[test]
+fn accepts_past_the_pool_bound_are_shed_with_one_overloaded_frame() {
+    let registry = two_model_registry();
+    let server = Arc::new(Server::builder(registry.clone()).threads(1).build());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let acceptor = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(2), 1))
+    };
+    // connection 1 is served; a completed round trip proves it was
+    // accepted (and counted against the pool) before connection 2 dials
+    let alpha = registry.get("alpha").unwrap();
+    let mut held = wire::Client::connect(addr).unwrap();
+    let y = held.infer(&InferRequest::new("alpha", sample(alpha.input_len(), 0))).unwrap();
+    assert_eq!(y.unwrap(), solo_answers(&alpha, 1)[0]);
+    // connection 2 is past the bound: one id-less overloaded frame, then EOF
+    let shed = TcpStream::connect(addr).unwrap();
+    let mut lines = BufReader::new(shed).lines();
+    let frame = lines.next().expect("one frame before close").unwrap();
+    match wire::decode_response(&frame).unwrap() {
+        wire::ResponseFrame::Error {
+            id: None,
+            error: ServeError::Overloaded { retry_after_ms },
+        } => {
+            assert_eq!(retry_after_ms, wire::SHED_RETRY_MS, "retry-after survives the wire");
+        }
+        other => panic!("expected an id-less overloaded frame, got {other:?}"),
+    }
+    assert!(lines.next().is_none(), "a shed connection is closed after its one frame");
+    drop(held);
+    acceptor.join().expect("acceptor").unwrap();
+    let w = server.wire_counters().snapshot();
+    assert_eq!(w.shed_conns, 1);
+    assert_eq!(w.connections, 1, "shed connections never reach the serving layer");
+    assert_eq!(w.conn_setup_failed, 0);
 }

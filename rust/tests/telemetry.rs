@@ -8,6 +8,8 @@
 //! * in-band `stats` / `metrics` admin frames on the wire protocol
 //!   return the same counters over the same connection the inference
 //!   frames ride;
+//! * overload sheds (session-layer `max_queue` and wire-layer pool
+//!   sheds) surface as nonzero counters in the exposition document;
 //! * a traced server records queue/batch/run/op spans that dump as
 //!   loadable Chrome trace-event JSON;
 //! * `prunemap profile` (the real binary) emits the per-layer time
@@ -15,11 +17,13 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
 use prunemap::accuracy::Assignment;
 use prunemap::models::zoo;
-use prunemap::serve::{wire, InferRequest, ModelRegistry, PreparedModel, Server};
+use prunemap::serve::{wire, InferRequest, ModelRegistry, PreparedModel, ServeError, Server};
 use prunemap::telemetry::{
     self, parse_exposition, TraceRing, MODEL_FAMILIES, WIRE_FAMILIES,
 };
@@ -112,7 +116,7 @@ fn wire_admin_frames_fetch_stats_and_metrics_over_tcp() {
     let addr = listener.local_addr().unwrap();
     let acceptor = {
         let server = Arc::clone(&server);
-        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(1)))
+        std::thread::spawn(move || wire::serve_tcp(&server, listener, Some(1), 4))
     };
     let n = registry.get("proxy").unwrap().input_len();
     let mut client = wire::Client::connect(addr).unwrap();
@@ -145,6 +149,53 @@ fn wire_admin_frames_fetch_stats_and_metrics_over_tcp() {
     assert_eq!(snap.served, 1);
     assert_eq!(snap.admin, 2);
     assert_eq!(snap.malformed, 0);
+}
+
+#[test]
+fn overload_sheds_surface_in_the_prometheus_exposition() {
+    let registry = proxy_registry();
+    let server = Server::builder(registry.clone())
+        .threads(1)
+        .max_batch(8)
+        .max_wait(Duration::from_secs(30))
+        .max_queue(2)
+        .build();
+    let n = registry.get("proxy").unwrap().input_len();
+    // two admitted requests park in the long hold window at the queue's
+    // high-water mark; the third is shed with a typed overloaded error
+    let parked: Vec<_> = (0..2)
+        .map(|tag| server.submit(InferRequest::new("proxy", sample(n, tag))).unwrap())
+        .collect();
+    let shed = server.submit(InferRequest::new("proxy", sample(n, 2))).map(|_| ());
+    assert!(
+        matches!(shed, Err(ServeError::Overloaded { retry_after_ms }) if retry_after_ms >= 1),
+        "the third submit must shed with a retry-after budget, got {shed:?}"
+    );
+    // exercise the wire-layer shed path's counters the way serve_tcp does
+    let wire_counters = server.wire_counters();
+    wire_counters.shed_conns.fetch_add(1, Ordering::Relaxed);
+    wire_counters.record_error("overloaded");
+
+    let text = server.metrics_text();
+    let families = parse_exposition(&text).expect("exposition with sheds must parse");
+    let model_shed = families["prunemap_shed_overload_total"]
+        .samples
+        .iter()
+        .find(|s| s.label("model") == Some("proxy"))
+        .unwrap_or_else(|| panic!("no per-model shed sample:\n{text}"));
+    assert_eq!(model_shed.value, 1.0, "one session-layer shed");
+    assert_eq!(families["prunemap_wire_shed_total"].samples[0].value, 1.0);
+    let overloaded_kind = families["prunemap_wire_error_frames_total"]
+        .samples
+        .iter()
+        .find(|s| s.label("kind") == Some("overloaded"))
+        .unwrap_or_else(|| panic!("no overloaded error-kind sample:\n{text}"));
+    assert_eq!(overloaded_kind.value, 1.0);
+    // the parked requests were admitted, not lost: close drains them
+    drop(server);
+    for t in parked {
+        assert!(t.wait().is_ok(), "admitted requests must drain on close");
+    }
 }
 
 #[test]
