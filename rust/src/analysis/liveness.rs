@@ -1,0 +1,152 @@
+//! Arena-slot liveness and aliasing rules.
+//!
+//! The lowered program addresses a small arena of physical slots; the
+//! lowerer's liveness analysis is what makes that safe.  This pass
+//! re-executes the program symbolically — tracking, per slot, the shape of
+//! the value it currently holds — and reports reads of never-written or
+//! stale slots, out-of-range slot ids, and GEMM steps that alias their
+//! destination with an input (the executor writes `dst` column-by-column
+//! while still reading `src`, so `dst == src` corrupts the product).
+
+use crate::runtime::graph::{CompiledNet, EpiOp, Step, StepOp};
+
+use super::{Report, Rule};
+
+type Shape = (usize, usize, usize);
+
+/// What a slot currently holds.
+#[derive(Clone, Copy)]
+struct SlotState {
+    shape: Shape,
+    /// Set once anything reads the value; an overwrite of an unread value
+    /// is a dead write.
+    read: bool,
+}
+
+pub(crate) fn check_liveness(net: &CompiledNet, report: &mut Report) {
+    let mut slots: Vec<Option<SlotState>> = vec![None; net.num_slots];
+
+    if net.input_slot >= net.num_slots {
+        report.error(
+            Rule::SlotRange,
+            net.name.clone(),
+            format!("input slot {} out of range ({} slots)", net.input_slot, net.num_slots),
+        );
+        return;
+    }
+    slots[net.input_slot] = Some(SlotState { shape: net.input_shape, read: false });
+
+    for step in &net.steps {
+        check_step(step, &mut slots, net.num_slots, report);
+    }
+
+    if net.output_slot >= net.num_slots {
+        report.error(
+            Rule::OutputSlot,
+            net.name.clone(),
+            format!("output slot {} out of range ({} slots)", net.output_slot, net.num_slots),
+        );
+        return;
+    }
+    match slots[net.output_slot] {
+        None => report.error(
+            Rule::OutputSlot,
+            net.name.clone(),
+            format!("output slot {} is never written", net.output_slot),
+        ),
+        Some(s) if s.shape != net.output_shape => report.error(
+            Rule::OutputSlot,
+            net.name.clone(),
+            format!(
+                "output slot holds {:?} but the net promises {:?}",
+                s.shape, net.output_shape
+            ),
+        ),
+        Some(_) => {}
+    }
+}
+
+fn check_step(step: &Step, slots: &mut [Option<SlotState>], num_slots: usize, report: &mut Report) {
+    let site = step.name.clone();
+
+    // collect every slot the step reads, with the shape each read expects
+    // (a fused residual operand holds the GEMM's *output*-shaped value —
+    // the lowerer enforces exactly that before fusing the add)
+    let mut reads: Vec<(usize, Shape)> = vec![(step.src, step.in_shape)];
+    if let StepOp::Add { other } = step.op {
+        reads.push((other, step.in_shape));
+    }
+    if let StepOp::Gemm { epilogue, .. } = &step.op {
+        for epi in epilogue {
+            if let EpiOp::Add { slot } = epi {
+                reads.push((*slot, step.out_shape));
+            }
+        }
+    }
+    for s in reads.iter().map(|r| r.0).chain(std::iter::once(step.dst)) {
+        if s >= num_slots {
+            report.error(
+                Rule::SlotRange,
+                site,
+                format!("slot {s} out of range ({num_slots} slots)"),
+            );
+            return; // state is unknowable past a bad id; skip this step
+        }
+    }
+
+    // every read must see a live value of the shape it expects
+    for &(s, want) in &reads {
+        match slots[s] {
+            None => report.error(
+                Rule::ReadBeforeWrite,
+                &site,
+                format!("reads slot {s} before anything wrote it"),
+            ),
+            Some(st) if st.shape != want => report.error(
+                Rule::StaleRead,
+                &site,
+                format!("reads slot {s} holding {:?} but expects {:?}", st.shape, want),
+            ),
+            Some(_) => slots[s].as_mut().unwrap().read = true,
+        }
+    }
+
+    // GEMM steps stream src (and any residual input) while writing dst
+    if matches!(step.op, StepOp::Gemm { .. }) {
+        if step.dst == step.src {
+            report.error(
+                Rule::GemmAliasing,
+                &site,
+                format!("GEMM writes slot {} while reading it as src", step.dst),
+            );
+        }
+        if let StepOp::Gemm { epilogue, .. } = &step.op {
+            for epi in epilogue {
+                if let EpiOp::Add { slot } = epi {
+                    if *slot == step.dst {
+                        report.error(
+                            Rule::GemmAliasing,
+                            &site,
+                            format!("fused residual add reads slot {slot} while the GEMM overwrites it"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // overwriting a value nobody ever read means the producing step was
+    // wasted work (or the consumer reads the wrong slot)
+    if step.dst != step.src {
+        if let Some(prev) = slots[step.dst] {
+            if !prev.read {
+                report.warn(
+                    Rule::DeadWrite,
+                    &site,
+                    format!("overwrites slot {} whose previous value was never read", step.dst),
+                );
+            }
+        }
+    }
+    slots[step.dst] = Some(SlotState { shape: step.out_shape, read: false });
+}

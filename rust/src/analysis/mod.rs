@@ -1,0 +1,403 @@
+//! Static analysis over compiled artifacts: `prunemap check`.
+//!
+//! A compiled artifact is a five-part contract — `(ModelSpec, assignments,
+//! Graph + FusionPlan, NetWeights, CompiledNet)` — and every part can be
+//! corrupted independently: a hand-edited recipe, a buggy mapping method, a
+//! plan rewrite that anchors a fused-away node, a lowering change that
+//! aliases an arena slot.  This module re-derives what each part *implies*
+//! and reports every disagreement as a [`Diagnostic`] with a stable
+//! clippy-style rule id, instead of letting the executor chase garbage at
+//! request time.
+//!
+//! Four rule families (see [`Rule`]):
+//!
+//! * **shape** — symbolic shape inference over every program step
+//!   (im2col/SAME-padding arithmetic, depthwise block-diagonal dims,
+//!   pool/flatten glue), plus output length vs. the dataset's class count;
+//! * **liveness** — arena-slot dataflow: no step reads a slot before it is
+//!   written or after its value was replaced, no GEMM writes over its own
+//!   input panel, every slot id is in range;
+//! * **scheme** — [`Scheme::applicable`] legality, mask *structure* (the
+//!   zero pattern of each masked weight must actually have the declared
+//!   regularity), and declared-vs-measured compression drift;
+//! * **plan** — fusion-plan hygiene over the graph: topological order,
+//!   anchors that exist and are compute nodes, no node fused twice,
+//!   weights lining up one-to-one with the graph's layer nodes.
+//!
+//! Entry points: [`check_assignments`] (pre-compile legality),
+//! [`check_model`] (the full post-compile pass
+//! [`PreparedModel`](crate::serve::PreparedModel) sealing gates on), and
+//! [`check`] (explicit graph + plan, for callers that built their own).
+//! Reports render human-readably ([`Report::render`]) and as line-JSON
+//! ([`Report::to_jsonl`]) for CI.
+
+mod liveness;
+mod plan;
+mod scheme;
+mod shape;
+
+use std::fmt;
+
+use crate::accuracy::Assignment;
+use crate::compiler::{fuse, FusionPlan, Graph};
+use crate::models::ModelSpec;
+use crate::runtime::graph::NetWeights;
+use crate::runtime::CompiledNet;
+use crate::util::json::Value;
+
+/// How bad a finding is.  `Error` findings gate sealing and serving
+/// (`prunemap check` exits nonzero, [`crate::serve::PreparedModel`]
+/// refuses to seal); `Warning` findings are reported but never gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    /// Stable lowercase name (`"warning"` | `"error"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Every rule the analyzer can fire, with a stable kebab-case id (the
+/// contract CI and the negative-path tests assert against) and a family
+/// grouping the four analysis passes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    // -- shape/dataflow -----------------------------------------------------
+    /// A step's recorded in/out shape disagrees with the re-derived one.
+    ShapeMismatch,
+    /// A GEMM's sparse operator dims disagree with its layer spec
+    /// (im2col rows, depthwise block-diagonal width, FC transpose), or a
+    /// layer is lowered zero or multiple times.
+    GemmDims,
+    /// The compiled output length is not the dataset's class count.
+    OutputClasses,
+    // -- arena liveness/aliasing --------------------------------------------
+    /// A step reads an arena slot no prior step (or the input) wrote.
+    ReadBeforeWrite,
+    /// A step reads a slot whose current value is not the one it expects
+    /// (the slot was reused for a different buffer first).
+    StaleRead,
+    /// A slot id is outside `0..num_slots`.
+    SlotRange,
+    /// A GEMM's destination slot aliases its input panel or a fused
+    /// residual operand.
+    GemmAliasing,
+    /// A step's output is replaced before anything reads it.
+    DeadWrite,
+    /// The declared output slot does not hold the output-shaped value at
+    /// the end of the program.
+    OutputSlot,
+    // -- scheme legality + mask consistency ---------------------------------
+    /// An assignment's scheme is not applicable to its layer
+    /// ([`crate::pruning::Scheme::applicable`]).
+    SchemeLegality,
+    /// A masked weight's zero pattern violates its declared scheme
+    /// structure (partial blocks, off-pattern kernels, an all-zero layer).
+    MaskStructure,
+    /// Declared compression is far from the measured `total/nnz`.
+    CompressionDrift,
+    // -- plan hygiene -------------------------------------------------------
+    /// The graph is not in topological order / node ids are inconsistent.
+    PlanTopo,
+    /// A fusion kernel anchors a node that is missing, not a compute node,
+    /// already fused into another kernel, or anchored twice.
+    PlanAnchor,
+    /// An epilogue entry is missing, non-elementwise, or fused twice.
+    PlanEpilogue,
+    /// Weights do not line up one-to-one with the graph's layer nodes, or
+    /// a layer node is never covered by any kernel.
+    PlanWeights,
+    /// Lowering itself failed; the artifact cannot be compiled at all.
+    CompileFailed,
+}
+
+impl Rule {
+    /// Stable kebab-case rule id.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::ShapeMismatch => "shape-mismatch",
+            Rule::GemmDims => "gemm-dims",
+            Rule::OutputClasses => "output-classes",
+            Rule::ReadBeforeWrite => "read-before-write",
+            Rule::StaleRead => "stale-read",
+            Rule::SlotRange => "slot-range",
+            Rule::GemmAliasing => "gemm-aliasing",
+            Rule::DeadWrite => "dead-write",
+            Rule::OutputSlot => "output-slot",
+            Rule::SchemeLegality => "scheme-legality",
+            Rule::MaskStructure => "mask-structure",
+            Rule::CompressionDrift => "compression-drift",
+            Rule::PlanTopo => "plan-topo",
+            Rule::PlanAnchor => "plan-anchor",
+            Rule::PlanEpilogue => "plan-epilogue",
+            Rule::PlanWeights => "plan-weights",
+            Rule::CompileFailed => "compile-failed",
+        }
+    }
+
+    /// Which analysis pass owns the rule
+    /// (`"shape"` | `"liveness"` | `"scheme"` | `"plan"`).
+    pub fn family(self) -> &'static str {
+        match self {
+            Rule::ShapeMismatch | Rule::GemmDims | Rule::OutputClasses => "shape",
+            Rule::ReadBeforeWrite
+            | Rule::StaleRead
+            | Rule::SlotRange
+            | Rule::GemmAliasing
+            | Rule::DeadWrite
+            | Rule::OutputSlot => "liveness",
+            Rule::SchemeLegality | Rule::MaskStructure | Rule::CompressionDrift => "scheme",
+            Rule::PlanTopo
+            | Rule::PlanAnchor
+            | Rule::PlanEpilogue
+            | Rule::PlanWeights
+            | Rule::CompileFailed => "plan",
+        }
+    }
+
+    /// Every rule, for documentation and exhaustiveness tests.
+    pub fn all() -> &'static [Rule] {
+        &[
+            Rule::ShapeMismatch,
+            Rule::GemmDims,
+            Rule::OutputClasses,
+            Rule::ReadBeforeWrite,
+            Rule::StaleRead,
+            Rule::SlotRange,
+            Rule::GemmAliasing,
+            Rule::DeadWrite,
+            Rule::OutputSlot,
+            Rule::SchemeLegality,
+            Rule::MaskStructure,
+            Rule::CompressionDrift,
+            Rule::PlanTopo,
+            Rule::PlanAnchor,
+            Rule::PlanEpilogue,
+            Rule::PlanWeights,
+            Rule::CompileFailed,
+        ]
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One finding: a rule firing at a site (a step, layer, node, or slot)
+/// with a human-readable explanation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub severity: Severity,
+    /// Where it fired: a step/layer/node name or a slot id.
+    pub site: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}]: {}: {}",
+            self.severity,
+            self.rule.id(),
+            self.site,
+            self.message
+        )
+    }
+}
+
+/// The outcome of an analysis pass: every diagnostic, in discovery order
+/// (plan, scheme, shape, liveness).
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub(crate) fn error(&mut self, rule: Rule, site: impl Into<String>, message: impl Into<String>) {
+        self.diagnostics.push(Diagnostic {
+            rule,
+            severity: Severity::Error,
+            site: site.into(),
+            message: message.into(),
+        });
+    }
+
+    pub(crate) fn warn(&mut self, rule: Rule, site: impl Into<String>, message: impl Into<String>) {
+        self.diagnostics.push(Diagnostic {
+            rule,
+            severity: Severity::Warning,
+            site: site.into(),
+            message: message.into(),
+        });
+    }
+
+    /// Whether any diagnostic gates (severity [`Severity::Error`]).
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.error_count()
+    }
+
+    /// Diagnostics that fired a specific rule.
+    pub fn by_rule(&self, rule: Rule) -> Vec<&Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.rule == rule).collect()
+    }
+
+    /// Human-readable rendering: one line per diagnostic plus a summary
+    /// line (always present, so "clean" is visible too).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.to_string());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "check: {} error(s), {} warning(s)\n",
+            self.error_count(),
+            self.warning_count()
+        ));
+        out
+    }
+
+    /// Line-JSON rendering: one compact object per diagnostic
+    /// (`rule`, `family`, `severity`, `site`, `message`), for CI and
+    /// machine consumers.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            let v = Value::obj(vec![
+                ("rule", Value::str(d.rule.id())),
+                ("family", Value::str(d.rule.family())),
+                ("severity", Value::str(d.severity.name())),
+                ("site", Value::str(d.site.clone())),
+                ("message", Value::str(d.message.clone())),
+            ]);
+            out.push_str(&v.compact());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Pre-compile legality pass: assignment count and per-layer
+/// [`Scheme::applicable`](crate::pruning::Scheme::applicable), without
+/// weights.  This is what `prunemap check` runs *before* synthesis, so an
+/// illegal mapping is reported as a diagnostic instead of a bail.
+pub fn check_assignments(model: &ModelSpec, assigns: &[Assignment]) -> Report {
+    let mut report = Report::default();
+    scheme::check_legality(model, assigns, &mut report);
+    report
+}
+
+/// The full analysis over an explicit graph + fusion plan.  Use this when
+/// you built (or corrupted) the plan yourself; [`check_model`] is the
+/// convenience over the canonical pipeline.
+pub fn check(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    graph: &Graph,
+    plan: &FusionPlan,
+    weights: &NetWeights,
+    net: &CompiledNet,
+) -> Report {
+    let mut report = Report::default();
+    plan::check_plan(graph, plan, weights, &mut report);
+    scheme::check_legality(model, assigns, &mut report);
+    scheme::check_masks(model, weights, &mut report);
+    shape::check_shapes(model, net, &mut report);
+    liveness::check_liveness(net, &mut report);
+    report
+}
+
+/// The full analysis over the canonical pipeline: rebuilds the inference
+/// graph and fusion plan from the spec (both are deterministic) and runs
+/// every pass.  This is the gate
+/// [`PreparedModel::from_parts`](crate::serve::PreparedModel::from_parts)
+/// applies before sealing.
+pub fn check_model(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    weights: &NetWeights,
+    net: &CompiledNet,
+) -> Report {
+    let graph = Graph::from_model(model);
+    let plan = fuse(&graph);
+    check(model, assigns, &graph, &plan, weights, net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_are_stable_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for r in Rule::all() {
+            assert!(seen.insert(r.id()), "duplicate rule id {}", r.id());
+            assert!(
+                r.id().chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "rule id '{}' is not kebab-case",
+                r.id()
+            );
+            assert!(
+                matches!(r.family(), "shape" | "liveness" | "scheme" | "plan"),
+                "unknown family {}",
+                r.family()
+            );
+        }
+        assert_eq!(seen.len(), Rule::all().len());
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let mut r = Report::default();
+        assert!(!r.has_errors());
+        assert!(r.render().contains("0 error(s), 0 warning(s)"));
+        r.warn(Rule::CompressionDrift, "conv1", "declared 8.0x, measured 1.0x");
+        r.error(Rule::ShapeMismatch, "conv2", "expected (8, 16, 16), recorded (8, 17, 16)");
+        assert!(r.has_errors());
+        assert_eq!(r.error_count(), 1);
+        assert_eq!(r.warning_count(), 1);
+        assert_eq!(r.by_rule(Rule::ShapeMismatch).len(), 1);
+        let text = r.render();
+        assert!(text.contains("error[shape-mismatch]: conv2:"), "{text}");
+        assert!(text.contains("warning[compression-drift]: conv1:"), "{text}");
+        // every jsonl line parses back with the stable fields
+        for line in r.to_jsonl().lines() {
+            let v = Value::parse(line).unwrap();
+            assert!(Rule::all().iter().any(|r| r.id() == v.get("rule").unwrap().as_str().unwrap()));
+            assert!(v.get("family").is_ok());
+            assert!(matches!(
+                v.get("severity").unwrap().as_str().unwrap(),
+                "warning" | "error"
+            ));
+        }
+        assert_eq!(r.to_jsonl().lines().count(), 2);
+    }
+}

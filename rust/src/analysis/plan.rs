@@ -1,0 +1,138 @@
+//! Plan-hygiene rules: the fusion plan and weights against the graph.
+//!
+//! The lowerer trusts the plan to walk the graph in topological order,
+//! anchor every compute node exactly once, and fuse only elementwise
+//! nodes; it trusts the weights to line up one-to-one with the graph's
+//! layer nodes.  A plan that breaks any of these drops or double-executes
+//! work silently — so every assumption is checked here first.
+
+use std::collections::HashSet;
+
+use crate::compiler::ir::{Graph, Op};
+use crate::compiler::FusionPlan;
+use crate::runtime::graph::NetWeights;
+
+use super::{Report, Rule};
+
+pub(crate) fn check_plan(
+    graph: &Graph,
+    plan: &FusionPlan,
+    weights: &NetWeights,
+    report: &mut Report,
+) {
+    if let Err(e) = graph.topo_check() {
+        report.error(Rule::PlanTopo, "graph", e.to_string());
+        // node ids are unreliable past a topo defect; bail on this pass
+        return;
+    }
+
+    let mut anchored: HashSet<usize> = HashSet::new();
+    let mut fused: HashSet<usize> = HashSet::new();
+    for kernel in &plan.kernels {
+        let site = graph
+            .nodes
+            .get(kernel.anchor)
+            .map(|n| n.name.clone())
+            .unwrap_or_else(|| format!("kernel@{}", kernel.anchor));
+        let Some(anchor) = graph.nodes.get(kernel.anchor) else {
+            report.error(
+                Rule::PlanAnchor,
+                site,
+                format!("anchors node {} which the graph does not have", kernel.anchor),
+            );
+            continue;
+        };
+        if !anchored.insert(kernel.anchor) {
+            report.error(Rule::PlanAnchor, &site, "anchored by more than one kernel");
+        }
+        if matches!(anchor.op, Op::Input { .. } | Op::Output) {
+            report.error(Rule::PlanAnchor, &site, "anchors a non-compute node");
+        }
+        for &e in &kernel.epilogue {
+            let Some(en) = graph.nodes.get(e) else {
+                report.error(
+                    Rule::PlanEpilogue,
+                    &site,
+                    format!("fuses node {e} which the graph does not have"),
+                );
+                continue;
+            };
+            if e == kernel.anchor {
+                report.error(Rule::PlanEpilogue, &site, "fuses its own anchor");
+            }
+            if !en.op.is_elementwise() {
+                report.error(
+                    Rule::PlanEpilogue,
+                    &site,
+                    format!("fuses non-elementwise node '{}'", en.name),
+                );
+            }
+            if !fused.insert(e) {
+                report.error(
+                    Rule::PlanEpilogue,
+                    &site,
+                    format!("node '{}' is fused into more than one kernel", en.name),
+                );
+            }
+        }
+    }
+    // a kernel that is both an anchor and somebody's epilogue executes twice
+    for &node in anchored.intersection(&fused) {
+        report.error(
+            Rule::PlanAnchor,
+            graph.nodes[node].name.clone(),
+            "anchors a kernel but is also fused into another kernel",
+        );
+    }
+    // coverage: every compute node must be executed by exactly one kernel
+    for n in &graph.nodes {
+        let compute = !matches!(n.op, Op::Input { .. } | Op::Output);
+        if compute && !anchored.contains(&n.id) && !fused.contains(&n.id) {
+            report.error(
+                Rule::PlanAnchor,
+                n.name.clone(),
+                "compute node covered by no kernel (silently dropped)",
+            );
+        }
+    }
+
+    // weights must mirror the graph's layer nodes one-to-one, in order
+    let layer_nodes = graph.layer_nodes();
+    if weights.layers.len() != layer_nodes.len() {
+        report.error(
+            Rule::PlanWeights,
+            "weights",
+            format!(
+                "{} weight tensors for {} layer nodes",
+                weights.layers.len(),
+                layer_nodes.len()
+            ),
+        );
+    } else {
+        for (node, masked) in layer_nodes.iter().zip(&weights.layers) {
+            if node.name != masked.spec.name {
+                report.error(
+                    Rule::PlanWeights,
+                    node.name.clone(),
+                    format!("weight order mismatch: weights carry '{}'", masked.spec.name),
+                );
+            }
+        }
+    }
+    // bn statistics that no BatchNorm node will ever consume
+    let bn_nodes: HashSet<&str> = graph
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.op, Op::BatchNorm))
+        .map(|n| n.name.as_str())
+        .collect();
+    for key in weights.bn.keys() {
+        if !bn_nodes.contains(key.as_str()) {
+            report.warn(
+                Rule::PlanWeights,
+                key.clone(),
+                "bn statistics for a node the graph does not have",
+            );
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! Scheme-legality and mask-consistency rules.
+//!
+//! Legality re-applies [`Scheme::applicable`] to every assignment (the
+//! same predicate weight synthesis enforces, but reported as diagnostics
+//! instead of a bail).  Mask consistency goes further: the *zero pattern*
+//! of each synthesized weight must actually have the structure its scheme
+//! declares — whole rows/columns for structured pruning, outer-product
+//! blocks for block-based FC, a shared punched support per kernel block,
+//! library patterns per kernel — and the declared compression must be in
+//! the neighborhood of the measured `total/nnz`.  A weight is treated as
+//! pruned iff it is exactly `0.0`: masks zero weights exactly, and the
+//! He-normal init never produces exact zeros.
+
+use crate::accuracy::Assignment;
+use crate::models::{LayerKind, LayerSpec, ModelSpec};
+use crate::pruning::{PatternLibrary, Scheme};
+use crate::runtime::graph::{MaskedLayer, NetWeights};
+use crate::tensor::Tensor;
+
+use super::{Report, Rule};
+
+/// Declared-vs-measured compression beyond this factor (either way) is
+/// reported.  Group granularity legitimately lands block schemes up to
+/// ~2x off target on small layers, so the tolerance is deliberately loose.
+const DRIFT_FACTOR: f32 = 3.0;
+
+pub(crate) fn check_legality(model: &ModelSpec, assigns: &[Assignment], report: &mut Report) {
+    if model.layers.len() != assigns.len() {
+        report.error(
+            Rule::SchemeLegality,
+            model.name.clone(),
+            format!(
+                "{} layers but {} assignments",
+                model.layers.len(),
+                assigns.len()
+            ),
+        );
+        return;
+    }
+    for (spec, a) in model.layers.iter().zip(assigns) {
+        if !a.scheme.applicable(spec) {
+            report.error(
+                Rule::SchemeLegality,
+                spec.name.clone(),
+                format!(
+                    "scheme {} is not applicable to this {:?} layer ({}x{} in {} out {})",
+                    a.scheme.label(),
+                    spec.kind,
+                    spec.kh,
+                    spec.kw,
+                    spec.in_ch,
+                    spec.out_ch
+                ),
+            );
+        }
+    }
+}
+
+pub(crate) fn check_masks(model: &ModelSpec, weights: &NetWeights, report: &mut Report) {
+    // count/order mismatches are the plan pass's findings; just align here
+    for (spec, masked) in model.layers.iter().zip(&weights.layers) {
+        check_layer(spec, masked, report);
+    }
+}
+
+fn check_layer(spec: &LayerSpec, masked: &MaskedLayer, report: &mut Report) {
+    let site = spec.name.clone();
+    let w = &masked.weight;
+    let expected_shape: Vec<usize> = match spec.kind {
+        LayerKind::Conv => vec![spec.out_ch, spec.in_ch, spec.kh, spec.kw],
+        LayerKind::DepthwiseConv => vec![spec.out_ch, 1, spec.kh, spec.kw],
+        LayerKind::Fc => vec![spec.in_ch, spec.out_ch],
+    };
+    if w.shape() != expected_shape.as_slice() {
+        report.error(
+            Rule::MaskStructure,
+            site,
+            format!(
+                "weight shape {:?} does not match the spec's {:?}",
+                w.shape(),
+                expected_shape
+            ),
+        );
+        return;
+    }
+
+    let nnz = w.data().iter().filter(|v| **v != 0.0).count();
+    if nnz == 0 {
+        report.error(
+            Rule::MaskStructure,
+            site,
+            "layer is entirely pruned (every weight is zero)",
+        );
+        return;
+    }
+
+    match masked.scheme {
+        Scheme::None | Scheme::Unstructured => {}
+        Scheme::StructuredRow => check_structured(w, true, &site, report),
+        Scheme::StructuredColumn => check_structured(w, false, &site, report),
+        Scheme::Pattern => check_pattern(w, &site, report),
+        Scheme::Block { bp, bq } => check_block_fc(w, bp, bq, &site, report),
+        Scheme::BlockPunched { bf, bc } => check_block_punched(w, bf, bc, &site, report),
+    }
+
+    // declared vs measured compression
+    let declared = masked.compression.max(1.0);
+    let measured = w.len() as f32 / nnz as f32;
+    if measured > declared * DRIFT_FACTOR || measured * DRIFT_FACTOR < declared {
+        report.warn(
+            Rule::CompressionDrift,
+            site,
+            format!(
+                "declared {declared:.2}x but measured {measured:.2}x ({nnz}/{} kept)",
+                w.len()
+            ),
+        );
+    }
+}
+
+/// Whole-row (dim 0 / filter) or whole-column (dim 1 / channel) pruning:
+/// every group must be entirely zero or entirely nonzero.
+fn check_structured(w: &Tensor, rows: bool, site: &str, report: &mut Report) {
+    let s = w.shape();
+    let groups = if rows { s[0] } else { s[1] };
+    for g in 0..groups {
+        let (mut zeros, mut nonzeros) = (0usize, 0usize);
+        each_in_group(w, g, rows, |v| {
+            if v == 0.0 {
+                zeros += 1;
+            } else {
+                nonzeros += 1;
+            }
+        });
+        if zeros > 0 && nonzeros > 0 {
+            report.error(
+                Rule::MaskStructure,
+                site,
+                format!(
+                    "structured {} {g} is partially pruned ({nonzeros} kept, {zeros} zero)",
+                    if rows { "row" } else { "column" }
+                ),
+            );
+            return; // one witness per layer keeps reports readable
+        }
+    }
+}
+
+fn each_in_group(w: &Tensor, g: usize, rows: bool, mut f: impl FnMut(f32)) {
+    let s = w.shape();
+    match w.ndim() {
+        2 => {
+            if rows {
+                for c in 0..s[1] {
+                    f(w.at2(g, c));
+                }
+            } else {
+                for r in 0..s[0] {
+                    f(w.at2(r, g));
+                }
+            }
+        }
+        4 => {
+            let (fdim, c, kh, kw) = (s[0], s[1], s[2], s[3]);
+            if rows {
+                for ci in 0..c {
+                    for p in 0..kh * kw {
+                        f(w.at4(g, ci, p / kw, p % kw));
+                    }
+                }
+            } else {
+                for fi in 0..fdim {
+                    for p in 0..kh * kw {
+                        f(w.at4(fi, g, p / kw, p % kw));
+                    }
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Pattern pruning: every kernel is either fully pruned (connectivity) or
+/// its nonzero support is covered by one of the library's 4-entry
+/// patterns.
+fn check_pattern(w: &Tensor, site: &str, report: &mut Report) {
+    if w.ndim() != 4 || w.shape()[2] != 3 || w.shape()[3] != 3 {
+        report.error(Rule::MaskStructure, site, "pattern scheme on a non-3x3 weight");
+        return;
+    }
+    let lib = PatternLibrary::default8();
+    let patterns = lib.patterns();
+    let (f, c) = (w.shape()[0], w.shape()[1]);
+    for fi in 0..f {
+        for ci in 0..c {
+            let mut support: u16 = 0;
+            for p in 0..9 {
+                if w.at4(fi, ci, p / 3, p % 3) != 0.0 {
+                    support |= 1 << p;
+                }
+            }
+            if support != 0 && !patterns.iter().any(|&pat| support & !pat == 0) {
+                report.error(
+                    Rule::MaskStructure,
+                    site,
+                    format!(
+                        "kernel ({fi},{ci}) support {support:#011b} matches no library pattern"
+                    ),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// Block-based FC pruning: inside every (bp x bq) block the nonzero set
+/// must be the outer product of a kept-row and a kept-column vector.
+fn check_block_fc(w: &Tensor, bp: usize, bq: usize, site: &str, report: &mut Report) {
+    if w.ndim() != 2 {
+        report.error(Rule::MaskStructure, site, "block scheme on a non-2-D weight");
+        return;
+    }
+    let (p, q) = (w.shape()[0], w.shape()[1]);
+    // clamp exactly like the mask generator
+    let bp = bp.min(p).max(1);
+    let bq = bq.min(q).max(1);
+    for r0 in (0..p).step_by(bp) {
+        for c0 in (0..q).step_by(bq) {
+            let r1 = (r0 + bp).min(p);
+            let c1 = (c0 + bq).min(q);
+            let row_any: Vec<bool> = (r0..r1)
+                .map(|r| (c0..c1).any(|c| w.at2(r, c) != 0.0))
+                .collect();
+            let col_any: Vec<bool> = (c0..c1)
+                .map(|c| (r0..r1).any(|r| w.at2(r, c) != 0.0))
+                .collect();
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    let expect = row_any[r - r0] && col_any[c - c0];
+                    if (w.at2(r, c) != 0.0) != expect {
+                        report.error(
+                            Rule::MaskStructure,
+                            site,
+                            format!(
+                                "block ({},{}) is not outer-product structured at ({r},{c})",
+                                r0 / bp,
+                                c0 / bq
+                            ),
+                        );
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Block-punched pruning: inside every (bf x bc) kernel block, each kernel
+/// position is either kept by every kernel or pruned by every kernel.
+fn check_block_punched(w: &Tensor, bf: usize, bc: usize, site: &str, report: &mut Report) {
+    if w.ndim() != 4 {
+        report.error(Rule::MaskStructure, site, "punched scheme on a non-4-D weight");
+        return;
+    }
+    let s = w.shape();
+    let (f, c, kh, kw) = (s[0], s[1], s[2], s[3]);
+    let bf = bf.min(f).max(1);
+    let bc = bc.min(c).max(1);
+    for f0 in (0..f).step_by(bf) {
+        for c0 in (0..c).step_by(bc) {
+            let f1 = (f0 + bf).min(f);
+            let c1 = (c0 + bc).min(c);
+            let block = (f1 - f0) * (c1 - c0);
+            for p in 0..kh * kw {
+                let kept = (f0..f1)
+                    .flat_map(|fi| (c0..c1).map(move |ci| (fi, ci)))
+                    .filter(|&(fi, ci)| w.at4(fi, ci, p / kw, p % kw) != 0.0)
+                    .count();
+                if kept != 0 && kept != block {
+                    report.error(
+                        Rule::MaskStructure,
+                        site,
+                        format!(
+                            "kernel block ({},{}) position ({},{}) kept by {kept}/{block} kernels",
+                            f0 / bf,
+                            c0 / bc,
+                            p / kw,
+                            p % kw
+                        ),
+                    );
+                    return;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Shape/dataflow rules over the lowered program.
+//!
+//! Every [`Step`] records the per-sample `(C, H, W)` shapes it expects to
+//! read and promises to write.  This pass independently re-derives what
+//! each op *must* produce from its input shape (and, for GEMMs, from the
+//! layer spec and the sparse matrix dimensions) and reports any step whose
+//! recorded shapes disagree — the static form of the runtime's
+//! "gemm shape mismatch" panics.  It also checks that every prunable
+//! layer is driven by exactly one GEMM step and that the net's output is
+//! a class vector of the dataset's size.
+
+use crate::models::{LayerKind, ModelSpec};
+use crate::runtime::graph::{CompiledNet, EpiOp, GemmKind, Step, StepOp};
+
+use super::{Report, Rule};
+
+pub(crate) fn check_shapes(model: &ModelSpec, net: &CompiledNet, report: &mut Report) {
+    let mut layer_refs = vec![0usize; net.layers.len()];
+    for step in &net.steps {
+        check_step(net, step, &mut layer_refs, report);
+    }
+
+    for (idx, &count) in layer_refs.iter().enumerate() {
+        if count != 1 {
+            report.error(
+                Rule::GemmDims,
+                net.layers[idx].name.clone(),
+                format!("layer is driven by {count} GEMM steps (expected exactly 1)"),
+            );
+        }
+    }
+
+    if let Some(classes) = model.dataset.num_classes() {
+        if net.output_len() != classes {
+            report.error(
+                Rule::OutputClasses,
+                net.name.clone(),
+                format!(
+                    "output has {} elements but {} expects a {classes}-class vector",
+                    net.output_len(),
+                    model.dataset.name()
+                ),
+            );
+        }
+    }
+}
+
+fn check_step(net: &CompiledNet, step: &Step, layer_refs: &mut [usize], report: &mut Report) {
+    let site = step.name.clone();
+    let (c, h, w) = step.in_shape;
+    let expected_out = match &step.op {
+        StepOp::Gemm { layer, epilogue } => {
+            let Some(le) = net.layers.get(*layer) else {
+                report.error(
+                    Rule::GemmDims,
+                    site,
+                    format!("references layer {layer} but the net has {}", net.layers.len()),
+                );
+                return;
+            };
+            layer_refs[*layer] += 1;
+            let spec = &le.spec;
+            let kind_ok = matches!(
+                (le.kind, spec.kind),
+                (GemmKind::Conv, LayerKind::Conv)
+                    | (GemmKind::Depthwise, LayerKind::DepthwiseConv)
+                    | (GemmKind::Fc, LayerKind::Fc)
+            );
+            if !kind_ok {
+                report.error(
+                    Rule::GemmDims,
+                    &site,
+                    format!("lowered as {:?} GEMM but the spec is {:?}", le.kind, spec.kind),
+                );
+            }
+            if spec.kind == LayerKind::DepthwiseConv && spec.in_ch != spec.out_ch {
+                report.error(
+                    Rule::GemmDims,
+                    &site,
+                    format!("depthwise layer with in {} != out {}", spec.in_ch, spec.out_ch),
+                );
+            }
+            let expected_in = match spec.kind {
+                LayerKind::Fc => (spec.in_ch, 1, 1),
+                _ => (spec.in_ch, spec.in_hw, spec.in_hw),
+            };
+            if step.in_shape != expected_in {
+                report.error(
+                    Rule::ShapeMismatch,
+                    &site,
+                    format!(
+                        "consumes {:?} but layer '{}' expects {:?}",
+                        step.in_shape, spec.name, expected_in
+                    ),
+                );
+            }
+            // sparse matrix dims the executor will multiply with
+            let expected_dims = match le.kind {
+                GemmKind::Conv => (spec.out_ch, spec.in_ch * spec.kh * spec.kw),
+                GemmKind::Depthwise => (spec.out_ch, spec.out_ch * spec.kh * spec.kw),
+                GemmKind::Fc => (spec.out_ch, spec.in_ch),
+            };
+            if le.sparse.dims() != expected_dims {
+                report.error(
+                    Rule::GemmDims,
+                    &site,
+                    format!(
+                        "sparse weights are {:?} but the {:?} view needs {:?}",
+                        le.sparse.dims(),
+                        le.kind,
+                        expected_dims
+                    ),
+                );
+            }
+            for epi in epilogue {
+                if let EpiOp::BatchNorm(p) = epi {
+                    if p.channels() != spec.out_ch {
+                        report.error(
+                            Rule::ShapeMismatch,
+                            &site,
+                            format!(
+                                "fused bn has {} channels but the GEMM writes {}",
+                                p.channels(),
+                                spec.out_ch
+                            ),
+                        );
+                    }
+                }
+            }
+            match spec.kind {
+                LayerKind::Fc => (spec.out_ch, 1, 1),
+                _ => (spec.out_ch, spec.out_hw(), spec.out_hw()),
+            }
+        }
+        StepOp::BatchNorm(p) => {
+            if p.channels() != c {
+                report.error(
+                    Rule::ShapeMismatch,
+                    &site,
+                    format!("bn has {} channels but the input carries {c}", p.channels()),
+                );
+            }
+            (c, h, w)
+        }
+        StepOp::Relu | StepOp::Add { .. } => (c, h, w),
+        StepOp::MaxPool2x2 => (c, h.div_ceil(2), w.div_ceil(2)),
+        StepOp::GlobalAvgPool => (c, 1, 1),
+        StepOp::Flatten => (c * h * w, 1, 1),
+    };
+    if step.out_shape != expected_out {
+        report.error(
+            Rule::ShapeMismatch,
+            site,
+            format!(
+                "records output {:?} but the op produces {:?} from {:?}",
+                step.out_shape, expected_out, step.in_shape
+            ),
+        );
+    }
+}

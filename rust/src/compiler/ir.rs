@@ -10,7 +10,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
 use crate::models::{LayerSpec, ModelSpec};
 use crate::pruning::Scheme;
@@ -58,6 +58,33 @@ pub struct Graph {
     pub nodes: Vec<Node>,
 }
 
+/// Why [`Graph::topo_check`] rejected a graph: the node list is required
+/// to be stored in topological order with `id == index`, so both defects
+/// are structural corruption, not recoverable states.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopoError {
+    /// A node consumes a node at or after its own position (cycle,
+    /// self-loop, or dangling input id).
+    ForwardDependency { node: usize, name: String, input: usize },
+    /// `nodes[index].id != index`: the id space is inconsistent.
+    IdMismatch { index: usize, id: usize },
+}
+
+impl std::fmt::Display for TopoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopoError::ForwardDependency { node, name, input } => {
+                write!(f, "node {node} ('{name}') depends on later node {input}")
+            }
+            TopoError::IdMismatch { index, id } => {
+                write!(f, "node at position {index} carries id {id}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TopoError {}
+
 impl Graph {
     pub fn add(&mut self, name: &str, op: Op, inputs: Vec<usize>) -> usize {
         let id = self.nodes.len();
@@ -104,11 +131,24 @@ impl Graph {
     }
 
     /// Topological order (the graph is built in topo order; verify).
-    pub fn topo_check(&self) -> Result<()> {
-        for n in &self.nodes {
+    /// Mandatory on every lowering path — [`crate::runtime::graph`]'s
+    /// `CompiledNet::lower`/`compile` call it before trusting the node
+    /// ids — and typed so callers can match on the exact defect instead
+    /// of parsing a message.
+    pub fn topo_check(&self) -> std::result::Result<(), TopoError> {
+        for (idx, n) in self.nodes.iter().enumerate() {
+            if n.id != idx {
+                return Err(TopoError::IdMismatch { index: idx, id: n.id });
+            }
             for &i in &n.inputs {
+                // covers self-loops and dangling ids too: any input >= id
+                // is either a forward edge or out of range
                 if i >= n.id {
-                    bail!("node {} ('{}') depends on later node {}", n.id, n.name, i);
+                    return Err(TopoError::ForwardDependency {
+                        node: n.id,
+                        name: n.name.clone(),
+                        input: i,
+                    });
                 }
             }
         }
@@ -170,6 +210,29 @@ mod tests {
         assert!(g.annotate("missing", Scheme::Unstructured, 2.0).is_err());
         let node = g.layer_nodes()[0];
         assert!(node.scheme.is_some());
+    }
+
+    #[test]
+    fn topo_check_is_typed() {
+        let mut g = Graph::from_model(&zoo::proxy_cnn());
+        // forward edge: first layer node made to consume the output node
+        let last = g.nodes.len() - 1;
+        g.nodes[1].inputs = vec![last];
+        assert_eq!(
+            g.topo_check(),
+            Err(TopoError::ForwardDependency {
+                node: 1,
+                name: g.nodes[1].name.clone(),
+                input: last,
+            })
+        );
+        let mut g = Graph::from_model(&zoo::proxy_cnn());
+        g.nodes[2].id = 7;
+        assert_eq!(g.topo_check(), Err(TopoError::IdMismatch { index: 2, id: 7 }));
+        // the error is a real std::error::Error with a stable message
+        let e: Box<dyn std::error::Error> =
+            Box::new(TopoError::IdMismatch { index: 2, id: 7 });
+        assert_eq!(e.to_string(), "node at position 2 carries id 7");
     }
 
     #[test]

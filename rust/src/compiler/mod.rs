@@ -14,7 +14,7 @@ pub mod ir;
 pub mod tuning;
 
 pub use fusion::{fuse, FusionPlan};
-pub use ir::{Graph, Node, Op};
+pub use ir::{Graph, Node, Op, TopoError};
 pub use tuning::{tune_layer, tune_model, GaConfig};
 
 use crate::models::LayerSpec;

@@ -29,6 +29,7 @@
 //! [`Session`]: serve::Session
 
 pub mod accuracy;
+pub mod analysis;
 pub mod bench;
 pub mod compiler;
 pub mod coordinator;

@@ -11,6 +11,18 @@
 //!   all                    every table and figure in order
 //!   latmodel --out F       build + save the device latency model
 //!   map --model M --dataset D --method rule|search
+//!   check [--model M --dataset D --method rule|search | --load F]
+//!         [--seed N] [--json-out F]
+//!                          static analyzer over the compiled artifact:
+//!                          shape/dataflow, arena liveness/aliasing,
+//!                          scheme legality + mask structure, and plan
+//!                          hygiene, each finding tagged with a stable
+//!                          rule id (see README "Static analysis").
+//!                          --load parses a saved recipe (bypassing the
+//!                          sealing gate so corrupt artifacts can be
+//!                          diagnosed); --json-out writes line-JSON
+//!                          diagnostics.  Exits nonzero on any
+//!                          error-severity finding.
 //!   infer --model M --dataset D [--threads N] [--batch N] [--tile N]
 //!         [--materialized] [--json-out F]
 //!                          native end-to-end inference through the graph
@@ -67,13 +79,15 @@ use prunemap::mapping::{self, MappingMethod};
 use prunemap::models::{zoo, Dataset, ModelSpec};
 #[cfg(pjrt)]
 use prunemap::runtime::Runtime;
-use prunemap::runtime::{Arena, GraphExecutor};
+use prunemap::analysis::{self, Diagnostic, Rule, Severity};
+use prunemap::runtime::{Arena, CompiledNet, GraphExecutor, KernelChoice};
 use prunemap::serve::{
     wire, InferRequest, ModelRegistry, PreparedModel, Priority, ServeError, Server, Session, Ticket,
 };
 use prunemap::simulator::{measured_vs_modeled_network, DeviceProfile, PerLayerCalibration};
 use prunemap::telemetry::{self, trace, TraceRing};
 use prunemap::util::cli::Args;
+use prunemap::util::json::Value;
 
 fn model_by_name(name: &str, ds: Dataset) -> Result<ModelSpec> {
     zoo::by_name(name, ds).ok_or_else(|| anyhow!("unknown model '{name}'"))
@@ -111,6 +125,66 @@ fn cmd_map(args: &Args) -> Result<()> {
         dense,
         e.macs / 1e9
     );
+    Ok(())
+}
+
+/// Statically verify an artifact: map a zoo model (or parse a saved
+/// recipe with `--load`, bypassing the sealing gate so corrupt artifacts
+/// can be diagnosed), compile it, run every analysis pass, and render the
+/// diagnostics.  Exits nonzero iff any Error-severity rule fired.
+fn cmd_check(args: &Args) -> Result<()> {
+    let (model, assigns, seed, choice, origin) = if let Some(path) = args.get("load") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read artifact from {path}"))?;
+        let (model, assigns, seed, choice, method) =
+            PreparedModel::recipe_from_json(&Value::parse(&text)?)?;
+        (model, assigns, seed, choice, format!("{path} (method {method})"))
+    } else {
+        let dev = device(args)?;
+        let ds = dataset_by_name(args.get_or("dataset", "cifar10"))?;
+        let model = model_by_name(args.get_or("model", "proxy"), ds)?;
+        let method = MappingMethod::from_args(args, 30, args.get_u64("search-seed", 0xC0FFEE)?)?;
+        let assigns = method.assign(&model, &dev);
+        let origin = format!("method {}", method.label());
+        (model, assigns, args.get_u64("seed", 7)?, KernelChoice::Auto, origin)
+    };
+    println!(
+        "check {} / {} ({} layers, {origin})",
+        model.name,
+        model.dataset.name(),
+        model.layers.len()
+    );
+
+    // pre-compile legality first: an illegal mapping must come out as
+    // diagnostics, not as a synthesis bail
+    let mut report = analysis::check_assignments(&model, &assigns);
+    if !report.has_errors() {
+        match CompiledNet::compile_with_weights(&model, &assigns, seed, choice) {
+            Ok((weights, net)) => {
+                report = analysis::check_model(&model, &assigns, &weights, &net);
+            }
+            Err(e) => report.diagnostics.push(Diagnostic {
+                rule: Rule::CompileFailed,
+                severity: Severity::Error,
+                site: model.name.clone(),
+                message: format!("{e:#}"),
+            }),
+        }
+    }
+
+    print!("{}", report.render());
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, report.to_jsonl())
+            .with_context(|| format!("write diagnostics to {path}"))?;
+        eprintln!("wrote {} diagnostic(s) to {path}", report.diagnostics.len());
+    }
+    if report.has_errors() {
+        return Err(anyhow!(
+            "{} error-severity diagnostic(s) for {}",
+            report.error_count(),
+            model.name
+        ));
+    }
     Ok(())
 }
 
@@ -747,6 +821,7 @@ fn run() -> Result<()> {
             println!("saved {} settings for {} to {out}", m.len(), m.device);
         }
         "map" => cmd_map(&args)?,
+        "check" => cmd_check(&args)?,
         "infer" => cmd_infer(&args)?,
         "profile" => cmd_profile(&args)?,
         "serve" => cmd_serve(&args)?,
@@ -761,7 +836,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|infer|profile|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--max-queue N] [--max-conns N] [--deadline-ms F] [--metrics ADDR] [--trace-out F]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|check|infer|profile|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--max-queue N] [--max-conns N] [--deadline-ms F] [--metrics ADDR] [--trace-out F]"
             );
         }
     }

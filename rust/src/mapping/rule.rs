@@ -33,27 +33,34 @@ impl Default for RuleConfig {
 }
 
 /// Select the block size for one layer per §5.2.2: smallest block whose
-/// normalized latency is within (1+β) of structured pruning's.
+/// normalized latency is within (1+β) of structured pruning's.  Only
+/// candidates whose block dims actually tile the layer's weight
+/// ([`Scheme::applicable`]) are considered; `None` when no candidate is
+/// legal (e.g. a 255-filter detection head), which callers map to
+/// unstructured pruning.
 pub fn select_block_size(
     layer: &LayerSpec,
     lat: &LatencyModel,
     cfg: &RuleConfig,
-) -> (usize, usize) {
+) -> Option<(usize, usize)> {
     let comp = cfg.reference_compression;
     let structured = lat
         .latency_per_gmac(layer, &Scheme::StructuredRow, comp)
         .unwrap_or(f64::MAX);
-    let mut fallback = *Scheme::block_size_candidates().last().unwrap();
+    let mut fallback = None;
     for &(a, b) in Scheme::block_size_candidates() {
         let scheme = block_scheme(layer, a, b);
+        if !scheme.applicable(layer) {
+            continue;
+        }
         if let Some(l) = lat.latency_per_gmac(layer, &scheme, comp) {
             if l <= structured * (1.0 + cfg.beta) {
-                return (a, b);
+                return Some((a, b));
             }
-            fallback = (a, b);
+            fallback = Some((a, b));
         }
     }
-    // nothing met the threshold: the largest candidate is closest
+    // nothing met the threshold: the largest legal candidate is closest
     fallback
 }
 
@@ -81,9 +88,13 @@ pub fn map_layer(
         let compression = auto_compression(layer, &Scheme::Pattern, model.dataset);
         return Assignment { scheme: Scheme::Pattern, compression };
     }
-    // 3./4. block-based / block-punched with β-selected block size
-    let (a, b) = select_block_size(layer, lat, cfg);
-    let scheme = block_scheme(layer, a, b);
+    // 3./4. block-based / block-punched with β-selected block size; a
+    // layer no candidate block tiles falls back to unstructured (finest
+    // granularity, always legal)
+    let scheme = match select_block_size(layer, lat, cfg) {
+        Some((a, b)) => block_scheme(layer, a, b),
+        None => Scheme::Unstructured,
+    };
     let compression = auto_compression(layer, &scheme, model.dataset);
     Assignment { scheme, compression }
 }
@@ -181,12 +192,32 @@ mod tests {
         let layer = LayerSpec::conv("c", 1, 256, 256, 14, 1);
         let strict = RuleConfig { beta: 0.02, reference_compression: 8.0 };
         let loose = RuleConfig { beta: 2.0, reference_compression: 8.0 };
-        let (a1, b1) = select_block_size(&layer, &lm, &strict);
-        let (a2, b2) = select_block_size(&layer, &lm, &loose);
+        let (a1, b1) = select_block_size(&layer, &lm, &strict).unwrap();
+        let (a2, b2) = select_block_size(&layer, &lm, &loose).unwrap();
         assert!(
             a1 * b1 >= a2 * b2,
             "strict beta must pick an equal-or-larger block: {a1}x{b1} vs {a2}x{b2}"
         );
+    }
+
+    #[test]
+    fn untileable_layers_fall_back_to_unstructured() {
+        // a 255-filter detection head: no candidate bf divides 255
+        let lm = lat();
+        let cfg = RuleConfig::default();
+        let head = LayerSpec::conv("head", 1, 256, 255, 13, 1);
+        assert_eq!(select_block_size(&head, &lm, &cfg), None);
+        let m = zoo::yolov4();
+        let assigns = map_rule_based(&m, &lm, &cfg);
+        let mut fell_back = 0;
+        for (l, a) in m.layers.iter().zip(&assigns) {
+            assert!(a.scheme.applicable(l), "{}: {:?} illegal", l.name, a.scheme);
+            if l.out_ch == 255 {
+                assert!(matches!(a.scheme, Scheme::Unstructured), "{}: {:?}", l.name, a.scheme);
+                fell_back += 1;
+            }
+        }
+        assert_eq!(fell_back, 3, "yolov4 has three detection heads");
     }
 
     #[test]

@@ -151,11 +151,25 @@ impl Policy {
 
     fn valid_regularities(layer: &LayerSpec) -> [bool; N_REG] {
         [
-            true,                 // block (punched for conv, block for fc)
-            layer.is_3x3_conv(),  // pattern
-            true,                 // unstructured
-            true,                 // structured
+            // block (punched for conv, block for fc): only when at least
+            // one candidate block size tiles the weight
+            valid_blocks(layer).iter().any(|&v| v),
+            layer.is_3x3_conv(), // pattern
+            true,                // unstructured
+            true,                // structured
         ]
+    }
+
+    /// The block-size mask shared by sampling and the gradient pass; all
+    /// true when no candidate is legal (the head is inert then — the
+    /// block regularity itself is masked out).
+    fn block_mask(&self, layer: &LayerSpec) -> Vec<bool> {
+        let vb = valid_blocks(layer);
+        if vb.iter().any(|&v| v) {
+            vb
+        } else {
+            vec![true; self.n_block]
+        }
     }
 
     /// Sample (or greedy-decode) an action for a layer.
@@ -164,7 +178,7 @@ impl Policy {
         let (_, lr, lb) = self.forward(&x);
         let vr = Self::valid_regularities(layer);
         let pr = softmax_masked(&lr, &vr);
-        let vb = vec![true; self.n_block];
+        let vb = self.block_mask(layer);
         let pb = softmax_masked(&lb, &vb);
         match rng {
             Some(rng) => (rng.categorical(&pr), rng.categorical(&pb)),
@@ -195,7 +209,7 @@ impl Policy {
         let (h, lr, lb) = self.forward(&x);
         let vr = Self::valid_regularities(layer);
         let pr = softmax_masked(&lr, &vr);
-        let pb = softmax_masked(&lb, &vec![true; self.n_block]);
+        let pb = softmax_masked(&lb, &self.block_mask(layer));
 
         // d log softmax = onehot - p   (masked-out entries have p = 0)
         let mut dh = vec![0f32; HIDDEN];
@@ -257,25 +271,41 @@ impl Policy {
     }
 }
 
+/// The block scheme candidate `idx` denotes for this layer's kind.
+fn block_candidate(layer: &LayerSpec, idx: usize) -> Scheme {
+    let (a, b) = Scheme::block_size_candidates()[idx];
+    if layer.kind == LayerKind::Fc {
+        Scheme::Block { bp: a, bq: b }
+    } else {
+        Scheme::BlockPunched { bf: a, bc: b }
+    }
+}
+
+/// Per-candidate legality of the block action for one layer
+/// ([`Scheme::applicable`] — block dims must tile the weight).
+fn valid_blocks(layer: &LayerSpec) -> Vec<bool> {
+    (0..Scheme::block_size_candidates().len())
+        .map(|i| block_candidate(layer, i).applicable(layer))
+        .collect()
+}
+
 /// Decode an action pair into an assignment for a layer.
 fn decode(layer: &LayerSpec, model: &ModelSpec, action: (usize, usize)) -> Assignment {
     // the rule of never pruning 3x3-DW is a hard constraint in both methods
     if layer.is_3x3_dw() {
         return Assignment::dense();
     }
-    let scheme = match action.0 {
-        0 => {
-            let (a, b) = Scheme::block_size_candidates()[action.1];
-            if layer.kind == LayerKind::Fc {
-                Scheme::Block { bp: a, bq: b }
-            } else {
-                Scheme::BlockPunched { bf: a, bc: b }
-            }
-        }
+    let mut scheme = match action.0 {
+        0 => block_candidate(layer, action.1),
         1 => Scheme::Pattern,
         2 => Scheme::Unstructured,
         _ => Scheme::StructuredRow,
     };
+    // the action masks keep sampled actions legal; decode stays total
+    // anyway so a hand-rolled action can't produce an illegal assignment
+    if !scheme.applicable(layer) {
+        scheme = Scheme::Unstructured;
+    }
     let compression = auto_compression(layer, &scheme, model.dataset);
     Assignment { scheme, compression }
 }
@@ -399,6 +429,25 @@ mod tests {
                 assert!(l.is_3x3_conv(), "{}: pattern on non-3x3", l.name);
             }
         }
+    }
+
+    #[test]
+    fn search_never_emits_an_illegal_block() {
+        let dev = DeviceProfile::s10();
+        // 255 filters: no candidate bf divides them, so the block
+        // regularity must be masked out for this layer
+        let layers = vec![
+            crate::models::LayerSpec::conv("head", 1, 256, 255, 13, 1),
+            crate::models::LayerSpec::fc("fc", 128, 10),
+        ];
+        let m = ModelSpec { name: "odd".into(), dataset: Dataset::Cifar10, layers };
+        let (assigns, _, _) = map_search_based(&m, &dev, &quick_cfg());
+        for (l, a) in m.layers.iter().zip(&assigns) {
+            assert!(a.scheme.applicable(l), "{}: {:?} illegal", l.name, a.scheme);
+        }
+        // a hand-rolled illegal action still decodes to a legal scheme
+        let a = decode(&m.layers[0], &m, (0, 0));
+        assert!(matches!(a.scheme, Scheme::Unstructured), "{:?}", a.scheme);
     }
 
     #[test]

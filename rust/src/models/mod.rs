@@ -173,6 +173,20 @@ impl Dataset {
         matches!(self, Dataset::ImageNet | Dataset::Coco)
     }
 
+    /// Number of classifier outputs a head trained on this dataset must
+    /// produce; `None` where the output is not a class vector (COCO
+    /// detection heads, synthetic proxies).  The static analyzer's
+    /// `output-classes` rule compares a compiled net's output length
+    /// against this.
+    pub fn num_classes(&self) -> Option<usize> {
+        match self {
+            Dataset::Cifar10 => Some(10),
+            Dataset::Cifar100 => Some(100),
+            Dataset::ImageNet => Some(1000),
+            Dataset::Coco | Dataset::Synthetic => None,
+        }
+    }
+
     /// Baseline top-1 accuracy of a well-trained reference model — the
     /// anchor for the analytic accuracy model.
     pub fn baseline_acc(&self) -> f32 {
@@ -307,6 +321,15 @@ mod tests {
         assert!(Dataset::ImageNet.is_hard());
         assert!(Dataset::Coco.is_hard());
         assert!(!Dataset::Cifar10.is_hard());
+    }
+
+    #[test]
+    fn class_counts() {
+        assert_eq!(Dataset::Cifar10.num_classes(), Some(10));
+        assert_eq!(Dataset::Cifar100.num_classes(), Some(100));
+        assert_eq!(Dataset::ImageNet.num_classes(), Some(1000));
+        assert_eq!(Dataset::Coco.num_classes(), None);
+        assert_eq!(Dataset::Synthetic.num_classes(), None);
     }
 
     #[test]

@@ -61,14 +61,33 @@ impl Scheme {
     }
 
     /// Whether the scheme can legally be applied to the given layer.
+    ///
+    /// Block schemes additionally require the block dims to tile the
+    /// weight evenly.  The divisibility test is *clamped*: a block dim
+    /// larger than the weight dim covers it as one block (the mask
+    /// generator clamps the same way), so `Block{64,128}` stays legal on
+    /// a 10-class head while `BlockPunched{4,16}` on a 255-filter YOLO
+    /// head — where 4 does not divide 255 — is rejected.
     pub fn applicable(&self, layer: &LayerSpec) -> bool {
         use crate::models::LayerKind::*;
+        // does clamped block dim `b` tile a weight dim of `dim` evenly?
+        let tiles = |dim: usize, b: usize| b >= 1 && dim % b.min(dim).max(1) == 0;
         match self {
             Scheme::None | Scheme::Unstructured => true,
             Scheme::StructuredRow | Scheme::StructuredColumn => true,
             Scheme::Pattern => layer.is_3x3_conv(),
-            Scheme::Block { .. } => layer.kind == Fc,
-            Scheme::BlockPunched { .. } => matches!(layer.kind, Conv | DepthwiseConv),
+            // FC weight layout is [in_ch, out_ch]: bp tiles rows, bq cols
+            Scheme::Block { bp, bq } => {
+                layer.kind == Fc && tiles(layer.in_ch, *bp) && tiles(layer.out_ch, *bq)
+            }
+            // CONV weight layout is [out_ch, in_ch/1, kh, kw]: bf tiles
+            // filters, bc tiles channels (depthwise has one channel, so
+            // any bc clamps to 1 and only the filter dim constrains)
+            Scheme::BlockPunched { bf, bc } => match layer.kind {
+                Conv => tiles(layer.out_ch, *bf) && tiles(layer.in_ch, *bc),
+                DepthwiseConv => tiles(layer.out_ch, *bf) && *bc >= 1,
+                Fc => false,
+            },
         }
     }
 
@@ -125,6 +144,34 @@ mod tests {
 
         assert!(Scheme::Unstructured.applicable(&fc));
         assert!(Scheme::None.applicable(&dw));
+    }
+
+    #[test]
+    fn block_divisibility_is_enforced() {
+        // FC weight is [in_ch, out_ch]: bp must tile rows, bq cols
+        let fc = LayerSpec::fc("f", 128, 10);
+        assert!(Scheme::Block { bp: 8, bq: 2 }.applicable(&fc));
+        assert!(!Scheme::Block { bp: 8, bq: 4 }.applicable(&fc), "4 !| 10");
+        assert!(!Scheme::Block { bp: 3, bq: 2 }.applicable(&fc), "3 !| 128");
+        // oversized blocks clamp to the whole dim and stay legal
+        assert!(Scheme::Block { bp: 256, bq: 64 }.applicable(&fc));
+        // degenerate zero block dims are never legal
+        assert!(!Scheme::Block { bp: 0, bq: 2 }.applicable(&fc));
+
+        // CONV weight is [out_ch, in_ch, kh, kw]: bf tiles filters, bc channels
+        let head = LayerSpec::conv("h", 1, 256, 255, 13, 1);
+        assert!(!Scheme::BlockPunched { bf: 4, bc: 16 }.applicable(&head), "4 !| 255");
+        assert!(Scheme::BlockPunched { bf: 5, bc: 16 }.applicable(&head));
+        let conv = LayerSpec::conv("c", 3, 3, 16, 32, 1);
+        // first-conv in_ch=3: an oversized bc clamps to the whole channel dim
+        assert!(Scheme::BlockPunched { bf: 4, bc: 16 }.applicable(&conv));
+        assert!(!Scheme::BlockPunched { bf: 3, bc: 1 }.applicable(&conv), "3 !| 16");
+        assert!(!Scheme::BlockPunched { bf: 4, bc: 2 }.applicable(&conv), "2 !| 3");
+
+        // depthwise weight channel dim is 1: only the filter dim constrains
+        let dw = LayerSpec::dwconv("d", 3, 24, 28, 1);
+        assert!(Scheme::BlockPunched { bf: 8, bc: 16 }.applicable(&dw));
+        assert!(!Scheme::BlockPunched { bf: 5, bc: 1 }.applicable(&dw), "5 !| 24");
     }
 
     #[test]

@@ -338,9 +338,14 @@ impl<'a> Lowerer<'a> {
         let buf = self.new_buf(self.input_shape);
         self.node_buf.insert(input.id, buf);
 
-        // fusion kernels are emitted in anchor (= topological) order
+        // fusion kernels are emitted in anchor (= topological) order; a
+        // corrupt plan referencing nodes the graph doesn't have is an
+        // error, not an index panic
         for kernel in &plan.kernels {
-            let anchor = &graph.nodes[kernel.anchor];
+            let anchor = graph
+                .nodes
+                .get(kernel.anchor)
+                .ok_or_else(|| anyhow!("fusion plan anchors unknown node {}", kernel.anchor))?;
             match &anchor.op {
                 Op::Layer { layer } => self.lower_layer(kernel.anchor, layer, &kernel.epilogue)?,
                 Op::BatchNorm | Op::Relu | Op::Add | Op::Pool => {
@@ -493,7 +498,10 @@ impl<'a> Lowerer<'a> {
             std::iter::once(node).chain(epilogue.iter().copied()).collect();
         let mut epi = Vec::with_capacity(epilogue.len());
         for &e in epilogue {
-            let en = &graph.nodes[e];
+            let en = graph
+                .nodes
+                .get(e)
+                .ok_or_else(|| anyhow!("fusion plan fuses unknown node {e} into '{}'", spec.name))?;
             match en.op {
                 Op::BatchNorm => {
                     let p = self
@@ -753,7 +761,8 @@ mod tests {
                 },
                 LayerKind::DepthwiseConv => Assignment::dense(),
                 LayerKind::Fc => {
-                    Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+                    // bq=2 tiles the 10-class heads ([in, out] layout)
+                    Assignment { scheme: Scheme::Block { bp: 8, bq: 2 }, compression: 2.0 }
                 }
             })
             .collect()

@@ -473,7 +473,7 @@ mod tests {
                 if l.is_3x3_conv() {
                     Assignment { scheme: Scheme::Pattern, compression: 2.25 }
                 } else {
-                    Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+                    Assignment { scheme: Scheme::Block { bp: 8, bq: 2 }, compression: 2.0 }
                 }
             })
             .collect();

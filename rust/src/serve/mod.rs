@@ -154,6 +154,11 @@ pub enum ServeError {
     Execution(String),
     /// A wire frame could not be decoded.
     Malformed(String),
+    /// The artifact failed static analysis
+    /// ([`crate::analysis::check_model`]) at sealing or recipe-load time:
+    /// it carries `errors` Error-severity diagnostics and was refused
+    /// before it could reach the registry or serve a request.
+    ArtifactRejected { model: String, errors: usize },
 }
 
 impl ServeError {
@@ -168,6 +173,7 @@ impl ServeError {
             ServeError::Closed => "closed",
             ServeError::Execution(_) => "execution",
             ServeError::Malformed(_) => "malformed",
+            ServeError::ArtifactRejected { .. } => "artifact_rejected",
         }
     }
 
@@ -188,6 +194,9 @@ impl ServeError {
             }
             "closed" => ServeError::Closed,
             "malformed" => ServeError::Malformed(message.to_string()),
+            "artifact_rejected" => {
+                ServeError::ArtifactRejected { model: message.to_string(), errors: 0 }
+            }
             _ => ServeError::Execution(message.to_string()),
         }
     }
@@ -232,6 +241,9 @@ impl fmt::Display for ServeError {
             ServeError::Closed => write!(f, "session shut down before the request was served"),
             ServeError::Execution(msg) => write!(f, "execution failed: {msg}"),
             ServeError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+            ServeError::ArtifactRejected { model, errors } => {
+                write!(f, "artifact '{model}' rejected by static analysis: {errors} error(s)")
+            }
         }
     }
 }
@@ -262,6 +274,7 @@ mod tests {
             ServeError::Closed,
             ServeError::Execution("boom".into()),
             ServeError::Malformed("not json".into()),
+            ServeError::ArtifactRejected { model: "m".into(), errors: 2 },
         ];
         for e in &cases {
             let back = ServeError::from_wire(e.kind(), &e.to_string());

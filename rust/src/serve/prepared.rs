@@ -58,6 +58,13 @@ impl PreparedModel {
     /// Seal explicit parts into an artifact: synthesize masked weights
     /// from `seed` and lower the fused plan once.  `method` is a
     /// provenance label carried for reports.
+    ///
+    /// Sealing is gated by the static analyzer
+    /// ([`crate::analysis::check_model`]): an artifact carrying any
+    /// Error-severity diagnostic is refused with a
+    /// [`ServeError::ArtifactRejected`](super::ServeError::ArtifactRejected)
+    /// (downcastable through the anyhow chain) whose context carries the
+    /// full diagnostic rendering.  Warnings never gate.
     pub fn from_parts(
         model: ModelSpec,
         assigns: Vec<Assignment>,
@@ -66,6 +73,18 @@ impl PreparedModel {
         method: &str,
     ) -> Result<PreparedModel> {
         let (weights, net) = CompiledNet::compile_with_weights(&model, &assigns, seed, choice)?;
+        let report = crate::analysis::check_model(&model, &assigns, &weights, &net);
+        if report.has_errors() {
+            let err = super::ServeError::ArtifactRejected {
+                model: model.name.clone(),
+                errors: report.error_count(),
+            };
+            return Err(anyhow::Error::new(err).context(format!(
+                "static analysis rejected '{}':\n{}",
+                model.name,
+                report.render()
+            )));
+        }
         Ok(PreparedModel {
             inner: Arc::new(Inner {
                 model,
@@ -132,6 +151,19 @@ impl PreparedModel {
         self.inner.net.output_len()
     }
 
+    /// Re-run the static analyzer over this sealed artifact.  Sealing
+    /// already refused Error-carrying artifacts, so this reports at most
+    /// warnings — it exists so `prunemap check` and operators can render
+    /// the full report for an artifact that passed.
+    pub fn check(&self) -> crate::analysis::Report {
+        crate::analysis::check_model(
+            &self.inner.model,
+            &self.inner.assigns,
+            &self.inner.weights,
+            &self.inner.net,
+        )
+    }
+
     /// Start building a serving [`Session`] over this artifact.
     pub fn session(&self) -> SessionBuilder {
         Session::builder(self.clone())
@@ -186,6 +218,16 @@ impl PreparedModel {
 
     /// [`PreparedModel::load`] from an already-parsed JSON value.
     pub fn from_json(v: &Value) -> Result<PreparedModel> {
+        let (model, assigns, seed, choice, method) = Self::recipe_from_json(v)?;
+        Self::from_parts(model, assigns, seed, choice, &method)
+    }
+
+    /// Parse a saved recipe into its parts *without* sealing (and so
+    /// without the static-analysis gate) — how `prunemap check --load`
+    /// analyzes an artifact that sealing would refuse.
+    pub fn recipe_from_json(
+        v: &Value,
+    ) -> Result<(ModelSpec, Vec<Assignment>, u64, KernelChoice, String)> {
         let format = v.get("format")?.as_str()?;
         if format != FORMAT {
             bail!("unsupported artifact format '{format}' (expected '{FORMAT}')");
@@ -205,7 +247,7 @@ impl PreparedModel {
             Some(m) => m.as_str()?.to_string(),
             None => "loaded".to_string(),
         };
-        Self::from_parts(model, assigns, seed, choice, &method)
+        Ok((model, assigns, seed, choice, method))
     }
 }
 
@@ -482,7 +524,7 @@ mod tests {
                 if l.is_3x3_conv() {
                     Assignment { scheme: Scheme::BlockPunched { bf: 4, bc: 4 }, compression: 2.0 }
                 } else {
-                    Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+                    Assignment { scheme: Scheme::Block { bp: 8, bq: 2 }, compression: 2.0 }
                 }
             })
             .collect()

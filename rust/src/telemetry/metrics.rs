@@ -229,7 +229,7 @@ fn parse_value(s: &str) -> Result<f64> {
 
 /// Stable wire error-kind tags, mirroring `ServeError::kind()`, plus a
 /// catch-all slot so an unknown tag never panics the counter path.
-pub const WIRE_ERROR_KINDS: [&str; 8] = [
+pub const WIRE_ERROR_KINDS: [&str; 9] = [
     "unknown_model",
     "bad_input",
     "deadline_expired",
@@ -237,6 +237,7 @@ pub const WIRE_ERROR_KINDS: [&str; 8] = [
     "closed",
     "execution",
     "malformed",
+    "artifact_rejected",
     "other",
 ];
 
@@ -267,7 +268,7 @@ pub struct WireCounters {
     /// Transient `accept` failures retried instead of tearing the
     /// listener down.
     pub accept_retries: AtomicU64,
-    error_kinds: [AtomicU64; 8],
+    error_kinds: [AtomicU64; 9],
 }
 
 impl WireCounters {
@@ -285,7 +286,7 @@ impl WireCounters {
     /// relaxed; exact cross-counter consistency is not needed for
     /// monotonic counters).
     pub fn snapshot(&self) -> WireSnapshot {
-        let mut error_kinds = [0u64; 8];
+        let mut error_kinds = [0u64; 9];
         for (slot, counter) in error_kinds.iter_mut().zip(&self.error_kinds) {
             *slot = counter.load(Ordering::Relaxed);
         }
@@ -319,7 +320,7 @@ pub struct WireSnapshot {
     pub conn_setup_failed: u64,
     pub accept_retries: u64,
     /// Indexed like [`WIRE_ERROR_KINDS`].
-    pub error_kinds: [u64; 8],
+    pub error_kinds: [u64; 9],
 }
 
 /// Answer scrapes on `listener` forever (or for `max_conns` accepts),

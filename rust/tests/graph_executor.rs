@@ -70,7 +70,10 @@ fn conv_matches_direct_reference_on_random_shapes() {
         let scheme = if rng.bernoulli(0.5) {
             Scheme::Unstructured
         } else {
-            Scheme::BlockPunched { bf: 2, bc: 2 }
+            // block dims must tile the random weight dims (Scheme::applicable)
+            let bf = if f % 2 == 0 { 2 } else { 1 };
+            let bc = if c % 2 == 0 { 2 } else { 1 };
+            Scheme::BlockPunched { bf, bc }
         };
         let seed = rng.next_u64();
         let (net, weights) = single_layer_net(&spec, scheme, 2.0, seed);
@@ -99,7 +102,8 @@ fn depthwise_matches_direct_reference() {
         let scheme = if rng.bernoulli(0.5) {
             Scheme::None
         } else {
-            Scheme::BlockPunched { bf: 2, bc: 1 }
+            // bf must tile the random channel count (Scheme::applicable)
+            Scheme::BlockPunched { bf: if c % 2 == 0 { 2 } else { 1 }, bc: 1 }
         };
         let seed = rng.next_u64();
         let (net, weights) = single_layer_net(&spec, scheme, 1.5, seed);
@@ -144,7 +148,7 @@ fn zoo_assigns(model: &ModelSpec) -> Vec<Assignment> {
             }
             LayerKind::DepthwiseConv => Assignment::dense(),
             LayerKind::Fc => {
-                Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+                Assignment { scheme: Scheme::Block { bp: 8, bq: 2 }, compression: 2.0 }
             }
         })
         .collect()

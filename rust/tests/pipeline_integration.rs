@@ -190,7 +190,7 @@ mod pjrt {
             .iter()
             .map(|l| Assignment {
                 scheme: if l.kind == prunemap::models::LayerKind::Fc {
-                    Scheme::Block { bp: 8, bq: 8 }
+                    Scheme::Block { bp: 8, bq: 2 }
                 } else {
                     Scheme::BlockPunched { bf: 4, bc: 4 }
                 },

@@ -30,7 +30,7 @@ fn prepared_proxy(seed: u64) -> PreparedModel {
             if l.is_3x3_conv() {
                 Assignment { scheme: Scheme::BlockPunched { bf: 4, bc: 4 }, compression: 2.5 }
             } else {
-                Assignment { scheme: Scheme::Block { bp: 8, bq: 8 }, compression: 2.0 }
+                Assignment { scheme: Scheme::Block { bp: 8, bq: 2 }, compression: 2.0 }
             }
         })
         .collect();

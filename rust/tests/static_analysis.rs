@@ -1,0 +1,369 @@
+//! The static analyzer end to end: clean artifacts pass, and each rule
+//! family has a negative path that corrupts exactly one invariant and
+//! asserts the expected rule id fires at Error severity.  Also proves the
+//! sealing gate: `PreparedModel::from_parts` and
+//! `ModelRegistry::load_recipe` refuse Error-carrying artifacts with a
+//! typed `ServeError::ArtifactRejected`.
+
+use prunemap::accuracy::Assignment;
+use prunemap::analysis::{self, Rule, Severity};
+use prunemap::compiler::fusion::FusedKernel;
+use prunemap::compiler::{fuse, Graph};
+use prunemap::mapping::MappingMethod;
+use prunemap::models::{zoo, Dataset, LayerSpec, ModelSpec};
+use prunemap::pruning::Scheme;
+use prunemap::runtime::graph::StepOp;
+use prunemap::runtime::{CompiledNet, KernelChoice, NetWeights};
+use prunemap::serve::{ModelRegistry, PreparedModel, ServeError};
+use prunemap::simulator::DeviceProfile;
+
+fn dense_assigns(model: &ModelSpec) -> Vec<Assignment> {
+    model
+        .layers
+        .iter()
+        .map(|_| Assignment { scheme: Scheme::None, compression: 1.0 })
+        .collect()
+}
+
+fn compiled(model: &ModelSpec, assigns: &[Assignment]) -> (NetWeights, CompiledNet) {
+    CompiledNet::compile_with_weights(model, assigns, 7, KernelChoice::Auto).unwrap()
+}
+
+/// First program step that is a GEMM.
+fn gemm_step(net: &CompiledNet) -> usize {
+    net.steps
+        .iter()
+        .position(|s| matches!(s.op, StepOp::Gemm { .. }))
+        .expect("no GEMM step")
+}
+
+fn assert_fires(report: &analysis::Report, rule: Rule) {
+    let hits = report.by_rule(rule);
+    assert!(!hits.is_empty(), "expected {} to fire:\n{}", rule.id(), report.render());
+    assert!(
+        hits.iter().all(|d| d.severity == Severity::Error),
+        "{} must be Error severity:\n{}",
+        rule.id(),
+        report.render()
+    );
+    assert!(report.has_errors());
+}
+
+// ---- clean artifacts --------------------------------------------------
+
+#[test]
+fn clean_mapped_zoo_models_pass() {
+    let dev = DeviceProfile::by_name("s10").unwrap();
+    let rule = MappingMethod::parse("rule", 0, 0).unwrap();
+    let models = [
+        zoo::proxy_cnn(),
+        zoo::mobilenet_v1_scaled(Dataset::Cifar10, 0.25),
+        zoo::mobilenet_v2_scaled(Dataset::Cifar10, 0.25),
+        zoo::resnet18(Dataset::Cifar10),
+    ];
+    for model in &models {
+        let assigns = rule.assign(model, &dev);
+        let (weights, net) = compiled(model, &assigns);
+        let report = analysis::check_model(model, &assigns, &weights, &net);
+        assert!(
+            !report.has_errors(),
+            "rule-mapped {} must pass clean:\n{}",
+            model.name,
+            report.render()
+        );
+    }
+}
+
+#[test]
+fn clean_searched_proxy_passes() {
+    let dev = DeviceProfile::by_name("s10").unwrap();
+    let search = MappingMethod::parse("search", 4, 0xC0FFEE).unwrap();
+    let model = zoo::proxy_cnn();
+    let assigns = search.assign(&model, &dev);
+    let (weights, net) = compiled(&model, &assigns);
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert!(!report.has_errors(), "{}", report.render());
+}
+
+#[test]
+fn sealed_artifact_check_reports_no_errors() {
+    let p = PreparedModel::builder()
+        .model("proxy")
+        .assignments(
+            zoo::proxy_cnn()
+                .layers
+                .iter()
+                .map(|l| {
+                    if l.is_3x3_conv() {
+                        Assignment { scheme: Scheme::BlockPunched { bf: 4, bc: 4 }, compression: 2.0 }
+                    } else {
+                        Assignment { scheme: Scheme::Block { bp: 8, bq: 2 }, compression: 2.0 }
+                    }
+                })
+                .collect(),
+        )
+        .build()
+        .unwrap();
+    let report = p.check();
+    assert!(!report.has_errors(), "{}", report.render());
+}
+
+// ---- shape family -----------------------------------------------------
+
+#[test]
+fn corrupted_step_shape_fires_shape_mismatch() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let (weights, mut net) = compiled(&model, &assigns);
+    let g = gemm_step(&net);
+    net.steps[g].out_shape.0 += 1;
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::ShapeMismatch);
+}
+
+#[test]
+fn rewired_gemm_layer_fires_gemm_dims() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let (weights, mut net) = compiled(&model, &assigns);
+    let g = gemm_step(&net);
+    // point the first GEMM at a different layer's sparse weights: its
+    // dims no longer match, and two layers end up mis-driven
+    if let StepOp::Gemm { layer, .. } = &mut net.steps[g].op {
+        *layer = (*layer + 1) % net.layers.len();
+    }
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::GemmDims);
+}
+
+#[test]
+fn wrong_head_width_fires_output_classes() {
+    // a 7-way head on a 10-class dataset
+    let model = ModelSpec {
+        name: "BadHead".into(),
+        dataset: Dataset::Cifar10,
+        layers: vec![LayerSpec::fc("head", 64, 7)],
+    };
+    let assigns = dense_assigns(&model);
+    let (weights, net) = compiled(&model, &assigns);
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::OutputClasses);
+}
+
+// ---- liveness family --------------------------------------------------
+
+#[test]
+fn out_of_range_slot_fires_slot_range() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let (weights, mut net) = compiled(&model, &assigns);
+    let g = gemm_step(&net);
+    net.steps[g].src = 999;
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::SlotRange);
+}
+
+#[test]
+fn aliased_gemm_dst_fires_gemm_aliasing() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let (weights, mut net) = compiled(&model, &assigns);
+    let g = gemm_step(&net);
+    net.steps[g].dst = net.steps[g].src;
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::GemmAliasing);
+}
+
+#[test]
+fn unwritten_slot_read_fires_read_before_write() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let (weights, mut net) = compiled(&model, &assigns);
+    // a fresh, in-range slot nothing ever writes
+    net.num_slots += 1;
+    let g = gemm_step(&net);
+    net.steps[g].src = net.num_slots - 1;
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::ReadBeforeWrite);
+}
+
+#[test]
+fn unwritten_output_slot_fires_output_slot() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let (weights, mut net) = compiled(&model, &assigns);
+    net.num_slots += 1;
+    net.output_slot = net.num_slots - 1;
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::OutputSlot);
+}
+
+// ---- scheme family ----------------------------------------------------
+
+#[test]
+fn inapplicable_scheme_fires_scheme_legality() {
+    let model = zoo::proxy_cnn();
+    // pattern pruning cannot live on FC layers
+    let assigns: Vec<Assignment> = model
+        .layers
+        .iter()
+        .map(|_| Assignment { scheme: Scheme::Pattern, compression: 2.0 })
+        .collect();
+    let report = analysis::check_assignments(&model, &assigns);
+    assert_fires(&report, Rule::SchemeLegality);
+
+    // assignment count mismatch is the same family
+    let short = analysis::check_assignments(&model, &[]);
+    assert_fires(&short, Rule::SchemeLegality);
+}
+
+#[test]
+fn corrupted_mask_fires_mask_structure() {
+    let model = zoo::proxy_cnn();
+    let mut assigns = dense_assigns(&model);
+    assigns[0] = Assignment { scheme: Scheme::StructuredRow, compression: 2.0 };
+    let (mut weights, net) = compiled(&model, &assigns);
+
+    // un-prune one element of a pruned filter: the row is now partial
+    let w = &mut weights.layers[0].weight;
+    let zero_at = w.data().iter().position(|v| *v == 0.0).expect("mask has zeros");
+    w.data_mut()[zero_at] = 1.0;
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::MaskStructure);
+
+    // an entirely pruned layer is also structural corruption
+    for v in weights.layers[0].weight.data_mut() {
+        *v = 0.0;
+    }
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::MaskStructure);
+}
+
+#[test]
+fn compression_drift_warns_but_never_gates() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let (mut weights, net) = compiled(&model, &assigns);
+    // a dense layer claiming 64x compression is implausible provenance
+    weights.layers[0].compression = 64.0;
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    let hits = report.by_rule(Rule::CompressionDrift);
+    assert!(!hits.is_empty(), "{}", report.render());
+    assert!(hits.iter().all(|d| d.severity == Severity::Warning));
+    assert!(!report.has_errors(), "drift must not gate:\n{}", report.render());
+}
+
+// ---- plan family ------------------------------------------------------
+
+#[test]
+fn corrupted_plan_fires_plan_rules() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let graph = Graph::from_model(&model);
+    let plan = fuse(&graph);
+    let (weights, net) = compiled(&model, &assigns);
+
+    // anchor the Input node
+    let mut bad = plan.clone();
+    bad.kernels.push(FusedKernel { anchor: 0, epilogue: vec![] });
+    let report = analysis::check(&model, &assigns, &graph, &bad, &weights, &net);
+    assert_fires(&report, Rule::PlanAnchor);
+
+    // fuse a non-elementwise (layer) node into another kernel's epilogue
+    let mut bad = plan.clone();
+    let victim = bad.kernels[0].anchor;
+    bad.kernels.last_mut().unwrap().epilogue.push(victim);
+    let report = analysis::check(&model, &assigns, &graph, &bad, &weights, &net);
+    assert_fires(&report, Rule::PlanEpilogue);
+}
+
+#[test]
+fn disordered_graph_fires_plan_topo() {
+    let model = zoo::proxy_cnn();
+    let assigns = dense_assigns(&model);
+    let mut graph = Graph::from_model(&model);
+    let plan = fuse(&graph);
+    let (weights, net) = compiled(&model, &assigns);
+    graph.nodes.swap(0, 1);
+    let report = analysis::check(&model, &assigns, &graph, &plan, &weights, &net);
+    assert_fires(&report, Rule::PlanTopo);
+}
+
+// ---- gating -----------------------------------------------------------
+
+fn bad_head_recipe_json() -> String {
+    r#"{
+  "format": "prunemap.prepared.v1",
+  "model": {
+    "name": "BadHead",
+    "dataset": "cifar10",
+    "layers": [
+      {"name": "head", "kind": "fc", "kh": 1, "kw": 1,
+       "in_ch": 64, "out_ch": 7, "in_hw": 1, "stride": 1}
+    ]
+  },
+  "assignments": [{"scheme": {"kind": "none"}, "compression": 1.0}],
+  "seed": "7",
+  "kernel": "auto",
+  "method": "explicit"
+}"#
+    .to_string()
+}
+
+#[test]
+fn sealing_refuses_error_carrying_artifacts() {
+    let model = ModelSpec {
+        name: "BadHead".into(),
+        dataset: Dataset::Cifar10,
+        layers: vec![LayerSpec::fc("head", 64, 7)],
+    };
+    let assigns = dense_assigns(&model);
+    let err = PreparedModel::from_parts(model, assigns, 7, KernelChoice::Auto, "explicit")
+        .expect_err("sealing must refuse a wrong-width head");
+    let serve = err
+        .downcast_ref::<ServeError>()
+        .expect("typed ServeError through the anyhow chain");
+    assert_eq!(serve.kind(), "artifact_rejected");
+    match serve {
+        ServeError::ArtifactRejected { model, errors } => {
+            assert_eq!(model, "BadHead");
+            assert!(*errors >= 1);
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+    // the context carries the rendered diagnostics with the rule id
+    let rendered = format!("{err:#}");
+    assert!(rendered.contains("output-classes"), "{rendered}");
+}
+
+#[test]
+fn recipe_load_refuses_error_carrying_artifacts() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("prunemap_bad_head_{}.json", std::process::id()));
+    std::fs::write(&path, bad_head_recipe_json()).unwrap();
+
+    let err = PreparedModel::load(&path).expect_err("load must refuse");
+    assert_eq!(
+        err.downcast_ref::<ServeError>().map(ServeError::kind),
+        Some("artifact_rejected")
+    );
+
+    let registry = ModelRegistry::new();
+    let err = registry.load_recipe("bad", &path).expect_err("registry must refuse");
+    assert_eq!(
+        err.downcast_ref::<ServeError>().map(ServeError::kind),
+        Some("artifact_rejected")
+    );
+    assert!(registry.get("bad").is_none(), "refused artifact must not be registered");
+
+    let _ = std::fs::remove_file(&path);
+
+    // the same recipe parses fine without the gate — that is how
+    // `prunemap check --load` diagnoses it
+    let v = prunemap::util::json::Value::parse(&bad_head_recipe_json()).unwrap();
+    let (model, assigns, seed, choice, _) = PreparedModel::recipe_from_json(&v).unwrap();
+    let (weights, net) =
+        CompiledNet::compile_with_weights(&model, &assigns, seed, choice).unwrap();
+    let report = analysis::check_model(&model, &assigns, &weights, &net);
+    assert_fires(&report, Rule::OutputClasses);
+}
