@@ -1,0 +1,177 @@
+//! Calibration-record consumption: the read side of the profile loop.
+//!
+//! `prunemap profile --json-out` serializes a
+//! [`PerLayerCalibration`](crate::simulator::PerLayerCalibration) record
+//! (`"format":"prunemap.calibration.v1"`).  This module parses that
+//! record back, turns each layer's measured/modeled ratio into a
+//! re-pricing scale for the cost model, and flags layers whose ratio
+//! diverges from the rest of the record.
+//!
+//! Absolute ratios far from 1.0 are *expected* — the model prices a
+//! mobile GPU while the trace measures a host CPU — so divergence is
+//! judged relative to the record's own median ratio: a layer 3x above
+//! (or below) the median is one the analytic model misprices relative
+//! to its siblings, exactly where a measured-speedup claim should not
+//! be trusted without a second look.
+
+use crate::util::json::Value;
+
+use super::{LintConfig, Report, Rule};
+
+/// One parsed layer of a calibration record.
+#[derive(Debug, Clone)]
+pub struct CalibrationLayer {
+    pub name: String,
+    pub modeled_ms: f64,
+    pub measured_ms: f64,
+    /// measured / modeled.
+    pub ratio: f64,
+}
+
+/// A parsed `prunemap.calibration.v1` record: the file handed to
+/// `prunemap lint --calibration`.
+#[derive(Debug, Clone)]
+pub struct CalibrationRecord {
+    pub model: String,
+    pub layers: Vec<CalibrationLayer>,
+}
+
+impl CalibrationRecord {
+    /// Parse a calibration JSON document (the exact shape
+    /// [`PerLayerCalibration::to_json`](crate::simulator::PerLayerCalibration::to_json)
+    /// writes).  Rejects unknown format tags and empty layer lists.
+    pub fn from_json(v: &Value) -> crate::Result<CalibrationRecord> {
+        let format = v.get("format")?.as_str()?;
+        anyhow::ensure!(
+            format == "prunemap.calibration.v1",
+            "unsupported calibration format '{format}'"
+        );
+        let model = v.get("model")?.as_str()?.to_string();
+        let mut layers = Vec::new();
+        for l in v.get("layers")?.as_arr()? {
+            let modeled_ms = l.get("modeled_ms")?.as_f64()?;
+            let measured_ms = l.get("measured_ms")?.as_f64()?;
+            let ratio = match l.opt("ratio") {
+                Some(r) => r.as_f64()?,
+                None => measured_ms / modeled_ms.max(1e-12),
+            };
+            layers.push(CalibrationLayer {
+                name: l.get("name")?.as_str()?.to_string(),
+                modeled_ms,
+                measured_ms,
+                ratio,
+            });
+        }
+        anyhow::ensure!(!layers.is_empty(), "calibration record has no layers");
+        Ok(CalibrationRecord { model, layers })
+    }
+
+    /// Median measured/modeled ratio across the record — the systematic
+    /// model↔machine offset every layer shares.
+    pub fn median_ratio(&self) -> f64 {
+        let mut ratios: Vec<f64> = self.layers.iter().map(|l| l.ratio).collect();
+        ratios.sort_by(f64::total_cmp);
+        ratios[ratios.len() / 2]
+    }
+
+    /// The re-pricing scale for one layer: its ratio normalized by the
+    /// record's median, so the shared mobile-GPU-vs-host offset cancels
+    /// and only per-layer mispricing remains.  `1.0` for layers the
+    /// record did not measure.
+    pub fn scale_for(&self, layer: &str) -> f64 {
+        match self.layers.iter().find(|l| l.name == layer) {
+            Some(l) => l.ratio / self.median_ratio().max(1e-12),
+            None => 1.0,
+        }
+    }
+}
+
+/// Flag every layer whose normalized ratio falls outside
+/// `[1/band, band]` ([`LintConfig::divergence_band`]).
+pub(crate) fn check_divergence(record: &CalibrationRecord, cfg: &LintConfig, report: &mut Report) {
+    let median = record.median_ratio().max(1e-12);
+    let band = cfg.divergence_band.max(1.0);
+    for l in &record.layers {
+        let rel = l.ratio / median;
+        if rel > band || rel < 1.0 / band {
+            let direction = if rel > 1.0 { "slower" } else { "faster" };
+            report.advise(
+                Rule::CalibrationDivergence,
+                l.name.clone(),
+                format!(
+                    "measured/modeled ratio {:.2} is {rel:.2}x the record median {median:.2} \
+                     ({:.3}ms measured vs {:.3}ms modeled): this layer runs {direction} than \
+                     the model believes, outside the {band:.1}x band",
+                    l.ratio, l.measured_ms, l.modeled_ms
+                ),
+                Some(Value::obj(vec![
+                    ("kind", Value::str("recalibrate")),
+                    ("ratio", Value::num(l.ratio)),
+                    ("median_ratio", Value::num(median)),
+                    ("relative", Value::num(rel)),
+                    ("band", Value::num(band)),
+                ])),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(ratios: &[f64]) -> CalibrationRecord {
+        CalibrationRecord {
+            model: "proxy".into(),
+            layers: ratios
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| CalibrationLayer {
+                    name: format!("l{i}"),
+                    modeled_ms: 1.0,
+                    measured_ms: r,
+                    ratio: r,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_profile_output() {
+        let json = r#"{"format":"prunemap.calibration.v1","model":"proxy","threads":2,
+            "batch":8,"reps":3,"layers":[
+            {"name":"conv1","modeled_ms":0.5,"measured_ms":2.0,"ratio":4.0},
+            {"name":"conv2","modeled_ms":0.25,"measured_ms":1.0}]}"#;
+        let rec = CalibrationRecord::from_json(&Value::parse(json).unwrap()).unwrap();
+        assert_eq!(rec.model, "proxy");
+        assert_eq!(rec.layers.len(), 2);
+        assert!((rec.layers[1].ratio - 4.0).abs() < 1e-9, "ratio derived when absent");
+    }
+
+    #[test]
+    fn bad_format_tag_rejected() {
+        let json = r#"{"format":"prunemap.calibration.v2","model":"m","layers":[]}"#;
+        assert!(CalibrationRecord::from_json(&Value::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn scale_normalizes_out_the_median() {
+        let rec = record(&[4.0, 4.0, 4.0, 12.0]);
+        // the shared 4x offset cancels; only the outlier re-prices
+        assert!((rec.scale_for("l0") - 1.0).abs() < 1e-9);
+        assert!((rec.scale_for("l3") - 3.0).abs() < 1e-9);
+        assert!((rec.scale_for("missing") - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn divergence_flags_only_outliers() {
+        let rec = record(&[4.0, 4.0, 4.0, 40.0]);
+        let mut report = Report::default();
+        check_divergence(&rec, &LintConfig::default(), &mut report);
+        let fired = report.by_rule(Rule::CalibrationDivergence);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].site, "l3");
+        let s = fired[0].suggestion.as_ref().unwrap();
+        assert!((s.get("relative").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
+    }
+}

@@ -24,17 +24,36 @@
 //!   anchors that exist and are compute nodes, no node fused twice,
 //!   weights lining up one-to-one with the graph's layer nodes.
 //!
+//! A second, advisory analyzer family (`prunemap lint`) prices the same
+//! artifact with [`crate::simulator::cost`] and reports *performance*
+//! smells instead of correctness violations:
+//!
+//! * **perf** — lane-misaligned block sizes, scheme↔kernel mismatches
+//!   (the cost model prefers a different backend, with the predicted
+//!   speedup attached as a structured suggestion), stride-split load
+//!   imbalance, missed fusion opportunities, and dominant-layer latency
+//!   concentration;
+//! * **calib** — measured-vs-modeled divergence against a
+//!   [`PerLayerCalibration`](crate::simulator::PerLayerCalibration)
+//!   record, whose ratios also re-price every other lint rule.
+//!
 //! Entry points: [`check_assignments`] (pre-compile legality),
 //! [`check_model`] (the full post-compile pass
-//! [`PreparedModel`](crate::serve::PreparedModel) sealing gates on), and
-//! [`check`] (explicit graph + plan, for callers that built their own).
+//! [`PreparedModel`](crate::serve::PreparedModel) sealing gates on),
+//! [`check`] (explicit graph + plan, for callers that built their own),
+//! and the advisory siblings [`lint_model`] / [`lint`].
 //! Reports render human-readably ([`Report::render`]) and as line-JSON
 //! ([`Report::to_jsonl`]) for CI.
 
+pub mod calib;
 mod liveness;
+mod perf;
 mod plan;
 mod scheme;
 mod shape;
+
+pub use calib::CalibrationRecord;
+pub use perf::LintConfig;
 
 use std::fmt;
 
@@ -47,17 +66,22 @@ use crate::util::json::Value;
 
 /// How bad a finding is.  `Error` findings gate sealing and serving
 /// (`prunemap check` exits nonzero, [`crate::serve::PreparedModel`]
-/// refuses to seal); `Warning` findings are reported but never gate.
+/// refuses to seal); `Warning` findings are reported but only gate under
+/// `--deny-warnings`; `Advice` findings (the `prunemap lint` tier) never
+/// gate — they are performance suggestions, not contract violations.
+/// Variant order is the severity order: `Advice < Warning < Error`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Severity {
+    Advice,
     Warning,
     Error,
 }
 
 impl Severity {
-    /// Stable lowercase name (`"warning"` | `"error"`).
+    /// Stable lowercase name (`"advice"` | `"warning"` | `"error"`).
     pub fn name(self) -> &'static str {
         match self {
+            Severity::Advice => "advice",
             Severity::Warning => "warning",
             Severity::Error => "error",
         }
@@ -122,6 +146,25 @@ pub enum Rule {
     PlanWeights,
     /// Lowering itself failed; the artifact cannot be compiled at all.
     CompileFailed,
+    // -- performance lint (advisory) -----------------------------------------
+    /// A block scheme's dims are not multiples of [`crate::sparse::LANE`],
+    /// forcing padded SIMD lanes.
+    LaneMisalignedBlock,
+    /// The cost model prefers a different scheme/kernel backend than the
+    /// one assigned; the suggestion carries the predicted speedup.
+    SchemeKernelMismatch,
+    /// `reorder::load_balance` predicts stride-split skew above the
+    /// threshold for the layer's row-occupancy distribution.
+    LoadImbalance,
+    /// A GEMM is followed by a fusion-eligible BN/ReLU/Add the plan left
+    /// unfused.
+    MissedFusion,
+    /// One layer is predicted to carry more than the threshold share of
+    /// network latency.
+    DominantLayer,
+    /// A layer's measured/modeled ratio diverges from the rest of its
+    /// calibration record beyond the accepted band.
+    CalibrationDivergence,
 }
 
 impl Rule {
@@ -145,11 +188,17 @@ impl Rule {
             Rule::PlanEpilogue => "plan-epilogue",
             Rule::PlanWeights => "plan-weights",
             Rule::CompileFailed => "compile-failed",
+            Rule::LaneMisalignedBlock => "lane-misaligned-block",
+            Rule::SchemeKernelMismatch => "scheme-kernel-mismatch",
+            Rule::LoadImbalance => "load-imbalance",
+            Rule::MissedFusion => "missed-fusion",
+            Rule::DominantLayer => "dominant-layer",
+            Rule::CalibrationDivergence => "calibration-divergence",
         }
     }
 
-    /// Which analysis pass owns the rule
-    /// (`"shape"` | `"liveness"` | `"scheme"` | `"plan"`).
+    /// Which analysis pass owns the rule (`"shape"` | `"liveness"` |
+    /// `"scheme"` | `"plan"` | `"perf"` | `"calib"`).
     pub fn family(self) -> &'static str {
         match self {
             Rule::ShapeMismatch | Rule::GemmDims | Rule::OutputClasses => "shape",
@@ -165,6 +214,12 @@ impl Rule {
             | Rule::PlanEpilogue
             | Rule::PlanWeights
             | Rule::CompileFailed => "plan",
+            Rule::LaneMisalignedBlock
+            | Rule::SchemeKernelMismatch
+            | Rule::LoadImbalance
+            | Rule::MissedFusion
+            | Rule::DominantLayer => "perf",
+            Rule::CalibrationDivergence => "calib",
         }
     }
 
@@ -188,6 +243,12 @@ impl Rule {
             Rule::PlanEpilogue,
             Rule::PlanWeights,
             Rule::CompileFailed,
+            Rule::LaneMisalignedBlock,
+            Rule::SchemeKernelMismatch,
+            Rule::LoadImbalance,
+            Rule::MissedFusion,
+            Rule::DominantLayer,
+            Rule::CalibrationDivergence,
         ]
     }
 }
@@ -207,6 +268,10 @@ pub struct Diagnostic {
     /// Where it fired: a step/layer/node name or a slot id.
     pub site: String,
     pub message: String,
+    /// Machine-readable remediation (lint rules): a JSON object such as
+    /// `{"kind":"remap-scheme","suggested":{...},"predicted_speedup":1.8}`
+    /// that tools can act on without parsing `message`.
+    pub suggestion: Option<Value>,
 }
 
 impl fmt::Display for Diagnostic {
@@ -236,6 +301,7 @@ impl Report {
             severity: Severity::Error,
             site: site.into(),
             message: message.into(),
+            suggestion: None,
         });
     }
 
@@ -245,6 +311,25 @@ impl Report {
             severity: Severity::Warning,
             site: site.into(),
             message: message.into(),
+            suggestion: None,
+        });
+    }
+
+    /// Push an advisory (lint-tier) diagnostic, optionally carrying a
+    /// structured suggestion.
+    pub(crate) fn advise(
+        &mut self,
+        rule: Rule,
+        site: impl Into<String>,
+        message: impl Into<String>,
+        suggestion: Option<Value>,
+    ) {
+        self.diagnostics.push(Diagnostic {
+            rule,
+            severity: Severity::Advice,
+            site: site.into(),
+            message: message.into(),
+            suggestion,
         });
     }
 
@@ -261,7 +346,30 @@ impl Report {
     }
 
     pub fn warning_count(&self) -> usize {
-        self.diagnostics.len() - self.error_count()
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Warning)
+            .count()
+    }
+
+    pub fn advice_count(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Advice)
+            .count()
+    }
+
+    /// Per-severity counts as a JSON object (`{"errors","warnings",
+    /// "advice"}`), the summary object `--json-out` files end with.
+    pub fn summary_json(&self) -> Value {
+        Value::obj(vec![(
+            "summary",
+            Value::obj(vec![
+                ("errors", Value::num(self.error_count() as f64)),
+                ("warnings", Value::num(self.warning_count() as f64)),
+                ("advice", Value::num(self.advice_count() as f64)),
+            ]),
+        )])
     }
 
     /// Diagnostics that fired a specific rule.
@@ -278,27 +386,31 @@ impl Report {
             out.push('\n');
         }
         out.push_str(&format!(
-            "check: {} error(s), {} warning(s)\n",
+            "check: {} error(s), {} warning(s), {} advice\n",
             self.error_count(),
-            self.warning_count()
+            self.warning_count(),
+            self.advice_count()
         ));
         out
     }
 
     /// Line-JSON rendering: one compact object per diagnostic
-    /// (`rule`, `family`, `severity`, `site`, `message`), for CI and
-    /// machine consumers.
+    /// (`rule`, `family`, `severity`, `site`, `message`, and `suggestion`
+    /// when the diagnostic carries one), for CI and machine consumers.
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
         for d in &self.diagnostics {
-            let v = Value::obj(vec![
+            let mut fields = vec![
                 ("rule", Value::str(d.rule.id())),
                 ("family", Value::str(d.rule.family())),
                 ("severity", Value::str(d.severity.name())),
                 ("site", Value::str(d.site.clone())),
                 ("message", Value::str(d.message.clone())),
-            ]);
-            out.push_str(&v.compact());
+            ];
+            if let Some(s) = &d.suggestion {
+                fields.push(("suggestion", s.clone()));
+            }
+            out.push_str(&Value::obj(fields).compact());
             out.push('\n');
         }
         out
@@ -351,6 +463,47 @@ pub fn check_model(
     check(model, assigns, &graph, &plan, weights, net)
 }
 
+/// The advisory performance lint over an explicit graph + fusion plan.
+/// Every diagnostic is [`Severity::Advice`]: the artifact is *correct*,
+/// but the cost model (re-priced by `calibration` when given) thinks it
+/// could be faster.  Use this when you built the plan yourself;
+/// [`lint_model`] is the convenience over the canonical pipeline.
+#[allow(clippy::too_many_arguments)]
+pub fn lint(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    graph: &Graph,
+    plan: &FusionPlan,
+    weights: &NetWeights,
+    dev: &crate::simulator::DeviceProfile,
+    cfg: &LintConfig,
+    calibration: Option<&CalibrationRecord>,
+) -> Report {
+    let mut report = Report::default();
+    if let Some(record) = calibration {
+        calib::check_divergence(record, cfg, &mut report);
+    }
+    perf::lint_perf(model, assigns, graph, plan, weights, dev, cfg, calibration, &mut report);
+    report
+}
+
+/// The advisory performance lint over the canonical pipeline: rebuilds
+/// the inference graph and fusion plan from the spec and runs every lint
+/// pass.  This is what `prunemap lint` and
+/// [`PreparedModel::lint`](crate::serve::PreparedModel::lint) run.
+pub fn lint_model(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    weights: &NetWeights,
+    dev: &crate::simulator::DeviceProfile,
+    cfg: &LintConfig,
+    calibration: Option<&CalibrationRecord>,
+) -> Report {
+    let graph = Graph::from_model(model);
+    let plan = fuse(&graph);
+    lint(model, assigns, &graph, &plan, weights, dev, cfg, calibration)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -366,7 +519,10 @@ mod tests {
                 r.id()
             );
             assert!(
-                matches!(r.family(), "shape" | "liveness" | "scheme" | "plan"),
+                matches!(
+                    r.family(),
+                    "shape" | "liveness" | "scheme" | "plan" | "perf" | "calib"
+                ),
                 "unknown family {}",
                 r.family()
             );
@@ -381,13 +537,22 @@ mod tests {
         assert!(r.render().contains("0 error(s), 0 warning(s)"));
         r.warn(Rule::CompressionDrift, "conv1", "declared 8.0x, measured 1.0x");
         r.error(Rule::ShapeMismatch, "conv2", "expected (8, 16, 16), recorded (8, 17, 16)");
+        r.advise(
+            Rule::LaneMisalignedBlock,
+            "conv3",
+            "4x4 blocks misalign with 8-wide lanes",
+            Some(Value::obj(vec![("kind", Value::str("align-block"))])),
+        );
         assert!(r.has_errors());
         assert_eq!(r.error_count(), 1);
         assert_eq!(r.warning_count(), 1);
+        assert_eq!(r.advice_count(), 1);
         assert_eq!(r.by_rule(Rule::ShapeMismatch).len(), 1);
         let text = r.render();
         assert!(text.contains("error[shape-mismatch]: conv2:"), "{text}");
         assert!(text.contains("warning[compression-drift]: conv1:"), "{text}");
+        assert!(text.contains("advice[lane-misaligned-block]: conv3:"), "{text}");
+        assert!(text.contains("1 error(s), 1 warning(s), 1 advice"), "{text}");
         // every jsonl line parses back with the stable fields
         for line in r.to_jsonl().lines() {
             let v = Value::parse(line).unwrap();
@@ -395,9 +560,21 @@ mod tests {
             assert!(v.get("family").is_ok());
             assert!(matches!(
                 v.get("severity").unwrap().as_str().unwrap(),
-                "warning" | "error"
+                "advice" | "warning" | "error"
             ));
         }
-        assert_eq!(r.to_jsonl().lines().count(), 2);
+        assert_eq!(r.to_jsonl().lines().count(), 3);
+        // the summary object counts per severity
+        let s = r.summary_json();
+        let s = s.get("summary").unwrap();
+        assert_eq!(s.get("errors").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(s.get("warnings").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(s.get("advice").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn severity_order_keeps_advice_below_warning() {
+        assert!(Severity::Advice < Severity::Warning);
+        assert!(Severity::Warning < Severity::Error);
     }
 }

@@ -1,0 +1,346 @@
+//! Advisory performance lint: the `perf` rule family.
+//!
+//! Where the correctness passes re-derive what an artifact *must* look
+//! like, this pass re-derives what it *should have cost*: every rule
+//! prices the sealed `(ModelSpec, assignments, FusionPlan, NetWeights)`
+//! artifact with [`crate::simulator::cost`] and reports the places where
+//! the mapping, block geometry, row distribution, or fusion plan leaves
+//! predicted latency on the table.  Everything here is
+//! [`Severity::Advice`](super::Severity::Advice): a finding means
+//! "slower than it could be", never "wrong".
+//!
+//! When a [`CalibrationRecord`] is supplied, every latency in this pass
+//! is re-priced with the record's per-layer measured/modeled ratios
+//! (normalized by the record median, see [`super::calib`]), so the
+//! advice reflects the machine that was actually profiled.
+
+use crate::accuracy::Assignment;
+use crate::compiler::{FusionPlan, Graph, Op};
+use crate::mapping::{block_scheme, candidate_schemes};
+use crate::models::ModelSpec;
+use crate::pruning::Scheme;
+use crate::runtime::graph::NetWeights;
+use crate::simulator::{
+    backend_for_scheme, calibrated_layer_latency_ms, rank_schemes, DeviceProfile, ExecConfig,
+};
+use crate::sparse::{reorder, LANE};
+use crate::util::json::Value;
+
+use super::{CalibrationRecord, Report, Rule};
+
+/// Thresholds for the advisory rules.  Defaults are deliberately
+/// conservative: lint over a well-mapped artifact should read as a short
+/// list of genuine opportunities, not noise.
+#[derive(Debug, Clone, Copy)]
+pub struct LintConfig {
+    /// Minimum predicted speedup (assigned ms / best candidate ms) before
+    /// `scheme-kernel-mismatch` fires; the CLI's `--threshold`.
+    pub speedup_threshold: f64,
+    /// Stride-split max/mean worker load before `load-imbalance` fires.
+    pub imbalance_threshold: f32,
+    /// Share of network latency one layer may carry before
+    /// `dominant-layer` fires.
+    pub dominance_share: f64,
+    /// Accepted band around the record's median measured/modeled ratio
+    /// for `calibration-divergence`.
+    pub divergence_band: f64,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        LintConfig {
+            speedup_threshold: 1.10,
+            imbalance_threshold: 1.25,
+            dominance_share: 0.50,
+            divergence_band: 3.0,
+        }
+    }
+}
+
+/// Run every perf rule over the artifact.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lint_perf(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    graph: &Graph,
+    plan: &FusionPlan,
+    weights: &NetWeights,
+    dev: &DeviceProfile,
+    cfg: &LintConfig,
+    calibration: Option<&CalibrationRecord>,
+    report: &mut Report,
+) {
+    if model.layers.len() != assigns.len() {
+        // the correctness analyzer owns this contract; nothing to price
+        return;
+    }
+    let scale = |name: &str| calibration.map_or(1.0, |c| c.scale_for(name));
+
+    // per-layer calibrated latency under the assigned configuration
+    let assigned_ms: Vec<f64> = model
+        .layers
+        .iter()
+        .zip(assigns)
+        .map(|(l, a)| {
+            let cfg = ExecConfig::new(a.scheme, a.compression, dev);
+            calibrated_layer_latency_ms(l, &cfg, dev, scale(&l.name))
+        })
+        .collect();
+
+    for ((layer, a), &current_ms) in model.layers.iter().zip(assigns).zip(&assigned_ms) {
+        check_lane_alignment(layer, a, current_ms, dev, scale(&layer.name), report);
+        check_scheme_ranking(layer, a, current_ms, dev, cfg, scale(&layer.name), report);
+    }
+    check_load_imbalance(weights, dev, cfg, report);
+    check_missed_fusion(graph, plan, report);
+    check_dominant_layer(model, assigns, &assigned_ms, dev, cfg, &scale, report);
+}
+
+/// `lane-misaligned-block`: block dims that are not multiples of the
+/// SIMD lane width force partially-filled lanes on every surviving block.
+fn check_lane_alignment(
+    layer: &crate::models::LayerSpec,
+    a: &Assignment,
+    current_ms: f64,
+    dev: &DeviceProfile,
+    scale: f64,
+    report: &mut Report,
+) {
+    let (p, q) = match a.scheme {
+        Scheme::Block { bp, bq } => (bp, bq),
+        Scheme::BlockPunched { bf, bc } => (bf, bc),
+        _ => return,
+    };
+    if p % LANE == 0 && q % LANE == 0 {
+        return;
+    }
+    // the best lane-aligned block candidate for this layer, if any tiles it
+    let aligned: Vec<Scheme> = Scheme::block_size_candidates()
+        .iter()
+        .filter(|(x, y)| x % LANE == 0 && y % LANE == 0)
+        .map(|&(x, y)| block_scheme(layer, x, y))
+        .collect();
+    let best = rank_schemes(layer, &aligned, a.compression, dev, scale)
+        .into_iter()
+        .next();
+    let mut fields = vec![
+        ("kind", Value::str("align-block")),
+        ("lane", Value::num(LANE as f64)),
+        ("block", Value::arr(vec![Value::num(p as f64), Value::num(q as f64)])),
+    ];
+    if let Some((s, ms)) = best {
+        fields.push(("suggested_scheme", Value::str(s.label())));
+        fields.push(("predicted_speedup", Value::num(current_ms / ms.max(1e-12))));
+    }
+    report.advise(
+        Rule::LaneMisalignedBlock,
+        layer.name.clone(),
+        format!(
+            "{p}x{q} block dims are not multiples of the {LANE}-wide SIMD lane: every \
+             surviving block leaves lanes partially filled"
+        ),
+        Some(Value::obj(fields)),
+    );
+}
+
+/// `scheme-kernel-mismatch`: re-rank every scheme either mapping method
+/// could have assigned and flag the layer when the cost model predicts a
+/// materially faster choice than the assigned one.
+fn check_scheme_ranking(
+    layer: &crate::models::LayerSpec,
+    a: &Assignment,
+    current_ms: f64,
+    dev: &DeviceProfile,
+    cfg: &LintConfig,
+    scale: f64,
+    report: &mut Report,
+) {
+    if matches!(a.scheme, Scheme::None) {
+        // dense is a deliberate mapping decision (3x3 depthwise), not a smell
+        return;
+    }
+    let ranked = rank_schemes(layer, &candidate_schemes(layer), a.compression, dev, scale);
+    let Some(&(best, best_ms)) = ranked.first() else { return };
+    if best == a.scheme {
+        return;
+    }
+    let speedup = current_ms / best_ms.max(1e-12);
+    if speedup < cfg.speedup_threshold {
+        return;
+    }
+    report.advise(
+        Rule::SchemeKernelMismatch,
+        layer.name.clone(),
+        format!(
+            "cost model prefers {} on the {} backend over assigned {} on {}: \
+             {:.4}ms vs {:.4}ms predicted ({speedup:.2}x)",
+            best.label(),
+            backend_for_scheme(&best),
+            a.scheme.label(),
+            backend_for_scheme(&a.scheme),
+            best_ms,
+            current_ms
+        ),
+        Some(Value::obj(vec![
+            ("kind", Value::str("remap-scheme")),
+            (
+                "current",
+                Value::obj(vec![
+                    ("scheme", Value::str(a.scheme.label())),
+                    ("backend", Value::str(backend_for_scheme(&a.scheme))),
+                    ("predicted_ms", Value::num(current_ms)),
+                ]),
+            ),
+            (
+                "suggested",
+                Value::obj(vec![
+                    ("scheme", Value::str(best.label())),
+                    ("backend", Value::str(backend_for_scheme(&best))),
+                    ("predicted_ms", Value::num(best_ms)),
+                ]),
+            ),
+            ("predicted_speedup", Value::num(speedup)),
+        ])),
+    );
+}
+
+/// `load-imbalance`: replay the executor's row view and stride split over
+/// each masked weight and flag layers whose reordered row-occupancy
+/// distribution still skews worker loads past the threshold.
+fn check_load_imbalance(
+    weights: &NetWeights,
+    dev: &DeviceProfile,
+    cfg: &LintConfig,
+    report: &mut Report,
+) {
+    for masked in &weights.layers {
+        if matches!(masked.scheme, Scheme::None) {
+            continue; // dense rows are uniform by construction
+        }
+        // rows = output units, the executor's parallel axis
+        let gemm = match masked.spec.kind {
+            crate::models::LayerKind::Fc => masked.weight.transpose2(),
+            _ => masked.weight.conv_to_gemm().transpose2(),
+        };
+        let row_nnz = reorder::row_nnz_counts(&gemm);
+        let order = reorder::reorder_rows(&gemm);
+        let lb = reorder::load_balance(&row_nnz, &order, dev.threads);
+        if lb.imbalance <= cfg.imbalance_threshold {
+            continue;
+        }
+        report.advise(
+            Rule::LoadImbalance,
+            masked.spec.name.clone(),
+            format!(
+                "stride split over {} workers leaves max/mean load at {:.2} even after \
+                 row reordering (threshold {:.2}): the nnz distribution concentrates in \
+                 few rows",
+                dev.threads, lb.imbalance, cfg.imbalance_threshold
+            ),
+            Some(Value::obj(vec![
+                ("kind", Value::str("rebalance")),
+                ("imbalance", Value::num(lb.imbalance as f64)),
+                ("threads", Value::num(dev.threads as f64)),
+                ("pattern_switches", Value::num(lb.pattern_switches as f64)),
+            ])),
+        );
+    }
+}
+
+/// `missed-fusion`: replay the fusion pass's eligibility predicate and
+/// flag elementwise nodes the plan left standalone even though their
+/// producer chain resolves to a single-consumer compute anchor.
+fn check_missed_fusion(graph: &Graph, plan: &FusionPlan, report: &mut Report) {
+    let fanout = graph.fanout();
+    let mut fused_into = std::collections::HashMap::new();
+    for k in &plan.kernels {
+        for &e in &k.epilogue {
+            fused_into.insert(e, k.anchor);
+        }
+    }
+    for node in &graph.nodes {
+        if !node.op.is_elementwise() || plan.is_fused_away(node.id) {
+            continue;
+        }
+        let Some(&p) = node.inputs.first() else { continue };
+        let anchor = *fused_into.get(&p).unwrap_or(&p);
+        let Some(anchor_node) = graph.nodes.get(anchor) else { continue };
+        let eligible = matches!(anchor_node.op, Op::Layer { .. })
+            && fanout.get(&p).copied().unwrap_or(0) == 1;
+        if !eligible {
+            continue;
+        }
+        report.advise(
+            Rule::MissedFusion,
+            node.name.clone(),
+            format!(
+                "elementwise '{}' is fusion-eligible into compute kernel '{}' but the \
+                 plan leaves it standalone, paying an extra dispatch and tensor round-trip",
+                node.name, anchor_node.name
+            ),
+            Some(Value::obj(vec![
+                ("kind", Value::str("fuse-epilogue")),
+                ("node", Value::str(node.name.clone())),
+                ("anchor", Value::str(anchor_node.name.clone())),
+            ])),
+        );
+    }
+}
+
+/// `dominant-layer`: one layer predicted to carry more than the
+/// threshold share of network latency — where the mapping search should
+/// have concentrated its block-size budget.
+fn check_dominant_layer(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    assigned_ms: &[f64],
+    dev: &DeviceProfile,
+    cfg: &LintConfig,
+    scale: &dyn Fn(&str) -> f64,
+    report: &mut Report,
+) {
+    if model.layers.len() < 2 {
+        return;
+    }
+    let total: f64 = assigned_ms.iter().sum();
+    if total <= 0.0 {
+        return;
+    }
+    let (idx, &ms) = assigned_ms
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .expect("non-empty");
+    let share = ms / total;
+    if share <= cfg.dominance_share {
+        return;
+    }
+    let layer = &model.layers[idx];
+    let a = &assigns[idx];
+    let mut fields = vec![
+        ("kind", Value::str("focus-search")),
+        ("share", Value::num(share)),
+        ("layer_ms", Value::num(ms)),
+        ("total_ms", Value::num(total)),
+    ];
+    // attach the best alternative for the hot layer when one exists
+    let ranked =
+        rank_schemes(layer, &candidate_schemes(layer), a.compression, dev, scale(&layer.name));
+    if let Some(&(best, best_ms)) = ranked.first() {
+        if best != a.scheme && best_ms < ms {
+            fields.push(("suggested_scheme", Value::str(best.label())));
+            fields.push(("predicted_speedup", Value::num(ms / best_ms.max(1e-12))));
+        }
+    }
+    report.advise(
+        Rule::DominantLayer,
+        layer.name.clone(),
+        format!(
+            "predicted to carry {:.0}% of network latency ({ms:.4}ms of {total:.4}ms, \
+             threshold {:.0}%): spend the mapping budget here first",
+            share * 100.0,
+            cfg.dominance_share * 100.0
+        ),
+        Some(Value::obj(fields)),
+    );
+}

@@ -21,8 +21,24 @@
 //!                          --load parses a saved recipe (bypassing the
 //!                          sealing gate so corrupt artifacts can be
 //!                          diagnosed); --json-out writes line-JSON
-//!                          diagnostics.  Exits nonzero on any
-//!                          error-severity finding.
+//!                          diagnostics plus a per-severity summary
+//!                          object.  Exits nonzero on any error-severity
+//!                          finding (--deny-warnings: on warnings too).
+//!   lint [--model M --dataset D --method rule|search | --load F]
+//!        [--calibration F] [--threshold F] [--seed N] [--json-out F]
+//!                          advisory performance lint over the same
+//!                          artifact: price the sealed mapping with the
+//!                          cost model and report lane-misaligned
+//!                          blocks, scheme/kernel mismatches (with
+//!                          predicted-speedup suggestions), stride-split
+//!                          load imbalance, missed fusion, dominant-layer
+//!                          concentration, and — with a `prunemap
+//!                          profile --json-out` record via --calibration
+//!                          — measured/modeled divergence, re-pricing
+//!                          every rule with the measured ratios.
+//!                          Advice never gates (exit 0); --threshold
+//!                          sets the minimum predicted speedup before a
+//!                          scheme mismatch is reported (default 1.10).
 //!   infer --model M --dataset D [--threads N] [--batch N] [--tile N]
 //!         [--materialized] [--json-out F]
 //!                          native end-to-end inference through the graph
@@ -72,6 +88,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use prunemap::accuracy::Assignment;
 use prunemap::bench::{self, runner, CheckOutcome, RecordSet, RecordSink};
 use prunemap::experiments as exp;
 use prunemap::latmodel::LatencyModel;
@@ -128,17 +145,18 @@ fn cmd_map(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Statically verify an artifact: map a zoo model (or parse a saved
-/// recipe with `--load`, bypassing the sealing gate so corrupt artifacts
-/// can be diagnosed), compile it, run every analysis pass, and render the
-/// diagnostics.  Exits nonzero iff any Error-severity rule fired.
-fn cmd_check(args: &Args) -> Result<()> {
-    let (model, assigns, seed, choice, origin) = if let Some(path) = args.get("load") {
+/// Resolve the artifact both analyzers operate on: map a zoo model, or
+/// parse a saved recipe with `--load` (bypassing the sealing gate so
+/// corrupt artifacts can be diagnosed).
+fn resolve_artifact(
+    args: &Args,
+) -> Result<(ModelSpec, Vec<Assignment>, u64, KernelChoice, String)> {
+    if let Some(path) = args.get("load") {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read artifact from {path}"))?;
         let (model, assigns, seed, choice, method) =
             PreparedModel::recipe_from_json(&Value::parse(&text)?)?;
-        (model, assigns, seed, choice, format!("{path} (method {method})"))
+        Ok((model, assigns, seed, choice, format!("{path} (method {method})")))
     } else {
         let dev = device(args)?;
         let ds = dataset_by_name(args.get_or("dataset", "cifar10"))?;
@@ -146,8 +164,28 @@ fn cmd_check(args: &Args) -> Result<()> {
         let method = MappingMethod::from_args(args, 30, args.get_u64("search-seed", 0xC0FFEE)?)?;
         let assigns = method.assign(&model, &dev);
         let origin = format!("method {}", method.label());
-        (model, assigns, args.get_u64("seed", 7)?, KernelChoice::Auto, origin)
-    };
+        Ok((model, assigns, args.get_u64("seed", 7)?, KernelChoice::Auto, origin))
+    }
+}
+
+/// Write a report's line-JSON diagnostics plus the trailing per-severity
+/// summary object to `--json-out`, when requested.
+fn write_json_out(args: &Args, report: &analysis::Report) -> Result<()> {
+    if let Some(path) = args.get("json-out") {
+        let mut out = report.to_jsonl();
+        out.push_str(&report.summary_json().compact());
+        out.push('\n');
+        std::fs::write(path, out).with_context(|| format!("write diagnostics to {path}"))?;
+        eprintln!("wrote {} diagnostic(s) to {path}", report.diagnostics.len());
+    }
+    Ok(())
+}
+
+/// Statically verify an artifact: compile it, run every analysis pass,
+/// and render the diagnostics.  Exits nonzero iff any Error-severity
+/// rule fired — or any Warning too under `--deny-warnings`.
+fn cmd_check(args: &Args) -> Result<()> {
+    let (model, assigns, seed, choice, origin) = resolve_artifact(args)?;
     println!(
         "check {} / {} ({} layers, {origin})",
         model.name,
@@ -168,16 +206,97 @@ fn cmd_check(args: &Args) -> Result<()> {
                 severity: Severity::Error,
                 site: model.name.clone(),
                 message: format!("{e:#}"),
+                suggestion: None,
             }),
         }
     }
 
     print!("{}", report.render());
-    if let Some(path) = args.get("json-out") {
-        std::fs::write(path, report.to_jsonl())
-            .with_context(|| format!("write diagnostics to {path}"))?;
-        eprintln!("wrote {} diagnostic(s) to {path}", report.diagnostics.len());
+    write_json_out(args, &report)?;
+    if report.has_errors() {
+        return Err(anyhow!(
+            "{} error-severity diagnostic(s) for {}",
+            report.error_count(),
+            model.name
+        ));
     }
+    if args.flag("deny-warnings") && report.warning_count() > 0 {
+        return Err(anyhow!(
+            "{} warning-severity diagnostic(s) for {} (--deny-warnings)",
+            report.warning_count(),
+            model.name
+        ));
+    }
+    Ok(())
+}
+
+/// Advisory performance lint over an artifact: price the sealed mapping
+/// with the cost model — re-priced by a `--calibration` record when one
+/// is given — and render clippy-style advice with structured
+/// suggestions.  Advice never gates: the exit code is nonzero only when
+/// the artifact cannot be compiled at all.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let dev = device(args)?;
+    let (model, assigns, seed, choice, origin) = resolve_artifact(args)?;
+    println!(
+        "lint {} / {} ({} layers, {origin})",
+        model.name,
+        model.dataset.name(),
+        model.layers.len()
+    );
+
+    let defaults = analysis::LintConfig::default();
+    let lint_cfg = analysis::LintConfig {
+        speedup_threshold: args.get_f32("threshold", defaults.speedup_threshold as f32)? as f64,
+        ..defaults
+    };
+    let calibration = match args.get("calibration") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read calibration record from {path}"))?;
+            let record = analysis::CalibrationRecord::from_json(&Value::parse(&text)?)?;
+            if record.model != model.name {
+                return Err(anyhow!(
+                    "calibration record is for '{}', artifact is '{}'",
+                    record.model,
+                    model.name
+                ));
+            }
+            eprintln!(
+                "re-pricing with {} measured layer(s) from {path} (median ratio {:.2})",
+                record.layers.len(),
+                record.median_ratio()
+            );
+            Some(record)
+        }
+        None => None,
+    };
+
+    let mut report = analysis::check_assignments(&model, &assigns);
+    if !report.has_errors() {
+        match CompiledNet::compile_with_weights(&model, &assigns, seed, choice) {
+            Ok((weights, _net)) => {
+                report = analysis::lint_model(
+                    &model,
+                    &assigns,
+                    &weights,
+                    &dev,
+                    &lint_cfg,
+                    calibration.as_ref(),
+                );
+            }
+            Err(e) => report.diagnostics.push(Diagnostic {
+                rule: Rule::CompileFailed,
+                severity: Severity::Error,
+                site: model.name.clone(),
+                message: format!("{e:#}"),
+                suggestion: None,
+            }),
+        }
+    }
+
+    print!("{}", report.render());
+    write_json_out(args, &report)?;
     if report.has_errors() {
         return Err(anyhow!(
             "{} error-severity diagnostic(s) for {}",
@@ -822,6 +941,7 @@ fn run() -> Result<()> {
         }
         "map" => cmd_map(&args)?,
         "check" => cmd_check(&args)?,
+        "lint" => cmd_lint(&args)?,
         "infer" => cmd_infer(&args)?,
         "profile" => cmd_profile(&args)?,
         "serve" => cmd_serve(&args)?,
@@ -836,7 +956,7 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|check|infer|profile|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--max-queue N] [--max-conns N] [--deadline-ms F] [--metrics ADDR] [--trace-out F]"
+                "usage: prunemap <fig3|fig5|fig7|fig9|fig10a|fig10b|table1..table7|all|latmodel|map|check|lint|infer|profile|serve|bench|e2e> [--device s10|s20|s21] [--threads N] [--batch N] [--tile N] [--materialized] [--models M1,M2] [--listen ADDR|stdio] [--max-batch N] [--max-wait-ms F] [--max-queue N] [--max-conns N] [--deadline-ms F] [--metrics ADDR] [--trace-out F]"
             );
         }
     }

@@ -15,7 +15,7 @@
 pub mod rule;
 pub mod search;
 
-pub use rule::{map_rule_based, RuleConfig};
+pub use rule::{block_scheme, candidate_schemes, map_rule_based, RuleConfig};
 pub use search::{map_search_based, SearchConfig};
 
 use anyhow::{anyhow, Result};

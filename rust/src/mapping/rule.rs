@@ -64,12 +64,28 @@ pub fn select_block_size(
     fallback
 }
 
-fn block_scheme(layer: &LayerSpec, a: usize, b: usize) -> Scheme {
+/// The block-family scheme a layer kind executes: block-based for FC,
+/// block-punched for CONV/depthwise (§5.2.3).
+pub fn block_scheme(layer: &LayerSpec, a: usize, b: usize) -> Scheme {
     if layer.kind == LayerKind::Fc {
         Scheme::Block { bp: a, bq: b }
     } else {
         Scheme::BlockPunched { bf: a, bc: b }
     }
+}
+
+/// Every scheme either mapping method could have assigned to `layer`:
+/// structured-row, pattern (3x3 CONV only), each legal entry of the
+/// block-size grid, and unstructured.  Already filtered by
+/// [`Scheme::applicable`] — this is the candidate set `prunemap lint`
+/// re-ranks with the cost model.
+pub fn candidate_schemes(layer: &LayerSpec) -> Vec<Scheme> {
+    let mut out = vec![Scheme::StructuredRow, Scheme::Pattern, Scheme::Unstructured];
+    for &(a, b) in Scheme::block_size_candidates() {
+        out.push(block_scheme(layer, a, b));
+    }
+    out.retain(|s| s.applicable(layer));
+    out
 }
 
 /// Map one layer (the Fig. 8 decision diamond).

@@ -142,7 +142,7 @@ impl Runtime {
     /// Load (compile-once, cached) an artifact by manifest key, e.g.
     /// `"train_step"`.
     pub fn load(&self, key: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(key) {
+        if let Some(e) = crate::util::recover(self.cache.lock()).get(key) {
             return Ok(e.clone());
         }
         let sig = self
@@ -157,9 +157,7 @@ impl Runtime {
         let exe = self.client.compile(&comp).map_err(xerr)?;
         let executable =
             std::sync::Arc::new(Executable { name: key.to_string(), exe, sig });
-        self.cache
-            .lock()
-            .unwrap()
+        crate::util::recover(self.cache.lock())
             .insert(key.to_string(), executable.clone());
         Ok(executable)
     }

@@ -220,10 +220,9 @@ fn parse_retry_after(message: &str) -> u64 {
 /// every subsequent request on the lock.  The guarded state here is
 /// counters and queues that stay structurally valid across a panic
 /// (worst case: one increment lost), so the server degrades to serving
-/// instead of cascading.
-pub(crate) fn recover<G>(result: Result<G, std::sync::PoisonError<G>>) -> G {
-    result.unwrap_or_else(std::sync::PoisonError::into_inner)
-}
+/// instead of cascading.  The implementation lives in [`crate::util::lock`]
+/// so non-serve modules (telemetry, runtime caches) share the pattern.
+pub(crate) use crate::util::recover;
 
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {

@@ -164,6 +164,28 @@ impl PreparedModel {
         )
     }
 
+    /// Run the advisory performance lint over this sealed artifact: the
+    /// same cost model that drove the mapping re-prices the result (with
+    /// `calibration` ratios when a profile record is supplied) and
+    /// reports Advice-severity findings.  Never gates — a sealed
+    /// artifact is correct by construction; lint says whether it is
+    /// *fast*.
+    pub fn lint(
+        &self,
+        dev: &crate::simulator::DeviceProfile,
+        cfg: &crate::analysis::LintConfig,
+        calibration: Option<&crate::analysis::CalibrationRecord>,
+    ) -> crate::analysis::Report {
+        crate::analysis::lint_model(
+            &self.inner.model,
+            &self.inner.assigns,
+            &self.inner.weights,
+            dev,
+            cfg,
+            calibration,
+        )
+    }
+
     /// Start building a serving [`Session`] over this artifact.
     pub fn session(&self) -> SessionBuilder {
         Session::builder(self.clone())

@@ -291,6 +291,54 @@ pub fn kernel_for_scheme(masked_gemm: &Tensor, scheme: &Scheme) -> Box<dyn Spars
     }
 }
 
+/// The [`SparseKernel::label`] the scheme would execute under, without
+/// materializing a tensor — the static mirror of [`kernel_for_scheme`].
+pub fn backend_for_scheme(scheme: &Scheme) -> &'static str {
+    match scheme {
+        Scheme::None => "dense",
+        Scheme::Unstructured => "csr",
+        _ => "bcs",
+    }
+}
+
+/// [`layer_latency_ms`] scaled by a measured/modeled calibration ratio.
+/// `scale = 1.0` (no calibration) reproduces the raw model; a layer whose
+/// trace ran 3x slower than modeled is priced 3x up, so downstream
+/// consumers (lint's dominant-layer and re-ranking rules) reason about
+/// the machine that was actually measured.
+pub fn calibrated_layer_latency_ms(
+    layer: &LayerSpec,
+    cfg: &ExecConfig,
+    dev: &DeviceProfile,
+    scale: f64,
+) -> f64 {
+    layer_latency_ms(layer, cfg, dev) * scale.max(0.0)
+}
+
+/// Price a set of candidate schemes for one layer at a fixed compression
+/// and calibration scale, ascending by predicted latency.  Candidates
+/// that are not [`Scheme::applicable`] to the layer are skipped.  This is
+/// the re-ranking helper `prunemap lint` uses to ask "would a different
+/// regularity have been faster here?".
+pub fn rank_schemes(
+    layer: &LayerSpec,
+    candidates: &[Scheme],
+    compression: f32,
+    dev: &DeviceProfile,
+    scale: f64,
+) -> Vec<(Scheme, f64)> {
+    let mut ranked: Vec<(Scheme, f64)> = candidates
+        .iter()
+        .filter(|s| s.applicable(layer))
+        .map(|s| {
+            let cfg = ExecConfig::new(*s, compression, dev);
+            (*s, calibrated_layer_latency_ms(layer, &cfg, dev, scale))
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+    ranked
+}
+
 /// Execute the masked GEMM view of a layer on the batched multi-threaded
 /// engine and report the measurement beside the model's prediction — the
 /// hook that keeps the simulator honest about the mechanisms it prices

@@ -11,8 +11,9 @@ pub mod cost;
 pub mod device;
 
 pub use cost::{
-    kernel_for_scheme, layer_latency_ms, measured_vs_modeled, measured_vs_modeled_network,
-    model_latency_ms, ExecConfig, LatencyComparison, LayerCalibration, NetworkLatencyComparison,
-    PerLayerCalibration, TileParams,
+    backend_for_scheme, calibrated_layer_latency_ms, kernel_for_scheme, layer_latency_ms,
+    measured_vs_modeled, measured_vs_modeled_network, model_latency_ms, rank_schemes, ExecConfig,
+    LatencyComparison, LayerCalibration, NetworkLatencyComparison, PerLayerCalibration,
+    TileParams,
 };
 pub use device::DeviceProfile;

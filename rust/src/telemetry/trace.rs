@@ -147,7 +147,7 @@ impl TraceRing {
             span.id = self.next_id();
         }
         let id = span.id;
-        let mut q = self.spans.lock().unwrap();
+        let mut q = crate::util::recover(self.spans.lock());
         if q.len() >= self.cap {
             q.pop_front();
             self.dropped.fetch_add(1, Ordering::Relaxed);
@@ -158,13 +158,14 @@ impl TraceRing {
 
     /// Copy out the current contents, ordered by start time.
     pub fn snapshot(&self) -> Vec<Span> {
-        let mut out: Vec<Span> = self.spans.lock().unwrap().iter().cloned().collect();
+        let mut out: Vec<Span> =
+            crate::util::recover(self.spans.lock()).iter().cloned().collect();
         out.sort_by_key(|s| (s.start_ns, s.id));
         out
     }
 
     pub fn len(&self) -> usize {
-        self.spans.lock().unwrap().len()
+        crate::util::recover(self.spans.lock()).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -182,7 +183,7 @@ impl TraceRing {
 
     /// Discard all recorded spans (ids keep counting up).
     pub fn clear(&self) {
-        self.spans.lock().unwrap().clear();
+        crate::util::recover(self.spans.lock()).clear();
     }
 }
 

@@ -1,0 +1,40 @@
+//! Poisoned-lock recovery.
+//!
+//! A thread that panics while holding a `std::sync::Mutex`/`RwLock`
+//! poisons it; propagating that poison as a panic (`lock().unwrap()`)
+//! turns one failed worker into a panic for every subsequent user of
+//! the lock.  Everything this crate guards with locks — serving
+//! counters and queues, trace ring buffers, executable caches — stays
+//! structurally valid across a panic (worst case: one increment lost
+//! or one cached entry dropped), so the right policy is to strip the
+//! poison and keep going.
+//!
+//! Convention: production code never writes `lock().unwrap()`.  Call
+//! `recover(mutex.lock())` instead.  CI enforces this with a grep gate
+//! over `rust/src` (see `.github/workflows/ci.yml`); test code under
+//! `rust/tests/` is exempt because a panic there should fail the test.
+
+/// Recover a possibly-poisoned lock guard instead of propagating the
+/// poison as a panic.
+pub fn recover<G>(result: Result<G, std::sync::PoisonError<G>>) -> G {
+    result.unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::recover;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recover_strips_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*recover(m.lock()), 7);
+    }
+}

@@ -4,4 +4,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod lock;
 pub mod prop;
+
+pub use lock::recover;

@@ -1,0 +1,332 @@
+//! The advisory performance lint end to end: clean artifacts produce
+//! advice at most (never Warning-or-worse), and each perf/calib rule has
+//! a corruption path that plants exactly one smell and asserts the
+//! expected rule id fires at Advice severity with its structured
+//! suggestion.  Also locks the JSONL `suggestion` round trip and the
+//! calibration record's re-pricing of the other rules — the read side of
+//! the `prunemap profile` loop.
+
+use prunemap::accuracy::Assignment;
+use prunemap::analysis::{self, CalibrationRecord, LintConfig, Rule, Severity};
+use prunemap::compiler::fusion::FusedKernel;
+use prunemap::compiler::{fuse, Graph};
+use prunemap::mapping::MappingMethod;
+use prunemap::models::{zoo, Dataset, LayerSpec, ModelSpec};
+use prunemap::pruning::Scheme;
+use prunemap::runtime::NetWeights;
+use prunemap::serve::PreparedModel;
+use prunemap::simulator::DeviceProfile;
+use prunemap::tensor::Tensor;
+use prunemap::util::json::Value;
+
+fn dev() -> DeviceProfile {
+    DeviceProfile::by_name("s10").unwrap()
+}
+
+fn lint_synthesized(
+    model: &ModelSpec,
+    assigns: &[Assignment],
+    calibration: Option<&CalibrationRecord>,
+) -> analysis::Report {
+    let weights = NetWeights::synthesize(model, assigns, 7).unwrap();
+    analysis::lint_model(model, assigns, &weights, &dev(), &LintConfig::default(), calibration)
+}
+
+fn assert_advises(report: &analysis::Report, rule: Rule) {
+    let hits = report.by_rule(rule);
+    assert!(!hits.is_empty(), "expected {} to fire:\n{}", rule.id(), report.render());
+    assert!(
+        hits.iter().all(|d| d.severity == Severity::Advice),
+        "{} must be Advice severity:\n{}",
+        rule.id(),
+        report.render()
+    );
+}
+
+fn one_layer_model(layer: LayerSpec) -> ModelSpec {
+    ModelSpec { name: "lint-fixture".into(), dataset: Dataset::Cifar10, layers: vec![layer] }
+}
+
+// ---- golden path ------------------------------------------------------
+
+#[test]
+fn clean_zoo_lint_is_advice_only() {
+    let d = dev();
+    let rule = MappingMethod::parse("rule", 0, 0).unwrap();
+    let models = [
+        zoo::proxy_cnn(),
+        zoo::mobilenet_v1_scaled(Dataset::Cifar10, 0.25),
+        zoo::mobilenet_v2_scaled(Dataset::Cifar10, 0.25),
+        zoo::resnet18(Dataset::Cifar10),
+    ];
+    for model in &models {
+        let assigns = rule.assign(model, &d);
+        let report = lint_synthesized(model, &assigns, None);
+        assert_eq!(report.error_count(), 0, "{}:\n{}", model.name, report.render());
+        assert_eq!(report.warning_count(), 0, "{}:\n{}", model.name, report.render());
+        assert!(
+            report.diagnostics.iter().all(|x| x.severity == Severity::Advice),
+            "{}: lint must emit advice only:\n{}",
+            model.name,
+            report.render()
+        );
+    }
+}
+
+#[test]
+fn prepared_model_lint_reports_advice_only() {
+    let p = PreparedModel::builder()
+        .model("proxy")
+        .device("s10")
+        .mapping(MappingMethod::parse("rule", 0, 0).unwrap())
+        .build()
+        .unwrap();
+    let report = p.lint(&dev(), &LintConfig::default(), None);
+    assert_eq!(report.error_count(), 0, "{}", report.render());
+    assert_eq!(report.warning_count(), 0, "{}", report.render());
+}
+
+// ---- per-rule corruption paths ----------------------------------------
+
+#[test]
+fn misaligned_block_fires_lane_rule() {
+    let model = one_layer_model(LayerSpec::conv("conv1", 3, 16, 16, 8, 1));
+    let assigns = vec![Assignment {
+        scheme: Scheme::BlockPunched { bf: 4, bc: 4 },
+        compression: 2.0,
+    }];
+    let report = lint_synthesized(&model, &assigns, None);
+    assert_advises(&report, Rule::LaneMisalignedBlock);
+    let d = &report.by_rule(Rule::LaneMisalignedBlock)[0];
+    assert_eq!(d.site, "conv1");
+    let s = d.suggestion.as_ref().expect("structured suggestion");
+    assert_eq!(s.get("kind").unwrap().as_str().unwrap(), "align-block");
+    assert_eq!(s.get("lane").unwrap().as_usize().unwrap(), 8);
+    // a lane-aligned block candidate tiles 16x16, so an alternative with
+    // its predicted speedup must be attached
+    assert!(s.get("suggested_scheme").is_ok(), "{}", s.pretty());
+    assert!(s.get("predicted_speedup").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn forced_worse_scheme_fires_mismatch_with_speedup() {
+    // unstructured CSR on a regular conv: the cost model prices the
+    // index arithmetic + divergence well above a block or structured
+    // scheme at the same compression
+    let model = one_layer_model(LayerSpec::conv("conv1", 3, 32, 32, 16, 1));
+    let assigns = vec![Assignment { scheme: Scheme::Unstructured, compression: 8.0 }];
+    let report = lint_synthesized(&model, &assigns, None);
+    assert_advises(&report, Rule::SchemeKernelMismatch);
+    let d = &report.by_rule(Rule::SchemeKernelMismatch)[0];
+    let s = d.suggestion.as_ref().expect("structured suggestion");
+    assert_eq!(s.get("kind").unwrap().as_str().unwrap(), "remap-scheme");
+    assert_eq!(
+        s.get("current").unwrap().get("backend").unwrap().as_str().unwrap(),
+        "csr"
+    );
+    let speedup = s.get("predicted_speedup").unwrap().as_f64().unwrap();
+    assert!(speedup > 1.0, "speedup {speedup}");
+    let suggested = s.get("suggested").unwrap();
+    assert!(!suggested.get("scheme").unwrap().as_str().unwrap().is_empty());
+    assert!(
+        suggested.get("predicted_ms").unwrap().as_f64().unwrap()
+            < s.get("current").unwrap().get("predicted_ms").unwrap().as_f64().unwrap()
+    );
+}
+
+#[test]
+fn unfused_epilogue_fires_missed_fusion() {
+    let model = zoo::proxy_cnn();
+    let assigns: Vec<Assignment> = model
+        .layers
+        .iter()
+        .map(|_| Assignment { scheme: Scheme::None, compression: 1.0 })
+        .collect();
+    let weights = NetWeights::synthesize(&model, &assigns, 7).unwrap();
+    let graph = Graph::from_model(&model);
+    let mut plan = fuse(&graph);
+    // evict one fused epilogue node into its own standalone kernel: the
+    // canonical plan would have fused it, so lint must flag the miss
+    let k = plan
+        .kernels
+        .iter_mut()
+        .find(|k| !k.epilogue.is_empty())
+        .expect("proxy has fused epilogues");
+    let evicted = k.epilogue.pop().unwrap();
+    plan.kernels.push(FusedKernel { anchor: evicted, epilogue: vec![] });
+    let report = analysis::lint(
+        &model,
+        &assigns,
+        &graph,
+        &plan,
+        &weights,
+        &dev(),
+        &LintConfig::default(),
+        None,
+    );
+    assert_advises(&report, Rule::MissedFusion);
+    let d = &report.by_rule(Rule::MissedFusion)[0];
+    let s = d.suggestion.as_ref().expect("structured suggestion");
+    assert_eq!(s.get("kind").unwrap().as_str().unwrap(), "fuse-epilogue");
+    assert!(!s.get("anchor").unwrap().as_str().unwrap().is_empty());
+    // the canonical plan stays clean
+    let clean = analysis::lint_model(
+        &model,
+        &assigns,
+        &weights,
+        &dev(),
+        &LintConfig::default(),
+        None,
+    );
+    assert!(clean.by_rule(Rule::MissedFusion).is_empty(), "{}", clean.render());
+}
+
+#[test]
+fn lopsided_model_fires_dominant_layer() {
+    let model = ModelSpec {
+        name: "lopsided".into(),
+        dataset: Dataset::Cifar10,
+        layers: vec![
+            LayerSpec::conv("big", 3, 3, 64, 32, 1),
+            LayerSpec::conv("tiny", 1, 64, 8, 4, 1),
+        ],
+    };
+    let assigns = vec![
+        Assignment { scheme: Scheme::Unstructured, compression: 4.0 },
+        Assignment { scheme: Scheme::Unstructured, compression: 4.0 },
+    ];
+    let report = lint_synthesized(&model, &assigns, None);
+    assert_advises(&report, Rule::DominantLayer);
+    let d = &report.by_rule(Rule::DominantLayer)[0];
+    assert_eq!(d.site, "big");
+    let s = d.suggestion.as_ref().expect("structured suggestion");
+    assert!(s.get("share").unwrap().as_f64().unwrap() > 0.5);
+}
+
+#[test]
+fn skewed_rows_fire_load_imbalance() {
+    let model = one_layer_model(LayerSpec::fc("fc1", 64, 64));
+    let assigns = vec![Assignment { scheme: Scheme::Unstructured, compression: 4.0 }];
+    let mut weights = NetWeights::synthesize(&model, &assigns, 7).unwrap();
+    // plant a pathological nnz distribution: output unit 0 keeps a fully
+    // dense row while every other unit keeps a single weight — no row
+    // reordering can stride-split that evenly
+    let mut w = Tensor::zeros(&[64, 64]);
+    for i in 0..64 {
+        w.set2(i, 0, 1.0);
+    }
+    for j in 1..64 {
+        w.set2(0, j, 1.0);
+    }
+    weights.layers[0].weight = w;
+    let report = analysis::lint_model(
+        &model,
+        &assigns,
+        &weights,
+        &dev(),
+        &LintConfig::default(),
+        None,
+    );
+    assert_advises(&report, Rule::LoadImbalance);
+    let s = report.by_rule(Rule::LoadImbalance)[0]
+        .suggestion
+        .as_ref()
+        .expect("structured suggestion");
+    assert!(s.get("imbalance").unwrap().as_f64().unwrap() > 1.25);
+}
+
+// ---- calibration ------------------------------------------------------
+
+fn three_layer_model() -> (ModelSpec, Vec<Assignment>) {
+    let model = ModelSpec {
+        name: "triplet".into(),
+        dataset: Dataset::Cifar10,
+        layers: vec![
+            LayerSpec::conv("c1", 3, 16, 16, 8, 1),
+            LayerSpec::conv("c2", 3, 16, 16, 8, 1),
+            LayerSpec::conv("c3", 3, 16, 16, 8, 1),
+        ],
+    };
+    let assigns = model
+        .layers
+        .iter()
+        .map(|_| Assignment { scheme: Scheme::BlockPunched { bf: 8, bc: 16 }, compression: 2.0 })
+        .collect();
+    (model, assigns)
+}
+
+fn divergent_record() -> CalibrationRecord {
+    // layers c1/c2 measured on-model, c3 measured 10x the shared ratio:
+    // the exact file `prunemap profile --json-out` writes
+    let json = r#"{"format":"prunemap.calibration.v1","model":"triplet","threads":2,
+        "batch":8,"reps":3,"layers":[
+        {"name":"c1","modeled_ms":1.0,"measured_ms":1.0,"ratio":1.0},
+        {"name":"c2","modeled_ms":1.0,"measured_ms":1.0,"ratio":1.0},
+        {"name":"c3","modeled_ms":1.0,"measured_ms":10.0,"ratio":10.0}]}"#;
+    CalibrationRecord::from_json(&Value::parse(json).unwrap()).unwrap()
+}
+
+#[test]
+fn divergent_calibration_flags_layer_and_reprices_other_rules() {
+    let (model, assigns) = three_layer_model();
+
+    // without calibration: three identical layers, no divergence and no
+    // dominant layer
+    let baseline = lint_synthesized(&model, &assigns, None);
+    assert!(baseline.by_rule(Rule::CalibrationDivergence).is_empty());
+    assert!(baseline.by_rule(Rule::DominantLayer).is_empty(), "{}", baseline.render());
+
+    // with the divergent record: c3 is flagged, and the measured ratios
+    // re-price the latency pass — c3 now dominates the network
+    let record = divergent_record();
+    let report = lint_synthesized(&model, &assigns, Some(&record));
+    assert_advises(&report, Rule::CalibrationDivergence);
+    let flagged = report.by_rule(Rule::CalibrationDivergence);
+    assert_eq!(flagged.len(), 1, "{}", report.render());
+    assert_eq!(flagged[0].site, "c3");
+    let s = flagged[0].suggestion.as_ref().expect("structured suggestion");
+    assert_eq!(s.get("kind").unwrap().as_str().unwrap(), "recalibrate");
+    assert!((s.get("relative").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-6);
+
+    assert_advises(&report, Rule::DominantLayer);
+    assert_eq!(report.by_rule(Rule::DominantLayer)[0].site, "c3");
+}
+
+// ---- serialization ----------------------------------------------------
+
+#[test]
+fn suggestion_field_round_trips_jsonl() {
+    let model = one_layer_model(LayerSpec::conv("conv1", 3, 32, 32, 16, 1));
+    let assigns = vec![Assignment { scheme: Scheme::Unstructured, compression: 8.0 }];
+    let report = lint_synthesized(&model, &assigns, None);
+    let jsonl = report.to_jsonl();
+    let mismatch_line = jsonl
+        .lines()
+        .find(|l| l.contains("scheme-kernel-mismatch"))
+        .expect("mismatch diagnostic in jsonl");
+    let v = Value::parse(mismatch_line).unwrap();
+    assert_eq!(v.get("severity").unwrap().as_str().unwrap(), "advice");
+    assert_eq!(v.get("family").unwrap().as_str().unwrap(), "perf");
+    let s = v.get("suggestion").unwrap();
+    assert_eq!(s.get("kind").unwrap().as_str().unwrap(), "remap-scheme");
+    assert!(s.get("predicted_speedup").unwrap().as_f64().unwrap() > 1.0);
+    // parse -> compact -> parse is stable (BTreeMap ordering)
+    let reparsed = Value::parse(&v.compact()).unwrap();
+    assert_eq!(
+        reparsed.get("suggestion").unwrap().compact(),
+        s.compact(),
+        "suggestion must survive a serialize/parse round trip"
+    );
+    // diagnostics without a suggestion (everything `check` emits) omit
+    // the key entirely rather than writing null
+    let fc = one_layer_model(LayerSpec::fc("fc1", 32, 10));
+    let bad = vec![Assignment { scheme: Scheme::Pattern, compression: 2.0 }];
+    let checked = analysis::check_assignments(&fc, &bad);
+    assert!(checked.error_count() > 0, "fixture must produce a diagnostic");
+    for line in checked.to_jsonl().lines() {
+        assert!(
+            Value::parse(line).unwrap().opt("suggestion").is_none(),
+            "check diagnostics must not carry a suggestion: {line}"
+        );
+    }
+}
